@@ -1,0 +1,66 @@
+//! Bench: the DVFS characterization inner loop (Tables XI/XII, Figs 3–5).
+//!
+//! Measures the cost of one full-mix replay cell per (model, freq) and the
+//! per-step simulator primitives it decomposes into. These are the paths the
+//! experiment harness executes thousands of times, so they gate how large a
+//! `--paper`-scale run can be.
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::engine::ReplayEngine;
+use ewatt::gpu::GpuSim;
+use ewatt::perf::{decode_step_cost, prefill_cost};
+use ewatt::util::bench::{bench, report};
+use ewatt::workload::ReplaySuite;
+
+fn main() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let mut results = Vec::new();
+
+    // Simulator primitives.
+    let m8 = model_for_tier(ModelTier::B8);
+    let sim = GpuSim::new(gpu.clone(), 960);
+    let dcost = decode_step_cost(&m8, 1, 256);
+    results.push(bench("gpu_sim.execute(decode step, 8B)", 1000, 20000, || {
+        sim.execute(&dcost)
+    }));
+    let pcost = prefill_cost(&m8, 8, 300);
+    results.push(bench("gpu_sim.execute(prefill b8, 8B)", 1000, 20000, || {
+        sim.execute(&pcost)
+    }));
+    results.push(bench("decode_step_cost(8B)", 1000, 50000, || {
+        decode_step_cost(&m8, 4, 512)
+    }));
+
+    // One replay cell (the Table XI unit of work): 20 queries/dataset mix.
+    let suite = ReplaySuite::quick(3, 20);
+    let idx: Vec<usize> = (0..suite.len()).collect();
+    for tier in [ModelTier::B1, ModelTier::B32] {
+        let engine = ReplayEngine::new(gpu.clone(), model_for_tier(tier));
+        for freq in [180u32, 2842] {
+            let name = format!("replay cell {} @{freq}MHz (80q mix, b1)", tier.label());
+            results.push(bench(&name, 1, 8, || {
+                engine
+                    .run(&suite, &idx, 1, &DvfsPolicy::Static(freq))
+                    .unwrap()
+                    .energy_j
+            }));
+        }
+    }
+
+    // Full 7-frequency sweep for one model (Fig. 3/4 series).
+    let engine = ReplayEngine::new(gpu.clone(), model_for_tier(ModelTier::B8));
+    results.push(bench("7-freq sweep 8B (80q mix, b1)", 1, 3, || {
+        let mut acc = 0.0;
+        for &f in &gpu.freq_levels_mhz {
+            acc += engine
+                .run(&suite, &idx, 1, &DvfsPolicy::Static(f))
+                .unwrap()
+                .energy_j;
+        }
+        acc
+    }));
+
+    report("dvfs_sweep (Tables XI/XII, Figs 3-5)", &results);
+}

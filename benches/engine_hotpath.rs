@@ -1,0 +1,89 @@
+//! Bench: the L3 hot path — simulated phase execution and the *real* PJRT
+//! tiny-LM decode step (the end-to-end serving inner loop).
+//!
+//! The PJRT rows quantify the known tuple-output round-trip cost of
+//! xla_extension 0.5.1 (see runtime/tinylm.rs) — tracked in EXPERIMENTS.md
+//! §Perf.
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::engine::KvCacheManager;
+use ewatt::gpu::telemetry::PowerSegment;
+use ewatt::gpu::{GpuSim, PowerSampler};
+use ewatt::perf::{decode_step_cost, phase_time, prefill_cost};
+use ewatt::runtime::{artifact, Manifest, RuntimeClient, TinyLm};
+use ewatt::util::bench::{bench, report};
+
+fn main() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let mut results = Vec::new();
+
+    // Simulated-engine primitives.
+    let m = model_for_tier(ModelTier::B14);
+    let sim = GpuSim::new(gpu.clone(), 960);
+    let dc = decode_step_cost(&m, 4, 400);
+    results.push(bench("phase_time(decode, 14B)", 1000, 100000, || {
+        phase_time(&gpu, &dc, 960).total()
+    }));
+    results.push(bench("gpu_sim.execute(decode, 14B b4)", 1000, 50000, || {
+        sim.execute(&dc)
+    }));
+    let trace = [
+        PowerSegment { duration_s: 0.004, power_w: 420.0 },
+        PowerSegment { duration_s: 0.030, power_w: 250.0 },
+    ];
+    let sampler = PowerSampler::new(&gpu);
+    results.push(bench("telemetry.measure(34ms trace)", 1000, 100000, || {
+        sampler.measure(&trace)
+    }));
+    results.push(bench("kvcache admit+extend+release x8", 100, 50000, || {
+        let mut kv = KvCacheManager::new(&gpu, &m);
+        for id in 0..8u64 {
+            kv.admit(id, 300).unwrap();
+            kv.extend(id).unwrap();
+        }
+        for id in 0..8u64 {
+            kv.release(id);
+        }
+        kv.peak_bytes()
+    }));
+    results.push(bench("prefill_cost+decode_cost (32B)", 1000, 100000, || {
+        let m32 = model_for_tier(ModelTier::B32);
+        (prefill_cost(&m32, 8, 300).flops, decode_step_cost(&m32, 8, 300).flops)
+    }));
+
+    // Real PJRT path (skipped when artifacts are absent).
+    match Manifest::load(artifact::default_dir()) {
+        Err(_) => eprintln!("artifacts not built; skipping PJRT rows"),
+        Ok(manifest) => {
+            let client = RuntimeClient::cpu().expect("client");
+            for tier in ["t1", "t3"] {
+                let lm = TinyLm::load(&client, &manifest, tier).expect("load");
+                let tokens: Vec<i32> = (0..lm.prefill_seq() as i32)
+                    .map(|i| i % lm.config.vocab as i32)
+                    .collect();
+                let name_p = format!("PJRT prefill b1 ({tier})");
+                results.push(bench(&name_p, 2, 30, || {
+                    lm.prefill(&client, &tokens, 1).unwrap().0[0]
+                }));
+                let (logits, state0) = lm.prefill(&client, &tokens, 1).unwrap();
+                let tok = lm.argmax(&logits, 1);
+                // Re-prefill when the cache fills to bound decode cost.
+                let name_d = format!("PJRT decode step b1 ({tier})");
+                let mut state = state0;
+                let mut steps_left = lm.config.max_seq - lm.prefill_seq();
+                results.push(bench(&name_d, 2, 60, || {
+                    if steps_left == 0 {
+                        let (_, s) = lm.prefill(&client, &tokens, 1).unwrap();
+                        state = s;
+                        steps_left = lm.config.max_seq - lm.prefill_seq();
+                    }
+                    steps_left -= 1;
+                    lm.decode_step(&client, &mut state, &tok).unwrap()[0]
+                }));
+            }
+        }
+    }
+
+    report("engine_hotpath (serving inner loop)", &results);
+}

@@ -1,0 +1,87 @@
+//! Bench: the routing/case-study decision path (Tables XV–XVIII).
+//!
+//! Router decisions sit on the request path of a workload-aware serving
+//! system — they must be nanoseconds-to-microseconds. The scheduler run is
+//! the Table XVII/XVIII regeneration unit.
+
+use ewatt::config::{GpuSpec, ModelTier};
+use ewatt::coordinator::{DvfsPolicy, Router, Scheduler};
+use ewatt::quality::{QualityMatrix, QualityModel};
+use ewatt::stats::{LogisticRegression, Standardizer};
+use ewatt::util::bench::{bench, report};
+use ewatt::workload::ReplaySuite;
+
+fn main() {
+    let mut results = Vec::new();
+    let suite = ReplaySuite::quick(11, 100);
+    let gpu = GpuSpec::rtx_pro_6000();
+
+    // Rule-based routing decision (hot path).
+    let router = Router::paper_default();
+    results.push(bench("rule route() x400 queries", 10, 2000, || {
+        suite
+            .features
+            .iter()
+            .filter(|f| router.route(f).easy)
+            .count()
+    }));
+
+    // Learned-router decision.
+    let x: Vec<Vec<f64>> = suite
+        .features
+        .iter()
+        .map(|f| f.semantic_array().to_vec())
+        .collect();
+    let y: Vec<bool> = suite.features.iter().map(|f| f.entity_density > 0.2).collect();
+    let scaler = Standardizer::fit(&x);
+    let xz = scaler.transform_all(&x);
+    let mut lr = LogisticRegression::new(1.0);
+    lr.fit(&xz, &y);
+    let learned = Router::paper_default().with_learned(lr.clone(), scaler.clone());
+    results.push(bench("learned route() x400 queries", 10, 2000, || {
+        suite
+            .features
+            .iter()
+            .filter(|f| learned.route(f).easy)
+            .count()
+    }));
+
+    // Training the Table VI classifier.
+    results.push(bench("LR fit (400x5, 500 iters)", 0, 5, || {
+        let mut lr = LogisticRegression::new(1.0);
+        lr.fit(&xz, &y);
+        lr.bias
+    }));
+
+    // Quality-matrix build (surrogate over the suite × 5 tiers).
+    let qm = QualityModel::new();
+    results.push(bench("QualityMatrix::build (400q x 5 tiers)", 0, 5, || {
+        QualityMatrix::build(&suite, &qm).raw[0][0]
+    }));
+
+    // One routed phase-aware scheduler run (Table XVII/XVIII unit).
+    results.push(bench("scheduler run (routed, phase-aware)", 0, 3, || {
+        Scheduler::new(
+            gpu.clone(),
+            Router::paper_default(),
+            DvfsPolicy::paper_phase_aware(&gpu),
+            1,
+        )
+        .run(&suite)
+        .unwrap()
+        .total_energy_j
+    }));
+    results.push(bench("scheduler run (32B monolith baseline)", 0, 3, || {
+        Scheduler::new(
+            gpu.clone(),
+            Router::with_tiers(ModelTier::B32, ModelTier::B32),
+            DvfsPolicy::baseline(&gpu),
+            1,
+        )
+        .run(&suite)
+        .unwrap()
+        .total_energy_j
+    }));
+
+    report("routing (Tables XV-XVIII)", &results);
+}

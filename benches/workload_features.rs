@@ -1,0 +1,69 @@
+//! Bench: workload-characterization front-end (Tables II–VI).
+//!
+//! The paper claims feature extraction is "lightweight ... negligible
+//! runtime overhead"; this bench quantifies that claim for our
+//! implementation (per-query extraction must be microseconds-scale next to
+//! millisecond-scale inference).
+
+use ewatt::features::FeatureExtractor;
+use ewatt::stats::{cross_validate_accuracy, pearson};
+use ewatt::text::rouge::rouge_l;
+use ewatt::text::tokenizer::tokenize;
+use ewatt::text::NamedEntityRecognizer;
+use ewatt::util::bench::{bench, report};
+use ewatt::workload::{gen, Dataset, ReplaySuite};
+
+fn main() {
+    let mut results = Vec::new();
+
+    // Corpus generation (suite build path).
+    results.push(bench("generate 100 NarrativeQA queries", 2, 20, || {
+        let mut rng = ewatt::rng(1);
+        gen::generate(Dataset::NarrativeQa, 100, 0, &mut rng).len()
+    }));
+
+    // Single-query primitives on a long query.
+    let mut rng = ewatt::rng(2);
+    let long = gen::generate(Dataset::NarrativeQa, 1, 0, &mut rng).remove(0);
+    let short = gen::generate(Dataset::TruthfulQa, 1, 1, &mut rng).remove(0);
+    let fx = FeatureExtractor::new();
+    let ner = NamedEntityRecognizer::new();
+    results.push(bench("tokenize (339-token query)", 100, 5000, || {
+        tokenize(&long.text).len()
+    }));
+    results.push(bench("NER (339-token query)", 100, 5000, || {
+        ner.recognize(&long.text).len()
+    }));
+    results.push(bench("feature extract (339-token)", 100, 5000, || {
+        fx.extract(&long.text)
+    }));
+    results.push(bench("feature extract (13-token)", 100, 20000, || {
+        fx.extract(&short.text)
+    }));
+    results.push(bench("rouge_l (two ~100-word texts)", 100, 2000, || {
+        rouge_l(&long.text, &short.text).f1
+    }));
+
+    // Suite-scale extraction (Table II..IV build) + stats.
+    results.push(bench("ReplaySuite::quick(200/dataset) build", 0, 3, || {
+        ReplaySuite::quick(7, 200).len()
+    }));
+    let suite = ReplaySuite::quick(7, 200);
+    let xs: Vec<f64> = suite.features.iter().map(|f| f.entity_density).collect();
+    let ys: Vec<f64> = suite.features.iter().map(|f| f.input_length as f64).collect();
+    results.push(bench("pearson over 800 queries", 10, 2000, || pearson(&xs, &ys)));
+
+    // Table VI's 5-fold CV on semantic features.
+    let x: Vec<Vec<f64>> = suite
+        .features
+        .iter()
+        .map(|f| f.semantic_array().to_vec())
+        .collect();
+    let y: Vec<bool> = suite.features.iter().map(|f| f.entity_density > 0.2).collect();
+    results.push(bench("LR 5-fold CV (800x5)", 0, 3, || {
+        let mut rng = ewatt::rng(3);
+        cross_validate_accuracy(&x, &y, 5, 1.0, &mut rng)
+    }));
+
+    report("workload_features (Tables II-VI)", &results);
+}

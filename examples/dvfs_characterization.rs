@@ -1,0 +1,60 @@
+//! DVFS characterization walk-through (the paper's Section VI on your
+//! terminal): frequency sweep, the frequency cliff, phase asymmetry, and
+//! the EDP sweet spot for one model.
+//!
+//! Run: `cargo run --release --example dvfs_characterization [-- <queries>]`
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::engine::ReplayEngine;
+use ewatt::perf::edp;
+use ewatt::workload::ReplaySuite;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(7, n);
+    let idx: Vec<usize> = (0..suite.len()).collect();
+
+    println!("model         freq(MHz)  energy(J)  latency(s)  preΔ%    decΔ%   EDP");
+    for tier in [ModelTier::B1, ModelTier::B8, ModelTier::B32] {
+        let engine = ReplayEngine::new(gpu.clone(), model_for_tier(tier));
+        let base = engine.run(&suite, &idx, 1, &DvfsPolicy::Static(gpu.f_max_mhz))?;
+        let mut best: Option<(u32, f64)> = None;
+        for &f in &gpu.freq_levels_mhz {
+            let m = engine.run(&suite, &idx, 1, &DvfsPolicy::Static(f))?;
+            let e = edp(m.energy_j, m.latency_s);
+            if best.map_or(true, |(_, be)| e < be) {
+                best = Some((f, e));
+            }
+            println!(
+                "{:12} {:>8}  {:>9.1}  {:>9.3}  {:>+7.1}  {:>+7.2}  {:>8.1}",
+                model_for_tier(tier).name,
+                f,
+                m.energy_j,
+                m.latency_s,
+                100.0 * (m.prefill_s - base.prefill_s) / base.prefill_s,
+                100.0 * (m.decode_s - base.decode_s) / base.decode_s,
+                e
+            );
+        }
+        let (bf, _) = best.unwrap();
+        println!("  → EDP-optimal set point for {}: {bf} MHz (paper: ~960 MHz)\n",
+                 model_for_tier(tier).name);
+    }
+
+    // Phase-aware policy vs static baseline (Fig. 6 behaviour).
+    let engine = ReplayEngine::new(gpu.clone(), model_for_tier(ModelTier::B8));
+    let base = engine.run(&suite, &idx, 1, &DvfsPolicy::baseline(&gpu))?;
+    let pa = engine.run(&suite, &idx, 1, &DvfsPolicy::paper_phase_aware(&gpu))?;
+    println!(
+        "phase-aware [2842 prefill / 180 decode]: energy {:.1}% below baseline, latency {:+.2}%",
+        100.0 * (1.0 - pa.energy_j / base.energy_j),
+        100.0 * (pa.latency_s - base.latency_s) / base.latency_s
+    );
+    Ok(())
+}

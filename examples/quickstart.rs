@@ -1,0 +1,43 @@
+//! Quickstart: the library in ~40 lines.
+//!
+//! Generates a small calibrated workload, extracts the paper's semantic
+//! features, runs one DVFS comparison (180 vs 2842 MHz) on the simulated
+//! testbed, and prints the headline numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::engine::ReplayEngine;
+use ewatt::workload::ReplaySuite;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A reproducible, feature-annotated workload (40 queries/dataset).
+    let suite = ReplaySuite::quick(42, 40);
+    println!("suite: {} queries across 4 datasets", suite.len());
+    let f = &suite.features[0];
+    println!(
+        "first query features: len={} entity={:.2} causal={} entropy={:.2}",
+        f.input_length, f.entity_density, f.causal_question, f.token_entropy
+    );
+
+    // 2. Replay it on Llama-3.1-8B at both frequency extremes.
+    let engine = ReplayEngine::new(GpuSpec::rtx_pro_6000(), model_for_tier(ModelTier::B8));
+    let idx: Vec<usize> = (0..suite.len()).collect();
+    let hi = engine.run(&suite, &idx, 1, &DvfsPolicy::Static(2842))?;
+    let lo = engine.run(&suite, &idx, 1, &DvfsPolicy::Static(180))?;
+
+    // 3. The paper's headline: big energy savings, tiny latency cost.
+    println!(
+        "2842 MHz: {:.1} J total, {:.2} s;   180 MHz: {:.1} J, {:.2} s",
+        hi.energy_j, hi.latency_s, lo.energy_j, lo.latency_s
+    );
+    println!(
+        "energy savings {:.1}%  latency change {:+.1}%  (decode share {:.0}%)",
+        100.0 * (1.0 - lo.energy_j / hi.energy_j),
+        100.0 * (lo.latency_s - hi.latency_s) / hi.latency_s,
+        100.0 * hi.decode_share()
+    );
+    Ok(())
+}

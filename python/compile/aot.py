@@ -1,0 +1,134 @@
+"""AOT bridge: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Python runs exactly once, at ``make artifacts``. For every (tier, phase,
+batch) combination this script:
+
+  1. traces/lowers ``jax.jit(fn).lower(*example_args)``,
+  2. converts the StableHLO module to an XlaComputation and dumps **HLO
+     text** — NOT ``.serialize()``: jax ≥ 0.5 emits HloModuleProtos with
+     64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+     published ``xla`` crate) rejects; the text parser reassigns ids and
+     round-trips cleanly (see /opt/xla-example/README.md),
+  3. writes seeded-random weights as raw little-endian f32 and a
+     ``manifest.json`` describing every tensor and program signature, which
+     ``rust/src/runtime/artifact.rs`` consumes.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--tiers t1,t2] [--batches 1,4,8]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_FORMAT = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_sig(sds) -> list:
+    return [{"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))} for s in sds]
+
+
+def lower_program(cfg, which: str, batch: int):
+    fn = M.prefill_fn(cfg, batch) if which == "prefill" else M.decode_fn(cfg, batch)
+    args = M.example_args(cfg, batch, which)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), args
+
+
+def write_weights(cfg, out_dir: str, seed: int):
+    """Raw little-endian f32 blob, tensors in M.PARAM_ORDER."""
+    params = M.init_params(cfg, seed=seed)
+    path = os.path.join(out_dir, f"{cfg.name}_weights.bin")
+    tensors, offset = [], 0
+    with open(path, "wb") as f:
+        for name in M.PARAM_ORDER:
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            tensors.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nelems": int(arr.size),
+            })
+            offset += arr.nbytes
+    return os.path.basename(path), tensors, offset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiers", default="t1,t2,t3,t4,t5")
+    ap.add_argument("--batches", default="1,4,8")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
+    batches = [int(b) for b in args.batches.split(",")]
+
+    manifest = {
+        "format": MANIFEST_FORMAT,
+        "prefill_seq": M.PREFILL_SEQ,
+        "seed": args.seed,
+        "tiers": {},
+    }
+    t_start = time.time()
+    for name in tiers:
+        cfg = M.TIERS[name]
+        weights_file, tensors, nbytes = write_weights(cfg, args.out_dir, args.seed)
+        programs = {}
+        for which in ("prefill", "decode"):
+            for b in batches:
+                hlo, sig = lower_program(cfg, which, b)
+                fname = f"{name}_{which}_b{b}.hlo.txt"
+                with open(os.path.join(args.out_dir, fname), "w") as f:
+                    f.write(hlo)
+                programs[f"{which}_b{b}"] = {
+                    "file": fname,
+                    "phase": which,
+                    "batch": b,
+                    "inputs": shape_sig(sig),
+                    "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+                }
+                print(f"  {fname}: {len(hlo)} chars "
+                      f"({time.time() - t_start:.1f}s elapsed)")
+        manifest["tiers"][name] = {
+            "config": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff,
+                "max_seq": cfg.max_seq, "head_dim": cfg.head_dim,
+                "rope_theta": cfg.rope_theta,
+            },
+            "param_count": cfg.param_count(),
+            "weights": weights_file,
+            "weights_bytes": nbytes,
+            "tensors": tensors,
+            "programs": programs,
+        }
+        print(f"tier {name}: {cfg.param_count()/1e6:.2f}M params")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written; total {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

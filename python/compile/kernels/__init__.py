@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the paper's two inference phases.
+
+``decode_attention`` — memory-bound single-token attention over a KV cache
+(Flash-Decoding style); ``flash_prefill`` — compute-bound causal tiled
+attention. ``ref`` holds the pure-jnp oracles.
+"""
+
+from .decode_attention import decode_attention
+from .flash_prefill import flash_prefill
+
+__all__ = ["decode_attention", "flash_prefill"]

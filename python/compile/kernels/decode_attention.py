@@ -1,0 +1,108 @@
+"""Pallas decode-phase attention kernel (the paper's memory-bound hot-spot).
+
+Single-token grouped-query attention over a KV cache, in the Flash-Decoding
+style: the query head's row of attention is computed by streaming the KV cache
+in ``block_k``-sized chunks and folding them into an online-softmax accumulator
+``(m, l, acc)``.
+
+TPU adaptation of the paper's GPU framing (DESIGN.md §Hardware-Adaptation):
+what a CUDA kernel expresses with threadblocks + shared-memory tiles, we
+express with a Pallas grid over (batch, query-head) and explicit chunked loads
+of the KV cache — the HBM→VMEM schedule. Arithmetic intensity is ~2 flops per
+cache byte, which is *why* the decode phase is insensitive to core frequency
+(Section VI of the paper): the kernel is bandwidth-bound at every supported
+clock.
+
+``interpret=True`` is mandatory on this testbed: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode lowers
+the kernel to plain HLO so the exported module runs anywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(seqlen_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One (batch, query-head) cell of the grid.
+
+    seqlen_ref: [1, 1] int32 — number of valid KV positions.
+    q_ref:      [1, 1, D]    — this head's query.
+    k_ref:      [1, 1, T, D] — this head's KV-group key cache.
+    v_ref:      [1, 1, T, D] — this head's KV-group value cache.
+    o_ref:      [1, 1, D]    — output.
+    """
+    t = k_ref.shape[2]
+    d = q_ref.shape[-1]
+    seq_len = seqlen_ref[0, 0]
+    q = q_ref[0, 0, :].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    num_blocks = t // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * block_k
+        # One HBM→VMEM chunk of the cache (pipelined by BlockSpec on real TPU).
+        k_blk = pl.load(
+            k_ref, (0, 0, pl.dslice(start, block_k), slice(None))
+        ).astype(jnp.float32)
+        v_blk = pl.load(
+            v_ref, (0, 0, pl.dslice(start, block_k), slice(None))
+        ).astype(jnp.float32)
+        # [block_k] scores for this chunk; MXU-shaped matvec on real TPU.
+        s = jnp.dot(k_blk, q) * scale
+        idx = start + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(idx < seq_len, s, NEG_INF)
+        # Online softmax rescale-and-accumulate.
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.asarray(NEG_INF, jnp.float32)
+    l0 = jnp.asarray(0.0, jnp.float32)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0, :] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, seq_len, *, block_k: int = 64,
+                     interpret: bool = True):
+    """Single-token GQA attention over a KV cache.
+
+    q: [B, H, D]; k_cache, v_cache: [B, Hkv, T, D] with H % Hkv == 0 and
+    T % block_k == 0; seq_len: scalar int32 (valid cache length, including
+    the current token's freshly written K/V). Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    hkv, t = k_cache.shape[1], k_cache.shape[2]
+    if h % hkv:
+        raise ValueError(f"H={h} not divisible by Hkv={hkv}")
+    if t % block_k:
+        raise ValueError(f"cache length T={t} not divisible by block_k={block_k}")
+    group = h // hkv
+    seqlen_arr = jnp.broadcast_to(jnp.asarray(seq_len, jnp.int32), (1, 1))
+
+    grid = (b, h)
+    kernel = functools.partial(_decode_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, hi: (0, 0)),
+            pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bi, hi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bi, hi: (bi, hi // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(seqlen_arr, q, k_cache, v_cache)

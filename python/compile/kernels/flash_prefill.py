@@ -1,0 +1,97 @@
+"""Pallas prefill-phase attention kernel (the paper's compute-bound phase).
+
+Causal flash attention: the grid tiles the query sequence into ``block_q``
+rows per (batch, head); each cell streams key/value chunks of ``block_k``
+columns up to the causal frontier and folds them into a per-row online-softmax
+accumulator.
+
+This is the compute half of the paper's phase asymmetry (Section VI):
+arithmetic intensity grows ∝ sequence length per weight byte, so prefill — and
+only prefill — responds to core-frequency scaling. On real TPU the per-tile
+``q_blk @ k_blkᵀ`` maps onto the MXU systolic array; here ``interpret=True``
+lowers it to plain HLO for the CPU PJRT runtime (see decode_attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int):
+    """One (batch, head, q-tile) cell.
+
+    q_ref: [1, 1, block_q, D]; k_ref, v_ref: [1, 1, S, D]; o_ref like q_ref.
+    """
+    d = q_ref.shape[-1]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0, :, :].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    row = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # Causal frontier: only KV chunks whose first column <= last row index.
+    num_blocks = (qi * block_q + block_q + block_k - 1) // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = j * block_k
+        k_blk = pl.load(
+            k_ref, (0, 0, pl.dslice(start, block_k), slice(None))
+        ).astype(jnp.float32)
+        v_blk = pl.load(
+            v_ref, (0, 0, pl.dslice(start, block_k), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T) * scale  # [block_q, block_k] — MXU tile.
+        col = start + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(row[:, None] >= col[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_prefill(q, k, v, *, block_q: int = 32, block_k: int = 32,
+                  interpret: bool = True):
+    """Causal GQA flash attention for the prefill phase.
+
+    q: [B, H, S, D]; k, v: [B, Hkv, S, D]; S % block_q == 0 and
+    S % block_k == 0. Returns [B, H, S, D].
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if h % hkv:
+        raise ValueError(f"H={h} not divisible by Hkv={hkv}")
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} not divisible by blocks ({block_q},{block_k})")
+    group = h // hkv
+
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(_prefill_kernel, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

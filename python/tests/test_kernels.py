@@ -1,0 +1,259 @@
+"""L1 correctness: Pallas kernels vs. the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes per the repro contract: the kernels must match
+``ref.py`` across batch sizes, head counts, GQA group sizes, cache lengths and
+block shapes — this is the core correctness signal for everything the Rust
+runtime later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, flash_prefill
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tolerances(dtype):
+    return (2e-2, 2e-2) if dtype == jnp.bfloat16 else (2e-5, 2e-5)
+
+
+# ---------------------------------------------------------------- decode ----
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    tblocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, hkv, group, tblocks, d, block_k, seed):
+    t = tblocks * block_k
+    h = hkv * group
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(keys[0], (b, h, d), jnp.float32)
+    kc = rand(keys[1], (b, hkv, t, d), jnp.float32)
+    vc = rand(keys[2], (b, hkv, t, d), jnp.float32)
+    seq_len = int(jax.random.randint(keys[3], (), 1, t + 1))
+    out = decode_attention(q, kc, vc, seq_len, block_k=block_k)
+    exp = ref.decode_attention_ref(q, kc, vc, seq_len)
+    np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(keys[0], (2, 4, 16), dtype)
+    kc = rand(keys[1], (2, 2, 128, 16), dtype)
+    vc = rand(keys[2], (2, 2, 128, 16), dtype)
+    out = decode_attention(q, kc, vc, 77)
+    exp = ref.decode_attention_ref(
+        q.astype(jnp.float32), kc.astype(jnp.float32),
+        vc.astype(jnp.float32), 77)
+    rtol, atol = tolerances(dtype)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32), exp, rtol=rtol, atol=atol)
+
+
+def test_decode_attention_seqlen_one():
+    """Only the first cache slot is valid — attention must equal v[0]."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(keys[0], (1, 2, 8), jnp.float32)
+    kc = rand(keys[1], (1, 1, 64, 8), jnp.float32)
+    vc = rand(keys[2], (1, 1, 64, 8), jnp.float32)
+    out = decode_attention(q, kc, vc, 1)
+    np.testing.assert_allclose(
+        out[0, 0], vc[0, 0, 0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        out[0, 1], vc[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_garbage_past_seqlen():
+    """Poisoning cache entries past seq_len must not change the output."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(keys[0], (1, 4, 16), jnp.float32)
+    kc = rand(keys[1], (1, 2, 128, 16), jnp.float32)
+    vc = rand(keys[2], (1, 2, 128, 16), jnp.float32)
+    out = decode_attention(q, kc, vc, 50)
+    kc2 = kc.at[:, :, 50:, :].set(1e4)
+    vc2 = vc.at[:, :, 50:, :].set(-1e4)
+    out2 = decode_attention(q, kc2, vc2, 50)
+    np.testing.assert_allclose(out, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_validates_shapes():
+    q = jnp.zeros((1, 3, 8))
+    kc = jnp.zeros((1, 2, 64, 8))
+    with pytest.raises(ValueError, match="divisible"):
+        decode_attention(q, kc, kc, 1)
+    q = jnp.zeros((1, 4, 8))
+    kc = jnp.zeros((1, 2, 60, 8))
+    with pytest.raises(ValueError, match="divisible"):
+        decode_attention(q, kc, kc, 1, block_k=64)
+
+
+# --------------------------------------------------------------- prefill ----
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    sblocks=st.integers(1, 3),
+    d=st.sampled_from([8, 16, 32]),
+    blocks=st.sampled_from([(16, 16), (32, 32), (16, 32)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_prefill_matches_ref(b, hkv, group, sblocks, d, blocks, seed):
+    block_q, block_k = blocks
+    s = sblocks * max(block_q, block_k)
+    h = hkv * group
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(keys[0], (b, h, s, d), jnp.float32)
+    k = rand(keys[1], (b, hkv, s, d), jnp.float32)
+    v = rand(keys[2], (b, hkv, s, d), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=block_q, block_k=block_k)
+    exp = ref.prefill_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_dtypes(dtype):
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(keys[0], (1, 4, 64, 16), dtype)
+    k = rand(keys[1], (1, 2, 64, 16), dtype)
+    v = rand(keys[2], (1, 2, 64, 16), dtype)
+    out = flash_prefill(q, k, v)
+    exp = ref.prefill_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    rtol, atol = tolerances(dtype)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32), exp, rtol=rtol, atol=atol)
+
+
+def test_flash_prefill_causality():
+    """Perturbing future positions must not change earlier outputs."""
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(keys[0], (1, 2, 64, 16), jnp.float32)
+    k = rand(keys[1], (1, 2, 64, 16), jnp.float32)
+    v = rand(keys[2], (1, 2, 64, 16), jnp.float32)
+    base = flash_prefill(q, k, v)
+    k2 = k.at[:, :, 40:, :].add(3.0)
+    v2 = v.at[:, :, 40:, :].add(-2.0)
+    pert = flash_prefill(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :40], pert[:, :, :40],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[:, :, 40:], pert[:, :, 40:])
+
+
+def test_flash_prefill_first_row_is_v0():
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = rand(keys[0], (1, 2, 32, 8), jnp.float32)
+    k = rand(keys[1], (1, 1, 32, 8), jnp.float32)
+    v = rand(keys[2], (1, 1, 32, 8), jnp.float32)
+    out = flash_prefill(q, k, v, block_q=16, block_k=16)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_flash_prefill_validates_shapes():
+    q = jnp.zeros((1, 4, 48, 8))
+    k = jnp.zeros((1, 2, 48, 8))
+    with pytest.raises(ValueError, match="divisible"):
+        flash_prefill(q, k, k, block_q=32, block_k=32)
+
+
+# --------------------------------------------- phase-consistency property ----
+
+def test_decode_equals_prefill_last_row():
+    """Decoding token t over a cache of t entries == causal prefill row t.
+
+    This is the invariant that makes the two-phase engine correct: running
+    decode_attention with the query of the last prompt position over the
+    cache filled by the prompt must reproduce flash_prefill's last row.
+    """
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    b, h, hkv, s, d = 2, 4, 2, 64, 16
+    q = rand(keys[0], (b, h, s, d), jnp.float32)
+    k = rand(keys[1], (b, hkv, s, d), jnp.float32)
+    v = rand(keys[2], (b, hkv, s, d), jnp.float32)
+    full = flash_prefill(q, k, v)
+    dec = decode_attention(q[:, :, -1, :], k, v, s)
+    np.testing.assert_allclose(dec, full[:, :, -1, :], rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------- paged decode ----
+
+from compile.kernels.paged_decode_attention import (  # noqa: E402
+    gather_pages,
+    paged_decode_attention,
+)
+
+
+def make_paged(key, b, hkv, group, pages_per_seq, page_size, d):
+    """Build a scattered pool + block tables + the equivalent contiguous cache."""
+    h = hkv * group
+    p_total = b * pages_per_seq + 3  # a few unused pages in the pool
+    keys = jax.random.split(key, 4)
+    q = jax.random.normal(keys[0], (b, h, d), jnp.float32)
+    k_pool = jax.random.normal(keys[1], (p_total, hkv, page_size, d), jnp.float32)
+    v_pool = jax.random.normal(keys[2], (p_total, hkv, page_size, d), jnp.float32)
+    # Deterministic scattered (non-contiguous, non-sorted) page assignment.
+    perm = np.array(jax.random.permutation(keys[3], p_total))[: b * pages_per_seq]
+    table = jnp.asarray(perm.reshape(b, pages_per_seq), jnp.int32)
+    return q, k_pool, v_pool, table
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    pages=st.integers(1, 5),
+    page_size=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_decode_matches_contiguous_ref(b, hkv, group, pages, page_size, d, seed):
+    key = jax.random.PRNGKey(seed)
+    q, kp, vp, table = make_paged(key, b, hkv, group, pages, page_size, d)
+    t = pages * page_size
+    seq_len = int(jax.random.randint(jax.random.fold_in(key, 9), (), 1, t + 1))
+    out = paged_decode_attention(q, kp, vp, table, seq_len, page_size=page_size)
+    kc = gather_pages(kp, table, t, page_size)
+    vc = gather_pages(vp, table, t, page_size)
+    exp = ref.decode_attention_ref(q, kc, vc, seq_len)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+def test_paged_decode_ignores_unmapped_pool_pages():
+    """Poisoning pool pages not referenced by the table must not matter."""
+    key = jax.random.PRNGKey(11)
+    q, kp, vp, table = make_paged(key, 2, 2, 2, 3, 16, 16)
+    seq_len = 40
+    base = paged_decode_attention(q, kp, vp, table, seq_len, page_size=16)
+    used = set(np.array(table).flatten().tolist())
+    unused = [p for p in range(kp.shape[0]) if p not in used]
+    assert unused, "fixture should leave unused pages"
+    kp2 = kp.at[unused, ...].set(1e6)
+    vp2 = vp.at[unused, ...].set(-1e6)
+    pert = paged_decode_attention(q, kp2, vp2, table, seq_len, page_size=16)
+    np.testing.assert_allclose(base, pert, rtol=1e-6, atol=1e-6)
+
+
+def test_paged_decode_validates_pool_shape():
+    key = jax.random.PRNGKey(12)
+    q, kp, vp, table = make_paged(key, 1, 1, 2, 2, 16, 8)
+    with pytest.raises(ValueError, match="page size"):
+        paged_decode_attention(q, kp, vp, table, 5, page_size=8)

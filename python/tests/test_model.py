@@ -1,0 +1,105 @@
+"""L2 correctness: transformer shapes, phase equivalence, kernel parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TIERS["t1"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def prompt(batch, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (batch, M.PREFILL_SEQ), 0, CFG.vocab,
+                              dtype=jnp.int32)
+
+
+def test_param_count_matches_actual(params):
+    actual = sum(int(np.prod(p.shape)) for p in params.values())
+    assert actual == CFG.param_count()
+
+
+@pytest.mark.parametrize("batch", [1, 2, 4])
+def test_prefill_shapes(params, batch):
+    logits, kc, vc = M.prefill(params, prompt(batch), CFG)
+    l, hkv, dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    assert logits.shape == (batch, CFG.vocab)
+    assert kc.shape == (l, batch, hkv, CFG.max_seq, dh)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_cache_padding_is_zero(params):
+    _, kc, vc = M.prefill(params, prompt(1), CFG)
+    s = M.PREFILL_SEQ
+    assert np.all(np.asarray(kc)[:, :, :, s:, :] == 0.0)
+    assert np.all(np.asarray(vc)[:, :, :, s:, :] == 0.0)
+
+
+def test_decode_updates_cache_at_pos(params):
+    logits, kc, vc = M.prefill(params, prompt(2), CFG)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.asarray(M.PREFILL_SEQ, jnp.int32)
+    _, kc2, vc2 = M.decode_step(params, tok, kc, vc, pos, CFG)
+    s = M.PREFILL_SEQ
+    # Position s freshly written, everything before unchanged.
+    assert not np.allclose(np.asarray(kc2)[:, :, :, s, :], 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(kc2)[:, :, :, :s, :], np.asarray(kc)[:, :, :, :s, :])
+    np.testing.assert_array_equal(
+        np.asarray(vc2)[:, :, :, :s, :], np.asarray(vc)[:, :, :, :s, :])
+
+
+def test_pallas_and_ref_paths_agree(params):
+    tokens = prompt(2, seed=3)
+    lp, kp, vp = M.prefill(params, tokens, CFG, use_pallas=True)
+    lr, kr, vr = M.prefill(params, tokens, CFG, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=2e-4, atol=2e-4)
+    tok = jnp.argmax(lp, -1).astype(jnp.int32)
+    pos = jnp.asarray(M.PREFILL_SEQ, jnp.int32)
+    dp, _, _ = M.decode_step(params, tok, kp, vp, pos, CFG, use_pallas=True)
+    dr, _, _ = M.decode_step(params, tok, kr, vr, pos, CFG, use_pallas=False)
+    np.testing.assert_allclose(dp, dr, rtol=2e-4, atol=2e-4)
+
+
+def test_greedy_generation_is_deterministic(params):
+    tokens = prompt(1, seed=5)
+    g1 = M.greedy_generate(params, tokens, CFG, 6)
+    g2 = M.greedy_generate(params, tokens, CFG, 6)
+    np.testing.assert_array_equal(g1, g2)
+    assert g1.shape == (1, 6)
+    assert (np.asarray(g1) >= 0).all() and (np.asarray(g1) < CFG.vocab).all()
+
+
+def test_batch_consistency(params):
+    """Row i of a batched prefill must equal the same prompt run alone."""
+    tokens = prompt(4, seed=7)
+    lb, _, _ = M.prefill(params, tokens, CFG)
+    l0, _, _ = M.prefill(params, tokens[:1], CFG)
+    np.testing.assert_allclose(lb[0], l0[0], rtol=1e-4, atol=1e-4)
+
+
+def test_tier_param_counts_are_ordered():
+    counts = [M.TIERS[t].param_count() for t in ["t1", "t2", "t3", "t4", "t5"]]
+    assert counts == sorted(counts)
+    assert counts[0] < 1e6 and counts[-1] > 3e7
+
+
+def test_example_args_match_init_shapes(params):
+    sig = M.example_args(CFG, 2, "prefill")
+    for name, sd in zip(M.PARAM_ORDER, sig):
+        assert tuple(sd.shape) == params[name].shape, name
+    sig_d = M.example_args(CFG, 2, "decode")
+    assert tuple(sig_d[-3].shape) == (
+        CFG.n_layers, 2, CFG.n_kv_heads, CFG.max_seq, CFG.head_dim)
+    with pytest.raises(ValueError):
+        M.example_args(CFG, 1, "nope")

@@ -1,0 +1,86 @@
+//! Experiment sweep grids — the study's controlled variables (Section IV).
+
+use super::gpu::FreqMHz;
+use crate::workload::Dataset;
+
+/// One full study configuration (Section IV of the paper).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Queries per dataset (paper: 1,000; TruthfulQA capped at 817).
+    pub queries_per_dataset: usize,
+    /// Repetitions per configuration (paper: 3, means reported).
+    pub repetitions: usize,
+    /// Batch sizes evaluated (paper: 1, 4, 8).
+    pub batch_sizes: Vec<usize>,
+    /// Max new tokens for generation tasks (paper: 100, greedy, EOS stop).
+    pub max_new_tokens: usize,
+    /// Master seed for all derived randomness.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            queries_per_dataset: 1000,
+            repetitions: 3,
+            batch_sizes: vec![1, 4, 8],
+            max_new_tokens: 100,
+            seed: 0xE_1A5,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// A reduced configuration for fast tests/benches (same shape, fewer
+    /// queries/reps). Experiment outputs remain within the calibration bands.
+    pub fn quick() -> Self {
+        ExperimentConfig {
+            queries_per_dataset: 200,
+            repetitions: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// Cartesian sweep grid for the DVFS characterization (Section VI).
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub freqs_mhz: Vec<FreqMHz>,
+    pub batch_sizes: Vec<usize>,
+    pub datasets: Vec<Dataset>,
+}
+
+impl SweepGrid {
+    pub fn full(freqs: &[FreqMHz]) -> Self {
+        SweepGrid {
+            freqs_mhz: freqs.to_vec(),
+            batch_sizes: vec![1, 4, 8],
+            datasets: Dataset::ALL.to_vec(),
+        }
+    }
+
+    /// Number of (freq, batch, dataset) cells.
+    pub fn cells(&self) -> usize {
+        self.freqs_mhz.len() * self.batch_sizes.len() * self.datasets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_setup() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.queries_per_dataset, 1000);
+        assert_eq!(c.repetitions, 3);
+        assert_eq!(c.batch_sizes, vec![1, 4, 8]);
+        assert_eq!(c.max_new_tokens, 100);
+    }
+
+    #[test]
+    fn grid_cell_count() {
+        let g = SweepGrid::full(&[180, 960, 2842]);
+        assert_eq!(g.cells(), 3 * 3 * 4);
+    }
+}

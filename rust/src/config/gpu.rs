@@ -1,0 +1,160 @@
+//! Simulated GPU testbed specification.
+//!
+//! Substitutes the paper's NVIDIA RTX PRO 6000 (Blackwell, 96 GB) — see
+//! DESIGN.md §3. All constants are either public Blackwell datasheet numbers
+//! or calibrated against the paper's own measurements (Table XI bands), and
+//! the calibration is asserted by `rust/tests/calibration.rs`.
+
+/// SM frequency in MHz.
+pub type FreqMHz = u32;
+
+/// Static description of the simulated GPU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Supported SM frequency levels (the paper's seven DVFS set points).
+    pub freq_levels_mhz: Vec<FreqMHz>,
+    /// Maximum SM frequency — the paper's baseline configuration.
+    pub f_max_mhz: FreqMHz,
+    /// Peak dense FP16 throughput at `f_max`, FLOP/s.
+    pub peak_flops_fp16: f64,
+    /// Sustained HBM/GDDR bandwidth, bytes/s (memory clock is *not* scaled;
+    /// the paper keeps memory frequency at default to isolate SM scaling).
+    pub mem_bw_bytes: f64,
+    /// Device memory capacity in bytes.
+    pub mem_capacity_bytes: u64,
+    /// Idle (static + uncore) power draw, watts.
+    pub p_idle_w: f64,
+    /// Memory-subsystem power at full bandwidth utilization, watts.
+    pub p_mem_w: f64,
+    /// SM dynamic power at `f_max`, full voltage, full activity, watts.
+    pub p_sm_w: f64,
+    /// Board sustained power cap (duty-cycle throttling above this), watts.
+    pub p_sustain_w: f64,
+    /// Core voltage at `f_max` (relative units).
+    pub v_max: f64,
+    /// Minimum core voltage — the floor below `f_v0`.
+    pub v_min: f64,
+    /// Frequency below which voltage sits at `v_min` (the "cliff" knee), MHz.
+    pub f_v0_mhz: FreqMHz,
+    /// Fraction of memory activity that keeps the SM clock domain toggling
+    /// (data movement through L2/registers) — drives decode-phase power.
+    pub kappa_mem_activity: f64,
+    /// Host-side launch overhead per kernel, seconds (eager-mode serving
+    /// stack, as in the paper's HF/torch harness).
+    pub t_launch_s: f64,
+    /// Fixed host framework overhead per phase step (python dispatch,
+    /// sampling, bookkeeping), seconds.
+    pub t_framework_s: f64,
+    /// Additional host overhead per sequence in the batch per step
+    /// (per-row sampling, stopping-criteria checks, detokenization).
+    pub t_host_per_seq_s: f64,
+    /// Kernels launched per transformer layer per phase step.
+    pub kernels_per_layer: f64,
+    /// Clock-sensitivity model η = min(1, coeff / (rows·width)^pow):
+    /// at low occupancy kernels are DRAM-latency-bound and respond
+    /// sub-linearly to SM clock (DESIGN.md §5). Calibrated against the
+    /// paper's Table XI prefill/decode deltas.
+    pub clock_sens_coeff: f64,
+    pub clock_sens_pow: f64,
+    /// Latency of an SM-clock set-point change (phase-aware DVFS cost).
+    pub f_switch_overhead_s: f64,
+    /// NVML-style power sampling period, seconds (paper: 10 ms).
+    pub telemetry_period_s: f64,
+}
+
+impl GpuSpec {
+    /// The study's testbed: RTX PRO 6000 Blackwell-class simulator.
+    pub fn rtx_pro_6000() -> Self {
+        GpuSpec {
+            name: "SimRTX-PRO-6000-Blackwell".into(),
+            freq_levels_mhz: vec![180, 487, 960, 1500, 2000, 2505, 2842],
+            f_max_mhz: 2842,
+            peak_flops_fp16: 250e12,
+            mem_bw_bytes: 1.6e12,
+            mem_capacity_bytes: 96 * (1 << 30),
+            p_idle_w: 90.0,
+            p_mem_w: 130.0,
+            p_sm_w: 330.0,
+            p_sustain_w: 460.0,
+            v_max: 1.05,
+            v_min: 0.70,
+            f_v0_mhz: 960,
+            kappa_mem_activity: 0.62,
+            t_launch_s: 6e-6,
+            t_framework_s: 0.35e-3,
+            t_host_per_seq_s: 0.2e-3,
+            kernels_per_layer: 10.0,
+            clock_sens_coeff: 3000.0,
+            clock_sens_pow: 0.7,
+            f_switch_overhead_s: 2e-4,
+            telemetry_period_s: 0.010,
+        }
+    }
+
+    /// Core voltage at frequency `f` (linear above the floor knee).
+    pub fn voltage(&self, f: FreqMHz) -> f64 {
+        if f <= self.f_v0_mhz {
+            self.v_min
+        } else {
+            let t = (f - self.f_v0_mhz) as f64 / (self.f_max_mhz - self.f_v0_mhz) as f64;
+            self.v_min + t * (self.v_max - self.v_min)
+        }
+    }
+
+    /// Peak FLOP/s at frequency `f` (compute scales with the SM clock).
+    pub fn peak_flops_at(&self, f: FreqMHz) -> f64 {
+        self.peak_flops_fp16 * f as f64 / self.f_max_mhz as f64
+    }
+
+    /// Validate a requested set point against the supported ladder.
+    pub fn supports(&self, f: FreqMHz) -> bool {
+        self.freq_levels_mhz.contains(&f)
+    }
+
+    pub fn f_min_mhz(&self) -> FreqMHz {
+        *self.freq_levels_mhz.iter().min().expect("non-empty ladder")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_matches_paper() {
+        let g = GpuSpec::rtx_pro_6000();
+        assert_eq!(g.freq_levels_mhz, vec![180, 487, 960, 1500, 2000, 2505, 2842]);
+        assert_eq!(g.f_max_mhz, 2842);
+        assert_eq!(g.f_min_mhz(), 180);
+    }
+
+    #[test]
+    fn voltage_curve_has_floor_and_is_monotone() {
+        let g = GpuSpec::rtx_pro_6000();
+        assert_eq!(g.voltage(180), g.v_min);
+        assert_eq!(g.voltage(960), g.v_min);
+        assert!((g.voltage(2842) - g.v_max).abs() < 1e-12);
+        let mut prev = 0.0;
+        for &f in &g.freq_levels_mhz {
+            let v = g.voltage(f);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn peak_flops_scale_linearly() {
+        let g = GpuSpec::rtx_pro_6000();
+        let half = g.peak_flops_at(1421);
+        assert!((half / g.peak_flops_fp16 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn capacity_fits_largest_paper_model() {
+        use crate::config::model::{model_for_tier, ModelTier};
+        let g = GpuSpec::rtx_pro_6000();
+        let m = model_for_tier(ModelTier::B32);
+        assert!(m.weight_footprint_bytes() < g.mem_capacity_bytes);
+    }
+}

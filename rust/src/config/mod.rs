@@ -1,0 +1,15 @@
+//! Configuration system: model architectures, the simulated GPU testbed, and
+//! experiment sweep grids.
+//!
+//! Everything the study measures is derived from these specs — the paper's
+//! five models are encoded with their *real* architecture hyperparameters
+//! (layer count, widths, GQA factor, FFN size, vocab) so the cost model works
+//! from exact FLOP/byte counts, not guessed totals.
+
+pub mod experiment;
+pub mod gpu;
+pub mod model;
+
+pub use experiment::{ExperimentConfig, SweepGrid};
+pub use gpu::{FreqMHz, GpuSpec};
+pub use model::{ModelSpec, ModelTier, paper_models};

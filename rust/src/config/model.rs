@@ -1,0 +1,229 @@
+//! Model architecture specifications.
+//!
+//! The five paper models (Table I) are described by their published
+//! architecture hyperparameters; parameter counts are *derived* from the
+//! architecture (and unit-tested against the published totals) so the
+//! FLOP/byte cost model in [`crate::perf`] is exact rather than fitted.
+
+/// Size tier of a model in the paper's study (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ModelTier {
+    /// Llama-3.2-1B
+    B1,
+    /// Llama-3.2-3B
+    B3,
+    /// Llama-3.1-8B
+    B8,
+    /// Qwen2.5-14B
+    B14,
+    /// Qwen2.5-32B
+    B32,
+}
+
+impl ModelTier {
+    pub const ALL: [ModelTier; 5] = [
+        ModelTier::B1,
+        ModelTier::B3,
+        ModelTier::B8,
+        ModelTier::B14,
+        ModelTier::B32,
+    ];
+
+    /// Paper's column label ("1B".."32B").
+    pub fn label(self) -> &'static str {
+        match self {
+            ModelTier::B1 => "1B",
+            ModelTier::B3 => "3B",
+            ModelTier::B8 => "8B",
+            ModelTier::B14 => "14B",
+            ModelTier::B32 => "32B",
+        }
+    }
+
+    /// Index 0..5 in scaling order.
+    pub fn index(self) -> usize {
+        match self {
+            ModelTier::B1 => 0,
+            ModelTier::B3 => 1,
+            ModelTier::B8 => 2,
+            ModelTier::B14 => 3,
+            ModelTier::B32 => 4,
+        }
+    }
+}
+
+/// Decoder-only transformer architecture description.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Human name, e.g. "Llama-3.2-1B".
+    pub name: String,
+    pub tier: ModelTier,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Bytes per weight element as served (FP16 in the paper).
+    pub weight_bytes: usize,
+    /// Whether input and output embeddings share weights.
+    pub tied_embeddings: bool,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// KV-cache bytes per token per sequence (both K and V, all layers).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim() * self.weight_bytes
+    }
+
+    /// Exact parameter count derived from the architecture.
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dh = self.head_dim() as u64;
+        let h = self.n_heads as u64;
+        let hkv = self.n_kv_heads as u64;
+        let f = self.d_ff as u64;
+        let l = self.n_layers as u64;
+        let v = self.vocab as u64;
+        let per_layer = d * (h * dh)        // wq
+            + 2 * d * (hkv * dh)            // wk, wv
+            + (h * dh) * d                  // wo
+            + 3 * d * f                     // gate, up, down
+            + 2 * d; // two RMSNorm gains
+        let embed = v * d;
+        let head = if self.tied_embeddings { 0 } else { v * d };
+        embed + head + l * per_layer + d
+    }
+
+    /// Total weight bytes resident in GPU memory.
+    pub fn weight_footprint_bytes(&self) -> u64 {
+        self.param_count() * self.weight_bytes as u64
+    }
+}
+
+/// The paper's five evaluated models (Table I) with published architectures.
+pub fn paper_models() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "Llama-3.2-1B".into(),
+            tier: ModelTier::B1,
+            n_layers: 16,
+            d_model: 2048,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 8192,
+            vocab: 128_256,
+            weight_bytes: 2,
+            tied_embeddings: true,
+        },
+        ModelSpec {
+            name: "Llama-3.2-3B".into(),
+            tier: ModelTier::B3,
+            n_layers: 28,
+            d_model: 3072,
+            n_heads: 24,
+            n_kv_heads: 8,
+            d_ff: 8192,
+            vocab: 128_256,
+            weight_bytes: 2,
+            tied_embeddings: true,
+        },
+        ModelSpec {
+            name: "Llama-3.1-8B".into(),
+            tier: ModelTier::B8,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 14_336,
+            vocab: 128_256,
+            weight_bytes: 2,
+            tied_embeddings: false,
+        },
+        ModelSpec {
+            name: "Qwen2.5-14B".into(),
+            tier: ModelTier::B14,
+            n_layers: 48,
+            d_model: 5120,
+            n_heads: 40,
+            n_kv_heads: 8,
+            d_ff: 13_824,
+            vocab: 152_064,
+            weight_bytes: 2,
+            tied_embeddings: false,
+        },
+        ModelSpec {
+            name: "Qwen2.5-32B".into(),
+            tier: ModelTier::B32,
+            n_layers: 64,
+            d_model: 5120,
+            n_heads: 40,
+            n_kv_heads: 8,
+            d_ff: 27_648,
+            vocab: 152_064,
+            weight_bytes: 2,
+            tied_embeddings: false,
+        },
+    ]
+}
+
+/// Look up a paper model by tier.
+pub fn model_for_tier(tier: ModelTier) -> ModelSpec {
+    paper_models()
+        .into_iter()
+        .find(|m| m.tier == tier)
+        .expect("all tiers present")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // Derived counts must land near the marketing sizes the paper uses.
+        let expect = [
+            (ModelTier::B1, 1.24e9, 0.05),
+            (ModelTier::B3, 3.2e9, 0.05),
+            (ModelTier::B8, 8.0e9, 0.05),
+            (ModelTier::B14, 14.7e9, 0.05),
+            (ModelTier::B32, 32.5e9, 0.05),
+        ];
+        for (tier, target, tol) in expect {
+            let m = model_for_tier(tier);
+            let p = m.param_count() as f64;
+            assert!(
+                (p - target).abs() / target < tol,
+                "{}: derived {p:.3e} vs published {target:.3e}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn param_counts_strictly_increase_with_tier() {
+        let models = paper_models();
+        for w in models.windows(2) {
+            assert!(w[0].param_count() < w[1].param_count());
+        }
+    }
+
+    #[test]
+    fn kv_bytes_per_token_sane() {
+        let m = model_for_tier(ModelTier::B8);
+        // Llama-3.1-8B: 2 * 32 layers * 8 kv heads * 128 dim * 2 bytes = 131072.
+        assert_eq!(m.kv_bytes_per_token(), 131_072);
+    }
+
+    #[test]
+    fn tier_labels_and_indices() {
+        for (i, t) in ModelTier::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i);
+        }
+        assert_eq!(ModelTier::B32.label(), "32B");
+    }
+}

@@ -1,0 +1,154 @@
+//! Multi-GPU replica pool — the paper's named future-work direction
+//! ("extensions to multi-GPU inference"). Extension feature, exercised by
+//! `ewatt ablation cluster`.
+//!
+//! Data-parallel serving: N identical simulated devices each hold a full
+//! model replica; batches are dispatched least-loaded-first. Reports
+//! makespan (wall time = busiest replica), aggregate energy, and the
+//! scaling efficiency of both.
+
+use anyhow::Result;
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::engine::{Batcher, KvCacheManager};
+use crate::gpu::GpuSim;
+use crate::perf::{decode_step_cost, prefill_cost};
+use crate::text::tokenizer::token_count;
+use crate::workload::{Query, ReplaySuite};
+
+use super::dvfs_policy::DvfsPolicy;
+
+/// A pool of identical replicas under one DVFS policy.
+pub struct Cluster {
+    pub gpu: GpuSpec,
+    pub model: ModelSpec,
+    pub n_replicas: usize,
+    pub policy: DvfsPolicy,
+}
+
+/// Cluster-level replay result.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterMetrics {
+    /// Per-replica busy time, seconds.
+    pub replica_busy_s: Vec<f64>,
+    pub energy_j: f64,
+    pub queries: usize,
+}
+
+impl ClusterMetrics {
+    /// Wall time = the busiest replica (replicas run concurrently).
+    pub fn makespan_s(&self) -> f64 {
+        self.replica_busy_s.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Load-balance quality: mean busy / max busy (1.0 = perfect).
+    pub fn balance(&self) -> f64 {
+        let max = self.makespan_s();
+        if max == 0.0 {
+            return 1.0;
+        }
+        let mean: f64 =
+            self.replica_busy_s.iter().sum::<f64>() / self.replica_busy_s.len() as f64;
+        mean / max
+    }
+
+    pub fn throughput_qps(&self) -> f64 {
+        self.queries as f64 / self.makespan_s().max(1e-12)
+    }
+}
+
+impl Cluster {
+    pub fn new(gpu: GpuSpec, model: ModelSpec, n_replicas: usize, policy: DvfsPolicy) -> Self {
+        assert!(n_replicas >= 1);
+        Cluster { gpu, model, n_replicas, policy }
+    }
+
+    /// Replay `indices` at `batch`, dispatching batches least-loaded-first.
+    pub fn run(&self, suite: &ReplaySuite, indices: &[usize], batch: usize) -> Result<ClusterMetrics> {
+        let pre_sim = GpuSim::new(self.gpu.clone(), self.policy.prefill_freq(&self.gpu));
+        let dec_sim = GpuSim::new(self.gpu.clone(), self.policy.decode_freq(&self.gpu));
+        let mut kv: Vec<KvCacheManager> = (0..self.n_replicas)
+            .map(|_| KvCacheManager::new(&self.gpu, &self.model))
+            .collect();
+        let mut m = ClusterMetrics {
+            replica_busy_s: vec![0.0; self.n_replicas],
+            ..Default::default()
+        };
+        for group in Batcher::new(batch).batches(&suite.queries, indices) {
+            // Least-loaded dispatch.
+            let r = (0..self.n_replicas)
+                .min_by(|&a, &b| {
+                    m.replica_busy_s[a]
+                        .partial_cmp(&m.replica_busy_s[b])
+                        .unwrap()
+                })
+                .unwrap();
+            let queries: Vec<&Query> = group.iter().map(|&i| &suite.queries[i]).collect();
+            let seq = queries
+                .iter()
+                .map(|q| token_count(&q.text).max(1))
+                .max()
+                .unwrap();
+            let steps = queries.iter().map(|q| q.output_tokens).max().unwrap();
+            for q in &queries {
+                kv[r].admit(q.id, seq)?;
+            }
+            let passes = if steps == 0 { queries[0].dataset.n_options() } else { 1 };
+            for _ in 0..passes {
+                let res = pre_sim.execute(&prefill_cost(&self.model, queries.len(), seq));
+                m.replica_busy_s[r] += res.latency_s;
+                m.energy_j += res.energy_j;
+            }
+            for s in 0..steps {
+                let res = dec_sim.execute(&decode_step_cost(&self.model, queries.len(), seq + s));
+                m.replica_busy_s[r] += res.latency_s;
+                m.energy_j += res.energy_j;
+            }
+            for q in &queries {
+                kv[r].release(q.id);
+            }
+            m.queries += queries.len();
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::{model_for_tier, ModelTier};
+
+    fn run_with(n: usize) -> ClusterMetrics {
+        let suite = ReplaySuite::quick(41, 12);
+        let idx: Vec<usize> = (0..suite.len()).collect();
+        Cluster::new(
+            GpuSpec::rtx_pro_6000(),
+            model_for_tier(ModelTier::B3),
+            n,
+            DvfsPolicy::Static(960),
+        )
+        .run(&suite, &idx, 4)
+        .unwrap()
+    }
+
+    #[test]
+    fn replicas_cut_makespan_not_energy() {
+        let one = run_with(1);
+        let four = run_with(4);
+        assert_eq!(one.queries, four.queries);
+        // Energy is work-proportional: unchanged by parallelism.
+        assert!((four.energy_j / one.energy_j - 1.0).abs() < 0.01);
+        // Makespan scales down with decent efficiency.
+        let speedup = one.makespan_s() / four.makespan_s();
+        assert!(speedup > 2.5, "speedup {speedup:.2} with 4 replicas");
+        assert!(four.balance() > 0.6, "balance {:.2}", four.balance());
+    }
+
+    #[test]
+    fn single_replica_matches_serial_busy_time() {
+        let one = run_with(1);
+        assert_eq!(one.replica_busy_s.len(), 1);
+        assert!(one.throughput_qps() > 0.0);
+        assert!((one.balance() - 1.0).abs() < 1e-12);
+    }
+}

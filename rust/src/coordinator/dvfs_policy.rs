@@ -1,0 +1,84 @@
+//! DVFS policies: static set points (the paper's sweep) and the phase-aware
+//! profile of Section VII-B / Figure 6 (high frequency during compute-bound
+//! prefill, low frequency during memory-bound decode).
+
+use crate::config::{FreqMHz, GpuSpec};
+
+/// Frequency policy applied per inference batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DvfsPolicy {
+    /// One pinned SM frequency for both phases (Section VI's sweeps).
+    Static(FreqMHz),
+    /// Phase-aware: prefill at one set point, decode at another; the engine
+    /// charges the switch overhead (Figure 6).
+    PhaseAware { prefill: FreqMHz, decode: FreqMHz },
+}
+
+impl DvfsPolicy {
+    /// The paper's recommended profile: max-frequency prefill, min-frequency
+    /// decode (Section VII-B).
+    pub fn paper_phase_aware(gpu: &GpuSpec) -> Self {
+        DvfsPolicy::PhaseAware { prefill: gpu.f_max_mhz, decode: gpu.f_min_mhz() }
+    }
+
+    /// Baseline: everything at max frequency.
+    pub fn baseline(gpu: &GpuSpec) -> Self {
+        DvfsPolicy::Static(gpu.f_max_mhz)
+    }
+
+    pub fn prefill_freq(&self, gpu: &GpuSpec) -> FreqMHz {
+        let f = match self {
+            DvfsPolicy::Static(f) => *f,
+            DvfsPolicy::PhaseAware { prefill, .. } => *prefill,
+        };
+        assert!(gpu.supports(f), "unsupported prefill frequency {f}");
+        f
+    }
+
+    pub fn decode_freq(&self, gpu: &GpuSpec) -> FreqMHz {
+        let f = match self {
+            DvfsPolicy::Static(f) => *f,
+            DvfsPolicy::PhaseAware { decode, .. } => *decode,
+        };
+        assert!(gpu.supports(f), "unsupported decode frequency {f}");
+        f
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DvfsPolicy::Static(f) => format!("static@{f}MHz"),
+            DvfsPolicy::PhaseAware { prefill, decode } => {
+                format!("phase-aware[{prefill}/{decode}MHz]")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_profile_uses_extremes() {
+        let g = GpuSpec::rtx_pro_6000();
+        let p = DvfsPolicy::paper_phase_aware(&g);
+        assert_eq!(p.prefill_freq(&g), 2842);
+        assert_eq!(p.decode_freq(&g), 180);
+        assert_eq!(DvfsPolicy::baseline(&g).decode_freq(&g), 2842);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported")]
+    fn unsupported_set_point_panics() {
+        let g = GpuSpec::rtx_pro_6000();
+        DvfsPolicy::Static(777).prefill_freq(&g);
+    }
+
+    #[test]
+    fn labels_are_descriptive() {
+        assert_eq!(DvfsPolicy::Static(960).label(), "static@960MHz");
+        assert!(DvfsPolicy::PhaseAware { prefill: 2842, decode: 180 }
+            .label()
+            .contains("2842/180"));
+    }
+}

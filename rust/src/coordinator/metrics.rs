@@ -1,0 +1,89 @@
+//! Serving metrics aggregation (throughput / latency percentiles / energy).
+
+/// Aggregated serving metrics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    latencies_s: Vec<f64>,
+    pub energy_j: f64,
+    pub tokens_out: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, latency_s: f64, energy_j: f64, tokens: usize) {
+        self.latencies_s.push(latency_s);
+        self.energy_j += energy_j;
+        self.tokens_out += tokens;
+        self.requests += 1;
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.latencies_s.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        xs[idx]
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return f64::NAN;
+        }
+        self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.requests as f64 / self.wall_s
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.tokens_out as f64 / self.wall_s
+    }
+
+    pub fn joules_per_token(&self) -> f64 {
+        self.energy_j / self.tokens_out.max(1) as f64
+    }
+
+    pub fn joules_per_request(&self) -> f64 {
+        self.energy_j / self.requests.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_and_percentiles() {
+        let mut m = ServeMetrics::default();
+        for i in 1..=100 {
+            m.record(i as f64, 2.0, 10);
+        }
+        m.wall_s = 50.0;
+        assert_eq!(m.requests, 100);
+        assert!((m.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((m.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert!((m.mean_latency_s() - 50.5).abs() < 1e-9);
+        assert!((m.throughput_rps() - 2.0).abs() < 1e-9);
+        assert!((m.tokens_per_s() - 20.0).abs() < 1e-9);
+        assert!((m.joules_per_token() - 0.2).abs() < 1e-9);
+        assert!((m.joules_per_request() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_nan_not_panic() {
+        let m = ServeMetrics::default();
+        assert!(m.percentile(50.0).is_nan());
+        assert!(m.mean_latency_s().is_nan());
+        assert!(m.throughput_rps().is_nan());
+    }
+}

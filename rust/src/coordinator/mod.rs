@@ -1,0 +1,17 @@
+//! The coordination layer: workload-aware routing + phase-aware DVFS —
+//! the policies the paper's case study (Section VII) motivates, plus the
+//! threaded serving loop that drives the real PJRT tiny-LM path.
+
+pub mod cluster;
+pub mod dvfs_policy;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use cluster::{Cluster, ClusterMetrics};
+pub use dvfs_policy::DvfsPolicy;
+pub use metrics::ServeMetrics;
+pub use router::{Router, RoutingDecision};
+pub use scheduler::{Scheduler, ScheduleReport};
+pub use server::{ServeConfig, Server};

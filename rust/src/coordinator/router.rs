@@ -1,0 +1,136 @@
+//! Workload-aware model router.
+//!
+//! Implements the paper's validated rule (Section V-E4): a query is *easy*
+//! iff entity density < 0.20 and causal-question score < 0.05 — and the
+//! routing table of Section VII-A (Table XV): easy → small tier, hard →
+//! capacity where it pays. A trained logistic-regression router (the
+//! Table VI classifier) is also provided for comparison/ablation.
+
+use crate::config::ModelTier;
+use crate::features::FeatureVector;
+use crate::stats::{LogisticRegression, Standardizer};
+
+/// Routing outcome for one query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoutingDecision {
+    pub tier: ModelTier,
+    pub easy: bool,
+}
+
+/// Rule thresholds from the paper (Section V-E4).
+pub const ENTITY_THRESHOLD: f64 = 0.20;
+pub const CAUSAL_THRESHOLD: f64 = 0.05;
+
+/// The router: rule-based by default, optionally carrying a trained LR.
+pub struct Router {
+    pub easy_tier: ModelTier,
+    pub hard_tier: ModelTier,
+    learned: Option<(LogisticRegression, Standardizer)>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+impl Router {
+    /// Table XV mapping condensed to two tiers: easy → 3B; hard → 14B
+    /// ("Scaling Helps" is the only class where capacity pays; Always-Hard
+    /// queries gain little from 32B at 2.5× the energy of 14B).
+    pub fn paper_default() -> Self {
+        Router {
+            easy_tier: ModelTier::B3,
+            hard_tier: ModelTier::B14,
+            learned: None,
+        }
+    }
+
+    pub fn with_tiers(easy_tier: ModelTier, hard_tier: ModelTier) -> Self {
+        Router { easy_tier, hard_tier, learned: None }
+    }
+
+    /// Attach a trained difficulty classifier (features → hard?) to replace
+    /// the threshold rule.
+    pub fn with_learned(mut self, lr: LogisticRegression, scaler: Standardizer) -> Self {
+        self.learned = Some((lr, scaler));
+        self
+    }
+
+    /// The paper's rule: easy ⇔ low entity density AND low causal score.
+    pub fn is_easy_rule(f: &FeatureVector) -> bool {
+        f.entity_density < ENTITY_THRESHOLD && f.causal_question < CAUSAL_THRESHOLD
+    }
+
+    /// Route one query by its features.
+    pub fn route(&self, f: &FeatureVector) -> RoutingDecision {
+        let easy = match &self.learned {
+            None => Self::is_easy_rule(f),
+            Some((lr, scaler)) => {
+                // The classifier predicts "hard"; semantic features only.
+                let x = scaler.transform(&f.semantic_array());
+                !lr.predict(&x)
+            }
+        };
+        RoutingDecision {
+            tier: if easy { self.easy_tier } else { self.hard_tier },
+            easy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::FeatureExtractor;
+    use crate::workload::ReplaySuite;
+
+    #[test]
+    fn rule_matches_paper_examples() {
+        let fx = FeatureExtractor::new();
+        let easy = fx.extract("Was the road quiet during the long winter?");
+        assert!(Router::is_easy_rule(&easy));
+        let hard = fx.extract("Why did Napoleon retreat from Moscow across the Volga?");
+        assert!(!Router::is_easy_rule(&hard));
+    }
+
+    #[test]
+    fn route_picks_configured_tiers() {
+        let r = Router::paper_default();
+        let fx = FeatureExtractor::new();
+        let d = r.route(&fx.extract("Was the garden small?"));
+        assert_eq!(d.tier, ModelTier::B3);
+        assert!(d.easy);
+        let d = r.route(&fx.extract("Explain why Cleopatra allied with Rome against Persia?"));
+        assert_eq!(d.tier, ModelTier::B14);
+        assert!(!d.easy);
+    }
+
+    #[test]
+    fn rule_split_is_roughly_balanced_on_suite() {
+        // Paper: 406 easy / 394 hard (50.8% / 49.2%) on its 800-query
+        // validation subset.
+        let suite = ReplaySuite::quick(29, 250);
+        let easy = suite
+            .features
+            .iter()
+            .filter(|f| Router::is_easy_rule(f))
+            .count() as f64
+            / suite.len() as f64;
+        assert!((0.30..=0.70).contains(&easy), "easy share {easy:.3}");
+    }
+
+    #[test]
+    fn learned_router_overrides_rule() {
+        // A degenerate LR that calls everything hard.
+        let mut lr = LogisticRegression::new(1.0);
+        lr.weights = vec![0.0; 5];
+        lr.bias = 10.0;
+        let scaler = Standardizer { means: vec![0.0; 5], stds: vec![1.0; 5] };
+        let r = Router::paper_default().with_learned(lr, scaler);
+        let fx = FeatureExtractor::new();
+        let d = r.route(&fx.extract("Was the garden small?"));
+        assert_eq!(d.tier, ModelTier::B14);
+        assert!(!d.easy);
+    }
+}

@@ -1,0 +1,78 @@
+//! Replay batcher: groups same-dataset queries into fixed-size batches
+//! (the paper's offline setup runs each dataset at batch sizes 1/4/8).
+
+use crate::workload::{Dataset, Query};
+
+/// Fixed-size, dataset-homogeneous batching over a replay set.
+pub struct Batcher {
+    batch_size: usize,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size >= 1, "batch size must be >= 1");
+        Batcher { batch_size }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Partition query indices into dataset-homogeneous batches, preserving
+    /// arrival order within each dataset. The final batch of a dataset may
+    /// be smaller than `batch_size`.
+    pub fn batches(&self, queries: &[Query], indices: &[usize]) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for d in Dataset::ALL {
+            let mut cur = Vec::with_capacity(self.batch_size);
+            for &i in indices.iter().filter(|&&i| queries[i].dataset == d) {
+                cur.push(i);
+                if cur.len() == self.batch_size {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+            if !cur.is_empty() {
+                out.push(cur);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ReplaySuite;
+
+    #[test]
+    fn batches_are_homogeneous_and_cover_all() {
+        let suite = ReplaySuite::quick(3, 10);
+        let all: Vec<usize> = (0..suite.len()).collect();
+        let b = Batcher::new(4);
+        let batches = b.batches(&suite.queries, &all);
+        let mut seen: Vec<usize> = batches.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, all);
+        for batch in &batches {
+            assert!(batch.len() <= 4 && !batch.is_empty());
+            let d = suite.queries[batch[0]].dataset;
+            assert!(batch.iter().all(|&i| suite.queries[i].dataset == d));
+        }
+        // 10 queries per dataset at batch 4 → 3 batches each (4+4+2).
+        assert_eq!(batches.len(), 12);
+    }
+
+    #[test]
+    fn batch_one_is_one_query_each() {
+        let suite = ReplaySuite::quick(4, 5);
+        let all: Vec<usize> = (0..suite.len()).collect();
+        let batches = Batcher::new(1).batches(&suite.queries, &all);
+        assert_eq!(batches.len(), suite.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "batch size")]
+    fn zero_batch_panics() {
+        Batcher::new(0);
+    }
+}

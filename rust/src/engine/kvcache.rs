@@ -1,0 +1,151 @@
+//! KV-cache capacity manager for the simulated device.
+//!
+//! Tracks cache residency against the GPU memory left after weights, the
+//! accounting a serving engine needs before admitting a batch (the paper's
+//! Section II-B: the growing KV cache is the decode phase's memory driver).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{GpuSpec, ModelSpec};
+
+/// Tracks allocated KV bytes per active sequence.
+pub struct KvCacheManager {
+    capacity_bytes: u64,
+    kv_bytes_per_token: u64,
+    used_bytes: u64,
+    seqs: HashMap<u64, u64>, // seq id -> allocated tokens
+    peak_bytes: u64,
+}
+
+impl KvCacheManager {
+    /// Budget = device memory − weights − activation headroom (5%).
+    pub fn new(gpu: &GpuSpec, model: &ModelSpec) -> Self {
+        let headroom = gpu.mem_capacity_bytes / 20;
+        let capacity = gpu
+            .mem_capacity_bytes
+            .saturating_sub(model.weight_footprint_bytes())
+            .saturating_sub(headroom);
+        KvCacheManager {
+            capacity_bytes: capacity,
+            kv_bytes_per_token: model.kv_bytes_per_token() as u64,
+            used_bytes: 0,
+            seqs: HashMap::new(),
+            peak_bytes: 0,
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    /// Admit a sequence with `tokens` of prompt context.
+    pub fn admit(&mut self, seq_id: u64, tokens: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq_id) {
+            bail!("sequence {seq_id} already admitted");
+        }
+        let need = tokens as u64 * self.kv_bytes_per_token;
+        if self.used_bytes + need > self.capacity_bytes {
+            bail!(
+                "KV cache OOM admitting seq {seq_id}: need {need} B, \
+                 used {}/{} B",
+                self.used_bytes,
+                self.capacity_bytes
+            );
+        }
+        self.used_bytes += need;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.seqs.insert(seq_id, tokens as u64);
+        Ok(())
+    }
+
+    /// Extend a sequence by one generated token.
+    pub fn extend(&mut self, seq_id: u64) -> Result<()> {
+        let Some(tokens) = self.seqs.get_mut(&seq_id) else {
+            bail!("sequence {seq_id} not admitted");
+        };
+        if self.used_bytes + self.kv_bytes_per_token > self.capacity_bytes {
+            bail!("KV cache OOM extending seq {seq_id}");
+        }
+        *tokens += 1;
+        self.used_bytes += self.kv_bytes_per_token;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        Ok(())
+    }
+
+    /// Release a finished sequence.
+    pub fn release(&mut self, seq_id: u64) {
+        if let Some(tokens) = self.seqs.remove(&seq_id) {
+            self.used_bytes -= tokens * self.kv_bytes_per_token;
+        }
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::{model_for_tier, ModelTier};
+
+    fn mgr(tier: ModelTier) -> KvCacheManager {
+        KvCacheManager::new(&GpuSpec::rtx_pro_6000(), &model_for_tier(tier))
+    }
+
+    #[test]
+    fn admit_extend_release_accounting() {
+        let mut m = mgr(ModelTier::B8);
+        m.admit(1, 100).unwrap();
+        let per_tok = 131_072u64;
+        assert_eq!(m.used_bytes(), 100 * per_tok);
+        m.extend(1).unwrap();
+        assert_eq!(m.used_bytes(), 101 * per_tok);
+        m.release(1);
+        assert_eq!(m.used_bytes(), 0);
+        assert_eq!(m.peak_bytes(), 101 * per_tok);
+        assert_eq!(m.active_seqs(), 0);
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut m = mgr(ModelTier::B1);
+        m.admit(7, 10).unwrap();
+        assert!(m.admit(7, 10).is_err());
+    }
+
+    #[test]
+    fn extend_unknown_rejected() {
+        let mut m = mgr(ModelTier::B1);
+        assert!(m.extend(9).is_err());
+    }
+
+    #[test]
+    fn oom_on_capacity_exhaustion() {
+        let model = model_for_tier(ModelTier::B32);
+        let mut m = KvCacheManager::new(&GpuSpec::rtx_pro_6000(), &model);
+        // One enormous context that cannot fit the post-weights budget.
+        let too_many =
+            (m.capacity_bytes() / model.kv_bytes_per_token() as u64 + 1) as usize;
+        assert!(m.admit(1, too_many).is_err());
+        assert_eq!(m.used_bytes(), 0); // failed admit must not leak
+        // Just inside the budget is fine.
+        m.admit(2, too_many - 2).unwrap();
+        assert!(m.extend(2).is_ok());
+    }
+
+    #[test]
+    fn capacity_smaller_for_bigger_models() {
+        assert!(mgr(ModelTier::B32).capacity_bytes() < mgr(ModelTier::B1).capacity_bytes());
+    }
+}

@@ -1,0 +1,25 @@
+//! Two-phase inference engine.
+//!
+//! Mirrors the paper's offline replay harness (Section IV): queries are
+//! grouped into fixed-size batches, each batch runs a prefill pass followed
+//! by an autoregressive decode loop, and every phase step is executed on the
+//! simulated GPU ([`crate::gpu::GpuSim`]) with per-phase latency/energy
+//! instrumentation — the `torch.cuda.synchronize()`-fenced measurement the
+//! paper describes.
+//!
+//! The same engine structure also drives the *real* PJRT tiny-LM path in
+//! [`crate::coordinator::server`] (the end-to-end example).
+
+pub mod batcher;
+pub mod online;
+pub mod kvcache;
+pub mod phases;
+pub mod replay;
+pub mod request;
+
+pub use batcher::Batcher;
+pub use online::{BatchingMode, OnlineConfig, OnlineMetrics, OnlineSim};
+pub use kvcache::KvCacheManager;
+pub use phases::{simulate_batch, BatchMetrics};
+pub use replay::{ReplayEngine, ReplayMetrics};
+pub use request::{QueryMetrics, RequestOutcome};

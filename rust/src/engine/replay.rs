@@ -1,0 +1,271 @@
+//! Replay engine: run a full suite (or a dataset slice) against one
+//! (model, frequency-policy, batch-size) configuration — the inner loop of
+//! every DVFS experiment in Section VI.
+
+use anyhow::Result;
+
+use crate::config::{FreqMHz, GpuSpec, ModelSpec};
+use crate::coordinator::dvfs_policy::DvfsPolicy;
+use crate::gpu::GpuSim;
+use crate::perf::{decode_step_cost, prefill_cost};
+use crate::text::tokenizer::token_count;
+use crate::workload::{Dataset, Query, ReplaySuite};
+
+use super::batcher::Batcher;
+use super::kvcache::KvCacheManager;
+use super::request::QueryMetrics;
+
+/// Aggregate metrics of one replay run.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayMetrics {
+    pub energy_j: f64,
+    pub latency_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub prefill_j: f64,
+    pub decode_j: f64,
+    pub tokens_out: usize,
+    pub queries: usize,
+    pub per_query: Vec<QueryMetrics>,
+}
+
+impl ReplayMetrics {
+    pub fn decode_share(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            0.0
+        } else {
+            self.decode_s / self.latency_s
+        }
+    }
+
+    pub fn energy_per_query(&self) -> f64 {
+        self.energy_j / self.queries.max(1) as f64
+    }
+
+    pub fn energy_per_token(&self) -> f64 {
+        self.energy_j / self.tokens_out.max(1) as f64
+    }
+}
+
+/// The replay engine: owns the GPU spec and model under test.
+pub struct ReplayEngine {
+    pub gpu_spec: GpuSpec,
+    pub model: ModelSpec,
+}
+
+impl ReplayEngine {
+    pub fn new(gpu_spec: GpuSpec, model: ModelSpec) -> Self {
+        ReplayEngine { gpu_spec, model }
+    }
+
+    /// Run `indices` of `suite` at `batch` size under a DVFS policy.
+    ///
+    /// The policy picks the SM set point per phase; phase-aware policies pay
+    /// the switch overhead twice per generation batch (up + down, Fig. 6).
+    pub fn run(
+        &self,
+        suite: &ReplaySuite,
+        indices: &[usize],
+        batch: usize,
+        policy: &DvfsPolicy,
+    ) -> Result<ReplayMetrics> {
+        let mut kv = KvCacheManager::new(&self.gpu_spec, &self.model);
+        let mut out = ReplayMetrics::default();
+        let batcher = Batcher::new(batch);
+        for group in batcher.batches(&suite.queries, indices) {
+            let queries: Vec<&Query> = group.iter().map(|&i| &suite.queries[i]).collect();
+            let m = self.run_batch(&queries, policy, &mut kv)?;
+            // Attribute batch totals evenly across rows (offline replay).
+            let n = queries.len() as f64;
+            for (&qi, q) in group.iter().zip(&queries) {
+                out.per_query.push(QueryMetrics {
+                    query_idx: qi,
+                    dataset: q.dataset,
+                    tier: self.model.tier,
+                    latency_s: m.latency_s,
+                    energy_j: m.energy_j / n,
+                    prefill_s: m.prefill_s,
+                    decode_s: m.decode_s,
+                    tokens_out: q.output_tokens,
+                    input_tokens: token_count(&q.text),
+                });
+            }
+            out.energy_j += m.energy_j;
+            out.latency_s += m.latency_s;
+            out.prefill_s += m.prefill_s;
+            out.decode_s += m.decode_s;
+            out.prefill_j += m.prefill_j;
+            out.decode_j += m.decode_j;
+            out.tokens_out += m.tokens_out;
+            out.queries += queries.len();
+        }
+        Ok(out)
+    }
+
+    fn run_batch(
+        &self,
+        queries: &[&Query],
+        policy: &DvfsPolicy,
+        kv: &mut KvCacheManager,
+    ) -> Result<BatchTotals> {
+        let batch = queries.len();
+        let seq = queries
+            .iter()
+            .map(|q| token_count(&q.text).max(1))
+            .max()
+            .unwrap();
+        let steps = queries.iter().map(|q| q.output_tokens).max().unwrap();
+        for q in queries {
+            kv.admit(q.id, seq)?;
+        }
+
+        let mut totals = BatchTotals::default();
+
+        // --- prefill at the policy's prefill set point ---
+        let f_pre = policy.prefill_freq(&self.gpu_spec);
+        let gpu_pre = GpuSim::new(self.gpu_spec.clone(), f_pre);
+        let passes = if steps == 0 {
+            queries[0].dataset.n_options()
+        } else {
+            1
+        };
+        let pcost = prefill_cost(&self.model, batch, seq);
+        for _ in 0..passes {
+            let r = gpu_pre.execute(&pcost);
+            totals.prefill_s += r.latency_s;
+            totals.prefill_j += r.energy_j;
+        }
+
+        // --- decode at the policy's decode set point ---
+        let f_dec = policy.decode_freq(&self.gpu_spec);
+        if steps > 0 {
+            if f_dec != f_pre {
+                // Switch down and (after the batch) back up; idle power
+                // during the transition (Figure 6's frequency profile).
+                let sw = 2.0 * self.gpu_spec.f_switch_overhead_s;
+                totals.decode_s += sw;
+                totals.decode_j += sw * self.gpu_spec.p_idle_w;
+            }
+            let gpu_dec = GpuSim::new(self.gpu_spec.clone(), f_dec);
+            for s in 0..steps {
+                let dcost = decode_step_cost(&self.model, batch, seq + s);
+                let r = gpu_dec.execute(&dcost);
+                totals.decode_s += r.latency_s;
+                totals.decode_j += r.energy_j;
+                for q in queries {
+                    if s < q.output_tokens {
+                        kv.extend(q.id)?;
+                    }
+                }
+            }
+        }
+
+        for q in queries {
+            kv.release(q.id);
+        }
+        totals.latency_s = totals.prefill_s + totals.decode_s;
+        totals.energy_j = totals.prefill_j + totals.decode_j;
+        totals.tokens_out = queries.iter().map(|q| q.output_tokens).sum();
+        Ok(totals)
+    }
+
+    /// Convenience: run one dataset at a static frequency.
+    pub fn run_dataset_static(
+        &self,
+        suite: &ReplaySuite,
+        dataset: Dataset,
+        batch: usize,
+        freq: FreqMHz,
+    ) -> Result<ReplayMetrics> {
+        let idx = suite.dataset_indices(dataset);
+        self.run(suite, &idx, batch, &DvfsPolicy::Static(freq))
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct BatchTotals {
+    energy_j: f64,
+    latency_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+    prefill_j: f64,
+    decode_j: f64,
+    tokens_out: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::{model_for_tier, ModelTier};
+
+    fn engine(tier: ModelTier) -> ReplayEngine {
+        ReplayEngine::new(GpuSpec::rtx_pro_6000(), model_for_tier(tier))
+    }
+
+    #[test]
+    fn dvfs_headline_numbers_hold_on_replay() {
+        // Mini Table XI: ~40% energy savings, small latency penalty.
+        let suite = ReplaySuite::quick(11, 12);
+        let idx: Vec<usize> = (0..suite.len()).collect();
+        let e = engine(ModelTier::B8);
+        let hi = e.run(&suite, &idx, 1, &DvfsPolicy::Static(2842)).unwrap();
+        let lo = e.run(&suite, &idx, 1, &DvfsPolicy::Static(180)).unwrap();
+        let savings = 1.0 - lo.energy_j / hi.energy_j;
+        let lat = (lo.latency_s - hi.latency_s) / hi.latency_s;
+        assert!(savings > 0.30 && savings < 0.52, "savings {savings:.3}");
+        assert!(lat < 0.10, "latency Δ {lat:+.3}");
+        assert_eq!(hi.queries, suite.len());
+        assert_eq!(hi.per_query.len(), suite.len());
+    }
+
+    #[test]
+    fn decode_dominates_generation_replay() {
+        let suite = ReplaySuite::quick(13, 10);
+        let e = engine(ModelTier::B3);
+        let m = e
+            .run_dataset_static(&suite, Dataset::NarrativeQa, 1, 2842)
+            .unwrap();
+        assert!(m.decode_share() > 0.70, "decode share {}", m.decode_share());
+        assert!(m.tokens_out > 0);
+    }
+
+    #[test]
+    fn phase_aware_policy_saves_energy_with_tiny_latency_cost() {
+        // The case-study policy (Section VII-B): high-freq prefill,
+        // low-freq decode.
+        let suite = ReplaySuite::quick(17, 10);
+        let e = engine(ModelTier::B14);
+        let idx = suite.dataset_indices(Dataset::TruthfulQa);
+        let base = e.run(&suite, &idx, 1, &DvfsPolicy::Static(2842)).unwrap();
+        let pa = e
+            .run(
+                &suite,
+                &idx,
+                1,
+                &DvfsPolicy::PhaseAware { prefill: 2842, decode: 180 },
+            )
+            .unwrap();
+        let savings = 1.0 - pa.energy_j / base.energy_j;
+        let lat = (pa.latency_s - base.latency_s) / base.latency_s;
+        assert!(savings > 0.30, "savings {savings:.3}");
+        assert!(lat.abs() < 0.05, "latency Δ {lat:+.3}");
+        // And prefill stayed at full speed.
+        assert!((pa.prefill_s - base.prefill_s).abs() / base.prefill_s < 0.01);
+    }
+
+    #[test]
+    fn batching_reduces_latency_penalty() {
+        // Table XI: LΔ falls from b1 to b8. The paper's row averages pool
+        // all four datasets (classification prefill passes amortize
+        // strongly with batch), so the test uses the full mix too.
+        let suite = ReplaySuite::quick(19, 16);
+        let e = engine(ModelTier::B1);
+        let idx: Vec<usize> = (0..suite.len()).collect();
+        let delta = |b: usize| {
+            let hi = e.run(&suite, &idx, b, &DvfsPolicy::Static(2842)).unwrap();
+            let lo = e.run(&suite, &idx, b, &DvfsPolicy::Static(180)).unwrap();
+            (lo.latency_s - hi.latency_s) / hi.latency_s
+        };
+        assert!(delta(8) <= delta(1) + 1e-9);
+    }
+}

@@ -1,0 +1,59 @@
+//! Per-request measurement records.
+
+use crate::config::ModelTier;
+use crate::workload::Dataset;
+
+/// Measured outcome of one query's inference.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryMetrics {
+    pub query_idx: usize,
+    pub dataset: Dataset,
+    pub tier: ModelTier,
+    /// End-to-end latency, seconds.
+    pub latency_s: f64,
+    /// Attributed energy, joules (batch energy split evenly across rows).
+    pub energy_j: f64,
+    /// Prefill portion of latency.
+    pub prefill_s: f64,
+    /// Decode portion of latency.
+    pub decode_s: f64,
+    /// Tokens generated (0 for log-likelihood classification).
+    pub tokens_out: usize,
+    pub input_tokens: usize,
+}
+
+/// Outcome of one served request on the real PJRT path.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub query_idx: usize,
+    /// Generated text (tiny-LM detokenized).
+    pub text: String,
+    pub tokens_out: usize,
+    /// Wall-clock latency of the real execution, seconds.
+    pub wall_latency_s: f64,
+    /// Simulated-GPU energy attributed to this request, joules.
+    pub sim_energy_j: f64,
+    /// ROUGE-L F1 vs. the query's reference.
+    pub rouge_l: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_are_plain_data() {
+        let m = QueryMetrics {
+            query_idx: 0,
+            dataset: Dataset::BoolQ,
+            tier: ModelTier::B1,
+            latency_s: 0.1,
+            energy_j: 1.0,
+            prefill_s: 0.02,
+            decode_s: 0.08,
+            tokens_out: 0,
+            input_tokens: 100,
+        };
+        assert!(m.prefill_s + m.decode_s <= m.latency_s + 1e-12);
+    }
+}

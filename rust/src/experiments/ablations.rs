@@ -1,0 +1,253 @@
+//! Ablations beyond the paper's tables — the design choices DESIGN.md calls
+//! out, plus the paper's own threats-to-validity/future-work directions:
+//!
+//! - `batching`: static vs continuous batching under DVFS, with SLO
+//!   accounting (the production dynamic the paper's offline setup excludes);
+//! - `powercap`: frequency pinning vs a power-cap governor (related work
+//!   [33]/[34] knob) at matched power budgets;
+//! - `cluster`: multi-GPU data-parallel scaling (named future work);
+//! - `sensitivity`: robustness of the headline 42% savings to ±30%
+//!   perturbations of every major simulator constant — the check that the
+//!   reproduction's conclusion is not an artifact of one calibrated number.
+
+use anyhow::Result;
+
+use crate::config::model::model_for_tier;
+use crate::config::{GpuSpec, ModelTier};
+use crate::coordinator::{Cluster, DvfsPolicy};
+use crate::engine::{BatchingMode, OnlineConfig, OnlineSim, ReplayEngine};
+use crate::gpu::power::frequency_for_cap;
+use crate::perf::decode_step_cost;
+use crate::perf::energy::pct_savings;
+use crate::workload::Dataset;
+
+use super::context::Context;
+use super::report::{pct0, Report};
+
+/// Static vs continuous batching × DVFS policy, under a Poisson load.
+pub fn ablation_batching(ctx: &Context) -> Result<Report> {
+    let model = model_for_tier(ModelTier::B8);
+    let queries: Vec<&crate::workload::Query> = ctx
+        .suite
+        .dataset_indices(Dataset::TruthfulQa)
+        .into_iter()
+        .map(|i| &ctx.suite.queries[i])
+        .collect();
+    let mut r = Report::new(
+        "ablation-batching",
+        "Online serving: batching discipline x DVFS policy (Poisson 8 rps, SLO 2 s)",
+        &["batching", "policy", "p50 (s)", "p95 (s)", "SLO viol.", "J/req", "qps"],
+    );
+    for batching in [BatchingMode::Static, BatchingMode::Continuous] {
+        for policy in [
+            DvfsPolicy::baseline(&ctx.gpu),
+            DvfsPolicy::paper_phase_aware(&ctx.gpu),
+        ] {
+            let sim = OnlineSim::new(
+                ctx.gpu.clone(),
+                model.clone(),
+                OnlineConfig {
+                    arrival_rps: 8.0,
+                    max_batch: 8,
+                    batching,
+                    policy,
+                    slo_s: 2.0,
+                    seed: ctx.cfg.seed,
+                },
+            );
+            let m = sim.run(&queries)?;
+            r.row(vec![
+                format!("{batching:?}"),
+                policy.label(),
+                format!("{:.3}", m.percentile(50.0)),
+                format!("{:.3}", m.percentile(95.0)),
+                pct0(m.violation_rate() * 100.0),
+                format!("{:.1}", m.joules_per_request()),
+                format!("{:.2}", m.throughput_rps()),
+            ]);
+        }
+    }
+    r.note("expected shape: continuous <= static on p95; phase-aware cuts J/req ~35-45% in both disciplines");
+    Ok(r)
+}
+
+/// Frequency pinning vs power-cap governor at matched budgets.
+pub fn ablation_powercap(ctx: &Context) -> Result<Report> {
+    let mut r = Report::new(
+        "ablation-powercap",
+        "Pinned frequency vs power-cap governor (decode-shaped work, B=1)",
+        &["model", "cap (W)", "governor freq", "pinned-180 E down", "governor E down"],
+    );
+    let idx: Vec<usize> = (0..ctx.suite.len()).collect();
+    for tier in [ModelTier::B3, ModelTier::B32] {
+        let model = model_for_tier(tier);
+        let engine = ReplayEngine::new(ctx.gpu.clone(), model.clone());
+        let base = engine.run(&ctx.suite, &idx, 1, &DvfsPolicy::Static(ctx.gpu.f_max_mhz))?;
+        let pinned = engine.run(&ctx.suite, &idx, 1, &DvfsPolicy::Static(180))?;
+        for cap in [250.0, 350.0] {
+            let c = decode_step_cost(&model, 1, 256);
+            let f = frequency_for_cap(&ctx.gpu, &c, cap);
+            let governed = engine.run(&ctx.suite, &idx, 1, &DvfsPolicy::Static(f))?;
+            r.row(vec![
+                tier.label().to_string(),
+                format!("{cap:.0}"),
+                format!("{f} MHz"),
+                pct0(pct_savings(pinned.energy_j, base.energy_j)),
+                pct0(pct_savings(governed.energy_j, base.energy_j)),
+            ]);
+        }
+    }
+    r.note("a decode-power cap of ~250 W selects the same low-frequency region as the paper's pinning");
+    Ok(r)
+}
+
+/// Multi-GPU data-parallel scaling (future work of the paper).
+pub fn ablation_cluster(ctx: &Context) -> Result<Report> {
+    let model = model_for_tier(ModelTier::B8);
+    let idx: Vec<usize> = (0..ctx.suite.len()).collect();
+    let mut r = Report::new(
+        "ablation-cluster",
+        "Data-parallel replica scaling (8B, batch 4, phase-aware DVFS)",
+        &["replicas", "makespan (s)", "speedup", "balance", "energy (J)", "qps"],
+    );
+    let mut base_makespan = 0.0;
+    for n in [1usize, 2, 4, 8] {
+        let c = Cluster::new(
+            ctx.gpu.clone(),
+            model.clone(),
+            n,
+            DvfsPolicy::paper_phase_aware(&ctx.gpu),
+        );
+        let m = c.run(&ctx.suite, &idx, 4)?;
+        if n == 1 {
+            base_makespan = m.makespan_s();
+        }
+        r.row(vec![
+            n.to_string(),
+            format!("{:.2}", m.makespan_s()),
+            format!("{:.2}x", base_makespan / m.makespan_s()),
+            format!("{:.2}", m.balance()),
+            format!("{:.0}", m.energy_j),
+            format!("{:.2}", m.throughput_qps()),
+        ]);
+    }
+    r.note("energy is work-proportional (identical across replica counts); makespan scales with balance quality");
+    Ok(r)
+}
+
+/// Sensitivity of the headline result to the calibrated constants.
+pub fn ablation_sensitivity(ctx: &Context) -> Result<Report> {
+    let idx: Vec<usize> = (0..ctx.suite.len()).collect();
+    let savings_with = |gpu: &GpuSpec| -> Result<f64> {
+        let engine = ReplayEngine::new(gpu.clone(), model_for_tier(ModelTier::B8));
+        let hi = engine.run(&ctx.suite, &idx, 1, &DvfsPolicy::Static(gpu.f_max_mhz))?;
+        let lo = engine.run(&ctx.suite, &idx, 1, &DvfsPolicy::Static(180))?;
+        Ok(pct_savings(lo.energy_j, hi.energy_j))
+    };
+    let mut r = Report::new(
+        "ablation-sensitivity",
+        "Headline 42% savings under ±30% perturbation of simulator constants (8B, B=1)",
+        &["perturbation", "E down", "within 30-55% band?"],
+    );
+    let base = savings_with(&ctx.gpu)?;
+    r.row(vec!["calibrated".to_string(), pct0(base), "yes".into()]);
+    type Perturb = (&'static str, fn(&mut GpuSpec));
+    let perturbations: [Perturb; 8] = [
+        ("mem_bw -30%", |g| g.mem_bw_bytes *= 0.7),
+        ("mem_bw +30%", |g| g.mem_bw_bytes *= 1.3),
+        ("p_sm -30%", |g| g.p_sm_w *= 0.7),
+        ("p_sm +30%", |g| g.p_sm_w *= 1.3),
+        ("kappa -30%", |g| g.kappa_mem_activity *= 0.7),
+        ("kappa +30%", |g| g.kappa_mem_activity = (g.kappa_mem_activity * 1.3).min(1.0)),
+        ("host overhead -30%", |g| {
+            g.t_framework_s *= 0.7;
+            g.t_launch_s *= 0.7;
+            g.t_host_per_seq_s *= 0.7;
+        }),
+        ("host overhead +30%", |g| {
+            g.t_framework_s *= 1.3;
+            g.t_launch_s *= 1.3;
+            g.t_host_per_seq_s *= 1.3;
+        }),
+    ];
+    for (name, f) in perturbations {
+        let mut g = ctx.gpu.clone();
+        f(&mut g);
+        let s = savings_with(&g)?;
+        r.row(vec![
+            name.to_string(),
+            pct0(s),
+            if (30.0..=55.0).contains(&s) { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    r.note("the decode-insensitivity conclusion must not hinge on any single calibrated value");
+    Ok(r)
+}
+
+/// Run one ablation by name.
+pub fn run_ablation(ctx: &Context, name: &str) -> Result<Report> {
+    match name {
+        "batching" => ablation_batching(ctx),
+        "powercap" => ablation_powercap(ctx),
+        "cluster" => ablation_cluster(ctx),
+        "sensitivity" => ablation_sensitivity(ctx),
+        other => anyhow::bail!(
+            "unknown ablation {other:?} (have: batching, powercap, cluster, sensitivity)"
+        ),
+    }
+}
+
+pub const ALL_ABLATIONS: [&str; 4] = ["batching", "powercap", "cluster", "sensitivity"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::quick(211, 40)
+    }
+
+    #[test]
+    fn batching_ablation_shape() {
+        let r = ablation_batching(&ctx()).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        // Phase-aware rows use less energy than their baseline sibling.
+        let jreq = |i: usize| -> f64 { r.rows[i][5].parse().unwrap() };
+        assert!(jreq(1) < jreq(0), "static: phase-aware should save energy");
+        assert!(jreq(3) < jreq(2), "continuous: phase-aware should save energy");
+    }
+
+    #[test]
+    fn sensitivity_all_in_band() {
+        let r = ablation_sensitivity(&ctx()).unwrap();
+        for row in &r.rows {
+            assert_eq!(row[2], "yes", "perturbation broke the band: {row:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_ablation_scales() {
+        let r = ablation_cluster(&ctx()).unwrap();
+        let speedup: f64 = r.rows.last().unwrap()[2].trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 3.0, "8-replica speedup {speedup}");
+    }
+
+    #[test]
+    fn powercap_matches_pinning_region() {
+        let r = ablation_powercap(&ctx()).unwrap();
+        for row in &r.rows {
+            let gov: f64 = row[4].trim_end_matches('%').parse().unwrap();
+            assert!(gov > 10.0, "governor saves energy: {row:?}");
+            let cap: f64 = row[1].parse().unwrap();
+            if cap <= 250.0 {
+                // A tight cap lands in the paper's low-frequency region.
+                assert!(gov > 25.0, "tight cap should save >25%: {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_ablation_errors() {
+        assert!(run_ablation(&ctx(), "nope").is_err());
+    }
+}

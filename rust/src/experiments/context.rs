@@ -1,0 +1,121 @@
+//! Shared experiment state: the replay suite, quality matrix, and a
+//! memoised DVFS sweep store so tables/figures that read the same cells
+//! (XI, XII, XIII, F3, F4, F5) measure once.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::model::{model_for_tier, ModelTier};
+use crate::config::{ExperimentConfig, FreqMHz, GpuSpec};
+use crate::coordinator::DvfsPolicy;
+use crate::engine::{ReplayEngine, ReplayMetrics};
+use crate::quality::{QualityMatrix, QualityModel};
+use crate::workload::{Dataset, ReplaySuite};
+
+/// Key of one sweep cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CellKey {
+    pub tier: ModelTier,
+    pub batch: usize,
+    pub freq: FreqMHz,
+    /// None = full suite (all datasets pooled, as Table XI's rows).
+    pub dataset: Option<Dataset>,
+}
+
+/// Shared, lazily-populated experiment context.
+pub struct Context {
+    pub cfg: ExperimentConfig,
+    pub gpu: GpuSpec,
+    pub suite: ReplaySuite,
+    pub quality_model: QualityModel,
+    pub quality: QualityMatrix,
+    cells: RefCell<HashMap<CellKey, ReplayMetrics>>,
+}
+
+impl Context {
+    /// Build with the paper's full scale (3,817 queries).
+    pub fn paper(seed: u64) -> Self {
+        Self::with_suite(ExperimentConfig::default(), ReplaySuite::paper_scale(seed))
+    }
+
+    /// Reduced-scale context for tests/benches; same pipeline.
+    pub fn quick(seed: u64, queries_per_dataset: usize) -> Self {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.queries_per_dataset = queries_per_dataset;
+        Self::with_suite(cfg, ReplaySuite::quick(seed, queries_per_dataset))
+    }
+
+    fn with_suite(cfg: ExperimentConfig, suite: ReplaySuite) -> Self {
+        let qm = QualityModel::new();
+        let quality = QualityMatrix::build(&suite, &qm);
+        Context {
+            cfg,
+            gpu: GpuSpec::rtx_pro_6000(),
+            suite,
+            quality_model: qm,
+            quality,
+            cells: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Measure (or recall) one sweep cell.
+    pub fn cell(&self, key: CellKey) -> Result<ReplayMetrics> {
+        if let Some(m) = self.cells.borrow().get(&key) {
+            return Ok(m.clone());
+        }
+        let engine = ReplayEngine::new(self.gpu.clone(), model_for_tier(key.tier));
+        let idx: Vec<usize> = match key.dataset {
+            Some(d) => self.suite.dataset_indices(d),
+            None => (0..self.suite.len()).collect(),
+        };
+        let m = engine.run(&self.suite, &idx, key.batch, &DvfsPolicy::Static(key.freq))?;
+        self.cells.borrow_mut().insert(key, m.clone());
+        Ok(m)
+    }
+
+    /// Baseline frequency (2842 MHz) cell.
+    pub fn baseline_cell(&self, tier: ModelTier, batch: usize, dataset: Option<Dataset>) -> Result<ReplayMetrics> {
+        self.cell(CellKey { tier, batch, freq: self.gpu.f_max_mhz, dataset })
+    }
+
+    /// Phase-aware run (not memoised — used by the case study only).
+    pub fn phase_aware(&self, tier: ModelTier, batch: usize) -> Result<ReplayMetrics> {
+        let engine = ReplayEngine::new(self.gpu.clone(), model_for_tier(tier));
+        let idx: Vec<usize> = (0..self.suite.len()).collect();
+        engine.run(
+            &self.suite,
+            &idx,
+            batch,
+            &DvfsPolicy::paper_phase_aware(&self.gpu),
+        )
+    }
+
+    pub fn cached_cells(&self) -> usize {
+        self.cells.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_are_memoised() {
+        let ctx = Context::quick(3, 6);
+        let k = CellKey { tier: ModelTier::B1, batch: 1, freq: 2842, dataset: Some(Dataset::TruthfulQa) };
+        let a = ctx.cell(k).unwrap();
+        assert_eq!(ctx.cached_cells(), 1);
+        let b = ctx.cell(k).unwrap();
+        assert_eq!(ctx.cached_cells(), 1);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+
+    #[test]
+    fn full_suite_cell_pools_datasets() {
+        let ctx = Context::quick(4, 5);
+        let m = ctx.baseline_cell(ModelTier::B1, 1, None).unwrap();
+        assert_eq!(m.queries, ctx.suite.len());
+    }
+}

@@ -1,0 +1,254 @@
+//! Tables XI–XIV: the DVFS characterization (Section VI).
+
+use anyhow::Result;
+
+use crate::config::ModelTier;
+use crate::perf::energy::{pct_change, pct_savings};
+use crate::perf::edp;
+use crate::workload::Dataset;
+
+use super::context::{CellKey, Context};
+use super::report::{pct, pct0, Report};
+
+/// Table XI: DVFS at 180 MHz vs baseline (2842 MHz), 5 models × 3 batches.
+pub fn table11(ctx: &Context) -> Result<Report> {
+    let mut r = Report::new(
+        "table-11",
+        "DVFS results at 180 MHz vs baseline 2842 MHz",
+        &["Model", "B", "E down", "L delta", "Pre delta", "Dec delta", "Pre%", "Dec%"],
+    );
+    let mut batch_acc: Vec<(usize, Vec<f64>, Vec<f64>)> = ctx
+        .cfg
+        .batch_sizes
+        .iter()
+        .map(|&b| (b, Vec::new(), Vec::new()))
+        .collect();
+    for tier in ModelTier::ALL {
+        for &b in &ctx.cfg.batch_sizes {
+            let hi = ctx.baseline_cell(tier, b, None)?;
+            let lo = ctx.cell(CellKey { tier, batch: b, freq: ctx.gpu.f_min_mhz(), dataset: None })?;
+            let e_down = pct_savings(lo.energy_j, hi.energy_j);
+            let l_delta = pct_change(lo.latency_s, hi.latency_s);
+            let pre_delta = pct_change(lo.prefill_s, hi.prefill_s);
+            let dec_delta = if hi.decode_s > 0.0 {
+                pct_change(lo.decode_s, hi.decode_s)
+            } else {
+                0.0
+            };
+            r.row(vec![
+                format!("Llama/Qwen-{}", tier.label()),
+                b.to_string(),
+                pct0(e_down),
+                pct(l_delta),
+                pct(pre_delta),
+                pct(dec_delta),
+                pct0(100.0 * hi.prefill_s / hi.latency_s),
+                pct0(100.0 * hi.decode_s / hi.latency_s),
+            ]);
+            let acc = batch_acc.iter_mut().find(|(bb, ..)| *bb == b).unwrap();
+            acc.1.push(e_down);
+            acc.2.push(l_delta);
+        }
+    }
+    for (b, es, ls) in batch_acc {
+        r.row(vec![
+            format!("Avg B={b}"),
+            b.to_string(),
+            pct0(es.iter().sum::<f64>() / es.len() as f64),
+            pct(ls.iter().sum::<f64>() / ls.len() as f64),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    r.note("paper: E down 39.9-44.2% every cell; dec delta within ±1%; pre delta falls with size and batch");
+    Ok(r)
+}
+
+/// Table XII: EDP-optimal frequency by model and batch size.
+pub fn table12(ctx: &Context) -> Result<Report> {
+    let mut r = Report::new(
+        "table-12",
+        "Optimal EDP frequency by model and batch (vs 2842 MHz)",
+        &["Model", "B", "Freq (MHz)", "E down", "L delta"],
+    );
+    for tier in ModelTier::ALL {
+        for &b in &ctx.cfg.batch_sizes {
+            let base = ctx.baseline_cell(tier, b, None)?;
+            let base_edp = edp(base.energy_j, base.latency_s);
+            let mut best = (ctx.gpu.f_max_mhz, base_edp, 0.0, 0.0);
+            for &f in &ctx.gpu.freq_levels_mhz {
+                let m = ctx.cell(CellKey { tier, batch: b, freq: f, dataset: None })?;
+                let e = edp(m.energy_j, m.latency_s);
+                if e < best.1 {
+                    best = (
+                        f,
+                        e,
+                        pct_savings(m.energy_j, base.energy_j),
+                        pct_change(m.latency_s, base.latency_s),
+                    );
+                }
+            }
+            r.row(vec![
+                format!("Llama/Qwen-{}", tier.label()),
+                b.to_string(),
+                best.0.to_string(),
+                pct0(best.2),
+                pct(best.3),
+            ]);
+        }
+    }
+    r.note("paper: optimum ~960 MHz at B=1 for all models; 42-63% savings");
+    Ok(r)
+}
+
+/// Table XIII: DVFS effectiveness by output length and model size (B=1,
+/// 180 MHz vs baseline).
+pub fn table13(ctx: &Context) -> Result<Report> {
+    let mut r = Report::new(
+        "table-13",
+        "DVFS effectiveness by output length and model size (180 MHz, B=1)",
+        &["Slice", "E down", "L up", "Paper E down", "Paper L up"],
+    );
+    // Per dataset (averaged over models), as the left half of the table.
+    let paper_ds = [
+        (Dataset::BoolQ, "41.5%", "+7.5%"),
+        (Dataset::HellaSwag, "42.6%", "+4.1%"),
+        (Dataset::TruthfulQa, "42.9%", "+0.9%"),
+        (Dataset::NarrativeQa, "43.1%", "+0.9%"),
+    ];
+    for (d, pe, pl) in paper_ds {
+        let mut e_acc = 0.0;
+        let mut l_acc = 0.0;
+        for tier in ModelTier::ALL {
+            let hi = ctx.baseline_cell(tier, 1, Some(d))?;
+            let lo = ctx.cell(CellKey { tier, batch: 1, freq: 180, dataset: Some(d) })?;
+            e_acc += pct_savings(lo.energy_j, hi.energy_j) / 5.0;
+            l_acc += pct_change(lo.latency_s, hi.latency_s) / 5.0;
+        }
+        r.row(vec![
+            format!("{} ({})", d.label(), if d.task() == crate::workload::TaskKind::Classification { "LL" } else { "gen" }),
+            pct0(e_acc),
+            pct(l_acc),
+            pe.to_string(),
+            pl.to_string(),
+        ]);
+    }
+    // Per size group (full suite).
+    let groups: [(&str, &[ModelTier], &str); 3] = [
+        ("Small (1-3B)", &[ModelTier::B1, ModelTier::B3], "+4.8%"),
+        ("Medium (8B)", &[ModelTier::B8], "+2.5%"),
+        ("Large (14-32B)", &[ModelTier::B14, ModelTier::B32], "+0.6%"),
+    ];
+    for (name, tiers, pl) in groups {
+        let mut e_acc = 0.0;
+        let mut l_acc = 0.0;
+        for &tier in tiers {
+            let hi = ctx.baseline_cell(tier, 1, None)?;
+            let lo = ctx.cell(CellKey { tier, batch: 1, freq: 180, dataset: None })?;
+            e_acc += pct_savings(lo.energy_j, hi.energy_j) / tiers.len() as f64;
+            l_acc += pct_change(lo.latency_s, hi.latency_s) / tiers.len() as f64;
+        }
+        r.row(vec![name.to_string(), pct0(e_acc), pct(l_acc), "41-44%".into(), pl.to_string()]);
+    }
+    Ok(r)
+}
+
+/// Table XIV: summary of phase-level DVFS effects.
+pub fn table14(ctx: &Context) -> Result<Report> {
+    // Derived from the same cells as XI/XII.
+    let mut e_all = Vec::new();
+    let mut l_all = Vec::new();
+    let mut dec_share = Vec::new();
+    for tier in ModelTier::ALL {
+        let hi = ctx.baseline_cell(tier, 1, None)?;
+        let lo = ctx.cell(CellKey { tier, batch: 1, freq: 180, dataset: None })?;
+        e_all.push(pct_savings(lo.energy_j, hi.energy_j));
+        l_all.push(pct_change(lo.latency_s, hi.latency_s));
+        dec_share.push(100.0 * hi.decode_s / hi.latency_s);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let min = |v: &[f64]| v.iter().cloned().fold(f64::MAX, f64::min);
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+
+    let mut r = Report::new(
+        "table-14",
+        "Summary of phase-level DVFS effects (B=1)",
+        &["Aspect", "Observation", "Paper"],
+    );
+    r.row(vec![
+        "Energy savings @180MHz".to_string(),
+        format!("{:.1}-{:.1}% (avg {:.1}%)", min(&e_all), max(&e_all), mean(&e_all)),
+        "40-44% (avg 42%)".to_string(),
+    ]);
+    r.row(vec![
+        "Latency change".to_string(),
+        format!("{:+.1}..{:+.1}%", min(&l_all), max(&l_all)),
+        "+1-3%".to_string(),
+    ]);
+    r.row(vec![
+        "Decode time fraction".to_string(),
+        format!("{:.0}-{:.0}%", min(&dec_share), max(&dec_share)),
+        "77-91%".to_string(),
+    ]);
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::quick(107, 24)
+    }
+
+    #[test]
+    fn table11_bands_hold() {
+        let c = ctx();
+        let r = table11(&c).unwrap();
+        // 15 model×batch rows + 3 averages.
+        assert_eq!(r.rows.len(), 18);
+        for row in &r.rows[..15] {
+            let e: f64 = row[2].trim_end_matches('%').parse().unwrap();
+            assert!((30.0..=55.0).contains(&e), "E down out of band: {row:?}");
+            let dec: f64 = row[5].trim_start_matches('+').trim_end_matches('%').parse().unwrap();
+            assert!(dec.abs() < 2.0, "decode delta out of band: {row:?}");
+        }
+    }
+
+    #[test]
+    fn table12_optimum_below_fmax() {
+        let c = ctx();
+        let r = table12(&c).unwrap();
+        for row in &r.rows {
+            let f: u32 = row[2].parse().unwrap();
+            assert!(f < 2842, "EDP optimum should be below fmax: {row:?}");
+            let e: f64 = row[3].trim_end_matches('%').parse().unwrap();
+            assert!(e > 25.0, "optimum saves energy: {row:?}");
+        }
+    }
+
+    #[test]
+    fn table13_long_output_has_small_latency_penalty() {
+        let c = ctx();
+        let r = table13(&c).unwrap();
+        let get = |name: &str| -> f64 {
+            r.rows
+                .iter()
+                .find(|row| row[0].starts_with(name))
+                .unwrap()[2]
+                .trim_start_matches('+')
+                .trim_end_matches('%')
+                .parse()
+                .unwrap()
+        };
+        // Generation datasets (decode-dominated) see much smaller latency
+        // penalties than the classification (prefill-only) datasets.
+        assert!(get("NarrativeQA") < get("BoolQ"));
+        assert!(get("TruthfulQA") < get("HellaSwag"));
+        assert!(get("NarrativeQA") < 2.0);
+        // Size groups: penalty falls with size.
+        assert!(get("Large") <= get("Small"));
+    }
+}

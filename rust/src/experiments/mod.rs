@@ -1,0 +1,17 @@
+//! Experiment harness: one regenerator per paper table (I–XVIII) and figure
+//! (2–7), sharing a memoised measurement context. See DESIGN.md §6 for the
+//! per-experiment acceptance bands; `rust/tests/calibration.rs` asserts them.
+
+pub mod ablations;
+pub mod casestudy;
+pub mod context;
+pub mod dvfs_tables;
+pub mod figures;
+pub mod quality_tables;
+pub mod report;
+pub mod runner;
+pub mod workload_tables;
+
+pub use context::Context;
+pub use report::Report;
+pub use runner::{run_all, run_figure, run_table};

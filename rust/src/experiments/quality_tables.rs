@@ -1,0 +1,241 @@
+//! Tables VII–X and XV: quality by scale, feature–quality correlations,
+//! scaling patterns, rule validation, and the routing strategy map.
+
+use anyhow::Result;
+
+use crate::config::ModelTier;
+use crate::coordinator::router::Router;
+use crate::quality::labels::pattern_shares;
+use crate::quality::{classify_patterns, ScalingPattern};
+use crate::stats::pearson;
+use crate::workload::Dataset;
+
+use super::context::Context;
+use super::report::{f3, pct0, r2, Report};
+
+/// Table VII: quality scores by model and dataset.
+pub fn table7(ctx: &Context) -> Result<Report> {
+    let mut r = Report::new(
+        "table-07",
+        "Quality scores by model and dataset (accuracy / ROUGE-L)",
+        &["Dataset", "1B", "3B", "8B", "14B", "32B", "Avg"],
+    );
+    let mut model_avgs = vec![0.0; 5];
+    for d in [
+        Dataset::BoolQ,
+        Dataset::HellaSwag,
+        Dataset::TruthfulQa,
+        Dataset::NarrativeQa,
+    ] {
+        let idx = ctx.suite.dataset_indices(d);
+        let mut cells = vec![d.label().to_string()];
+        let mut sum = 0.0;
+        for t in ModelTier::ALL {
+            let m = ctx.quality.mean_raw_over(t, &idx);
+            model_avgs[t.index()] += m / 4.0;
+            sum += m;
+            cells.push(f3(m));
+        }
+        cells.push(f3(sum / 5.0));
+        r.row(cells);
+    }
+    let mut avg_row = vec!["Model Avg".to_string()];
+    for a in &model_avgs {
+        avg_row.push(f3(*a));
+    }
+    avg_row.push(f3(model_avgs.iter().sum::<f64>() / 5.0));
+    r.row(avg_row);
+    r.note("paper model avgs: 0.423 / 0.514 / 0.559 / 0.583 / 0.596");
+    Ok(r)
+}
+
+/// Table VIII: feature–quality correlations by model size.
+pub fn table8(ctx: &Context) -> Result<Report> {
+    let n = ctx.suite.len();
+    let mut r = Report::new(
+        "table-08",
+        "Feature-quality correlations by model size",
+        &["Feature", "1B", "3B", "8B", "14B", "32B"],
+    );
+    let feats: [(&str, Box<dyn Fn(usize) -> f64>); 3] = [
+        ("Entity Density", Box::new(|i| ctx.suite.features[i].entity_density)),
+        ("Causal Question", Box::new(|i| ctx.suite.features[i].causal_question)),
+        ("Token Entropy", Box::new(|i| ctx.suite.features[i].token_entropy)),
+    ];
+    for (name, f) in feats {
+        let xs: Vec<f64> = (0..n).map(|i| f(i)).collect();
+        let mut cells = vec![name.to_string()];
+        for t in ModelTier::ALL {
+            // Correlate with dataset-normalized quality, pooled (paper).
+            let q: Vec<f64> = (0..n).map(|i| ctx.quality.norm[t.index()][i]).collect();
+            cells.push(r2(pearson(&xs, &q)));
+        }
+        r.row(cells);
+    }
+    r.note("paper: entity -0.20..-0.32 (negative, strengthening); causal negative; entropy positive, growing with size");
+    Ok(r)
+}
+
+/// Table IX: query scaling patterns across model sizes.
+pub fn table9(ctx: &Context) -> Result<Report> {
+    let patterns = classify_patterns(&ctx.quality);
+    let shares = pattern_shares(&patterns);
+    let paper = [44.5, 15.5, 32.6, 7.4];
+    let mut r = Report::new(
+        "table-09",
+        "Query scaling patterns across model sizes",
+        &["Pattern", "%", "Paper %", "Mean entity", "Mean causal", "Mean entropy"],
+    );
+    for (k, p) in ScalingPattern::ALL.iter().enumerate() {
+        let idx: Vec<usize> = (0..ctx.suite.len())
+            .filter(|&i| patterns[i] == *p)
+            .collect();
+        let mean = |f: &dyn Fn(usize) -> f64| {
+            if idx.is_empty() {
+                f64::NAN
+            } else {
+                idx.iter().map(|&i| f(i)).sum::<f64>() / idx.len() as f64
+            }
+        };
+        r.row(vec![
+            p.label().to_string(),
+            pct0(shares[k] * 100.0),
+            pct0(paper[k]),
+            f3(mean(&|i| ctx.suite.features[i].entity_density)),
+            f3(mean(&|i| ctx.suite.features[i].causal_question)),
+            f3(mean(&|i| ctx.suite.features[i].token_entropy)),
+        ]);
+    }
+    r.note("paper profiles: AlwaysEasy entity 0.17, AlwaysHard entity 0.27");
+    Ok(r)
+}
+
+/// Table X: rule-based classification validation (easy/hard quality gap).
+pub fn table10(ctx: &Context) -> Result<Report> {
+    let easy_idx: Vec<usize> = (0..ctx.suite.len())
+        .filter(|&i| Router::is_easy_rule(&ctx.suite.features[i]))
+        .collect();
+    let hard_idx: Vec<usize> = (0..ctx.suite.len())
+        .filter(|&i| !Router::is_easy_rule(&ctx.suite.features[i]))
+        .collect();
+    let mut r = Report::new(
+        "table-10",
+        "Classification validation: quality by difficulty category",
+        &["Model", "Easy", "Hard", "Gap", "Valid?"],
+    );
+    let mut gaps = Vec::new();
+    for t in ModelTier::ALL {
+        // Validation uses dataset-normalized quality (comparable scales).
+        let m = |idx: &[usize]| {
+            idx.iter()
+                .map(|&i| ctx.quality.norm[t.index()][i])
+                .sum::<f64>()
+                / idx.len().max(1) as f64
+        };
+        let e = m(&easy_idx);
+        let h = m(&hard_idx);
+        gaps.push(e - h);
+        r.row(vec![
+            format!("tier-{}", t.label()),
+            f3(e),
+            f3(h),
+            format!("{:+.3}", e - h),
+            if e > h { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    let avg: f64 = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    r.row(vec![
+        "Average".to_string(),
+        String::new(),
+        String::new(),
+        format!("{avg:+.3}"),
+        if gaps.iter().all(|g| *g > 0.0) { "yes" } else { "NO" }.to_string(),
+    ]);
+    r.note(format!(
+        "rule split: {} easy / {} hard (paper: 50.8%/49.2%); paper avg gap +0.256",
+        easy_idx.len(),
+        hard_idx.len()
+    ));
+    Ok(r)
+}
+
+/// Table XV: routing strategy based on scaling patterns.
+pub fn table15(ctx: &Context) -> Result<Report> {
+    let patterns = classify_patterns(&ctx.quality);
+    let shares = pattern_shares(&patterns);
+    let strategy = [
+        (ScalingPattern::AlwaysEasy, "1-3B", "Similar quality across sizes"),
+        (ScalingPattern::ScalingHelps, "8B+", "Quality improves with scale"),
+        (ScalingPattern::AlwaysHard, "1-3B", "Limited benefit from scaling"),
+        (ScalingPattern::Inconsistent, "8B", "Architecture-dependent"),
+    ];
+    let mut r = Report::new(
+        "table-15",
+        "Routing strategy based on scaling patterns",
+        &["Pattern", "%", "Model", "Rationale"],
+    );
+    for (p, model, why) in strategy {
+        let k = ScalingPattern::ALL.iter().position(|x| *x == p).unwrap();
+        r.row(vec![
+            p.label().to_string(),
+            pct0(shares[k] * 100.0),
+            model.to_string(),
+            why.to_string(),
+        ]);
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::quick(103, 200)
+    }
+
+    #[test]
+    fn table7_model_scaling_is_monotoneish() {
+        let c = ctx();
+        let r = table7(&c).unwrap();
+        let avg_row = r.rows.last().unwrap();
+        let avgs: Vec<f64> = avg_row[1..6].iter().map(|s| s.parse().unwrap()).collect();
+        // Model averages grow with scale (paper: 0.423 → 0.596).
+        assert!(avgs[4] > avgs[0] + 0.10, "{avgs:?}");
+        assert!((avgs[0] - 0.423).abs() < 0.07, "{avgs:?}");
+        assert!((avgs[4] - 0.596).abs() < 0.07, "{avgs:?}");
+    }
+
+    #[test]
+    fn table8_entity_negative_all_sizes() {
+        let c = ctx();
+        let r = table8(&c).unwrap();
+        let entity: Vec<f64> = r.rows[0][1..].iter().map(|s| s.parse().unwrap()).collect();
+        for (i, e) in entity.iter().enumerate() {
+            assert!((-0.55..=-0.08).contains(e), "entity corr tier {i}: {e}");
+        }
+        let causal: Vec<f64> = r.rows[1][1..].iter().map(|s| s.parse().unwrap()).collect();
+        assert!(causal.iter().all(|c| *c < 0.0), "{causal:?}");
+    }
+
+    #[test]
+    fn table10_every_tier_validates() {
+        let c = ctx();
+        let r = table10(&c).unwrap();
+        for row in &r.rows {
+            assert_eq!(row[4], "yes", "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn table15_shares_sum_to_one() {
+        let c = ctx();
+        let r = table15(&c).unwrap();
+        let total: f64 = r
+            .rows
+            .iter()
+            .map(|row| row[1].trim_end_matches('%').parse::<f64>().unwrap())
+            .sum();
+        assert!((total - 100.0).abs() < 0.5, "{total}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Experiment output: paper-format ASCII tables plus CSV export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One regenerated table/figure.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Experiment id, e.g. "table-11" or "fig-4".
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (paper-vs-measured commentary, bands).
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: Vec<S>) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.id);
+        self.rows.push(cells.into_iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    /// Render as a fixed-width ASCII table.
+    pub fn ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id.to_uppercase(), self.title);
+        let mut header = String::new();
+        for (w, c) in widths.iter().zip(&self.columns) {
+            let _ = write!(header, "| {:<w$} ", c, w = w);
+        }
+        let _ = writeln!(out, "{header}|");
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let mut line = String::new();
+            for (w, cell) in widths.iter().zip(row) {
+                let _ = write!(line, "| {:<w$} ", cell, w = w);
+            }
+            let _ = writeln!(out, "{line}|");
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// CSV form (quoting cells containing separators).
+    pub fn csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write CSV to `<dir>/<id>.csv`.
+    pub fn write_csv(&self, dir: impl AsRef<Path>) -> std::io::Result<std::path::PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+}
+
+/// Format helpers used across experiments.
+pub fn pct(x: f64) -> String {
+    format!("{:+.1}%", x)
+}
+
+pub fn pct0(x: f64) -> String {
+    format!("{:.1}%", x)
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn r2(x: f64) -> String {
+    format!("{x:+.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_and_csv_render() {
+        let mut r = Report::new("table-0", "demo", &["a", "b"]);
+        r.row(vec!["x", "1"]);
+        r.row(vec!["long cell", "2,3"]);
+        r.note("a note");
+        let a = r.ascii();
+        assert!(a.contains("TABLE-0"));
+        assert!(a.contains("long cell"));
+        assert!(a.contains("note: a note"));
+        let c = r.csv();
+        assert!(c.starts_with("a,b\n"));
+        assert!(c.contains("\"2,3\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Report::new("t", "t", &["a", "b"]).row(vec!["only one"]);
+    }
+
+    #[test]
+    fn csv_written_to_disk() {
+        let mut r = Report::new("table-test-io", "demo", &["x"]);
+        r.row(vec!["1"]);
+        let dir = std::env::temp_dir().join("ewatt-report-test");
+        let p = r.write_csv(&dir).unwrap();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,88 @@
+//! Experiment dispatch: `ewatt table <n>` / `ewatt figure <n>` / `ewatt all`.
+
+use anyhow::{bail, Result};
+
+use super::casestudy;
+use super::context::Context;
+use super::dvfs_tables;
+use super::figures;
+use super::quality_tables;
+use super::report::Report;
+use super::workload_tables;
+
+/// All experiment ids in paper order.
+pub const ALL_TABLES: [u32; 16] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16];
+pub const ALL_FIGURES: [u32; 6] = [2, 3, 4, 5, 6, 7];
+
+/// Run one table by paper number.
+pub fn run_table(ctx: &Context, n: u32) -> Result<Vec<Report>> {
+    Ok(match n {
+        1 => vec![workload_tables::table1(ctx)?],
+        2 => vec![workload_tables::table2(ctx)?],
+        3 => vec![workload_tables::table3(ctx)?],
+        4 => vec![workload_tables::table4(ctx)?],
+        5 => vec![workload_tables::table5(ctx)?],
+        6 => vec![workload_tables::table6(ctx)?],
+        7 => vec![quality_tables::table7(ctx)?],
+        8 => vec![quality_tables::table8(ctx)?],
+        9 => vec![quality_tables::table9(ctx)?],
+        10 => vec![quality_tables::table10(ctx)?],
+        11 => vec![dvfs_tables::table11(ctx)?],
+        12 => vec![dvfs_tables::table12(ctx)?],
+        13 => vec![dvfs_tables::table13(ctx)?],
+        14 => vec![dvfs_tables::table14(ctx)?],
+        15 => vec![quality_tables::table15(ctx)?],
+        16 => vec![casestudy::table16(ctx)?],
+        17 => vec![casestudy::table17(ctx)?, casestudy::scheduler_crosscheck(ctx)?],
+        18 => vec![casestudy::table18(ctx)?],
+        other => bail!("no table {other} in the paper (I–XVIII)"),
+    })
+}
+
+/// Run one figure by paper number.
+pub fn run_figure(ctx: &Context, n: u32) -> Result<Vec<Report>> {
+    Ok(match n {
+        2 => vec![figures::fig2(ctx)?],
+        3 => vec![figures::fig3(ctx)?],
+        4 => vec![figures::fig4(ctx)?],
+        5 => vec![figures::fig5(ctx)?],
+        6 => vec![figures::fig6(ctx)?],
+        7 => vec![figures::fig7(ctx)?],
+        other => bail!("no figure {other} in the paper (2–7)"),
+    })
+}
+
+/// Run everything (tables I–XVIII then figures 2–7).
+pub fn run_all(ctx: &Context) -> Result<Vec<Report>> {
+    let mut out = Vec::new();
+    for n in 1..=18u32 {
+        out.extend(run_table(ctx, n)?);
+    }
+    for n in ALL_FIGURES {
+        out.extend(run_figure(ctx, n)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_ids_error() {
+        let ctx = Context::quick(9, 4);
+        assert!(run_table(&ctx, 19).is_err());
+        assert!(run_figure(&ctx, 1).is_err());
+        assert!(run_figure(&ctx, 8).is_err());
+    }
+
+    #[test]
+    fn cheap_tables_run_on_tiny_context() {
+        let ctx = Context::quick(9, 6);
+        for n in [1u32, 2, 3, 4, 15] {
+            let reports = run_table(&ctx, n).unwrap();
+            assert!(!reports.is_empty());
+            assert!(!reports[0].rows.is_empty());
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Shannon token entropy (Section V-C: H = -Σ p_i log2 p_i over the token
+//! frequency distribution of one query).
+
+use std::collections::BTreeMap;
+
+/// Entropy in bits of the empirical distribution of `tokens`.
+pub fn token_entropy<S: AsRef<str>>(tokens: &[S]) -> f64 {
+    if tokens.is_empty() {
+        return 0.0;
+    }
+    // BTreeMap: deterministic iteration order ⇒ bit-identical sums
+    // across runs and extractor instances.
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for t in tokens {
+        *counts.entry(t.as_ref()).or_insert(0) += 1;
+    }
+    let n = tokens.len() as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Unique-token ratio (a complexity-score component).
+pub fn unique_ratio<S: AsRef<str>>(tokens: &[S]) -> f64 {
+    if tokens.is_empty() {
+        return 0.0;
+    }
+    let uniq: std::collections::HashSet<&str> =
+        tokens.iter().map(|t| t.as_ref()).collect();
+    uniq.len() as f64 / tokens.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_distribution_maxes_entropy() {
+        let toks = ["a", "b", "c", "d"];
+        assert!((token_entropy(&toks) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_sequence_zero_entropy() {
+        let toks = ["x"; 10];
+        assert_eq!(token_entropy(&toks), 0.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let toks: [&str; 0] = [];
+        assert_eq!(token_entropy(&toks), 0.0);
+        assert_eq!(unique_ratio(&toks), 0.0);
+    }
+
+    #[test]
+    fn entropy_bounded_by_log_n() {
+        let toks = ["a", "b", "a", "c", "a", "b"];
+        let h = token_entropy(&toks);
+        assert!(h > 0.0 && h <= (toks.len() as f64).log2());
+    }
+
+    #[test]
+    fn unique_ratio_values() {
+        assert_eq!(unique_ratio(&["a", "b", "c"]), 1.0);
+        assert_eq!(unique_ratio(&["a", "a"]), 0.5);
+    }
+}

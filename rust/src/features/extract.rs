@@ -1,0 +1,190 @@
+//! The paper's five-feature query characterization (Section V-C).
+
+use crate::text::markers::{is_causal_question_tokens, reasoning_marker_density_tokens};
+use crate::text::tokenizer::{sentence_count, token_count, word_tokens};
+use crate::text::NamedEntityRecognizer;
+
+use super::entropy::{token_entropy, unique_ratio};
+
+/// Names in the canonical feature order (used by the ablation study and the
+/// difficulty classifier).
+pub const FEATURE_NAMES: [&str; 6] = [
+    "input_length",
+    "complexity_score",
+    "reasoning_complexity",
+    "entity_density",
+    "token_entropy",
+    "causal_question",
+];
+
+/// All features of one query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeatureVector {
+    /// Token count (subword tokenizer) — the surface-level baseline feature.
+    pub input_length: usize,
+    /// Weighted combination of normalized entropy, unique-token ratio,
+    /// entity density, and average sentence length (0–1).
+    pub complexity_score: f64,
+    /// Density of causal/comparison markers per word (0–1).
+    pub reasoning_complexity: f64,
+    /// Named-entity tokens / word tokens (0–1).
+    pub entity_density: f64,
+    /// Shannon entropy of the query's token distribution, bits.
+    pub token_entropy: f64,
+    /// 1.0 if the query contains a causal question word, else 0.0.
+    pub causal_question: f64,
+}
+
+impl FeatureVector {
+    /// Canonical dense representation, order = [`FEATURE_NAMES`].
+    pub fn to_array(&self) -> [f64; 6] {
+        [
+            self.input_length as f64,
+            self.complexity_score,
+            self.reasoning_complexity,
+            self.entity_density,
+            self.token_entropy,
+            self.causal_question,
+        ]
+    }
+
+    /// Semantic features only (no length), order = FEATURE_NAMES[1..].
+    pub fn semantic_array(&self) -> [f64; 5] {
+        [
+            self.complexity_score,
+            self.reasoning_complexity,
+            self.entity_density,
+            self.token_entropy,
+            self.causal_question,
+        ]
+    }
+}
+
+/// Stateless (post-construction) extractor; owns the NER lexicon.
+pub struct FeatureExtractor {
+    ner: NamedEntityRecognizer,
+}
+
+impl Default for FeatureExtractor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FeatureExtractor {
+    pub fn new() -> Self {
+        FeatureExtractor {
+            ner: NamedEntityRecognizer::new(),
+        }
+    }
+
+    /// Extract all five features (plus length) from a query text.
+    ///
+    /// One allocation-free subword count + one word-level tokenization;
+    /// every downstream feature reuses the word tokens — this is the
+    /// serving-path cost the paper calls "negligible", benchmarked in
+    /// workload_features.rs.
+    pub fn extract(&self, text: &str) -> FeatureVector {
+        let input_length = token_count(text);
+        let words = word_tokens(text);
+        let word_texts: Vec<&str> = words.iter().map(|t| t.text.as_str()).collect();
+
+        let entropy = token_entropy(&word_texts);
+        let uniq = unique_ratio(&word_texts);
+        let entity_density = if words.is_empty() {
+            0.0
+        } else {
+            self.ner.recognize_tokens(&words).len() as f64 / words.len() as f64
+        };
+        let sentences = sentence_count(text).max(1);
+        let avg_sentence_len = words.len() as f64 / sentences as f64;
+
+        // Complexity score: weighted mix of normalized components
+        // (Section V-C). Entropy normalized by a 8-bit ceiling, sentence
+        // length by a 40-word ceiling.
+        let complexity_score = if words.is_empty() {
+            0.0
+        } else {
+            0.3 * (entropy / 8.0).min(1.0)
+                + 0.25 * uniq
+                + 0.25 * entity_density.min(1.0)
+                + 0.2 * (avg_sentence_len / 40.0).min(1.0)
+        };
+
+        FeatureVector {
+            input_length,
+            complexity_score,
+            reasoning_complexity: reasoning_marker_density_tokens(&words),
+            entity_density,
+            token_entropy: entropy,
+            causal_question: if is_causal_question_tokens(&words) { 1.0 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_text_is_all_zero() {
+        let fx = FeatureExtractor::new();
+        let f = fx.extract("");
+        assert_eq!(f.input_length, 0);
+        assert_eq!(f.complexity_score, 0.0);
+        assert_eq!(f.entity_density, 0.0);
+        assert_eq!(f.causal_question, 0.0);
+    }
+
+    #[test]
+    fn causal_question_flag() {
+        let fx = FeatureExtractor::new();
+        assert_eq!(fx.extract("Why did Rome fall?").causal_question, 1.0);
+        assert_eq!(fx.extract("Is water wet?").causal_question, 0.0);
+    }
+
+    #[test]
+    fn entity_density_reflects_entities() {
+        let fx = FeatureExtractor::new();
+        let dense = fx.extract("Napoleon met Cleopatra in Cairo near the Nile");
+        let sparse = fx.extract("the old man walked along the quiet river");
+        assert!(dense.entity_density > sparse.entity_density);
+        assert!(dense.entity_density > 0.3);
+        assert_eq!(sparse.entity_density, 0.0);
+    }
+
+    #[test]
+    fn all_normalized_features_bounded() {
+        let fx = FeatureExtractor::new();
+        let f = fx.extract(
+            "Why did the Habsburg empire collapse after the war because of \
+             economic pressure? Explain how Vienna and Budapest diverged.",
+        );
+        assert!(f.complexity_score > 0.0 && f.complexity_score <= 1.0);
+        assert!(f.reasoning_complexity >= 0.0 && f.reasoning_complexity <= 1.0);
+        assert!(f.entity_density >= 0.0 && f.entity_density <= 1.0);
+        assert!(f.token_entropy >= 0.0);
+    }
+
+    #[test]
+    fn longer_diverse_text_has_higher_entropy() {
+        let fx = FeatureExtractor::new();
+        let short = fx.extract("is it true");
+        let long = fx.extract(
+            "the ancient mariner traveled across distant oceans carrying \
+             forgotten letters toward unfamiliar harbors under golden skies",
+        );
+        assert!(long.token_entropy > short.token_entropy);
+    }
+
+    #[test]
+    fn array_round_trip() {
+        let fx = FeatureExtractor::new();
+        let f = fx.extract("Why is the Danube long?");
+        let a = f.to_array();
+        assert_eq!(a.len(), FEATURE_NAMES.len());
+        assert_eq!(a[0], f.input_length as f64);
+        assert_eq!(a[5], 1.0);
+        assert_eq!(f.semantic_array()[2], f.entity_density);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload characterization features (Section V of the paper).
+//!
+//! Five lightweight, interpretable features extracted from each query before
+//! inference: complexity score, reasoning complexity, entity density, token
+//! entropy, and the causal-question flag. All are O(tokens) — "negligible
+//! runtime overhead" per the paper — and the extraction path is benchmarked
+//! in `benches/workload_features.rs`.
+
+pub mod entropy;
+pub mod extract;
+
+pub use extract::{FeatureExtractor, FeatureVector, FEATURE_NAMES};

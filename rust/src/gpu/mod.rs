@@ -1,0 +1,20 @@
+//! GPU/DVFS simulator — the substitute for the paper's RTX PRO 6000
+//! Blackwell testbed with NVML telemetry (DESIGN.md §3).
+//!
+//! The simulator has four layers:
+//! - [`power`]: the P(f, utilization) model with a voltage floor below the
+//!   ~960 MHz knee — the mechanism behind the paper's "frequency cliff",
+//! - [`thermal`]: sustained-power cap with duty-cycle throttling (why the
+//!   largest models run *faster* at 960 MHz than at 2842 MHz, Table XII),
+//! - [`telemetry`]: NVML-style 10 ms power sampling and trapezoidal energy
+//!   integration — energy is *measured* the way the paper measures it,
+//! - [`sim`]: executes [`crate::perf::PhaseCost`] work at a pinned SM
+//!   frequency, producing latency + sampled energy.
+
+pub mod power;
+pub mod sim;
+pub mod telemetry;
+pub mod thermal;
+
+pub use sim::{GpuSim, PhaseResult};
+pub use telemetry::PowerSampler;

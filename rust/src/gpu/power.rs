@@ -1,0 +1,142 @@
+//! GPU power model.
+//!
+//! `P(f) = P_idle + P_mem·u_mem + P_sm·act·(f/f_max)·(V(f)/V_max)²`
+//!
+//! - `u_mem`: memory-bandwidth utilization (memory clock is never scaled, so
+//!   this term is frequency-independent — it is why energy savings saturate
+//!   at ~42% instead of approaching 100%).
+//! - `act`: SM clock-domain activity, `max(u_comp, κ·u_mem)` — even
+//!   memory-bound kernels keep the SM domain toggling to move data, which is
+//!   why decode burns SM power at high clocks *without* running faster
+//!   (Section VI-C: "higher frequencies during decode increase energy
+//!   consumption without providing measurable performance benefits").
+//! - The `f·V²` dynamic-power term with the voltage floor below `f_v0`
+//!   produces the frequency cliff of Figure 4.
+
+use crate::config::{FreqMHz, GpuSpec};
+
+/// Active power draw in watts at frequency `f` with the given utilizations.
+pub fn active_power(gpu: &GpuSpec, f: FreqMHz, u_comp: f64, u_mem: f64) -> f64 {
+    let act = u_comp.max(gpu.kappa_mem_activity * u_mem).clamp(0.0, 1.0);
+    // Compute-bound phases still stream activations/weights through the
+    // memory subsystem even when bandwidth is not the bottleneck.
+    let u_mem_eff = u_mem.max(0.4 * u_comp).clamp(0.0, 1.0);
+    let v_ratio = gpu.voltage(f) / gpu.v_max;
+    let f_ratio = f as f64 / gpu.f_max_mhz as f64;
+    gpu.p_idle_w + gpu.p_mem_w * u_mem_eff + gpu.p_sm_w * act * f_ratio * v_ratio * v_ratio
+}
+
+/// Idle (host-side work in flight, GPU waiting) power draw.
+pub fn idle_power(gpu: &GpuSpec) -> f64 {
+    gpu.p_idle_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::rtx_pro_6000()
+    }
+
+    #[test]
+    fn power_increases_with_frequency() {
+        let g = gpu();
+        let mut prev = 0.0;
+        for &f in &g.freq_levels_mhz {
+            let p = active_power(&g, f, 0.9, 0.9);
+            assert!(p > prev, "P({f}) = {p} not increasing");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn memory_bound_phase_still_burns_sm_power_at_fmax() {
+        // Decode shape: tiny compute utilization, saturated memory.
+        let g = gpu();
+        let p = active_power(&g, g.f_max_mhz, 0.05, 1.0);
+        // SM term must be substantial (act = κ·u_mem), not just idle+mem.
+        assert!(p > g.p_idle_w + g.p_mem_w + 100.0, "P = {p}");
+    }
+
+    #[test]
+    fn sm_dynamic_power_nearly_gone_by_960() {
+        let g = gpu();
+        let p960 = active_power(&g, 960, 0.05, 1.0);
+        let p180 = active_power(&g, 180, 0.05, 1.0);
+        let pmax = active_power(&g, g.f_max_mhz, 0.05, 1.0);
+        // The cliff: most of the max→min saving is already realized at 960.
+        let frac = (pmax - p960) / (pmax - p180);
+        assert!(frac > 0.80, "cliff fraction {frac}");
+    }
+
+    #[test]
+    fn bounds_are_respected() {
+        let g = gpu();
+        let p = active_power(&g, g.f_max_mhz, 1.0, 1.0);
+        assert!(p <= g.p_idle_w + g.p_mem_w + g.p_sm_w + 1e-9);
+        let p0 = active_power(&g, 180, 0.0, 0.0);
+        assert!((p0 - g.p_idle_w).abs() < 1e-9);
+        assert_eq!(idle_power(&g), g.p_idle_w);
+    }
+}
+
+/// Power-cap governor (extension; cf. the paper's related work on power
+/// limits [33], [34]): the highest supported frequency whose predicted
+/// power for `cost`-shaped work stays within `cap_w`. Falls back to the
+/// floor frequency if even that exceeds the cap.
+pub fn frequency_for_cap(
+    gpu: &GpuSpec,
+    cost: &crate::perf::costmodel::PhaseCost,
+    cap_w: f64,
+) -> FreqMHz {
+    let mut best = gpu.f_min_mhz();
+    for &f in &gpu.freq_levels_mhz {
+        let b = crate::perf::roofline::phase_time(gpu, cost, f);
+        let p = active_power(gpu, f, b.u_comp, b.u_mem);
+        if p <= cap_w && f > best {
+            best = f;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod cap_tests {
+    use super::*;
+    use crate::config::model::{model_for_tier, ModelTier};
+    use crate::perf::costmodel::{decode_step_cost, prefill_cost};
+
+    #[test]
+    fn cap_picks_monotone_frequencies() {
+        let g = GpuSpec::rtx_pro_6000();
+        let m = model_for_tier(ModelTier::B8);
+        let c = decode_step_cost(&m, 1, 256);
+        let mut prev = 0;
+        for cap in [200.0, 300.0, 400.0, 600.0] {
+            let f = frequency_for_cap(&g, &c, cap);
+            assert!(f >= prev, "cap {cap}: f {f} < prev {prev}");
+            prev = f;
+        }
+        // A generous cap allows max frequency.
+        assert_eq!(frequency_for_cap(&g, &c, 1000.0), g.f_max_mhz);
+    }
+
+    #[test]
+    fn compute_heavy_prefill_needs_lower_freq_for_same_cap() {
+        let g = GpuSpec::rtx_pro_6000();
+        let m = model_for_tier(ModelTier::B32);
+        let pre = prefill_cost(&m, 8, 300);
+        let dec = decode_step_cost(&m, 1, 256);
+        let cap = 350.0;
+        assert!(frequency_for_cap(&g, &pre, cap) <= frequency_for_cap(&g, &dec, cap));
+    }
+
+    #[test]
+    fn impossible_cap_falls_back_to_floor() {
+        let g = GpuSpec::rtx_pro_6000();
+        let m = model_for_tier(ModelTier::B8);
+        let c = decode_step_cost(&m, 1, 256);
+        assert_eq!(frequency_for_cap(&g, &c, 1.0), g.f_min_mhz());
+    }
+}

@@ -1,0 +1,127 @@
+//! NVML-style power telemetry.
+//!
+//! The paper measures GPU power by sampling NVML at 10 ms via `nvidia-smi`
+//! and integrating to joules (Section IV-B). The simulator reproduces the
+//! *measurement process*, not just the ground truth: the power trace is a
+//! piecewise-constant signal, the sampler reads it on a fixed 10 ms grid,
+//! and energy is trapezoidally integrated over the samples — including the
+//! quantization error a real NVML pipeline has on short requests.
+
+use crate::config::GpuSpec;
+
+/// One segment of the simulated power trace.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerSegment {
+    pub duration_s: f64,
+    pub power_w: f64,
+}
+
+/// Fixed-period sampler over a piecewise-constant power trace.
+pub struct PowerSampler {
+    period_s: f64,
+}
+
+impl PowerSampler {
+    pub fn new(gpu: &GpuSpec) -> Self {
+        PowerSampler { period_s: gpu.telemetry_period_s }
+    }
+
+    pub fn with_period(period_s: f64) -> Self {
+        PowerSampler { period_s }
+    }
+
+    /// Power at absolute time `t` within the trace.
+    fn power_at(trace: &[PowerSegment], t: f64) -> f64 {
+        let mut acc = 0.0;
+        for seg in trace {
+            acc += seg.duration_s;
+            if t < acc {
+                return seg.power_w;
+            }
+        }
+        trace.last().map(|s| s.power_w).unwrap_or(0.0)
+    }
+
+    /// Sample the trace on the fixed grid and trapezoidally integrate.
+    /// Returns (energy_joules, n_samples).
+    ///
+    /// Streaming implementation — no sample buffer. This sits inside every
+    /// simulated phase step (millions of calls per sweep), so it is kept
+    /// allocation-free; see EXPERIMENTS.md §Perf.
+    pub fn measure(&self, trace: &[PowerSegment]) -> (f64, usize) {
+        let total: f64 = trace.iter().map(|s| s.duration_s).sum();
+        if total <= 0.0 {
+            return (0.0, 0);
+        }
+        // Samples at t = 0, p, 2p, ..., and the trailing edge.
+        let mut energy = 0.0;
+        let mut prev_t = 0.0;
+        let mut prev_p = Self::power_at(trace, 0.0);
+        let mut n = 1usize;
+        let mut t = self.period_s;
+        while t < total {
+            let p = Self::power_at(trace, t);
+            energy += 0.5 * (prev_p + p) * (t - prev_t);
+            prev_t = t;
+            prev_p = p;
+            n += 1;
+            t += self.period_s;
+        }
+        let p_end = Self::power_at(trace, total - 1e-12);
+        energy += 0.5 * (prev_p + p_end) * (total - prev_t);
+        (energy, n + 1)
+    }
+
+    /// Exact integral (ground truth, for validating the sampler).
+    pub fn exact(trace: &[PowerSegment]) -> f64 {
+        trace.iter().map(|s| s.duration_s * s.power_w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_power_integrates_exactly() {
+        let s = PowerSampler::with_period(0.010);
+        let trace = [PowerSegment { duration_s: 1.0, power_w: 300.0 }];
+        let (e, n) = s.measure(&trace);
+        assert!((e - 300.0).abs() < 1e-9, "{e}");
+        assert!(n >= 100);
+    }
+
+    #[test]
+    fn sampler_approaches_exact_as_period_shrinks() {
+        let trace = [
+            PowerSegment { duration_s: 0.013, power_w: 500.0 },
+            PowerSegment { duration_s: 0.049, power_w: 250.0 },
+            PowerSegment { duration_s: 0.008, power_w: 90.0 },
+        ];
+        let exact = PowerSampler::exact(&trace);
+        let coarse = PowerSampler::with_period(0.010).measure(&trace).0;
+        let fine = PowerSampler::with_period(0.0001).measure(&trace).0;
+        assert!((fine - exact).abs() < (coarse - exact).abs() + 1e-12);
+        assert!((fine - exact).abs() / exact < 0.01);
+        // 10 ms sampling on a ~70 ms request: bounded but nonzero error,
+        // like real NVML integration.
+        assert!((coarse - exact).abs() / exact < 0.25);
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        let s = PowerSampler::with_period(0.010);
+        assert_eq!(s.measure(&[]).0, 0.0);
+    }
+
+    #[test]
+    fn multi_segment_total_duration_respected() {
+        let s = PowerSampler::with_period(0.010);
+        let trace = [
+            PowerSegment { duration_s: 0.5, power_w: 100.0 },
+            PowerSegment { duration_s: 0.5, power_w: 200.0 },
+        ];
+        let (e, _) = s.measure(&trace);
+        assert!((e - 150.0).abs() < 2.0, "{e}");
+    }
+}

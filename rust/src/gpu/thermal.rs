@@ -1,0 +1,50 @@
+//! Sustained-power cap with duty-cycle throttling.
+//!
+//! Real boards cannot sustain peak transient power: above `p_sustain` the
+//! clock duty-cycles and effective throughput drops proportionally. This is
+//! the mechanism behind Table XII's *negative* latency deltas — at 2842 MHz
+//! heavy phases exceed the sustained cap and stall, so mid-frequency set
+//! points can be outright faster.
+
+use crate::config::GpuSpec;
+
+/// Throttle factor ≥ 1 applied to GPU busy time, and the capped power draw.
+pub fn throttle(gpu: &GpuSpec, requested_power_w: f64) -> (f64, f64) {
+    if requested_power_w <= gpu.p_sustain_w {
+        (1.0, requested_power_w)
+    } else {
+        // Duty-cycling: the board delivers p_sustain; work stretches by the
+        // deficit ratio.
+        (requested_power_w / gpu.p_sustain_w, gpu.p_sustain_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_cap_is_identity() {
+        let g = GpuSpec::rtx_pro_6000();
+        let (t, p) = throttle(&g, 300.0);
+        assert_eq!(t, 1.0);
+        assert_eq!(p, 300.0);
+    }
+
+    #[test]
+    fn above_cap_stretches_time_and_caps_power() {
+        let g = GpuSpec::rtx_pro_6000();
+        let (t, p) = throttle(&g, g.p_sustain_w * 1.2);
+        assert!((t - 1.2).abs() < 1e-12);
+        assert_eq!(p, g.p_sustain_w);
+    }
+
+    #[test]
+    fn energy_is_conserved_under_throttling() {
+        // time × power before == after (duty cycling trades time for power).
+        let g = GpuSpec::rtx_pro_6000();
+        let req = 550.0;
+        let (t, p) = throttle(&g, req);
+        assert!((t * p - req).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,38 @@
+//! # ewatt — energy/performance characterization of LLM inference under GPU DVFS
+//!
+//! Reproduction of *"Characterizing LLM Inference Energy-Performance Tradeoffs
+//! across Workloads and GPU Scaling"* (Maliakel, Ilager, Brandic — CS.LG 2025)
+//! as a three-layer Rust + JAX + Pallas framework.
+//!
+//! The crate is organized bottom-up (see DESIGN.md §4):
+//!
+//! - substrates: [`text`], [`features`], [`stats`], [`workload`], [`quality`]
+//! - hardware model: [`gpu`] (DVFS/power/telemetry simulator), [`perf`]
+//!   (roofline + host-overhead phase cost model)
+//! - execution: [`engine`] (two-phase inference engine), [`runtime`]
+//!   (PJRT loader/executor for the AOT artifacts)
+//! - the paper's pipeline: [`coordinator`] (router + phase-aware DVFS
+//!   policies) and [`experiments`] (every table/figure regenerator)
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod features;
+pub mod gpu;
+pub mod perf;
+pub mod quality;
+pub mod runtime;
+pub mod stats;
+pub mod text;
+pub mod util;
+pub mod workload;
+
+/// Canonical deterministic RNG used across the crate (replayable studies).
+pub type Rng = util::rng::Rng;
+
+/// Build a seeded [`Rng`]; every experiment derives all randomness from an
+/// explicit seed so runs are exactly reproducible.
+pub fn rng(seed: u64) -> Rng {
+    util::rng::Rng::seed_from_u64(seed)
+}

@@ -1,0 +1,218 @@
+//! `ewatt` — the study's command line.
+//!
+//! ```text
+//! ewatt table <1..18> [--paper] [--seed N] [--queries N] [--out DIR]
+//! ewatt figure <2..7>  [...]
+//! ewatt all            [...]             # every table + figure
+//! ewatt sweep          [...]             # raw DVFS sweep cells as CSV
+//! ewatt serve [--tier t3] [--batch 4] [--n 16] [--max-new 32]
+//!             [--prefill-mhz 2842] [--decode-mhz 180]   # real PJRT path
+//! ewatt info                              # testbed + model inventory
+//! ```
+
+use anyhow::{bail, Context as _, Result};
+
+use ewatt::config::model::paper_models;
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::{DvfsPolicy, ServeConfig, Server};
+use ewatt::experiments::{run_all, run_figure, run_table, Context, Report};
+use ewatt::util::cli::Args;
+use ewatt::workload::ReplaySuite;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_context(args: &Args) -> Context {
+    let seed = args.get_u64("seed", 0xE1A5);
+    if args.has_flag("paper") {
+        eprintln!("building paper-scale context (3,817 queries) ...");
+        Context::paper(seed)
+    } else {
+        let n = args.get_usize("queries", 200);
+        Context::quick(seed, n)
+    }
+}
+
+fn emit(reports: &[Report], args: &Args) -> Result<()> {
+    for r in reports {
+        println!("{}", r.ascii());
+        if let Some(dir) = args.get("out") {
+            let p = r.write_csv(dir).context("writing CSV")?;
+            eprintln!("wrote {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("table") => {
+            let n: u32 = args
+                .positional
+                .first()
+                .context("usage: ewatt table <1..18>")?
+                .parse()
+                .context("table number")?;
+            let ctx = build_context(&args);
+            emit(&run_table(&ctx, n)?, &args)
+        }
+        Some("figure") => {
+            let n: u32 = args
+                .positional
+                .first()
+                .context("usage: ewatt figure <2..7>")?
+                .parse()
+                .context("figure number")?;
+            let ctx = build_context(&args);
+            emit(&run_figure(&ctx, n)?, &args)
+        }
+        Some("all") => {
+            let ctx = build_context(&args);
+            emit(&run_all(&ctx)?, &args)
+        }
+        Some("sweep") => {
+            let ctx = build_context(&args);
+            sweep_csv(&ctx, &args)
+        }
+        Some("ablation") => {
+            let name = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            let ctx = build_context(&args);
+            let reports: Vec<Report> = if name == "all" {
+                ewatt::experiments::ablations::ALL_ABLATIONS
+                    .iter()
+                    .map(|n| ewatt::experiments::ablations::run_ablation(&ctx, n))
+                    .collect::<Result<_>>()?
+            } else {
+                vec![ewatt::experiments::ablations::run_ablation(&ctx, name)?]
+            };
+            emit(&reports, &args)
+        }
+        Some("serve") => serve(&args),
+        Some("info") => info(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: ewatt <table N | figure N | all | sweep | ablation [name] | serve | info> \
+                 [--paper] [--seed N] [--queries N] [--out DIR]"
+            );
+            bail!("no subcommand")
+        }
+    }
+}
+
+/// Raw sweep cells — every (model, batch, freq) × full-mix measurement.
+fn sweep_csv(ctx: &Context, args: &Args) -> Result<()> {
+    use ewatt::config::ModelTier;
+    use ewatt::experiments::context::CellKey;
+    let mut r = Report::new(
+        "sweep",
+        "raw DVFS sweep cells (full dataset mix)",
+        &["model", "batch", "freq_mhz", "energy_j", "latency_s", "prefill_s",
+          "decode_s", "tokens_out", "j_per_query"],
+    );
+    for tier in ModelTier::ALL {
+        for &b in &ctx.cfg.batch_sizes {
+            for &f in &ctx.gpu.freq_levels_mhz {
+                let m = ctx.cell(CellKey { tier, batch: b, freq: f, dataset: None })?;
+                r.row(vec![
+                    tier.label().to_string(),
+                    b.to_string(),
+                    f.to_string(),
+                    format!("{:.2}", m.energy_j),
+                    format!("{:.4}", m.latency_s),
+                    format!("{:.4}", m.prefill_s),
+                    format!("{:.4}", m.decode_s),
+                    m.tokens_out.to_string(),
+                    format!("{:.3}", m.energy_per_query()),
+                ]);
+            }
+        }
+    }
+    emit(&[r], args)
+}
+
+/// Serve a replay slice through the real PJRT tiny-LM.
+fn serve(args: &Args) -> Result<()> {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let prefill = args.get_usize("prefill-mhz", gpu.f_max_mhz as usize) as u32;
+    let decode = args.get_usize("decode-mhz", 180) as u32;
+    let cfg = ServeConfig {
+        tier: args.get("tier").unwrap_or("t3").to_string(),
+        batch: args.get_usize("batch", 4),
+        max_new_tokens: args.get_usize("max-new", 32),
+        policy: DvfsPolicy::PhaseAware { prefill, decode },
+        ..Default::default()
+    };
+    let n = args.get_usize("n", 16);
+    let suite = ReplaySuite::quick(args.get_u64("seed", 7), n.div_ceil(4));
+    let queries: Vec<(usize, &ewatt::workload::Query)> = (0..suite.len().min(n))
+        .map(|i| (i, &suite.queries[i]))
+        .collect();
+    eprintln!(
+        "serving {} requests on tiny-LM {} (batch {}, policy {}) ...",
+        queries.len(),
+        cfg.tier,
+        cfg.batch,
+        cfg.policy.label()
+    );
+    let server = Server::new(cfg);
+    let (outcomes, metrics) = server.serve(&queries)?;
+    println!(
+        "requests={} wall={:.2}s throughput={:.2} req/s decode={:.1} tok/s",
+        metrics.requests,
+        metrics.wall_s,
+        metrics.throughput_rps(),
+        metrics.tokens_per_s()
+    );
+    println!(
+        "latency mean={:.1}ms p50={:.1}ms p95={:.1}ms | sim energy: {:.2} J/req, {:.4} J/tok",
+        1e3 * metrics.mean_latency_s(),
+        1e3 * metrics.percentile(50.0),
+        1e3 * metrics.percentile(95.0),
+        metrics.joules_per_request(),
+        metrics.joules_per_token()
+    );
+    let mean_rouge: f64 =
+        outcomes.iter().map(|o| o.rouge_l).sum::<f64>() / outcomes.len().max(1) as f64;
+    println!("mean ROUGE-L vs references: {mean_rouge:.3} (random-weight tiny-LM)");
+    for o in outcomes.iter().take(3) {
+        let preview: String = o.text.chars().take(60).collect();
+        println!("  [{}] {} tokens: {preview}...", o.query_idx, o.tokens_out);
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let g = GpuSpec::rtx_pro_6000();
+    println!("testbed: {} ({} GB, {:.0} GB/s, {:.0} TFLOP/s fp16 @ {} MHz)",
+        g.name,
+        g.mem_capacity_bytes >> 30,
+        g.mem_bw_bytes / 1e9,
+        g.peak_flops_fp16 / 1e12,
+        g.f_max_mhz);
+    println!("DVFS ladder: {:?} MHz", g.freq_levels_mhz);
+    println!("\nmodels:");
+    for m in paper_models() {
+        println!(
+            "  {:14} {:5.1}B params  {} layers  d={}  d_ff={}  kv/token={} B",
+            m.name,
+            m.param_count() as f64 / 1e9,
+            m.n_layers,
+            m.d_model,
+            m.d_ff,
+            m.kv_bytes_per_token()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! FLOP/byte accounting per inference phase for decoder-only transformers.
+
+use crate::config::ModelSpec;
+
+/// Work description of one GPU phase step (prefill pass or one decode step).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseCost {
+    /// Total floating-point operations.
+    pub flops: f64,
+    /// Total HBM traffic in bytes (weights + KV cache + activations).
+    pub mem_bytes: f64,
+    /// Rows of work in flight (batch × tokens processed this step) — the
+    /// occupancy driver for the clock-sensitivity model.
+    pub rows: f64,
+    /// Effective model width √(d_model·d_ff) — occupancy's second axis
+    /// (the FFN GEMMs dominate per-layer work, so wider FFNs parallelize
+    /// further and reduce clock sensitivity; cf. Qwen2.5-32B's 27k d_ff).
+    pub width: f64,
+    /// Layer count (drives host launch overhead).
+    pub n_layers: usize,
+    /// Sequences in the batch (drives per-row host overhead).
+    pub batch: usize,
+}
+
+impl PhaseCost {
+    /// Arithmetic intensity in FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.mem_bytes
+    }
+}
+
+/// Prefill: process `seq` prompt tokens for each of `batch` sequences.
+///
+/// FLOPs: 2·params per token (GEMMs) plus quadratic attention
+/// (2·2·L·H·Dh·seq² per sequence). Memory: weights once, plus KV written,
+/// plus activations.
+pub fn prefill_cost(m: &ModelSpec, batch: usize, seq: usize) -> PhaseCost {
+    let params = m.param_count() as f64;
+    let tokens = (batch * seq) as f64;
+    let attn_flops = 4.0
+        * m.n_layers as f64
+        * m.n_heads as f64
+        * m.head_dim() as f64
+        * (seq * seq) as f64
+        * batch as f64;
+    let flops = 2.0 * params * tokens + attn_flops;
+
+    let weight_bytes = m.weight_footprint_bytes() as f64;
+    let kv_write = tokens * m.kv_bytes_per_token() as f64;
+    // Activations: read+write d_model per token per layer, few passes.
+    let act_bytes = 6.0 * tokens * (m.d_model * m.n_layers * m.weight_bytes) as f64;
+    PhaseCost {
+        flops,
+        mem_bytes: weight_bytes + kv_write + act_bytes,
+        rows: tokens,
+        width: ((m.d_model * m.d_ff) as f64).sqrt(),
+        n_layers: m.n_layers,
+        batch,
+    }
+}
+
+/// One decode step: generate one token per sequence with `ctx` tokens of
+/// context already in the KV cache.
+///
+/// FLOPs: 2·params per sequence plus attention over the cache. Memory:
+/// weights once (shared across the batch), KV cache read per sequence,
+/// one KV entry written per sequence.
+pub fn decode_step_cost(m: &ModelSpec, batch: usize, ctx: usize) -> PhaseCost {
+    let params = m.param_count() as f64;
+    let b = batch as f64;
+    let attn_flops = 4.0
+        * m.n_layers as f64
+        * m.n_heads as f64
+        * m.head_dim() as f64
+        * ctx as f64
+        * b;
+    let flops = 2.0 * params * b + attn_flops;
+
+    let weight_bytes = m.weight_footprint_bytes() as f64;
+    let kv_read = b * ctx as f64 * m.kv_bytes_per_token() as f64;
+    let kv_write = b * m.kv_bytes_per_token() as f64;
+    let act_bytes = 6.0 * b * (m.d_model * m.n_layers * m.weight_bytes) as f64;
+    PhaseCost {
+        flops,
+        mem_bytes: weight_bytes + kv_read + kv_write + act_bytes,
+        rows: b,
+        width: ((m.d_model * m.d_ff) as f64).sqrt(),
+        n_layers: m.n_layers,
+        batch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::{model_for_tier, ModelTier};
+
+    #[test]
+    fn decode_intensity_is_low_prefill_high() {
+        let m = model_for_tier(ModelTier::B8);
+        let d = decode_step_cost(&m, 1, 256);
+        let p = prefill_cost(&m, 1, 256);
+        // Decode ~2 FLOP/byte (memory-bound); prefill ~hundreds.
+        assert!(d.intensity() < 4.0, "decode AI {}", d.intensity());
+        assert!(p.intensity() > 50.0, "prefill AI {}", p.intensity());
+    }
+
+    #[test]
+    fn batching_amortizes_decode_weight_traffic() {
+        let m = model_for_tier(ModelTier::B1);
+        let b1 = decode_step_cost(&m, 1, 128);
+        let b8 = decode_step_cost(&m, 8, 128);
+        // 8× flops but far less than 8× bytes (weights shared).
+        assert!((b8.flops / b1.flops - 8.0).abs() < 0.01);
+        assert!(b8.mem_bytes / b1.mem_bytes < 2.0);
+        assert!(b8.intensity() > 4.0 * b1.intensity());
+    }
+
+    #[test]
+    fn prefill_flops_scale_with_seq_quadratically_in_attention() {
+        let m = model_for_tier(ModelTier::B1);
+        let short = prefill_cost(&m, 1, 64);
+        let long = prefill_cost(&m, 1, 512);
+        // Linear term dominates at these lengths, but attention grows 64×.
+        assert!(long.flops > 8.0 * short.flops);
+        assert!(long.flops < 12.0 * short.flops);
+    }
+
+    #[test]
+    fn decode_cost_grows_with_context() {
+        let m = model_for_tier(ModelTier::B8);
+        let early = decode_step_cost(&m, 1, 16);
+        let late = decode_step_cost(&m, 1, 1024);
+        assert!(late.mem_bytes > early.mem_bytes);
+        assert!(late.flops > early.flops);
+    }
+
+    #[test]
+    fn weights_dominate_decode_bytes_at_small_ctx() {
+        let m = model_for_tier(ModelTier::B32);
+        let c = decode_step_cost(&m, 1, 64);
+        let weights = m.weight_footprint_bytes() as f64;
+        assert!(c.mem_bytes < 1.1 * weights);
+        assert!(c.mem_bytes >= weights);
+    }
+}

@@ -1,0 +1,33 @@
+//! Energy metrics (Section IV-D): per-request joules and the energy-delay
+//! product used to find the frequency sweet spot (Table XII).
+
+/// Energy-delay product: EDP = energy × latency.
+pub fn edp(energy_j: f64, latency_s: f64) -> f64 {
+    energy_j * latency_s
+}
+
+/// Percent change of `new` vs `baseline` (positive = increase).
+pub fn pct_change(new: f64, baseline: f64) -> f64 {
+    100.0 * (new - baseline) / baseline
+}
+
+/// Percent reduction of `new` vs `baseline` (positive = savings).
+pub fn pct_savings(new: f64, baseline: f64) -> f64 {
+    100.0 * (baseline - new) / baseline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edp_is_product() {
+        assert_eq!(edp(2.0, 3.0), 6.0);
+    }
+
+    #[test]
+    fn pct_helpers() {
+        assert!((pct_change(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert!((pct_savings(58.0, 100.0) - 42.0).abs() < 1e-12);
+    }
+}

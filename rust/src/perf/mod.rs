@@ -1,0 +1,27 @@
+//! Performance model: per-phase FLOP/byte accounting for the paper's
+//! transformer architectures, and the roofline + host-overhead timing model
+//! that turns those counts into latency at a given SM frequency.
+//!
+//! The model (DESIGN.md §5):
+//!
+//! ```text
+//! t_phase(f) = T_host + max(T_comp(f_max) · (f_max/f)^η, T_mem)
+//!   T_host = t_framework + n_layers · kernels_per_layer · t_launch
+//!   T_mem  = bytes / BW                      (memory clock is not scaled)
+//!   T_comp = flops / peak(f_max)
+//!   η      = min(1, coeff / (rows · width)^pow)   — occupancy-scaled
+//! ```
+//!
+//! Decode (per-token flops ≈ 2·params, bytes ≈ weights + KV) is memory-bound
+//! at every supported frequency, so its latency is ~f-independent — the
+//! paper's central observation *emerges* from the counts rather than being
+//! hard-coded. Prefill is compute-heavier and mildly frequency-sensitive,
+//! with sensitivity falling as batch and model size grow (Table XI).
+
+pub mod costmodel;
+pub mod energy;
+pub mod roofline;
+
+pub use costmodel::{decode_step_cost, prefill_cost, PhaseCost};
+pub use energy::edp;
+pub use roofline::{phase_time, PhaseBreakdown};

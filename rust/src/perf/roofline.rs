@@ -1,0 +1,160 @@
+//! Roofline + host-overhead timing at a given SM frequency.
+
+use crate::config::{FreqMHz, GpuSpec};
+
+use super::costmodel::PhaseCost;
+
+/// Timing decomposition of one phase step at one frequency.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseBreakdown {
+    /// CPU-side time (launches + framework), frequency-independent.
+    pub t_host: f64,
+    /// GPU busy time.
+    pub t_gpu: f64,
+    /// Fraction of GPU time the compute pipeline is the constraint.
+    pub u_comp: f64,
+    /// Fraction of GPU time memory bandwidth is utilized.
+    pub u_mem: f64,
+    /// Clock-sensitivity exponent used (diagnostic).
+    pub eta: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.t_host + self.t_gpu
+    }
+}
+
+/// Occupancy-scaled clock-sensitivity exponent (DESIGN.md §5): small
+/// work-shapes are DRAM-latency-bound and respond sub-linearly to SM clock.
+pub fn eta(gpu: &GpuSpec, cost: &PhaseCost) -> f64 {
+    let parallelism = (cost.rows * cost.width).max(1.0);
+    (gpu.clock_sens_coeff / parallelism.powf(gpu.clock_sens_pow)).min(1.0)
+}
+
+/// Time one phase step at SM frequency `f`.
+pub fn phase_time(gpu: &GpuSpec, cost: &PhaseCost, f: FreqMHz) -> PhaseBreakdown {
+    let t_host = gpu.t_framework_s
+        + cost.n_layers as f64 * gpu.kernels_per_layer * gpu.t_launch_s
+        + cost.batch as f64 * gpu.t_host_per_seq_s;
+    let t_mem = cost.mem_bytes / gpu.mem_bw_bytes;
+    let t_comp_fmax = cost.flops / gpu.peak_flops_fp16;
+    let e = eta(gpu, cost);
+    let ratio = gpu.f_max_mhz as f64 / f as f64;
+    let t_comp = t_comp_fmax * ratio.powf(e);
+    let t_gpu = t_comp.max(t_mem);
+    PhaseBreakdown {
+        t_host,
+        t_gpu,
+        u_comp: (t_comp / t_gpu).min(1.0),
+        u_mem: (t_mem / t_gpu).min(1.0),
+        eta: e,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::{model_for_tier, ModelTier};
+    use crate::perf::costmodel::{decode_step_cost, prefill_cost};
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::rtx_pro_6000()
+    }
+
+    #[test]
+    fn decode_latency_is_frequency_insensitive() {
+        // The paper's core observation (Table XI: decode Δ within ±1%).
+        let g = gpu();
+        for tier in ModelTier::ALL {
+            let m = model_for_tier(tier);
+            for batch in [1usize, 4, 8] {
+                let c = decode_step_cost(&m, batch, 128);
+                let hi = phase_time(&g, &c, g.f_max_mhz).total();
+                let lo = phase_time(&g, &c, g.f_min_mhz()).total();
+                let delta = (lo - hi) / hi;
+                assert!(
+                    delta.abs() < 0.02,
+                    "{} b{batch}: decode Δ {delta:+.3}",
+                    m.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_slows_at_min_frequency_and_less_for_big_models() {
+        let g = gpu();
+        let mut prev_delta = f64::INFINITY;
+        for tier in ModelTier::ALL {
+            let m = model_for_tier(tier);
+            let c = prefill_cost(&m, 1, 100);
+            let hi = phase_time(&g, &c, g.f_max_mhz).total();
+            let lo = phase_time(&g, &c, 180).total();
+            let delta = (lo - hi) / hi;
+            assert!(
+                delta > 0.005 && delta < 0.80,
+                "{}: prefill Δ {delta:+.3} out of band",
+                m.name
+            );
+            assert!(
+                delta < prev_delta,
+                "{}: prefill sensitivity should fall with size",
+                m.name
+            );
+            prev_delta = delta;
+        }
+    }
+
+    #[test]
+    fn prefill_sensitivity_falls_with_batch() {
+        let g = gpu();
+        let m = model_for_tier(ModelTier::B1);
+        let delta = |b: usize| {
+            let c = prefill_cost(&m, b, 100);
+            let hi = phase_time(&g, &c, g.f_max_mhz).total();
+            let lo = phase_time(&g, &c, 180).total();
+            (lo - hi) / hi
+        };
+        assert!(delta(8) < delta(4));
+        assert!(delta(4) < delta(1));
+    }
+
+    #[test]
+    fn latency_is_monotone_nonincreasing_in_frequency() {
+        let g = gpu();
+        let m = model_for_tier(ModelTier::B3);
+        let c = prefill_cost(&m, 1, 200);
+        let mut prev = f64::INFINITY;
+        for &f in &g.freq_levels_mhz {
+            let t = phase_time(&g, &c, f).total();
+            assert!(t <= prev * 1.0000001, "t({f}) = {t} > t(prev) = {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn eta_decreases_with_parallelism() {
+        let g = gpu();
+        let m1 = model_for_tier(ModelTier::B1);
+        let small = decode_step_cost(&m1, 1, 64);
+        let big = prefill_cost(&m1, 8, 512);
+        assert!(eta(&g, &small) > eta(&g, &big));
+        assert!(eta(&g, &small) <= 1.0);
+        assert!(eta(&g, &big) > 0.0);
+    }
+
+    #[test]
+    fn utilizations_are_fractions() {
+        let g = gpu();
+        let m = model_for_tier(ModelTier::B14);
+        for c in [prefill_cost(&m, 4, 300), decode_step_cost(&m, 4, 300)] {
+            for &f in &g.freq_levels_mhz {
+                let b = phase_time(&g, &c, f);
+                assert!(b.u_comp > 0.0 && b.u_comp <= 1.0);
+                assert!(b.u_mem > 0.0 && b.u_mem <= 1.0);
+                assert!(b.u_comp == 1.0 || b.u_mem == 1.0); // one binds
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Quality surrogate and difficulty labelling (Section V).
+//!
+//! Substitutes running the five pretrained models against gold answers
+//! (impossible offline — DESIGN.md §3): quality is modelled as a calibrated
+//! function of the *published* per-dataset/per-model means (Table VII) and
+//! the per-query semantic features the paper identifies as difficulty
+//! drivers (entity density, causal-question score), plus a shared per-query
+//! latent difficulty that correlates outcomes across model sizes — the
+//! property that produces the paper's scaling patterns (Table IX).
+
+pub mod labels;
+pub mod surrogate;
+
+pub use labels::{classify_patterns, easy_hard_labels, QualityMatrix, ScalingPattern};
+pub use surrogate::QualityModel;

@@ -1,0 +1,270 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::JsonValue;
+
+/// One tensor inside a tier's raw weight blob.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset into the weights file.
+    pub offset: usize,
+    pub nelems: usize,
+}
+
+/// One compiled program (phase × batch) of a tier.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub phase: String,
+    pub batch: usize,
+    /// Input signature: (shape, dtype) per flat argument.
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// Architecture metadata of a tier (mirrors python's ModelConfig).
+#[derive(Debug, Clone, Copy)]
+pub struct TierConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+/// Everything the runtime needs for one tier.
+#[derive(Debug, Clone)]
+pub struct TierArtifacts {
+    pub name: String,
+    pub config: TierConfig,
+    pub param_count: u64,
+    pub weights_file: String,
+    pub weights_bytes: usize,
+    pub tensors: Vec<TensorSpec>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub prefill_seq: usize,
+    pub tiers: BTreeMap<String, TierArtifacts>,
+}
+
+fn get<'a>(v: &'a JsonValue, key: &str) -> Result<&'a JsonValue> {
+    v.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+}
+
+fn get_usize(v: &JsonValue, key: &str) -> Result<usize> {
+    get(v, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest key {key:?} is not a number"))
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = JsonValue::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let format = get_usize(&v, "format")?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let prefill_seq = get_usize(&v, "prefill_seq")?;
+        let mut tiers = BTreeMap::new();
+        for (name, tv) in get(&v, "tiers")?
+            .as_object()
+            .ok_or_else(|| anyhow!("tiers must be an object"))?
+        {
+            tiers.insert(name.clone(), parse_tier(name, tv)?);
+        }
+        Ok(Manifest { dir, prefill_seq, tiers })
+    }
+
+    pub fn tier(&self, name: &str) -> Result<&TierArtifacts> {
+        self.tiers
+            .get(name)
+            .ok_or_else(|| anyhow!("tier {name:?} not in manifest (have: {:?})",
+                self.tiers.keys().collect::<Vec<_>>()))
+    }
+
+    /// Read a tier's weight blob as little-endian f32s per tensor.
+    pub fn load_weights(&self, tier: &TierArtifacts) -> Result<Vec<(TensorSpec, Vec<f32>)>> {
+        let path = self.dir.join(&tier.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        if bytes.len() != tier.weights_bytes {
+            bail!(
+                "weight blob size mismatch: file {} bytes, manifest says {}",
+                bytes.len(),
+                tier.weights_bytes
+            );
+        }
+        let mut out = Vec::with_capacity(tier.tensors.len());
+        for t in &tier.tensors {
+            let start = t.offset;
+            let end = start + t.nelems * 4;
+            if end > bytes.len() {
+                bail!("tensor {} overruns weight blob", t.name);
+            }
+            let mut data = Vec::with_capacity(t.nelems);
+            for c in bytes[start..end].chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            out.push((t.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+fn parse_tier(name: &str, v: &JsonValue) -> Result<TierArtifacts> {
+    let cfg = get(v, "config")?;
+    let config = TierConfig {
+        vocab: get_usize(cfg, "vocab")?,
+        d_model: get_usize(cfg, "d_model")?,
+        n_layers: get_usize(cfg, "n_layers")?,
+        n_heads: get_usize(cfg, "n_heads")?,
+        n_kv_heads: get_usize(cfg, "n_kv_heads")?,
+        d_ff: get_usize(cfg, "d_ff")?,
+        max_seq: get_usize(cfg, "max_seq")?,
+        head_dim: get_usize(cfg, "head_dim")?,
+    };
+    let mut tensors = Vec::new();
+    for tv in get(v, "tensors")?
+        .as_array()
+        .ok_or_else(|| anyhow!("tensors must be an array"))?
+    {
+        tensors.push(TensorSpec {
+            name: get(tv, "name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor name"))?
+                .to_string(),
+            shape: get(tv, "shape")?
+                .as_array()
+                .ok_or_else(|| anyhow!("tensor shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            offset: get_usize(tv, "offset")?,
+            nelems: get_usize(tv, "nelems")?,
+        });
+    }
+    let mut programs = BTreeMap::new();
+    for (pname, pv) in get(v, "programs")?
+        .as_object()
+        .ok_or_else(|| anyhow!("programs must be an object"))?
+    {
+        let inputs = get(pv, "inputs")?
+            .as_array()
+            .ok_or_else(|| anyhow!("program inputs"))?
+            .iter()
+            .map(|iv| {
+                let shape = iv
+                    .get("shape")
+                    .and_then(|s| s.as_array())
+                    .map(|a| a.iter().map(|x| x.as_usize().unwrap_or(0)).collect())
+                    .unwrap_or_default();
+                let dtype = iv
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string();
+                (shape, dtype)
+            })
+            .collect();
+        programs.insert(
+            pname.clone(),
+            ProgramSpec {
+                file: get(pv, "file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("program file"))?
+                    .to_string(),
+                phase: get(pv, "phase")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("program phase"))?
+                    .to_string(),
+                batch: get_usize(pv, "batch")?,
+                inputs,
+            },
+        );
+    }
+    Ok(TierArtifacts {
+        name: name.to_string(),
+        config,
+        param_count: get_usize(v, "param_count")? as u64,
+        weights_file: get(v, "weights")?
+            .as_str()
+            .ok_or_else(|| anyhow!("weights file"))?
+            .to_string(),
+        weights_bytes: get_usize(v, "weights_bytes")?,
+        tensors,
+        programs,
+    })
+}
+
+/// Default artifacts directory: `$EWATT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("EWATT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(default_dir()).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = manifest() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        assert_eq!(m.prefill_seq, 64);
+        let t1 = m.tier("t1").unwrap();
+        assert_eq!(t1.config.d_model, 64);
+        assert_eq!(t1.tensors.len(), 11);
+        assert!(t1.programs.contains_key("prefill_b1"));
+        assert!(t1.programs.contains_key("decode_b1"));
+    }
+
+    #[test]
+    fn weights_round_trip_sizes() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let t1 = m.tier("t1").unwrap().clone();
+        let w = m.load_weights(&t1).unwrap();
+        let total: usize = w.iter().map(|(_, d)| d.len() * 4).sum();
+        assert_eq!(total, t1.weights_bytes);
+        // embed is first and matches [vocab, d_model].
+        assert_eq!(w[0].0.name, "embed");
+        assert_eq!(w[0].0.shape, vec![t1.config.vocab, t1.config.d_model]);
+        // Values are finite floats, not garbage.
+        assert!(w[0].1.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn missing_tier_is_error() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        assert!(m.tier("t99").is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Thin wrapper over the PJRT CPU client: compile HLO text, manage device
+//! buffers. One client is shared by all loaded models.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client handle.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU PJRT client (the only backend in this environment;
+    /// real deployments would select TPU/GPU plugins here).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it to an executable.
+    pub fn compile_hlo_text(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Upload an f32 host tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Upload an i32 host tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+
+    /// Upload a host literal (used by the tuple-output fallback path).
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert!(c.platform().to_lowercase().contains("cpu") || !c.platform().is_empty());
+    }
+
+    #[test]
+    fn uploads_round_trip() {
+        let c = RuntimeClient::cpu().unwrap();
+        let b = c.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let lit = b.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let bi = c.upload_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(bi.to_literal_sync().unwrap().to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert!(c.upload_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

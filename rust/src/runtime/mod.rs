@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + raw weights + manifest) and executes them on the PJRT CPU
+//! client — the self-contained request path. Python never runs here.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProtos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+pub mod artifact;
+pub mod client;
+pub mod tinylm;
+
+pub use artifact::{Manifest, ProgramSpec, TensorSpec, TierArtifacts};
+pub use client::RuntimeClient;
+pub use tinylm::{DecodeState, TinyLm};

@@ -1,0 +1,212 @@
+//! The executable tiny-LM: weights + compiled prefill/decode programs.
+//!
+//! Hot-path design: weights live as device buffers uploaded once; the KV
+//! cache stays on device between decode steps (`execute_b`) — only token ids
+//! and logits cross the host boundary per step, mirroring how a production
+//! engine would drive a PJRT device.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{Manifest, TierArtifacts, TierConfig};
+use super::client::RuntimeClient;
+
+/// On-device decode state (KV cache buffers + position).
+pub struct DecodeState {
+    pub k_cache: xla::PjRtBuffer,
+    pub v_cache: xla::PjRtBuffer,
+    /// Next position to write (== current valid cache length).
+    pub pos: usize,
+    pub batch: usize,
+}
+
+/// A loaded, executable model tier.
+pub struct TinyLm {
+    pub tier: String,
+    pub config: TierConfig,
+    pub param_count: u64,
+    weights: Vec<xla::PjRtBuffer>,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    prefill_seq: usize,
+}
+
+impl TinyLm {
+    /// Load one tier: upload weights, compile all its programs.
+    pub fn load(client: &RuntimeClient, manifest: &Manifest, tier_name: &str) -> Result<Self> {
+        let tier: &TierArtifacts = manifest.tier(tier_name)?;
+        let host_weights = manifest.load_weights(tier)?;
+        let mut weights = Vec::with_capacity(host_weights.len());
+        for (spec, data) in &host_weights {
+            weights.push(
+                client
+                    .upload_f32(data, &spec.shape)
+                    .with_context(|| format!("uploading {}", spec.name))?,
+            );
+        }
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for (name, prog) in &tier.programs {
+            let exe = client.compile_hlo_text(manifest.dir.join(&prog.file))?;
+            match prog.phase.as_str() {
+                "prefill" => prefill.insert(prog.batch, exe),
+                "decode" => decode.insert(prog.batch, exe),
+                other => bail!("unknown phase {other:?} in program {name}"),
+            };
+        }
+        Ok(TinyLm {
+            tier: tier_name.to_string(),
+            config: tier.config,
+            param_count: tier.param_count,
+            weights,
+            prefill,
+            decode,
+            prefill_seq: manifest.prefill_seq,
+        })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.decode.keys().cloned().collect()
+    }
+
+    pub fn prefill_seq(&self) -> usize {
+        self.prefill_seq
+    }
+
+    /// Run prefill over `tokens` (row-major `[batch, prefill_seq]`, padded by
+    /// the caller). Returns per-row last-position logits and the on-device
+    /// decode state.
+    pub fn prefill(
+        &self,
+        client: &RuntimeClient,
+        tokens: &[i32],
+        batch: usize,
+    ) -> Result<(Vec<f32>, DecodeState)> {
+        let exe = self
+            .prefill
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no prefill program for batch {batch}"))?;
+        if tokens.len() != batch * self.prefill_seq {
+            bail!(
+                "prefill expects {}x{} tokens, got {}",
+                batch,
+                self.prefill_seq,
+                tokens.len()
+            );
+        }
+        let tok = client.upload_i32(tokens, &[batch, self.prefill_seq])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok);
+        let mut out = exe.execute_b(&args).context("prefill execute")?;
+        let (logits, k, v) = untuple3(client, &mut out, &self.cache_dims(batch))?;
+        Ok((
+            logits,
+            DecodeState { k_cache: k, v_cache: v, pos: self.prefill_seq, batch },
+        ))
+    }
+
+    /// KV-cache dims for a batch: [L, B, Hkv, max_seq, Dh].
+    fn cache_dims(&self, batch: usize) -> Vec<usize> {
+        vec![
+            self.config.n_layers,
+            batch,
+            self.config.n_kv_heads,
+            self.config.max_seq,
+            self.config.head_dim,
+        ]
+    }
+
+    /// One decode step: feed `tokens` (one per row), advance the cache.
+    /// Returns logits `[batch, vocab]` flattened.
+    pub fn decode_step(
+        &self,
+        client: &RuntimeClient,
+        state: &mut DecodeState,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let batch = state.batch;
+        let exe = self
+            .decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode program for batch {batch}"))?;
+        if tokens.len() != batch {
+            bail!("decode expects {batch} tokens, got {}", tokens.len());
+        }
+        if state.pos >= self.config.max_seq {
+            bail!("KV cache exhausted (pos {} >= max_seq {})", state.pos, self.config.max_seq);
+        }
+        let tok = client.upload_i32(tokens, &[batch])?;
+        let pos = client.upload_i32(&[state.pos as i32], &[])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok);
+        args.push(&state.k_cache);
+        args.push(&state.v_cache);
+        args.push(&pos);
+        let mut out = exe.execute_b(&args).context("decode execute")?;
+        let (logits, k, v) = untuple3(client, &mut out, &self.cache_dims(batch))?;
+        state.k_cache = k;
+        state.v_cache = v;
+        state.pos += 1;
+        Ok(logits)
+    }
+
+    /// Greedy argmax over `[batch, vocab]` logits.
+    pub fn argmax(&self, logits: &[f32], batch: usize) -> Vec<i32> {
+        let v = self.config.vocab;
+        (0..batch)
+            .map(|b| {
+                let row = &logits[b * v..(b + 1) * v];
+                let mut best = 0usize;
+                for (i, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = i;
+                    }
+                }
+                best as i32
+            })
+            .collect()
+    }
+}
+
+/// Unpack a (logits, k_cache, v_cache) execution result.
+///
+/// jax lowering uses `return_tuple=True`. xla_extension 0.5.1's PJRT CPU
+/// client does not set `untuple_result`, so the three outputs arrive as ONE
+/// tuple buffer: decompose through a host literal and re-upload the caches.
+/// (Newer plugins untuple — that path keeps everything on device.) The
+/// round-trip is the known hot-path cost of this plugin version; measured in
+/// `benches/engine_hotpath.rs` and discussed in EXPERIMENTS.md §Perf.
+fn untuple3(
+    client: &RuntimeClient,
+    out: &mut Vec<Vec<xla::PjRtBuffer>>,
+    cache_dims: &[usize],
+) -> Result<(Vec<f32>, xla::PjRtBuffer, xla::PjRtBuffer)> {
+    let replica = out.pop().ok_or_else(|| anyhow!("no execution outputs"))?;
+    match replica.len() {
+        3 => {
+            let mut it = replica.into_iter();
+            let logits = it.next().unwrap().to_literal_sync()?.to_vec::<f32>()?;
+            Ok((logits, it.next().unwrap(), it.next().unwrap()))
+        }
+        1 => {
+            let lit = replica[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != 3 {
+                bail!("expected 3-tuple output, got {}", parts.len());
+            }
+            let mut it = parts.into_iter();
+            let logits = it.next().unwrap().to_vec::<f32>()?;
+            // NOTE: upload via the copying host-buffer path
+            // (kImmutableOnlyDuringCall) — buffer_from_host_literal in
+            // xla_extension 0.5.1 does not await the transfer, so the
+            // literal could be freed mid-copy (observed segfault).
+            let k_host = it.next().unwrap().to_vec::<f32>()?;
+            let v_host = it.next().unwrap().to_vec::<f32>()?;
+            let k = client.upload_f32(&k_host, cache_dims)?;
+            let v = client.upload_f32(&v_host, cache_dims)?;
+            Ok((logits, k, v))
+        }
+        n => bail!("unexpected output arity {n}"),
+    }
+}

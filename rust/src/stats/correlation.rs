@@ -1,0 +1,96 @@
+//! Pearson and partial correlation (Table V's feature-independence and the
+//! paper's "controlling for length" analysis in Section V-D).
+
+/// Pearson correlation coefficient. Returns 0.0 for degenerate inputs
+/// (length < 2 or zero variance) — matching the paper's treatment of
+/// constant features.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "pearson: length mismatch");
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n as f64;
+    let my = y.iter().sum::<f64>() / n as f64;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// First-order partial correlation r(x, y | z): the association between x
+/// and y with the linear effect of z removed.
+pub fn partial_correlation(x: &[f64], y: &[f64], z: &[f64]) -> f64 {
+    let rxy = pearson(x, y);
+    let rxz = pearson(x, z);
+    let ryz = pearson(y, z);
+    let denom = ((1.0 - rxz * rxz) * (1.0 - ryz * ryz)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (rxy - rxz * ryz) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_correlation() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = y.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_zero() {
+        assert_eq!(pearson(&[1.0], &[2.0]), 0.0);
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn independent_samples_near_zero() {
+        // Deterministic pseudo-independent sequences.
+        let x: Vec<f64> = (0..1000).map(|i| ((i * 97) % 101) as f64).collect();
+        let y: Vec<f64> = (0..1000).map(|i| ((i * 31 + 7) % 103) as f64).collect();
+        assert!(pearson(&x, &y).abs() < 0.1);
+    }
+
+    #[test]
+    fn partial_removes_confounder() {
+        // x and y both driven by z (plus independent wiggles): partialling
+        // out z kills the association. Exact collinearity is numerically
+        // degenerate, so the test uses near-collinear data.
+        let z: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let x: Vec<f64> = z
+            .iter()
+            .enumerate()
+            .map(|(i, v)| 2.0 * v + 1.0 + (i as f64 * 0.7).sin())
+            .collect();
+        let y: Vec<f64> = z
+            .iter()
+            .enumerate()
+            .map(|(i, v)| -0.5 * v + 3.0 + (i as f64 * 1.3).cos() * 0.5)
+            .collect();
+        assert!(pearson(&x, &y).abs() > 0.99);
+        assert!(partial_correlation(&x, &y, &z).abs() < 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        pearson(&[1.0], &[1.0, 2.0]);
+    }
+}

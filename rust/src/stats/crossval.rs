@@ -1,0 +1,102 @@
+//! Stratified k-fold cross-validation (the paper's 5-fold stratified CV for
+//! the difficulty-classification ablation, Table VI).
+
+use super::logistic::LogisticRegression;
+use super::normalize::Standardizer;
+use crate::Rng;
+
+/// Produce `k` stratified folds as index sets. Class proportions are
+/// preserved per fold; assignment is deterministic given the RNG.
+pub fn stratified_kfold(y: &[bool], k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(k >= 2, "k must be >= 2");
+    let mut pos: Vec<usize> = (0..y.len()).filter(|&i| y[i]).collect();
+    let mut neg: Vec<usize> = (0..y.len()).filter(|&i| !y[i]).collect();
+    rng.shuffle(&mut pos);
+    rng.shuffle(&mut neg);
+    let mut folds = vec![Vec::new(); k];
+    for (j, &i) in pos.iter().enumerate() {
+        folds[j % k].push(i);
+    }
+    for (j, &i) in neg.iter().enumerate() {
+        folds[j % k].push(i);
+    }
+    folds
+}
+
+/// k-fold CV accuracy of an L2 logistic regression with per-fold
+/// standardization (fit scaler on train only — no leakage), exactly the
+/// paper's protocol: LR(C=1.0), 5 folds, standardized features.
+pub fn cross_validate_accuracy(
+    x: &[Vec<f64>],
+    y: &[bool],
+    k: usize,
+    c: f64,
+    rng: &mut Rng,
+) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let folds = stratified_kfold(y, k, rng);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for test_fold in &folds {
+        let test_set: std::collections::HashSet<usize> = test_fold.iter().cloned().collect();
+        let train_idx: Vec<usize> = (0..x.len()).filter(|i| !test_set.contains(i)).collect();
+        let xtrain: Vec<Vec<f64>> = train_idx.iter().map(|&i| x[i].clone()).collect();
+        let ytrain: Vec<bool> = train_idx.iter().map(|&i| y[i]).collect();
+        let scaler = Standardizer::fit(&xtrain);
+        let xtrain_z = scaler.transform_all(&xtrain);
+        let mut lr = LogisticRegression::new(c);
+        lr.fit(&xtrain_z, &ytrain);
+        for &i in test_fold {
+            let pred = lr.predict(&scaler.transform(&x[i]));
+            if pred == y[i] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    correct as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition_all_indices() {
+        let y: Vec<bool> = (0..103).map(|i| i % 3 == 0).collect();
+        let mut rng = crate::rng(1);
+        let folds = stratified_kfold(&y, 5, &mut rng);
+        let mut all: Vec<usize> = folds.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn folds_are_stratified() {
+        let y: Vec<bool> = (0..100).map(|i| i < 40).collect();
+        let mut rng = crate::rng(2);
+        let folds = stratified_kfold(&y, 5, &mut rng);
+        for f in &folds {
+            let pos = f.iter().filter(|&&i| y[i]).count();
+            assert_eq!(pos, 8, "each fold gets 40/5 positives");
+            assert_eq!(f.len(), 20);
+        }
+    }
+
+    #[test]
+    fn cv_on_separable_data_is_high_and_on_noise_is_chance() {
+        let mut rng = crate::rng(3);
+        let n = 400;
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![i as f64 / n as f64, ((i * 7919) % 97) as f64])
+            .collect();
+        let y: Vec<bool> = (0..n).map(|i| i >= n / 2).collect();
+        let acc = cross_validate_accuracy(&x, &y, 5, 1.0, &mut rng);
+        assert!(acc > 0.95, "separable: {acc}");
+
+        // Labels independent of features → ~50%.
+        let y_noise: Vec<bool> = (0..n).map(|i| (i * 2654435761_usize) % 2 == 0).collect();
+        let acc_noise = cross_validate_accuracy(&x, &y_noise, 5, 1.0, &mut rng);
+        assert!((acc_noise - 0.5).abs() < 0.12, "noise: {acc_noise}");
+    }
+}

@@ -1,0 +1,155 @@
+//! L2-regularized logistic regression (the paper's difficulty classifier,
+//! Section V-D2: C = 1.0, standardized features, 5-fold stratified CV).
+//!
+//! Trained by full-batch gradient descent with backtracking-free fixed step
+//! and enough iterations to converge on the small feature sets involved
+//! (≤ 6 dims, ≤ 4k rows); deterministic — no RNG in the optimizer.
+
+/// Logistic regression model.
+#[derive(Debug, Clone)]
+pub struct LogisticRegression {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+    /// Inverse regularization strength (sklearn's C; paper uses 1.0).
+    pub c: f64,
+    pub max_iter: usize,
+    pub lr: f64,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl LogisticRegression {
+    pub fn new(c: f64) -> Self {
+        LogisticRegression { weights: vec![], bias: 0.0, c, max_iter: 500, lr: 0.5 }
+    }
+
+    /// Fit on row-major features and boolean labels.
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[bool]) {
+        assert_eq!(x.len(), y.len(), "fit: rows/labels mismatch");
+        assert!(!x.is_empty(), "fit: empty data");
+        let n = x.len();
+        let dims = x[0].len();
+        self.weights = vec![0.0; dims];
+        self.bias = 0.0;
+        let lambda = 1.0 / (self.c * n as f64); // sklearn-style scaling
+
+        for _ in 0..self.max_iter {
+            let mut gw = vec![0.0; dims];
+            let mut gb = 0.0;
+            for (xi, &yi) in x.iter().zip(y) {
+                let z = self.decision(xi);
+                let err = sigmoid(z) - f64::from(yi as u8);
+                for (g, v) in gw.iter_mut().zip(xi) {
+                    *g += err * v;
+                }
+                gb += err;
+            }
+            let inv_n = 1.0 / n as f64;
+            for (w, g) in self.weights.iter_mut().zip(&gw) {
+                *w -= self.lr * (g * inv_n + lambda * *w);
+            }
+            self.bias -= self.lr * gb * inv_n;
+        }
+    }
+
+    /// Raw decision value w·x + b.
+    pub fn decision(&self, x: &[f64]) -> f64 {
+        self.weights.iter().zip(x).map(|(w, v)| w * v).sum::<f64>() + self.bias
+    }
+
+    /// P(label = true).
+    pub fn predict_proba(&self, x: &[f64]) -> f64 {
+        sigmoid(self.decision(x))
+    }
+
+    pub fn predict(&self, x: &[f64]) -> bool {
+        self.decision(x) >= 0.0
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, x: &[Vec<f64>], y: &[bool]) -> f64 {
+        assert_eq!(x.len(), y.len());
+        if x.is_empty() {
+            return 0.0;
+        }
+        let hits = x
+            .iter()
+            .zip(y)
+            .filter(|(xi, &yi)| self.predict(xi) == yi)
+            .count();
+        hits as f64 / x.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn separable() -> (Vec<Vec<f64>>, Vec<bool>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..50 {
+            let t = i as f64 / 50.0;
+            x.push(vec![t, 1.0 - t]);
+            y.push(false);
+            x.push(vec![t + 2.0, 1.0 - t]);
+            y.push(true);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_separable_data() {
+        let (x, y) = separable();
+        let mut lr = LogisticRegression::new(1.0);
+        lr.fit(&x, &y);
+        assert!(lr.accuracy(&x, &y) > 0.97);
+        assert!(lr.weights[0] > 0.0); // first dim separates the classes
+    }
+
+    #[test]
+    fn probabilities_are_calibratedish() {
+        let (x, y) = separable();
+        let mut lr = LogisticRegression::new(1.0);
+        lr.fit(&x, &y);
+        assert!(lr.predict_proba(&[3.0, 0.5]) > 0.9);
+        assert!(lr.predict_proba(&[0.0, 0.5]) < 0.1);
+    }
+
+    #[test]
+    fn stronger_regularization_shrinks_weights() {
+        let (x, y) = separable();
+        let mut loose = LogisticRegression::new(10.0);
+        let mut tight = LogisticRegression::new(0.01);
+        loose.fit(&x, &y);
+        tight.fit(&x, &y);
+        let nl: f64 = loose.weights.iter().map(|w| w * w).sum();
+        let nt: f64 = tight.weights.iter().map(|w| w * w).sum();
+        assert!(nt < nl);
+    }
+
+    #[test]
+    fn sigmoid_is_stable_at_extremes() {
+        assert!(sigmoid(1e3) <= 1.0);
+        assert!(sigmoid(-1e3) >= 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_fit() {
+        let (x, y) = separable();
+        let mut a = LogisticRegression::new(1.0);
+        let mut b = LogisticRegression::new(1.0);
+        a.fit(&x, &y);
+        b.fit(&x, &y);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.bias, b.bias);
+    }
+}

@@ -1,0 +1,16 @@
+//! Statistics substrate: descriptive stats, correlations (Pearson and
+//! partial), normalization, an L2-regularized logistic regression, and
+//! stratified k-fold cross-validation — everything Section V's analysis
+//! needs, implemented natively and property-tested.
+
+pub mod correlation;
+pub mod crossval;
+pub mod descriptive;
+pub mod logistic;
+pub mod normalize;
+
+pub use correlation::{partial_correlation, pearson};
+pub use crossval::{stratified_kfold, cross_validate_accuracy};
+pub use descriptive::Summary;
+pub use logistic::LogisticRegression;
+pub use normalize::{minmax_normalize, standardize, Standardizer};

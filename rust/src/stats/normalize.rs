@@ -1,0 +1,112 @@
+//! Normalization utilities: min-max scaling (the paper normalizes quality
+//! within each dataset before cross-model comparison) and z-standardization
+//! (features are standardized before logistic regression).
+
+/// Min-max normalize a sample in place to [0, 1]. Constant samples map to 0.5
+/// (no information), matching the paper's treatment.
+pub fn minmax_normalize(xs: &mut [f64]) {
+    if xs.is_empty() {
+        return;
+    }
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let range = max - min;
+    if range == 0.0 {
+        xs.iter_mut().for_each(|x| *x = 0.5);
+    } else {
+        xs.iter_mut().for_each(|x| *x = (*x - min) / range);
+    }
+}
+
+/// Fitted standardization parameters (zero mean, unit variance per column).
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub means: Vec<f64>,
+    pub stds: Vec<f64>,
+}
+
+impl Standardizer {
+    /// Fit on row-major data (`rows × dims`).
+    pub fn fit(rows: &[Vec<f64>]) -> Standardizer {
+        assert!(!rows.is_empty(), "Standardizer::fit on empty data");
+        let dims = rows[0].len();
+        let n = rows.len() as f64;
+        let mut means = vec![0.0; dims];
+        for r in rows {
+            for (m, v) in means.iter_mut().zip(r) {
+                *m += v;
+            }
+        }
+        means.iter_mut().for_each(|m| *m /= n);
+        let mut stds = vec![0.0; dims];
+        for r in rows {
+            for d in 0..dims {
+                stds[d] += (r[d] - means[d]).powi(2);
+            }
+        }
+        for s in stds.iter_mut() {
+            *s = (*s / n).sqrt();
+            if *s == 0.0 {
+                *s = 1.0; // constant column: leave centered at zero
+            }
+        }
+        Standardizer { means, stds }
+    }
+
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.means.iter().zip(&self.stds))
+            .map(|(x, (m, s))| (x - m) / s)
+            .collect()
+    }
+
+    pub fn transform_all(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.transform(r)).collect()
+    }
+}
+
+/// Convenience: standardize in one shot, returning transformed rows.
+pub fn standardize(rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    Standardizer::fit(rows).transform_all(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_maps_to_unit_interval() {
+        let mut xs = vec![2.0, 4.0, 6.0];
+        minmax_normalize(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn minmax_constant_maps_to_half() {
+        let mut xs = vec![3.0, 3.0];
+        minmax_normalize(&mut xs);
+        assert_eq!(xs, vec![0.5, 0.5]);
+        let mut empty: Vec<f64> = vec![];
+        minmax_normalize(&mut empty);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let rows = vec![vec![1.0, 10.0], vec![2.0, 20.0], vec![3.0, 30.0]];
+        let z = standardize(&rows);
+        for d in 0..2 {
+            let mean: f64 = z.iter().map(|r| r[d]).sum::<f64>() / 3.0;
+            let var: f64 = z.iter().map(|r| r[d].powi(2)).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_column_does_not_nan() {
+        let rows = vec![vec![5.0, 1.0], vec![5.0, 2.0]];
+        let z = standardize(&rows);
+        assert!(z.iter().all(|r| r[0] == 0.0));
+        assert!(z.iter().all(|r| r.iter().all(|v| v.is_finite())));
+    }
+}

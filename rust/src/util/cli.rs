@@ -1,0 +1,105 @@
+//! Minimal CLI argument parsing (clap substitute): subcommand + `--key value`
+//! / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .is_some_and(|next| !next.starts_with("--"))
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("table 11 --seed 42 --out results.csv --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("table"));
+        assert_eq!(a.positional, vec!["11"]);
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get("out"), Some("results.csv"));
+        assert!(a.has_flag("quick"));
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --n=10");
+        assert_eq!(a.get_usize("n", 0), 10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a number")]
+    fn bad_number_panics() {
+        parse("x --n abc").get_usize("n", 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline-build substitutes for common ecosystem crates (DESIGN.md §3):
+//! this environment has no network registry, so the deterministic PRNG
+//! (`rand`), JSON (`serde_json`), CLI parsing (`clap`), bench harness
+//! (`criterion`) and parallel map (`rayon`) are implemented here, each a
+//! small, tested, purpose-built replacement.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use json::JsonValue;
+pub use rng::Rng;

@@ -1,0 +1,65 @@
+//! Scoped-thread parallel map (rayon substitute).
+//!
+//! Chunks the input across `min(available_parallelism, items)` worker
+//! threads with `std::thread::scope`. Order-preserving.
+
+/// Parallel map preserving input order.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if workers <= 1 || n < 16 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (slot_chunk, item_chunk) in out.chunks_mut(chunk).zip(items.chunks(chunk)) {
+            let f = &f;
+            s.spawn(move || {
+                for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = par_map(&xs, |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_small() {
+        let e: Vec<u32> = vec![];
+        assert!(par_map(&e, |&x| x).is_empty());
+        assert_eq!(par_map(&[5], |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn actually_runs_closures_once_each() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let xs: Vec<usize> = (0..257).collect();
+        let _ = par_map(&xs, |_| count.fetch_add(1, Ordering::SeqCst));
+        assert_eq!(count.load(Ordering::SeqCst), 257);
+    }
+}

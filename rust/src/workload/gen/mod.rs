@@ -1,0 +1,81 @@
+//! Per-dataset generators, calibrated to Tables II–IV of the paper.
+
+pub mod boolq;
+pub mod hellaswag;
+pub mod narrativeqa;
+pub mod truthfulqa;
+
+use super::corpus::{generate_reference, generate_text, sample_length, TextProfile};
+use super::query::{Dataset, Query, TaskKind};
+use crate::Rng;
+
+/// The calibrated text profile for a dataset (Tables II–IV targets).
+pub fn profile(dataset: Dataset) -> TextProfile {
+    match dataset {
+        Dataset::BoolQ => boolq::PROFILE,
+        Dataset::HellaSwag => hellaswag::PROFILE,
+        Dataset::TruthfulQa => truthfulqa::PROFILE,
+        Dataset::NarrativeQa => narrativeqa::PROFILE,
+    }
+}
+
+/// Generate `n` queries for `dataset`. Ids are `base_id + i` and all
+/// randomness derives from `rng`, so suites replay exactly.
+pub fn generate(dataset: Dataset, n: usize, base_id: u64, rng: &mut Rng) -> Vec<Query> {
+    let p = profile(dataset);
+    (0..n)
+        .map(|i| {
+            let n_tokens = sample_length(&p, rng);
+            let text = generate_text(&p, n_tokens, rng);
+            let reference = generate_reference(&p, rng);
+            let output_tokens = match dataset.task() {
+                // Log-likelihood scoring: no autoregressive generation.
+                TaskKind::Classification => 0,
+                // Greedy generation capped at 100 with EOS early stopping;
+                // most answers run near the cap (paper reports avg ≈ 100).
+                TaskKind::Generation => rng.gen_range_inclusive(80, 100),
+            };
+            Query {
+                id: base_id + i as u64,
+                dataset,
+                text,
+                reference,
+                output_tokens,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count_with_stable_ids() {
+        let mut rng = crate::rng(5);
+        let qs = generate(Dataset::BoolQ, 25, 1000, &mut rng);
+        assert_eq!(qs.len(), 25);
+        assert_eq!(qs[0].id, 1000);
+        assert_eq!(qs[24].id, 1024);
+        assert!(qs.iter().all(|q| q.dataset == Dataset::BoolQ));
+        assert!(qs.iter().all(|q| q.output_tokens == 0));
+    }
+
+    #[test]
+    fn generation_datasets_have_output_budget() {
+        let mut rng = crate::rng(6);
+        let qs = generate(Dataset::NarrativeQa, 25, 0, &mut rng);
+        assert!(qs.iter().all(|q| (80..=100).contains(&q.output_tokens)));
+        assert!(qs.iter().all(|q| !q.reference.is_empty()));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let a = generate(Dataset::TruthfulQa, 10, 0, &mut crate::rng(7));
+        let b = generate(Dataset::TruthfulQa, 10, 0, &mut crate::rng(7));
+        assert_eq!(
+            a.iter().map(|q| &q.text).collect::<Vec<_>>(),
+            b.iter().map(|q| &q.text).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! NarrativeQA-like workload: long-context reading comprehension with
+//! multi-step causal questions over narrative passages.
+//!
+//! Paper targets — length: mean 339.1, std 34.3, min 208, max 396 tokens;
+//! features: entity density 0.18, reasoning 0.12, causal 33.6% (by far the
+//! highest), entropy 7.16 (long diverse narratives).
+
+use crate::workload::corpus::TextProfile;
+
+pub const PROFILE: TextProfile = TextProfile {
+    mean_tokens: 339.1,
+    std_tokens: 34.3,
+    min_tokens: 208,
+    max_tokens: 396,
+    entity_rate: 0.18,
+    causal_rate: 0.336,
+    reasoning_rate: 0.11,
+    zipf_s: 0.45,
+    sentence_len: 12,
+};

@@ -1,0 +1,20 @@
+//! TruthfulQA(GEN)-like workload: short, entity-dense factual questions that
+//! probe parametric knowledge (misconception-prone factuality).
+//!
+//! Paper targets — length: mean 12.6, std 5.7, min 5, max 52 tokens;
+//! features: entity density 0.34 (highest of the four), reasoning 0.07,
+//! causal 10.2%, entropy 3.50 (short queries ⇒ low entropy).
+
+use crate::workload::corpus::TextProfile;
+
+pub const PROFILE: TextProfile = TextProfile {
+    mean_tokens: 12.6,
+    std_tokens: 5.7,
+    min_tokens: 5,
+    max_tokens: 52,
+    entity_rate: 0.34,
+    causal_rate: 0.102,
+    reasoning_rate: 0.06,
+    zipf_s: 0.9,
+    sentence_len: 14,
+};

@@ -1,0 +1,18 @@
+//! Workload substrate: the four benchmark datasets (Section IV-D) as
+//! calibrated synthetic corpus generators, plus the replay suite.
+//!
+//! The paper evaluates BoolQ, HellaSwag, TruthfulQA(GEN) and NarrativeQA.
+//! Those corpora (and the HF loaders) are unavailable offline, so each
+//! dataset is replaced by a generator calibrated to the paper's published
+//! per-dataset statistics: token-length distribution (Table II), semantic
+//! feature profile (Tables III/IV), and task type (classification via
+//! log-likelihood vs. free-form generation). Calibration is enforced by
+//! `rust/tests/calibration.rs`.
+
+pub mod corpus;
+pub mod gen;
+pub mod query;
+pub mod suite;
+
+pub use query::{Dataset, Query, TaskKind};
+pub use suite::{ReplaySuite, SuiteStats};

@@ -1,0 +1,104 @@
+//! Query and dataset types.
+
+/// The paper's four evaluation datasets (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dataset {
+    BoolQ,
+    HellaSwag,
+    TruthfulQa,
+    NarrativeQa,
+}
+
+/// Task type, which decides the inference mode (Section IV-C): classification
+/// datasets are scored by answer-option log-likelihood (no token generation),
+/// generation datasets decode up to 100 tokens greedily.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Log-likelihood comparison of answer options; quality = accuracy.
+    Classification,
+    /// Free-form generation; quality = ROUGE-L.
+    Generation,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 4] = [
+        Dataset::BoolQ,
+        Dataset::HellaSwag,
+        Dataset::TruthfulQa,
+        Dataset::NarrativeQa,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Dataset::BoolQ => "BoolQ",
+            Dataset::HellaSwag => "HellaSwag",
+            Dataset::TruthfulQa => "TruthfulQA",
+            Dataset::NarrativeQa => "NarrativeQA",
+        }
+    }
+
+    pub fn task(self) -> TaskKind {
+        match self {
+            Dataset::BoolQ | Dataset::HellaSwag => TaskKind::Classification,
+            Dataset::TruthfulQa | Dataset::NarrativeQa => TaskKind::Generation,
+        }
+    }
+
+    /// Queries evaluated per dataset in the paper (1,000; TruthfulQA 817).
+    pub fn paper_query_count(self) -> usize {
+        match self {
+            Dataset::TruthfulQa => 817,
+            _ => 1000,
+        }
+    }
+
+    /// Number of answer options scored in classification mode.
+    pub fn n_options(self) -> usize {
+        match self {
+            Dataset::BoolQ => 2,
+            Dataset::HellaSwag => 4,
+            _ => 1,
+        }
+    }
+}
+
+/// One replayable inference request.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Stable id, unique across the suite; all per-query randomness (quality
+    /// noise, output length) is derived from it.
+    pub id: u64,
+    pub dataset: Dataset,
+    /// The prompt text (synthetic, feature-calibrated).
+    pub text: String,
+    /// Reference answer for generation tasks (ROUGE-L target).
+    pub reference: String,
+    /// Output budget: tokens the decode phase will produce. Zero for
+    /// classification (log-likelihood mode).
+    pub output_tokens: usize,
+}
+
+impl Query {
+    pub fn is_generation(&self) -> bool {
+        self.dataset.task() == TaskKind::Generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_kinds_match_paper() {
+        assert_eq!(Dataset::BoolQ.task(), TaskKind::Classification);
+        assert_eq!(Dataset::HellaSwag.task(), TaskKind::Classification);
+        assert_eq!(Dataset::TruthfulQa.task(), TaskKind::Generation);
+        assert_eq!(Dataset::NarrativeQa.task(), TaskKind::Generation);
+    }
+
+    #[test]
+    fn paper_counts() {
+        let total: usize = Dataset::ALL.iter().map(|d| d.paper_query_count()).sum();
+        assert_eq!(total, 3817); // Section V-B
+    }
+}

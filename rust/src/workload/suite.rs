@@ -1,0 +1,161 @@
+//! The replay suite: the paper's full 3,817-query evaluation set
+//! (1,000 per dataset, 817 for TruthfulQA) with cached per-query features.
+
+use crate::util::parallel::par_map;
+use crate::features::{FeatureExtractor, FeatureVector};
+use crate::stats::Summary;
+use crate::text::tokenizer::token_count;
+use crate::Rng;
+
+use super::gen;
+use super::query::{Dataset, Query};
+
+/// A generated, feature-annotated query set for replay-based measurement.
+pub struct ReplaySuite {
+    pub queries: Vec<Query>,
+    pub features: Vec<FeatureVector>,
+}
+
+/// Length statistics per dataset (Table II rows).
+#[derive(Debug, Clone)]
+pub struct SuiteStats {
+    pub dataset: Dataset,
+    pub tokens: Summary,
+}
+
+impl ReplaySuite {
+    /// Build the paper's full suite (3,817 queries) from a master seed.
+    pub fn paper_scale(seed: u64) -> Self {
+        Self::with_counts(seed, |d| d.paper_query_count())
+    }
+
+    /// Build a reduced suite with `n` queries per dataset (tests/benches).
+    pub fn quick(seed: u64, n: usize) -> Self {
+        Self::with_counts(seed, |_| n)
+    }
+
+    fn with_counts(seed: u64, count: impl Fn(Dataset) -> usize) -> Self {
+        let mut queries = Vec::new();
+        let mut base_id = 0u64;
+        for (i, d) in Dataset::ALL.iter().enumerate() {
+            let n = count(*d);
+            // Independent stream per dataset so counts don't perturb others.
+            let mut rng = crate::rng(seed.wrapping_add(i as u64 * 0x9E37_79B9));
+            queries.extend(gen::generate(*d, n, base_id, &mut rng));
+            base_id += n as u64;
+        }
+        // Feature extraction is the replay front-end; parallel (rayon) since
+        // it is also the hot path benchmarked in workload_features.rs.
+        let fx = FeatureExtractor::new();
+        let features: Vec<FeatureVector> = par_map(&queries, |q| fx.extract(&q.text));
+        ReplaySuite { queries, features }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    /// Indices of one dataset's queries.
+    pub fn dataset_indices(&self, d: Dataset) -> Vec<usize> {
+        (0..self.queries.len())
+            .filter(|&i| self.queries[i].dataset == d)
+            .collect()
+    }
+
+    /// Table II: token-length statistics per dataset.
+    pub fn length_stats(&self) -> Vec<SuiteStats> {
+        Dataset::ALL
+            .iter()
+            .map(|&d| {
+                let lens: Vec<f64> = self
+                    .dataset_indices(d)
+                    .iter()
+                    .map(|&i| token_count(&self.queries[i].text) as f64)
+                    .collect();
+                SuiteStats {
+                    dataset: d,
+                    tokens: Summary::of(&lens),
+                }
+            })
+            .collect()
+    }
+
+    /// Mean of a feature over one dataset.
+    pub fn feature_mean(&self, d: Dataset, f: impl Fn(&FeatureVector) -> f64) -> f64 {
+        let idx = self.dataset_indices(d);
+        if idx.is_empty() {
+            return f64::NAN;
+        }
+        idx.iter().map(|&i| f(&self.features[i])).sum::<f64>() / idx.len() as f64
+    }
+
+    /// Build a seeded RNG for per-query derived randomness.
+    pub fn query_rng(&self, idx: usize, salt: u64) -> Rng {
+        crate::rng(self.queries[idx].id ^ salt.rotate_left(17))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_counts() {
+        let s = ReplaySuite::paper_scale(1);
+        assert_eq!(s.len(), 3817);
+        assert_eq!(s.dataset_indices(Dataset::TruthfulQa).len(), 817);
+        assert_eq!(s.features.len(), 3817);
+    }
+
+    #[test]
+    fn length_stats_orderings_match_table2() {
+        let s = ReplaySuite::quick(2, 150);
+        let stats = s.length_stats();
+        let mean = |d: Dataset| {
+            stats
+                .iter()
+                .find(|x| x.dataset == d)
+                .unwrap()
+                .tokens
+                .mean
+        };
+        // TruthfulQA < BoolQ < HellaSwag < NarrativeQA (Table II ordering).
+        assert!(mean(Dataset::TruthfulQa) < mean(Dataset::BoolQ));
+        assert!(mean(Dataset::BoolQ) < mean(Dataset::HellaSwag));
+        assert!(mean(Dataset::HellaSwag) < mean(Dataset::NarrativeQa));
+    }
+
+    #[test]
+    fn feature_profiles_match_table3_orderings() {
+        let s = ReplaySuite::quick(3, 200);
+        let ed = |d| s.feature_mean(d, |f| f.entity_density);
+        // TruthfulQA has the highest entity density (0.34 in the paper).
+        assert!(ed(Dataset::TruthfulQa) > ed(Dataset::BoolQ));
+        assert!(ed(Dataset::TruthfulQa) > ed(Dataset::HellaSwag));
+        assert!(ed(Dataset::TruthfulQa) > ed(Dataset::NarrativeQa));
+        let cq = |d| s.feature_mean(d, |f| f.causal_question);
+        // NarrativeQA ≫ everything else on causal questions (33.6%).
+        assert!(cq(Dataset::NarrativeQa) > 0.2);
+        assert!(cq(Dataset::NarrativeQa) > cq(Dataset::TruthfulQa));
+        assert!(cq(Dataset::TruthfulQa) > cq(Dataset::BoolQ));
+        let te = |d| s.feature_mean(d, |f| f.token_entropy);
+        // NarrativeQA highest entropy; TruthfulQA lowest (Table III).
+        assert!(te(Dataset::NarrativeQa) > te(Dataset::HellaSwag));
+        assert!(te(Dataset::HellaSwag) > te(Dataset::TruthfulQa));
+        assert!(te(Dataset::BoolQ) > te(Dataset::TruthfulQa));
+    }
+
+    #[test]
+    fn suites_replay_identically() {
+        let a = ReplaySuite::quick(9, 30);
+        let b = ReplaySuite::quick(9, 30);
+        assert_eq!(
+            a.queries.iter().map(|q| &q.text).collect::<Vec<_>>(),
+            b.queries.iter().map(|q| &q.text).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Calibration gate: the DESIGN.md §6 acceptance bands, asserted end-to-end
+//! on a medium-scale context. This is the test that says "the reproduction
+//! reproduces the paper's shape".
+
+use ewatt::config::ModelTier;
+use ewatt::experiments::context::CellKey;
+use ewatt::experiments::{run_table, Context};
+use ewatt::workload::Dataset;
+
+fn ctx() -> Context {
+    // 120 queries/dataset: enough for stable means, fast enough for CI.
+    Context::quick(0xCA11B, 120)
+}
+
+/// T-II: length means within ±15% of the paper, ordering preserved.
+#[test]
+fn t2_length_calibration() {
+    let c = ctx();
+    let stats = c.suite.length_stats();
+    let expect = [
+        (Dataset::TruthfulQa, 12.6),
+        (Dataset::BoolQ, 102.9),
+        (Dataset::HellaSwag, 163.8),
+        (Dataset::NarrativeQa, 339.1),
+    ];
+    let mut prev = 0.0;
+    for (d, target) in expect {
+        let m = stats.iter().find(|s| s.dataset == d).unwrap().tokens.mean;
+        assert!(
+            (m - target).abs() / target < 0.15,
+            "{}: mean {m:.1} vs paper {target}",
+            d.label()
+        );
+        assert!(m > prev, "ordering broken at {}", d.label());
+        prev = m;
+    }
+}
+
+/// T-III/IV: feature profile orderings.
+#[test]
+fn t3_t4_feature_profiles() {
+    let c = ctx();
+    let ed = |d| c.suite.feature_mean(d, |f| f.entity_density);
+    assert!(ed(Dataset::TruthfulQa) > 0.35 - 0.12); // paper 0.34
+    assert!(ed(Dataset::TruthfulQa) > ed(Dataset::BoolQ));
+    assert!(ed(Dataset::BoolQ) > ed(Dataset::HellaSwag));
+    let cq = |d| c.suite.feature_mean(d, |f| f.causal_question) * 100.0;
+    assert!((20.0..=45.0).contains(&cq(Dataset::NarrativeQa))); // paper 33.6
+    assert!(cq(Dataset::BoolQ) < 8.0); // paper 2.4
+}
+
+/// T-XI: every (model, batch) cell — energy savings band, decode
+/// insensitivity, prefill trend.
+#[test]
+fn t11_dvfs_bands() {
+    let c = ctx();
+    let mut prefill_deltas = Vec::new();
+    for tier in ModelTier::ALL {
+        for b in [1usize, 4, 8] {
+            let hi = c.baseline_cell(tier, b, None).unwrap();
+            let lo = c
+                .cell(CellKey { tier, batch: b, freq: 180, dataset: None })
+                .unwrap();
+            let e = 1.0 - lo.energy_j / hi.energy_j;
+            assert!(
+                (0.33..=0.55).contains(&e),
+                "{} b{b}: savings {e:.3} out of band",
+                tier.label()
+            );
+            let dec = (lo.decode_s - hi.decode_s) / hi.decode_s.max(1e-12);
+            assert!(dec.abs() < 0.02, "{} b{b}: decode Δ {dec:+.3}", tier.label());
+            let lat = (lo.latency_s - hi.latency_s) / hi.latency_s;
+            assert!((-0.02..0.10).contains(&lat), "{} b{b}: latency Δ {lat:+.3}", tier.label());
+            if b == 1 {
+                prefill_deltas.push((lo.prefill_s - hi.prefill_s) / hi.prefill_s);
+            }
+        }
+    }
+    // Prefill sensitivity decreases with model size (B=1 column).
+    for w in prefill_deltas.windows(2) {
+        assert!(w[1] < w[0] + 1e-9, "prefill trend broken: {prefill_deltas:?}");
+    }
+    assert!(prefill_deltas[0] > 0.05, "1B prefill should clearly slow down");
+}
+
+/// T-XII: EDP optimum strictly below f_max, saving ≥ 25%.
+#[test]
+fn t12_edp_sweet_spot() {
+    let c = ctx();
+    for tier in [ModelTier::B1, ModelTier::B32] {
+        let base = c.baseline_cell(tier, 1, None).unwrap();
+        let base_edp = base.energy_j * base.latency_s;
+        let mut best = (c.gpu.f_max_mhz, base_edp);
+        for &f in &c.gpu.freq_levels_mhz {
+            let m = c.cell(CellKey { tier, batch: 1, freq: f, dataset: None }).unwrap();
+            let e = m.energy_j * m.latency_s;
+            if e < best.1 {
+                best = (f, e);
+            }
+        }
+        assert!(best.0 < c.gpu.f_max_mhz, "{}: EDP optimum at fmax", tier.label());
+        assert!(best.1 < 0.75 * base_edp, "{}: weak EDP win", tier.label());
+    }
+}
+
+/// F-4: the frequency cliff — ≥75% of max savings realized by 960 MHz.
+#[test]
+fn f4_frequency_cliff() {
+    let c = ctx();
+    for tier in ModelTier::ALL {
+        let base = c.baseline_cell(tier, 1, None).unwrap();
+        let s = |f| {
+            let m = c.cell(CellKey { tier, batch: 1, freq: f, dataset: None }).unwrap();
+            1.0 - m.energy_j / base.energy_j
+        };
+        let s960 = s(960);
+        let s180 = s(180);
+        assert!(s960 > 0.75 * s180, "{}: no cliff ({s960:.3} vs {s180:.3})", tier.label());
+    }
+}
+
+/// T-VII quality means and T-IX pattern shares (summary bands).
+#[test]
+fn t7_t9_quality_calibration() {
+    let c = ctx();
+    // Model averages ordered and near published endpoints.
+    let all: Vec<usize> = (0..c.suite.len()).collect();
+    let avg1 = c.quality.mean_raw_over(ModelTier::B1, &all);
+    let avg32 = c.quality.mean_raw_over(ModelTier::B32, &all);
+    assert!((avg1 - 0.423).abs() < 0.07, "1B avg {avg1:.3}");
+    assert!((avg32 - 0.596).abs() < 0.07, "32B avg {avg32:.3}");
+
+    let patterns = ewatt::quality::classify_patterns(&c.quality);
+    let shares = ewatt::quality::labels::pattern_shares(&patterns);
+    assert!((0.30..=0.60).contains(&shares[0]), "AlwaysEasy {:.3}", shares[0]);
+    assert!((0.05..=0.30).contains(&shares[1]), "ScalingHelps {:.3}", shares[1]);
+    assert!((0.18..=0.45).contains(&shares[2]), "AlwaysHard {:.3}", shares[2]);
+}
+
+/// T-XVII/XVIII: combined optimization band (~80–90% vs 32B baseline).
+#[test]
+fn t17_combined_savings() {
+    let c = ctx();
+    let reports = run_table(&c, 17).unwrap();
+    let w: f64 = reports[0].rows.last().unwrap()[4]
+        .trim_end_matches('%')
+        .parse()
+        .unwrap();
+    assert!((75.0..=95.0).contains(&w), "combined weighted savings {w:.1}%");
+}
+
+/// The full runner executes every experiment without error.
+#[test]
+fn all_experiments_run() {
+    let c = Context::quick(0xA11, 30);
+    let reports = ewatt::experiments::run_all(&c).unwrap();
+    // 18 tables (17 has a cross-check twin) + 6 figures.
+    assert_eq!(reports.len(), 18 + 1 + 6);
+    for r in &reports {
+        assert!(!r.rows.is_empty(), "{} produced no rows", r.id);
+        assert!(!r.ascii().is_empty());
+        assert!(!r.csv().is_empty());
+    }
+}

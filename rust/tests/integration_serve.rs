@@ -1,0 +1,96 @@
+//! Integration: the full serving loop (leader/worker over real PJRT).
+
+use ewatt::coordinator::{DvfsPolicy, ServeConfig, Server};
+use ewatt::runtime::{artifact, Manifest};
+use ewatt::workload::{Query, ReplaySuite};
+
+fn artifacts_ready() -> bool {
+    Manifest::load(artifact::default_dir()).is_ok()
+}
+
+fn queries(suite: &ReplaySuite, n: usize) -> Vec<(usize, &Query)> {
+    (0..suite.len().min(n)).map(|i| (i, &suite.queries[i])).collect()
+}
+
+#[test]
+fn serve_round_trip_batch4() {
+    if !artifacts_ready() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let suite = ReplaySuite::quick(5, 3);
+    let qs = queries(&suite, 10);
+    let server = Server::new(ServeConfig {
+        tier: "t1".into(),
+        batch: 4,
+        max_new_tokens: 8,
+        ..Default::default()
+    });
+    let (outcomes, metrics) = server.serve(&qs).unwrap();
+    assert_eq!(outcomes.len(), qs.len());
+    assert_eq!(metrics.requests, qs.len());
+    for o in &outcomes {
+        assert!(o.tokens_out > 0, "no tokens for {}", o.query_idx);
+        assert!(!o.text.is_empty());
+        assert!((0.0..=1.0).contains(&o.rouge_l));
+        assert!(o.sim_energy_j > 0.0);
+        assert!(o.wall_latency_s > 0.0);
+    }
+    assert!(metrics.tokens_per_s() > 0.0);
+}
+
+#[test]
+fn serve_is_deterministic_modulo_timing() {
+    if !artifacts_ready() {
+        return;
+    }
+    let suite = ReplaySuite::quick(6, 2);
+    let qs = queries(&suite, 6);
+    let cfg = ServeConfig { tier: "t1".into(), batch: 1, max_new_tokens: 6, ..Default::default() };
+    let (a, _) = Server::new(cfg.clone()).serve(&qs).unwrap();
+    let (b, _) = Server::new(cfg).serve(&qs).unwrap();
+    let texts = |o: &[ewatt::engine::RequestOutcome]| {
+        o.iter().map(|x| x.text.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(texts(&a), texts(&b));
+}
+
+#[test]
+fn phase_aware_serving_uses_less_simulated_energy() {
+    if !artifacts_ready() {
+        return;
+    }
+    let suite = ReplaySuite::quick(8, 2);
+    let qs = queries(&suite, 8);
+    let base = Server::new(ServeConfig {
+        tier: "t1".into(),
+        batch: 4,
+        max_new_tokens: 12,
+        policy: DvfsPolicy::Static(2842),
+        ..Default::default()
+    });
+    let pa = Server::new(ServeConfig {
+        tier: "t1".into(),
+        batch: 4,
+        max_new_tokens: 12,
+        policy: DvfsPolicy::PhaseAware { prefill: 2842, decode: 180 },
+        ..Default::default()
+    });
+    let (_, mb) = base.serve(&qs).unwrap();
+    let (_, mp) = pa.serve(&qs).unwrap();
+    let savings = 1.0 - mp.energy_j / mb.energy_j;
+    assert!(savings > 0.20, "phase-aware savings {savings:.3}");
+}
+
+#[test]
+fn unknown_tier_is_a_clean_error() {
+    if !artifacts_ready() {
+        return;
+    }
+    let suite = ReplaySuite::quick(9, 1);
+    let qs = queries(&suite, 2);
+    let server = Server::new(ServeConfig { tier: "t99".into(), ..Default::default() });
+    let err = server.serve(&qs);
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.unwrap_err()).contains("t99"));
+}

@@ -1,0 +1,247 @@
+//! Property tests over coordinator/engine invariants.
+//!
+//! The proptest crate is unavailable offline, so these are seeded-sweep
+//! property tests: each property is checked across many deterministic
+//! random cases (no shrinking, but failures print the case seed).
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::router::Router;
+use ewatt::engine::{Batcher, KvCacheManager};
+use ewatt::features::FeatureExtractor;
+use ewatt::text::rouge::rouge_l;
+use ewatt::util::json::JsonValue;
+use ewatt::workload::{gen, Dataset, ReplaySuite};
+
+const CASES: u64 = 64;
+
+/// Batcher: every index appears exactly once; batches are dataset-
+/// homogeneous and never exceed the configured size.
+#[test]
+fn prop_batcher_partitions() {
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(case);
+        let n = rng.gen_range(1, 40);
+        let b = rng.gen_range(1, 9);
+        let suite = ReplaySuite::quick(case, n);
+        // Random subset of indices.
+        let idx: Vec<usize> = (0..suite.len()).filter(|_| rng.gen_bool(0.7)).collect();
+        let batches = Batcher::new(b).batches(&suite.queries, &idx);
+        let mut seen: Vec<usize> = batches.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        let mut want = idx.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want, "case {case}");
+        for batch in &batches {
+            assert!(batch.len() <= b && !batch.is_empty(), "case {case}");
+            let d = suite.queries[batch[0]].dataset;
+            assert!(batch.iter().all(|&i| suite.queries[i].dataset == d), "case {case}");
+        }
+    }
+}
+
+/// KV-cache manager: used bytes is always Σ admitted tokens × kv_bytes and
+/// never exceeds capacity; release returns to zero.
+#[test]
+fn prop_kvcache_accounting() {
+    let model = model_for_tier(ModelTier::B8);
+    let per_tok = model.kv_bytes_per_token() as u64;
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0x5EED ^ case);
+        let mut kv = KvCacheManager::new(&GpuSpec::rtx_pro_6000(), &model);
+        let mut ledger: std::collections::HashMap<u64, u64> = Default::default();
+        for op in 0..200 {
+            match rng.gen_range(0, 3) {
+                0 => {
+                    let id = rng.gen_range(0, 20) as u64;
+                    let toks = rng.gen_range(1, 400);
+                    let res = kv.admit(id, toks);
+                    if ledger.contains_key(&id) {
+                        assert!(res.is_err(), "case {case} op {op}: double admit");
+                    } else if res.is_ok() {
+                        ledger.insert(id, toks as u64);
+                    }
+                }
+                1 => {
+                    let id = rng.gen_range(0, 20) as u64;
+                    let res = kv.extend(id);
+                    if let Some(t) = ledger.get_mut(&id) {
+                        if res.is_ok() {
+                            *t += 1;
+                        }
+                    } else {
+                        assert!(res.is_err(), "case {case} op {op}: extend unknown");
+                    }
+                }
+                _ => {
+                    let id = rng.gen_range(0, 20) as u64;
+                    kv.release(id);
+                    ledger.remove(&id);
+                }
+            }
+            let expect: u64 = ledger.values().sum::<u64>() * per_tok;
+            assert_eq!(kv.used_bytes(), expect, "case {case} op {op}");
+            assert!(kv.used_bytes() <= kv.capacity_bytes());
+            assert_eq!(kv.active_seqs(), ledger.len());
+        }
+        for id in ledger.keys() {
+            kv.release(*id);
+        }
+        // (ledger borrowed above, release in second pass)
+        let remaining: Vec<u64> = (0..20).collect();
+        for id in remaining {
+            kv.release(id);
+        }
+        assert_eq!(kv.used_bytes(), 0, "case {case}: leak after release");
+    }
+}
+
+/// Router: decisions are deterministic, consistent with the rule, and
+/// always map to one of the two configured tiers.
+#[test]
+fn prop_router_rule_consistency() {
+    let router = Router::paper_default();
+    let fx = FeatureExtractor::new();
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0xB052 ^ case);
+        let d = *rng.choose(&Dataset::ALL);
+        let q = gen::generate(d, 1, case * 1000, &mut rng).remove(0);
+        let f = fx.extract(&q.text);
+        let a = router.route(&f);
+        let b = router.route(&f);
+        assert_eq!(a, b, "case {case}: nondeterministic");
+        assert_eq!(a.easy, Router::is_easy_rule(&f), "case {case}");
+        assert!(a.tier == router.easy_tier || a.tier == router.hard_tier);
+    }
+}
+
+/// JSON: serialize → parse is the identity on random JSON values.
+#[test]
+fn prop_json_round_trip() {
+    fn random_value(rng: &mut ewatt::Rng, depth: usize) -> JsonValue {
+        match if depth == 0 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+            0 => JsonValue::Null,
+            1 => JsonValue::Bool(rng.gen_bool(0.5)),
+            2 => JsonValue::Number((rng.gen_range(0, 2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let n = rng.gen_range(0, 12);
+                let s: String = (0..n)
+                    .map(|_| {
+                        let c = rng.gen_range(32, 127) as u8 as char;
+                        c
+                    })
+                    .collect();
+                JsonValue::String(s)
+            }
+            4 => JsonValue::Array(
+                (0..rng.gen_range(0, 5))
+                    .map(|_| random_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for k in 0..rng.gen_range(0, 5) {
+                    m.insert(format!("k{k}"), random_value(rng, depth - 1));
+                }
+                JsonValue::Object(m)
+            }
+        }
+    }
+    for case in 0..CASES * 4 {
+        let mut rng = ewatt::rng(0x15 ^ case);
+        let v = random_value(&mut rng, 3);
+        let text = v.to_string();
+        let back = JsonValue::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
+
+/// ROUGE-L: bounded, reflexive-1, zero against disjoint text, and
+/// insensitive to case.
+#[test]
+fn prop_rouge_properties() {
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0xC0FFEE ^ case);
+        let d = *rng.choose(&Dataset::ALL);
+        let q = gen::generate(d, 2, case * 7919, &mut rng);
+        let a = &q[0].text;
+        let b = &q[1].text;
+        let s = rouge_l(a, b);
+        assert!((0.0..=1.0).contains(&s.f1), "case {case}");
+        assert!(s.precision <= 1.0 && s.recall <= 1.0);
+        let self_score = rouge_l(a, a);
+        assert!((self_score.f1 - 1.0).abs() < 1e-12, "case {case}");
+        let upper = rouge_l(&a.to_uppercase(), a);
+        assert!((upper.f1 - 1.0).abs() < 1e-12, "case {case}: case sensitivity");
+    }
+}
+
+/// Feature extraction: total over the suite is finite, bounded, and
+/// deterministic across extractor instances.
+#[test]
+fn prop_features_bounded_and_deterministic() {
+    let fx1 = FeatureExtractor::new();
+    let fx2 = FeatureExtractor::new();
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0xFEA7 ^ case);
+        let d = *rng.choose(&Dataset::ALL);
+        let q = gen::generate(d, 1, case, &mut rng).remove(0);
+        let f1 = fx1.extract(&q.text);
+        let f2 = fx2.extract(&q.text);
+        assert_eq!(f1, f2, "case {case}");
+        assert!(f1.entity_density >= 0.0 && f1.entity_density <= 1.0);
+        assert!(f1.reasoning_complexity >= 0.0 && f1.reasoning_complexity <= 1.0);
+        assert!(f1.complexity_score >= 0.0 && f1.complexity_score <= 1.0);
+        assert!(f1.token_entropy >= 0.0 && f1.token_entropy.is_finite());
+        assert!(f1.causal_question == 0.0 || f1.causal_question == 1.0);
+        assert!(f1.input_length > 0);
+    }
+}
+
+/// Replay engine conservation: per-query energies sum to the total, and
+/// phase times sum to latency.
+#[test]
+fn prop_replay_conservation() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::engine::ReplayEngine;
+    for case in 0..8 {
+        let suite = ReplaySuite::quick(case, 6);
+        let engine = ReplayEngine::new(
+            GpuSpec::rtx_pro_6000(),
+            model_for_tier(*ewatt::rng(case).choose(&ModelTier::ALL)),
+        );
+        let idx: Vec<usize> = (0..suite.len()).collect();
+        let b = [1usize, 4, 8][case as usize % 3];
+        let m = engine.run(&suite, &idx, b, &DvfsPolicy::Static(960)).unwrap();
+        let sum_e: f64 = m.per_query.iter().map(|q| q.energy_j).sum();
+        assert!(
+            (sum_e - m.energy_j).abs() / m.energy_j < 1e-9,
+            "case {case}: energy not conserved"
+        );
+        assert!((m.prefill_s + m.decode_s - m.latency_s).abs() < 1e-9);
+        assert_eq!(m.per_query.len(), suite.len());
+    }
+}
+
+/// Tokenizer: the allocation-free count equals the materialized count.
+#[test]
+fn prop_token_count_matches_tokenize() {
+    use ewatt::text::tokenizer::{token_count, tokenize};
+    for case in 0..CASES * 2 {
+        let mut rng = ewatt::rng(0x70C ^ case);
+        let d = *rng.choose(&Dataset::ALL);
+        let q = gen::generate(d, 1, case, &mut rng).remove(0);
+        assert_eq!(
+            token_count(&q.text),
+            tokenize(&q.text).len(),
+            "case {case}: {}",
+            q.text
+        );
+    }
+    // Hand-picked edge cases.
+    for s in ["", "...", "a", "don't stop", "very-long-hyphenated-word!!",
+              "¿qué? (ok)", "incomprehensibility."] {
+        assert_eq!(token_count(s), tokenize(s).len(), "text {s:?}");
+    }
+}
