@@ -1,0 +1,89 @@
+//! Bench: the serve layer's hot paths.
+//!
+//! The governor decision and SLO-tracker update sit on the request path of
+//! every decode step — they must be nanoseconds. Traffic generation is the
+//! experiment-setup path (events/sec matters at paper scale), and one
+//! full governed serving run is the `ewatt slo` regeneration unit.
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::dvfs_policy::Phase;
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::serve::{
+    FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, ServeSim, ServeSimConfig,
+    Slo, SloTracker, TrafficPattern,
+};
+use ewatt::util::bench::{bench, report};
+use ewatt::workload::{Dataset, ReplaySuite};
+
+fn main() {
+    let mut results = Vec::new();
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(11, 40);
+    let mut pool = suite.dataset_indices(Dataset::TruthfulQa);
+    pool.extend(suite.dataset_indices(Dataset::NarrativeQa));
+
+    // Traffic generation throughput (events/sec on the setup path).
+    for pattern in [
+        TrafficPattern::Poisson { rps: 8.0 },
+        TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 20.0, mean_dwell_s: 3.0 },
+        TrafficPattern::Diurnal { min_rps: 1.0, max_rps: 12.0, period_s: 60.0 },
+    ] {
+        let label = format!("traffic {} x10k arrivals", pattern.label());
+        let p = pattern.clone();
+        let pl = pool.clone();
+        results.push(bench(&label, 2, 50, move || {
+            p.generate_from(&pl, 10_000, 7).len()
+        }));
+    }
+
+    // Governor decision step (the per-decode-step hot path).
+    {
+        let mut gov = HysteresisGovernor::new(&gpu, GovernorConfig::for_gpu(&gpu));
+        let mut t = 0.0;
+        let g = gpu.clone();
+        results.push(bench("governor decide() x10k", 5, 200, move || {
+            let mut f = 0u32;
+            for i in 0..10_000u32 {
+                t += 1e-3;
+                let sig = GovernorSignal {
+                    pressure: (i % 100) as f64 / 60.0, // sweeps the band
+                    queue_depth: (i % 40) as usize,
+                    active_seqs: 8,
+                    completed: i as usize,
+                    window_power_w: 300.0,
+                };
+                f = gov.decide(t, Phase::Decode, &sig, &g);
+            }
+            f
+        }));
+    }
+
+    // SLO tracker update + pressure readout (streaming P² percentiles).
+    results.push(bench("slo tracker record+pressure x10k", 5, 200, || {
+        let mut tr = SloTracker::new(Slo::interactive());
+        let mut acc = 0.0;
+        for i in 0..10_000 {
+            let x = (i % 97) as f64 / 50.0;
+            tr.record(x * 0.3, x * 0.01, x);
+            acc += tr.pressure();
+        }
+        acc
+    }));
+
+    // One full governed serving run (the `ewatt slo` unit).
+    let sim = ServeSim::new(gpu.clone(), model_for_tier(ModelTier::B8), ServeSimConfig::default());
+    let arrivals = TrafficPattern::Bursty { base_rps: 1.5, burst_rps: 7.0, mean_dwell_s: 3.0 }
+        .generate_from(&pool, 80, 3);
+    for policy in [DvfsPolicy::baseline(&gpu), DvfsPolicy::governed(&gpu)] {
+        let label = format!("serve run 80 reqs [{}]", policy.label());
+        let s = &sim;
+        let a = &arrivals;
+        let su = &suite;
+        results.push(bench(&label, 1, 10, move || {
+            s.run(su, a, &policy).unwrap().energy_j
+        }));
+    }
+
+    report("governor + traffic (serve layer)", &results);
+}

@@ -1,0 +1,99 @@
+//! Serving under traffic: the closed-loop DVFS governor end-to-end.
+//!
+//! Generates a bursty (MMPP) arrival stream over the generation-task
+//! corpus, serves it through the discrete-event loop under three policies
+//! — `Static(f_max)`, the paper's open-loop `PhaseAware` profile, and the
+//! closed-loop `Governed` band — and prints energy, tail latency, and SLO
+//! attainment for each. Exits non-zero unless the governed policy saves
+//! ≥ 25% active energy vs the static baseline while holding the p99
+//! end-to-end SLO (the PR's acceptance bar).
+//!
+//! Run: `cargo run --release --example slo_serve`
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::serve::{ServeSim, ServeSimConfig, TrafficPattern};
+use ewatt::workload::{Dataset, ReplaySuite};
+
+fn main() -> anyhow::Result<()> {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(42, 60);
+    let mut pool = suite.dataset_indices(Dataset::TruthfulQa);
+    pool.extend(suite.dataset_indices(Dataset::NarrativeQa));
+
+    let pattern = TrafficPattern::Bursty { base_rps: 1.5, burst_rps: 7.0, mean_dwell_s: 3.0 };
+    let arrivals = pattern.generate_from(&pool, 160, 0xC10C);
+    let sim = ServeSim::new(gpu.clone(), model_for_tier(ModelTier::B8), ServeSimConfig::default());
+    let slo = sim.cfg.slo;
+
+    println!(
+        "traffic: {} | {} requests over {:.1}s | tier {} | max batch {}",
+        pattern.label(),
+        arrivals.len(),
+        arrivals.last().unwrap().t_s,
+        ModelTier::B8.label(),
+        sim.cfg.max_batch
+    );
+    println!(
+        "SLO: ttft p95 ≤ {:.1}s, tbt p95 ≤ {:.0}ms, e2e p99 ≤ {:.1}s\n",
+        slo.ttft_p95_s,
+        1e3 * slo.tbt_p95_s,
+        slo.e2e_p99_s
+    );
+
+    let mut static_energy = None;
+    let mut governed = None;
+    for policy in [
+        DvfsPolicy::baseline(&gpu),
+        DvfsPolicy::paper_phase_aware(&gpu),
+        DvfsPolicy::governed(&gpu),
+    ] {
+        let o = sim.run(&suite, &arrivals, &policy)?;
+        let base = *static_energy.get_or_insert(o.energy_j);
+        println!("[{}]", policy.label());
+        println!(
+            "  energy {:.0} J ({:.2} J/req){}  |  idle {:.0} J, switch {:.2} J over {} switches",
+            o.energy_j,
+            o.joules_per_request(),
+            if o.energy_j == base {
+                "".to_string()
+            } else {
+                format!(", {:.1}% vs static", 100.0 * (1.0 - o.energy_j / base))
+            },
+            o.idle_j,
+            o.switch_j,
+            o.freq_switches
+        );
+        println!(
+            "  ttft p95 {:.0} ms | e2e p50/p95/p99 {:.2}/{:.2}/{:.2} s | attainment {:.1}% | mean decode {:.0} MHz",
+            1e3 * o.slo.ttft_p95(),
+            o.slo.e2e_p50(),
+            o.slo.e2e_p95(),
+            o.slo.e2e_p99(),
+            100.0 * o.slo.attainment(),
+            o.mean_decode_freq_mhz
+        );
+        if matches!(policy, DvfsPolicy::Governed { .. }) {
+            governed = Some(o);
+        }
+    }
+
+    let gov = governed.expect("governed run present");
+    let savings = 1.0 - gov.energy_j / static_energy.unwrap();
+    let within_slo = gov.slo.e2e_p99() <= slo.e2e_p99_s;
+    println!(
+        "\ngoverned: {:.1}% energy savings vs static@{}MHz, p99 {}",
+        100.0 * savings,
+        gpu.f_max_mhz,
+        if within_slo { "within SLO" } else { "OVER SLO" }
+    );
+    if savings < 0.25 {
+        anyhow::bail!("energy savings {:.1}% below the 25% acceptance bar", 100.0 * savings);
+    }
+    if !within_slo {
+        anyhow::bail!("governed p99 {:.2}s breached the end-to-end SLO", gov.slo.e2e_p99());
+    }
+    println!("acceptance criteria met.");
+    Ok(())
+}

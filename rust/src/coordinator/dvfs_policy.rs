@@ -1,8 +1,16 @@
-//! DVFS policies: static set points (the paper's sweep) and the phase-aware
+//! DVFS policies: static set points (the paper's sweep), the phase-aware
 //! profile of Section VII-B / Figure 6 (high frequency during compute-bound
-//! prefill, low frequency during memory-bound decode).
+//! prefill, low frequency during memory-bound decode), and the closed-loop
+//! `Governed` band driven online by the serve layer's SLO governor.
 
 use crate::config::{FreqMHz, GpuSpec};
+
+/// Inference phase, for per-phase frequency selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
 
 /// Frequency policy applied per inference batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -12,6 +20,11 @@ pub enum DvfsPolicy {
     /// Phase-aware: prefill at one set point, decode at another; the engine
     /// charges the switch overhead (Figure 6).
     PhaseAware { prefill: FreqMHz, decode: FreqMHz },
+    /// Closed-loop: a serve-layer governor steps the decode set point within
+    /// `[floor, ceil]` against live SLO pressure (see `crate::serve`).
+    /// Open-loop consumers (the offline replay engine) see the ceiling —
+    /// the safe initial set point a cold governor starts from.
+    Governed { floor: FreqMHz, ceil: FreqMHz },
 }
 
 impl DvfsPolicy {
@@ -26,10 +39,17 @@ impl DvfsPolicy {
         DvfsPolicy::Static(gpu.f_max_mhz)
     }
 
+    /// Closed-loop band over the full supported ladder.
+    pub fn governed(gpu: &GpuSpec) -> Self {
+        DvfsPolicy::Governed { floor: gpu.f_min_mhz(), ceil: gpu.f_max_mhz }
+    }
+
     pub fn prefill_freq(&self, gpu: &GpuSpec) -> FreqMHz {
         let f = match self {
             DvfsPolicy::Static(f) => *f,
             DvfsPolicy::PhaseAware { prefill, .. } => *prefill,
+            // Prefill is compute-bound and frequency-sensitive: run hot.
+            DvfsPolicy::Governed { ceil, .. } => *ceil,
         };
         assert!(gpu.supports(f), "unsupported prefill frequency {f}");
         f
@@ -39,6 +59,8 @@ impl DvfsPolicy {
         let f = match self {
             DvfsPolicy::Static(f) => *f,
             DvfsPolicy::PhaseAware { decode, .. } => *decode,
+            // Open-loop view: the governor's cold-start set point.
+            DvfsPolicy::Governed { ceil, .. } => *ceil,
         };
         assert!(gpu.supports(f), "unsupported decode frequency {f}");
         f
@@ -50,7 +72,35 @@ impl DvfsPolicy {
             DvfsPolicy::PhaseAware { prefill, decode } => {
                 format!("phase-aware[{prefill}/{decode}MHz]")
             }
+            DvfsPolicy::Governed { floor, ceil } => {
+                format!("governed[{floor}-{ceil}MHz]")
+            }
         }
+    }
+}
+
+/// Pluggable per-phase frequency selection — the open-loop face every
+/// frequency source presents to an engine. [`DvfsPolicy`] implements it
+/// directly; the serve layer's stateful governors implement the richer
+/// `serve::FreqGovernor` trait and fall back to this view when cold.
+pub trait FrequencyPolicy {
+    /// The SM set point for one phase step.
+    fn freq_for(&self, phase: Phase, gpu: &GpuSpec) -> FreqMHz;
+
+    /// Human-readable policy name for reports.
+    fn policy_label(&self) -> String;
+}
+
+impl FrequencyPolicy for DvfsPolicy {
+    fn freq_for(&self, phase: Phase, gpu: &GpuSpec) -> FreqMHz {
+        match phase {
+            Phase::Prefill => self.prefill_freq(gpu),
+            Phase::Decode => self.decode_freq(gpu),
+        }
+    }
+
+    fn policy_label(&self) -> String {
+        self.label()
     }
 }
 
@@ -80,5 +130,32 @@ mod tests {
         assert!(DvfsPolicy::PhaseAware { prefill: 2842, decode: 180 }
             .label()
             .contains("2842/180"));
+        assert!(DvfsPolicy::Governed { floor: 180, ceil: 2842 }
+            .label()
+            .contains("180-2842"));
+    }
+
+    #[test]
+    fn governed_band_spans_the_ladder_and_starts_at_ceiling() {
+        let g = GpuSpec::rtx_pro_6000();
+        let p = DvfsPolicy::governed(&g);
+        assert_eq!(p, DvfsPolicy::Governed { floor: 180, ceil: 2842 });
+        // Open-loop view: both phases at the ceiling until a governor runs.
+        assert_eq!(p.prefill_freq(&g), 2842);
+        assert_eq!(p.decode_freq(&g), 2842);
+    }
+
+    #[test]
+    fn trait_view_matches_inherent_accessors() {
+        let g = GpuSpec::rtx_pro_6000();
+        for p in [
+            DvfsPolicy::Static(960),
+            DvfsPolicy::paper_phase_aware(&g),
+            DvfsPolicy::governed(&g),
+        ] {
+            assert_eq!(p.freq_for(Phase::Prefill, &g), p.prefill_freq(&g));
+            assert_eq!(p.freq_for(Phase::Decode, &g), p.decode_freq(&g));
+            assert_eq!(p.policy_label(), p.label());
+        }
     }
 }

@@ -10,7 +10,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use cluster::{Cluster, ClusterMetrics};
-pub use dvfs_policy::DvfsPolicy;
+pub use dvfs_policy::{DvfsPolicy, FrequencyPolicy, Phase};
 pub use metrics::ServeMetrics;
 pub use router::{Router, RoutingDecision};
 pub use scheduler::{Scheduler, ScheduleReport};

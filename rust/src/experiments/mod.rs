@@ -10,6 +10,7 @@ pub mod figures;
 pub mod quality_tables;
 pub mod report;
 pub mod runner;
+pub mod slo_tables;
 pub mod workload_tables;
 
 pub use context::Context;

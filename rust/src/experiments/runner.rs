@@ -8,6 +8,7 @@ use super::dvfs_tables;
 use super::figures;
 use super::quality_tables;
 use super::report::Report;
+use super::slo_tables;
 use super::workload_tables;
 
 /// All experiment ids in paper order.
@@ -52,7 +53,8 @@ pub fn run_figure(ctx: &Context, n: u32) -> Result<Vec<Report>> {
     })
 }
 
-/// Run everything (tables I–XVIII then figures 2–7).
+/// Run everything (tables I–XVIII, figures 2–7, then the serve-layer
+/// SLO comparison).
 pub fn run_all(ctx: &Context) -> Result<Vec<Report>> {
     let mut out = Vec::new();
     for n in 1..=18u32 {
@@ -61,6 +63,7 @@ pub fn run_all(ctx: &Context) -> Result<Vec<Report>> {
     for n in ALL_FIGURES {
         out.extend(run_figure(ctx, n)?);
     }
+    out.push(slo_tables::slo_table(ctx)?);
     Ok(out)
 }
 

@@ -1,0 +1,156 @@
+//! SLO-aware serving comparison: `Static`, `PhaseAware`, and `Governed`
+//! policies under traffic.
+//!
+//! The paper's Section VII-C combines routing and DVFS *offline* as an
+//! upper bound; this experiment re-runs the DVFS half as an online,
+//! closed-loop result — a traffic-driven serving loop where the governed
+//! policy must hold tail-latency SLOs while it chases the phase-aware
+//! profile's energy. Every number derives from [`SLO_SEED`], so the table
+//! is bit-identical across runs.
+
+use anyhow::Result;
+
+use crate::config::model::model_for_tier;
+use crate::config::ModelTier;
+use crate::coordinator::DvfsPolicy;
+use crate::serve::{ServeSim, ServeSimConfig, TrafficPattern};
+use crate::workload::Dataset;
+
+use super::context::Context;
+use super::report::{pct0, Report};
+
+/// Master seed for arrival streams (fixed: the table is deterministic).
+pub const SLO_SEED: u64 = 0x510_CAFE;
+
+/// Requests simulated per (scenario, policy) cell.
+const REQUESTS: usize = 120;
+
+/// The serving tier under test (the paper's mid-size 8B workhorse).
+const TIER: ModelTier = ModelTier::B8;
+
+/// Traffic scenarios: steady, bursty, and diurnal — calibrated around the
+/// simulated testbed's ≈8 req/s continuous-batching capacity for 8B.
+pub fn scenarios() -> Vec<(&'static str, TrafficPattern)> {
+    vec![
+        ("steady", TrafficPattern::Poisson { rps: 3.0 }),
+        // Bursts push toward (not past) the ≈5.5 req/s continuous-batching
+        // capacity; sustained overload would breach the SLO under *every*
+        // policy and measure nothing about the controller.
+        (
+            "bursty",
+            TrafficPattern::Bursty { base_rps: 1.5, burst_rps: 7.0, mean_dwell_s: 3.0 },
+        ),
+        (
+            "diurnal",
+            TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 6.0, period_s: 30.0 },
+        ),
+    ]
+}
+
+/// Policies compared in every scenario.
+pub fn policies(ctx: &Context) -> Vec<DvfsPolicy> {
+    vec![
+        DvfsPolicy::baseline(&ctx.gpu),
+        DvfsPolicy::paper_phase_aware(&ctx.gpu),
+        DvfsPolicy::governed(&ctx.gpu),
+    ]
+}
+
+/// Generation-task query pool (decode-heavy, the serving-relevant mix).
+fn generation_pool(ctx: &Context) -> Vec<usize> {
+    let mut pool = ctx.suite.dataset_indices(Dataset::TruthfulQa);
+    pool.extend(ctx.suite.dataset_indices(Dataset::NarrativeQa));
+    pool
+}
+
+/// The comparison table: energy, tails, attainment, and controller
+/// activity per (scenario, policy).
+pub fn slo_table(ctx: &Context) -> Result<Report> {
+    let sim = ServeSim::new(ctx.gpu.clone(), model_for_tier(TIER), ServeSimConfig::default());
+    let pool = generation_pool(ctx);
+    let mut r = Report::new(
+        "slo-serve",
+        "SLO-aware serving: energy vs tail latency across traffic scenarios",
+        &[
+            "Scenario", "Policy", "Energy (J)", "J/req", "vs static", "TTFT p95 (ms)",
+            "E2E p99 (s)", "SLO attain", "Switches", "Mean dec MHz",
+        ],
+    );
+    for (si, (name, pattern)) in scenarios().into_iter().enumerate() {
+        let arrivals = pattern.generate_from(&pool, REQUESTS, SLO_SEED ^ (si as u64) << 8);
+        let mut base_energy = None;
+        for policy in policies(ctx) {
+            let o = sim.run(&ctx.suite, &arrivals, &policy)?;
+            let base = *base_energy.get_or_insert(o.energy_j);
+            r.row(vec![
+                name.to_string(),
+                policy.label(),
+                format!("{:.1}", o.energy_j),
+                format!("{:.2}", o.joules_per_request()),
+                if o.energy_j == base {
+                    "-".to_string()
+                } else {
+                    pct0(100.0 * (1.0 - o.energy_j / base))
+                },
+                format!("{:.0}", 1e3 * o.slo.ttft_p95()),
+                format!("{:.2}", o.slo.e2e_p99()),
+                pct0(100.0 * o.slo.attainment()),
+                o.freq_switches.to_string(),
+                format!("{:.0}", o.mean_decode_freq_mhz),
+            ]);
+        }
+    }
+    r.note(format!(
+        "{REQUESTS} requests/cell, {} tier, SLO: ttft p95 ≤ {:.1}s, tbt p95 ≤ {:.0}ms, e2e p99 ≤ {:.1}s",
+        TIER.label(),
+        sim.cfg.slo.ttft_p95_s,
+        1e3 * sim.cfg.slo.tbt_p95_s,
+        sim.cfg.slo.e2e_p99_s
+    ));
+    r.note("energy is active (prefill+decode+switch); idle draw is policy-independent".to_string());
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::quick(113, 40)
+    }
+
+    #[test]
+    fn table_has_all_cells_and_is_deterministic() {
+        let c = ctx();
+        let a = slo_table(&c).unwrap();
+        assert_eq!(a.rows.len(), scenarios().len() * policies(&c).len());
+        let b = slo_table(&c).unwrap();
+        assert_eq!(a.csv(), b.csv());
+    }
+
+    #[test]
+    fn governed_meets_the_acceptance_bar_in_every_scenario() {
+        // ≥25% energy savings vs Static(f_max) with p99 e2e inside the SLO —
+        // the online version of the paper's upper-bound case study.
+        let c = ctx();
+        let sim = ServeSim::new(
+            c.gpu.clone(),
+            model_for_tier(TIER),
+            ServeSimConfig::default(),
+        );
+        let pool = generation_pool(&c);
+        for (si, (name, pattern)) in scenarios().into_iter().enumerate() {
+            let arrivals = pattern.generate_from(&pool, REQUESTS, SLO_SEED ^ (si as u64) << 8);
+            let base = sim.run(&c.suite, &arrivals, &DvfsPolicy::baseline(&c.gpu)).unwrap();
+            let gov = sim.run(&c.suite, &arrivals, &DvfsPolicy::governed(&c.gpu)).unwrap();
+            let savings = 1.0 - gov.energy_j / base.energy_j;
+            assert!(savings >= 0.25, "{name}: savings {savings:.3}");
+            assert!(
+                gov.slo.e2e_p99() <= sim.cfg.slo.e2e_p99_s,
+                "{name}: p99 {:.2}s breaches the SLO",
+                gov.slo.e2e_p99()
+            );
+            assert!(gov.slo.attainment() >= 0.95, "{name}: attainment {:.3}", gov.slo.attainment());
+        }
+    }
+}

@@ -17,4 +17,4 @@ pub mod telemetry;
 pub mod thermal;
 
 pub use sim::{GpuSim, PhaseResult};
-pub use telemetry::PowerSampler;
+pub use telemetry::{PowerSampler, StepSample, TelemetryWindow};

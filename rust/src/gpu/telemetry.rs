@@ -7,6 +7,8 @@
 //! and energy is trapezoidally integrated over the samples — including the
 //! quantization error a real NVML pipeline has on short requests.
 
+use std::collections::VecDeque;
+
 use crate::config::GpuSpec;
 
 /// One segment of the simulated power trace.
@@ -75,6 +77,129 @@ impl PowerSampler {
     /// Exact integral (ground truth, for validating the sampler).
     pub fn exact(trace: &[PowerSegment]) -> f64 {
         trace.iter().map(|s| s.duration_s * s.power_w).sum()
+    }
+}
+
+/// One executed-step sample in the sliding telemetry window.
+#[derive(Debug, Clone, Copy)]
+pub struct StepSample {
+    /// Simulated time at which the step finished, seconds.
+    pub t_end_s: f64,
+    /// GPU-busy duration of the step, seconds.
+    pub duration_s: f64,
+    /// Sampled energy of the step, joules.
+    pub energy_j: f64,
+}
+
+/// Sliding-horizon telemetry readout.
+///
+/// Closed-loop controllers (the serve layer's DVFS governor) need *recent*
+/// power/utilization, not lifetime aggregates: a governor reacting to the
+/// mean power of the whole run would never see a burst. The window retains
+/// per-step samples whose end time lies within `horizon_s` of the newest
+/// sample and reports windowed mean power, energy, and busy fraction.
+#[derive(Debug, Clone)]
+pub struct TelemetryWindow {
+    horizon_s: f64,
+    samples: VecDeque<StepSample>,
+}
+
+impl TelemetryWindow {
+    pub fn new(horizon_s: f64) -> TelemetryWindow {
+        assert!(horizon_s > 0.0, "telemetry horizon must be positive");
+        TelemetryWindow { horizon_s, samples: VecDeque::new() }
+    }
+
+    pub fn horizon_s(&self) -> f64 {
+        self.horizon_s
+    }
+
+    /// Record a finished step and evict samples that fell out of the window.
+    /// `t_end_s` must be non-decreasing across calls.
+    pub fn record(&mut self, t_end_s: f64, duration_s: f64, energy_j: f64) {
+        self.samples.push_back(StepSample { t_end_s, duration_s, energy_j });
+        let cutoff = t_end_s - self.horizon_s;
+        while self.samples.front().is_some_and(|s| s.t_end_s < cutoff) {
+            self.samples.pop_front();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total sampled energy inside the window, joules.
+    pub fn energy_j(&self) -> f64 {
+        self.samples.iter().map(|s| s.energy_j).sum()
+    }
+
+    /// Total GPU-busy time inside the window, seconds.
+    pub fn busy_s(&self) -> f64 {
+        self.samples.iter().map(|s| s.duration_s).sum()
+    }
+
+    /// Mean power over the window's busy time, watts (0 when empty).
+    pub fn mean_power_w(&self) -> f64 {
+        let busy = self.busy_s();
+        if busy <= 0.0 {
+            0.0
+        } else {
+            self.energy_j() / busy
+        }
+    }
+
+    /// Busy fraction of the horizon (clamped to [0, 1]).
+    pub fn busy_fraction(&self) -> f64 {
+        (self.busy_s() / self.horizon_s).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod window_tests {
+    use super::*;
+
+    #[test]
+    fn evicts_by_horizon_and_reports_recent_power() {
+        let mut w = TelemetryWindow::new(1.0);
+        // Old samples at 300 W.
+        w.record(0.1, 0.1, 30.0);
+        w.record(0.2, 0.1, 30.0);
+        assert_eq!(w.len(), 2);
+        assert!((w.mean_power_w() - 300.0).abs() < 1e-9);
+        // A sample 2 s later evicts both.
+        w.record(2.2, 0.1, 10.0);
+        assert_eq!(w.len(), 1);
+        assert!((w.mean_power_w() - 100.0).abs() < 1e-9);
+        assert!((w.energy_j() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_fraction_clamps_and_tracks_load() {
+        let mut w = TelemetryWindow::new(1.0);
+        assert_eq!(w.busy_fraction(), 0.0);
+        w.record(0.5, 0.25, 50.0);
+        assert!((w.busy_fraction() - 0.25).abs() < 1e-12);
+        w.record(0.9, 0.9, 50.0);
+        assert_eq!(w.busy_fraction(), 1.0); // clamped
+    }
+
+    #[test]
+    fn empty_window_is_zero_not_nan() {
+        let w = TelemetryWindow::new(0.5);
+        assert!(w.is_empty());
+        assert_eq!(w.mean_power_w(), 0.0);
+        assert_eq!(w.energy_j(), 0.0);
+        assert_eq!(w.busy_s(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "horizon must be positive")]
+    fn rejects_nonpositive_horizon() {
+        TelemetryWindow::new(0.0);
     }
 }
 

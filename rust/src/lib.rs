@@ -13,6 +13,9 @@
 //!   (PJRT loader/executor for the AOT artifacts)
 //! - the paper's pipeline: [`coordinator`] (router + phase-aware DVFS
 //!   policies) and [`experiments`] (every table/figure regenerator)
+//! - serving under traffic: [`serve`] (arrival processes, SLO tracking,
+//!   and the closed-loop DVFS governor driving the event-driven serving
+//!   simulator — the online version of the paper's Section VII case study)
 
 pub mod config;
 pub mod coordinator;
@@ -23,6 +26,7 @@ pub mod gpu;
 pub mod perf;
 pub mod quality;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod text;
 pub mod util;

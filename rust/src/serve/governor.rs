@@ -1,0 +1,375 @@
+//! Closed-loop DVFS governors.
+//!
+//! The paper's phase-aware profile is open-loop: it assumes decode can
+//! always run at the frequency floor. Under traffic that assumption breaks
+//! exactly when it matters — bursts queue requests, and a pinned-low decode
+//! clock has no headroom to drain them. The governor closes the loop:
+//! it reads the SLO tracker's pressure signal plus queue state at every
+//! phase boundary and steps the decode set point along the GPU's supported
+//! ladder — up aggressively on violation pressure, down one cautious step
+//! at a time when slack persists (fast-up/slow-down with a hysteresis band,
+//! the shape GreenLLM-style production controllers use).
+
+use crate::config::{FreqMHz, GpuSpec};
+use crate::coordinator::dvfs_policy::{DvfsPolicy, FrequencyPolicy, Phase};
+
+/// Telemetry snapshot the governor reads at each decision point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GovernorSignal {
+    /// SLO pressure from [`super::slo::SloTracker::pressure`]
+    /// (1.0 = at target, >1 = violating).
+    pub pressure: f64,
+    /// Requests waiting in the admission queue.
+    pub queue_depth: usize,
+    /// Sequences currently decoding.
+    pub active_seqs: usize,
+    /// Requests completed so far (warmup evidence for down-stepping).
+    pub completed: usize,
+    /// Mean power over the telemetry window, watts.
+    pub window_power_w: f64,
+}
+
+/// A frequency source consulted at every phase boundary of the serving
+/// loop. Stateful implementations (the hysteresis governor) adapt; the
+/// [`OpenLoop`] adapter wraps any static [`DvfsPolicy`].
+pub trait FreqGovernor {
+    /// Pick the SM set point for the next phase step.
+    fn decide(&mut self, now_s: f64, phase: Phase, signal: &GovernorSignal, gpu: &GpuSpec)
+        -> FreqMHz;
+
+    fn label(&self) -> String;
+
+    /// Whether this governor reads [`GovernorSignal`]. Open-loop adapters
+    /// return `false`, letting the serving loop skip computing the signal
+    /// (window percentiles, pressure) on the per-step hot path.
+    fn wants_signal(&self) -> bool {
+        true
+    }
+}
+
+/// Open-loop adapter: a fixed policy as a (non-reacting) governor.
+pub struct OpenLoop(pub DvfsPolicy);
+
+impl FreqGovernor for OpenLoop {
+    fn decide(
+        &mut self,
+        _now_s: f64,
+        phase: Phase,
+        _signal: &GovernorSignal,
+        gpu: &GpuSpec,
+    ) -> FreqMHz {
+        self.0.freq_for(phase, gpu)
+    }
+
+    fn label(&self) -> String {
+        self.0.label()
+    }
+
+    fn wants_signal(&self) -> bool {
+        false
+    }
+}
+
+/// Tuning of the closed-loop controller.
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Lowest decode set point the governor may choose.
+    pub floor: FreqMHz,
+    /// Highest set point; also the prefill and cold-start frequency.
+    pub ceil: FreqMHz,
+    /// Step decode up when pressure exceeds this fraction of the SLO.
+    pub high_water: f64,
+    /// Step decode down only when pressure is below this fraction.
+    pub low_water: f64,
+    /// Minimum seconds between *downward* set-point changes (anti-flap;
+    /// upward moves are never delayed).
+    pub dwell_s: f64,
+    /// Ladder steps jumped per upward move (fast recovery).
+    pub steps_up: usize,
+    /// Queue depth that counts as violation pressure regardless of
+    /// latency percentiles (backlog is a leading indicator).
+    pub queue_trigger: usize,
+}
+
+impl GovernorConfig {
+    /// Defaults over the full supported ladder of `gpu`.
+    pub fn for_gpu(gpu: &GpuSpec) -> GovernorConfig {
+        GovernorConfig {
+            floor: gpu.f_min_mhz(),
+            ceil: gpu.f_max_mhz,
+            // A narrow band near the target: pressure below 0.80 means real
+            // slack (descend), above 0.95 means the tail is about to cross
+            // (climb). The fast violation component of the pressure signal
+            // jumps past 1.0 the moment recent requests actually violate,
+            // so up-steps do not depend on the slow percentiles drifting.
+            high_water: 0.95,
+            low_water: 0.80,
+            dwell_s: 0.25,
+            steps_up: 2,
+            queue_trigger: 24,
+        }
+    }
+
+    /// Same defaults restricted to a `[floor, ceil]` band.
+    pub fn banded(gpu: &GpuSpec, floor: FreqMHz, ceil: FreqMHz) -> GovernorConfig {
+        GovernorConfig { floor, ceil, ..GovernorConfig::for_gpu(gpu) }
+    }
+}
+
+/// Completions required before the governor trusts low pressure enough to
+/// descend — a cold tracker reports zero pressure, which is absence of
+/// evidence, not slack.
+const WARMUP_COMPLETIONS: usize = 5;
+
+/// The closed-loop controller: hysteresis band over the frequency ladder.
+pub struct HysteresisGovernor {
+    pub cfg: GovernorConfig,
+    /// Supported set points inside the band, ascending.
+    ladder: Vec<FreqMHz>,
+    /// Current decode set-point index into `ladder`.
+    idx: usize,
+    last_down_s: f64,
+    /// Decode set-point changes made so far.
+    pub moves: usize,
+}
+
+impl HysteresisGovernor {
+    pub fn new(gpu: &GpuSpec, cfg: GovernorConfig) -> HysteresisGovernor {
+        assert!(
+            gpu.supports(cfg.floor) && gpu.supports(cfg.ceil),
+            "governor band [{}, {}] not on the supported ladder {:?}",
+            cfg.floor,
+            cfg.ceil,
+            gpu.freq_levels_mhz
+        );
+        assert!(cfg.floor <= cfg.ceil, "floor above ceiling");
+        assert!(cfg.low_water < cfg.high_water, "inverted hysteresis band");
+        assert!(cfg.steps_up >= 1);
+        let mut ladder: Vec<FreqMHz> = gpu
+            .freq_levels_mhz
+            .iter()
+            .cloned()
+            .filter(|&f| f >= cfg.floor && f <= cfg.ceil)
+            .collect();
+        ladder.sort_unstable();
+        // Cold start at the ceiling: safe until the SLO tracker warms up.
+        let idx = ladder.len() - 1;
+        HysteresisGovernor { cfg, ladder, idx, last_down_s: 0.0, moves: 0 }
+    }
+
+    /// The current decode set point.
+    pub fn decode_freq(&self) -> FreqMHz {
+        self.ladder[self.idx]
+    }
+}
+
+impl FreqGovernor for HysteresisGovernor {
+    fn decide(
+        &mut self,
+        now_s: f64,
+        phase: Phase,
+        signal: &GovernorSignal,
+        _gpu: &GpuSpec,
+    ) -> FreqMHz {
+        // Prefill is compute-bound and frequency-sensitive (Table XI):
+        // always run it at the ceiling, as the phase-aware profile does.
+        if phase == Phase::Prefill {
+            return self.cfg.ceil;
+        }
+        let overloaded =
+            signal.pressure > self.cfg.high_water || signal.queue_depth >= self.cfg.queue_trigger;
+        if overloaded {
+            let top = self.ladder.len() - 1;
+            if self.idx < top {
+                self.idx = (self.idx + self.cfg.steps_up).min(top);
+                self.moves += 1;
+                // Re-arm the dwell so a down-step can't immediately undo it.
+                self.last_down_s = now_s;
+            }
+        } else if signal.pressure < self.cfg.low_water
+            && signal.completed >= WARMUP_COMPLETIONS
+            && self.idx > 0
+            && now_s - self.last_down_s >= self.cfg.dwell_s
+        {
+            self.idx -= 1;
+            self.moves += 1;
+            self.last_down_s = now_s;
+        }
+        self.ladder[self.idx]
+    }
+
+    fn label(&self) -> String {
+        format!("governed[{}-{}MHz]", self.cfg.floor, self.cfg.ceil)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::rtx_pro_6000()
+    }
+
+    fn slack() -> GovernorSignal {
+        GovernorSignal {
+            pressure: 0.1,
+            queue_depth: 0,
+            active_seqs: 2,
+            completed: 100,
+            window_power_w: 150.0,
+        }
+    }
+
+    fn overload() -> GovernorSignal {
+        GovernorSignal {
+            pressure: 1.4,
+            queue_depth: 40,
+            active_seqs: 8,
+            completed: 100,
+            window_power_w: 400.0,
+        }
+    }
+
+    #[test]
+    fn cold_start_is_the_ceiling_and_prefill_stays_hot() {
+        let g = gpu();
+        let mut gov = HysteresisGovernor::new(&g, GovernorConfig::for_gpu(&g));
+        assert_eq!(gov.decode_freq(), 2842);
+        assert_eq!(gov.decide(0.0, Phase::Prefill, &slack(), &g), 2842);
+        // Prefill decisions never move the decode set point.
+        assert_eq!(gov.moves, 0);
+    }
+
+    #[test]
+    fn sustained_slack_descends_to_the_floor_one_step_per_dwell() {
+        let g = gpu();
+        let cfg = GovernorConfig::for_gpu(&g);
+        let dwell = cfg.dwell_s;
+        let mut gov = HysteresisGovernor::new(&g, cfg);
+        let mut t = 0.0;
+        let mut freqs = Vec::new();
+        for _ in 0..20 {
+            t += dwell + 1e-3;
+            freqs.push(gov.decide(t, Phase::Decode, &slack(), &g));
+        }
+        assert_eq!(*freqs.last().unwrap(), 180, "did not reach the floor: {freqs:?}");
+        // Monotone non-increasing descent, one ladder step at a time.
+        assert!(freqs.windows(2).all(|w| w[0] >= w[1]));
+        assert_eq!(gov.moves, g.freq_levels_mhz.len() - 1);
+    }
+
+    #[test]
+    fn cold_tracker_blocks_descent_until_warmed_up() {
+        // Zero pressure with zero completions is absence of evidence, not
+        // slack: the governor must hold the ceiling until requests finish.
+        let g = gpu();
+        let mut gov = HysteresisGovernor::new(&g, GovernorConfig::for_gpu(&g));
+        let cold = GovernorSignal { completed: 0, ..slack() };
+        let mut t = 0.0;
+        for _ in 0..20 {
+            t += 1.0;
+            assert_eq!(gov.decide(t, Phase::Decode, &cold, &g), 2842);
+        }
+        // First warmed-up decision may descend.
+        t += 1.0;
+        assert!(gov.decide(t, Phase::Decode, &slack(), &g) < 2842);
+    }
+
+    #[test]
+    fn dwell_blocks_rapid_descent() {
+        let g = gpu();
+        let mut gov = HysteresisGovernor::new(&g, GovernorConfig::for_gpu(&g));
+        // Many decisions within one dwell window: at most one down-step.
+        for _ in 0..50 {
+            gov.decide(0.3, Phase::Decode, &slack(), &g);
+        }
+        assert!(gov.moves <= 1, "{} moves inside one dwell", gov.moves);
+    }
+
+    #[test]
+    fn violation_pressure_steps_up_fast() {
+        let g = gpu();
+        let cfg = GovernorConfig::for_gpu(&g);
+        let steps_up = cfg.steps_up;
+        let mut gov = HysteresisGovernor::new(&g, cfg);
+        let mut t = 0.0;
+        // Descend to the floor first.
+        while gov.decode_freq() != 180 {
+            t += 1.0;
+            gov.decide(t, Phase::Decode, &slack(), &g);
+        }
+        // One overloaded decision jumps `steps_up` rungs immediately.
+        let f = gov.decide(t + 1e-6, Phase::Decode, &overload(), &g);
+        assert_eq!(f, g.freq_levels_mhz[steps_up]);
+        // Sustained overload reaches the ceiling.
+        for _ in 0..10 {
+            t += 1e-3;
+            gov.decide(t, Phase::Decode, &overload(), &g);
+        }
+        assert_eq!(gov.decode_freq(), 2842);
+    }
+
+    #[test]
+    fn queue_backlog_alone_triggers_an_up_step() {
+        let g = gpu();
+        let mut gov = HysteresisGovernor::new(&g, GovernorConfig::for_gpu(&g));
+        let mut t = 0.0;
+        while gov.decode_freq() != 180 {
+            t += 1.0;
+            gov.decide(t, Phase::Decode, &slack(), &g);
+        }
+        let sig = GovernorSignal { pressure: 0.1, queue_depth: 30, ..slack() };
+        assert!(gov.decide(t + 0.01, Phase::Decode, &sig, &g) > 180);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_steady() {
+        let g = gpu();
+        let mut gov = HysteresisGovernor::new(&g, GovernorConfig::for_gpu(&g));
+        let mid = GovernorSignal { pressure: 0.87, ..slack() }; // inside the band
+        let before = gov.decode_freq();
+        let mut t = 0.0;
+        for _ in 0..40 {
+            t += 1.0;
+            gov.decide(t, Phase::Decode, &mid, &g);
+        }
+        assert_eq!(gov.decode_freq(), before);
+        assert_eq!(gov.moves, 0);
+    }
+
+    #[test]
+    fn banded_governor_respects_its_band() {
+        let g = gpu();
+        let mut gov = HysteresisGovernor::new(&g, GovernorConfig::banded(&g, 487, 2000));
+        let mut t = 0.0;
+        for _ in 0..30 {
+            t += 1.0;
+            let f = gov.decide(t, Phase::Decode, &slack(), &g);
+            assert!((487..=2000).contains(&f));
+        }
+        assert_eq!(gov.decode_freq(), 487);
+        for _ in 0..10 {
+            t += 1.0;
+            let f = gov.decide(t, Phase::Decode, &overload(), &g);
+            assert!((487..=2000).contains(&f));
+        }
+        assert_eq!(gov.decode_freq(), 2000);
+    }
+
+    #[test]
+    #[should_panic(expected = "not on the supported ladder")]
+    fn off_ladder_band_panics() {
+        let g = gpu();
+        HysteresisGovernor::new(&g, GovernorConfig::banded(&g, 200, 2842));
+    }
+
+    #[test]
+    fn open_loop_adapter_mirrors_the_policy() {
+        let g = gpu();
+        let mut ol = OpenLoop(DvfsPolicy::paper_phase_aware(&g));
+        assert_eq!(ol.decide(0.0, Phase::Prefill, &slack(), &g), 2842);
+        assert_eq!(ol.decide(0.0, Phase::Decode, &overload(), &g), 180);
+        assert_eq!(ol.label(), DvfsPolicy::paper_phase_aware(&g).label());
+    }
+}

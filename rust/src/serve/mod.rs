@@ -1,0 +1,28 @@
+//! SLO-aware serving under traffic: the closed-loop layer above the
+//! paper's offline characterization.
+//!
+//! The study shows decode is frequency-insensitive (≈42% energy savings
+//! for 1–6% latency cost) but evaluates only open-loop policies. This
+//! module turns that finding into a serving system:
+//!
+//! - [`traffic`]: arrival-process generators (Poisson, bursty MMPP,
+//!   diurnal ramp, trace replay) over the workload corpus,
+//! - [`slo`]: TTFT / time-between-tokens / end-to-end objectives with
+//!   streaming P² percentile tracking,
+//! - [`governor`]: the pluggable [`FreqGovernor`] trait, an open-loop
+//!   adapter for any [`crate::coordinator::DvfsPolicy`], and the
+//!   closed-loop [`HysteresisGovernor`] (fast-up/slow-down over the
+//!   supported frequency ladder, driven by SLO pressure),
+//! - [`simloop`]: the discrete-event serving loop — continuous batching,
+//!   queueing delay, per-phase set points, and switch-overhead accounting
+//!   on the simulated GPU.
+
+pub mod governor;
+pub mod simloop;
+pub mod slo;
+pub mod traffic;
+
+pub use governor::{FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop};
+pub use simloop::{ServeOutcome, ServeSim, ServeSimConfig};
+pub use slo::{Slo, SloTracker};
+pub use traffic::{Arrival, TrafficPattern};

@@ -1,0 +1,234 @@
+//! Service-level objectives and their online tracking.
+//!
+//! Three latency objectives cover the serving phases the paper measures
+//! offline: time-to-first-token (queueing + prefill), mean time-between-
+//! tokens (decode cadence), and end-to-end latency. Lifetime percentiles
+//! are tracked *streaming* with the P² estimators from
+//! [`crate::stats::StreamingQuantiles`] (reported by every serving
+//! experiment); the governor's control signal is computed over a short
+//! recent-completions window instead, because a lifetime p99 never forgets
+//! a burst — a controller fed cumulative percentiles ratchets to the
+//! ceiling after one bad spell and never recovers the energy savings.
+
+use std::collections::VecDeque;
+
+use crate::stats::{exact_quantile, StreamingQuantiles};
+
+/// Latency objectives for one serving class.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    /// p95 time-to-first-token target, seconds.
+    pub ttft_p95_s: f64,
+    /// p95 mean time-between-tokens target, seconds.
+    pub tbt_p95_s: f64,
+    /// p99 end-to-end latency target, seconds.
+    pub e2e_p99_s: f64,
+}
+
+impl Slo {
+    /// An interactive chat-style objective, calibrated to the simulated
+    /// testbed's 8B-class service times (decode step ≈ 11 ms at batch 8).
+    pub fn interactive() -> Slo {
+        Slo { ttft_p95_s: 3.0, tbt_p95_s: 0.06, e2e_p99_s: 8.0 }
+    }
+
+    /// A relaxed batch/offline objective.
+    pub fn relaxed() -> Slo {
+        Slo { ttft_p95_s: 10.0, tbt_p95_s: 0.25, e2e_p99_s: 30.0 }
+    }
+}
+
+/// How many recently-completed requests feed the control signal.
+const RECENT_WINDOW: usize = 32;
+
+/// One completed request's latencies (the recent-window sample).
+#[derive(Debug, Clone, Copy)]
+struct Completion {
+    ttft_s: f64,
+    tbt_s: f64,
+    e2e_s: f64,
+    violated: bool,
+}
+
+/// Streaming SLO attainment tracker.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    pub slo: Slo,
+    ttft: StreamingQuantiles,
+    tbt: StreamingQuantiles,
+    e2e: StreamingQuantiles,
+    completed: usize,
+    /// Requests whose end-to-end latency exceeded the e2e target.
+    e2e_violations: usize,
+    /// The most recent completions (the governor's control window).
+    recent: VecDeque<Completion>,
+}
+
+impl SloTracker {
+    pub fn new(slo: Slo) -> SloTracker {
+        SloTracker {
+            slo,
+            ttft: StreamingQuantiles::new(),
+            tbt: StreamingQuantiles::new(),
+            e2e: StreamingQuantiles::new(),
+            completed: 0,
+            e2e_violations: 0,
+            recent: VecDeque::with_capacity(RECENT_WINDOW),
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, ttft_s: f64, tbt_s: f64, e2e_s: f64) {
+        self.ttft.observe(ttft_s);
+        self.tbt.observe(tbt_s);
+        self.e2e.observe(e2e_s);
+        self.completed += 1;
+        let violated = e2e_s > self.slo.e2e_p99_s;
+        if violated {
+            self.e2e_violations += 1;
+        }
+        if self.recent.len() == RECENT_WINDOW {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(Completion { ttft_s, tbt_s, e2e_s, violated });
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    pub fn ttft_p95(&self) -> f64 {
+        self.ttft.p95()
+    }
+
+    pub fn tbt_p95(&self) -> f64 {
+        self.tbt.p95()
+    }
+
+    pub fn e2e_p50(&self) -> f64 {
+        self.e2e.p50()
+    }
+
+    pub fn e2e_p95(&self) -> f64 {
+        self.e2e.p95()
+    }
+
+    pub fn e2e_p99(&self) -> f64 {
+        self.e2e.p99()
+    }
+
+    /// Fraction of completed requests inside the end-to-end target
+    /// (1.0 when nothing has completed yet).
+    pub fn attainment(&self) -> f64 {
+        if self.completed == 0 {
+            return 1.0;
+        }
+        1.0 - self.e2e_violations as f64 / self.completed as f64
+    }
+
+    /// Fraction of the recent window that violated the e2e target.
+    pub fn recent_violation_rate(&self) -> f64 {
+        if self.recent.is_empty() {
+            return 0.0;
+        }
+        self.recent.iter().filter(|c| c.violated).count() as f64 / self.recent.len() as f64
+    }
+
+    /// SLO pressure — the governor's control signal.
+    ///
+    /// The slow component is the worst ratio of a *recent-window*
+    /// percentile to its target (1.0 = exactly at target); computing it
+    /// over the window rather than the lifetime stream lets the signal
+    /// fall back once a burst drains, so the controller recovers its
+    /// energy savings. The fast component kicks the pressure above 1 the
+    /// moment recent completions actually violate the e2e target.
+    pub fn pressure(&self) -> f64 {
+        if self.completed < 5 || self.recent.len() < 5 {
+            return 0.0;
+        }
+        let q = |f: fn(&Completion) -> f64, p: f64| {
+            let xs: Vec<f64> = self.recent.iter().map(f).collect();
+            exact_quantile(&xs, p)
+        };
+        let ratios = [
+            q(|c| c.ttft_s, 0.95) / self.slo.ttft_p95_s,
+            q(|c| c.tbt_s, 0.95) / self.slo.tbt_p95_s,
+            q(|c| c.e2e_s, 0.99) / self.slo.e2e_p99_s,
+        ];
+        let slow = ratios.iter().cloned().fold(0.0, f64::max);
+        let recent = self.recent_violation_rate();
+        let fast = if recent > 0.0 { 1.0 + recent } else { 0.0 };
+        slow.max(fast)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attainment_counts_e2e_violations() {
+        let mut t = SloTracker::new(Slo { ttft_p95_s: 1.0, tbt_p95_s: 0.1, e2e_p99_s: 2.0 });
+        assert_eq!(t.attainment(), 1.0);
+        for i in 0..10 {
+            // Two of ten exceed the 2 s target.
+            let e2e = if i < 8 { 1.0 } else { 3.0 };
+            t.record(0.2, 0.02, e2e);
+        }
+        assert_eq!(t.completed(), 10);
+        assert!((t.attainment() - 0.8).abs() < 1e-12);
+        assert!(t.recent_violation_rate() > 0.15);
+    }
+
+    #[test]
+    fn pressure_rises_with_violations_and_falls_with_slack() {
+        let slo = Slo { ttft_p95_s: 1.0, tbt_p95_s: 0.1, e2e_p99_s: 2.0 };
+        let mut slack = SloTracker::new(slo);
+        for _ in 0..50 {
+            slack.record(0.1, 0.01, 0.5);
+        }
+        assert!(slack.pressure() < 0.5, "slack pressure {}", slack.pressure());
+
+        let mut hot = SloTracker::new(slo);
+        for _ in 0..50 {
+            hot.record(0.9, 0.09, 2.5); // violating e2e
+        }
+        assert!(hot.pressure() > 1.0, "hot pressure {}", hot.pressure());
+    }
+
+    #[test]
+    fn pressure_is_quiet_during_warmup() {
+        let mut t = SloTracker::new(Slo::interactive());
+        assert_eq!(t.pressure(), 0.0);
+        t.record(100.0, 100.0, 100.0); // one outlier, still warming up
+        assert_eq!(t.pressure(), 0.0);
+    }
+
+    #[test]
+    fn recent_window_recovers_after_a_burst() {
+        let slo = Slo { ttft_p95_s: 10.0, tbt_p95_s: 10.0, e2e_p99_s: 2.0 };
+        let mut t = SloTracker::new(slo);
+        for _ in 0..10 {
+            t.record(0.1, 0.01, 3.0); // burst of violations
+        }
+        assert!(t.pressure() > 1.5);
+        for _ in 0..2 * RECENT_WINDOW {
+            t.record(0.1, 0.01, 0.3); // burst clears
+        }
+        assert_eq!(t.recent_violation_rate(), 0.0);
+        assert_eq!(t.completed(), 10 + 2 * RECENT_WINDOW);
+    }
+
+    #[test]
+    fn streaming_percentiles_are_exposed() {
+        let mut t = SloTracker::new(Slo::interactive());
+        for i in 1..=100 {
+            let x = i as f64 / 100.0;
+            t.record(x, x / 10.0, x * 2.0);
+        }
+        assert!(t.ttft_p95() > t.e2e_p50() / 2.0 * 0.5); // sanity: populated
+        assert!(t.e2e_p99() <= 2.0 + 1e-9);
+        assert!(t.e2e_p50() < t.e2e_p95() && t.e2e_p95() <= t.e2e_p99());
+        assert!(t.tbt_p95() < 0.11);
+    }
+}

@@ -1,0 +1,264 @@
+//! Arrival-process generators: timestamped request streams over the
+//! workload corpus.
+//!
+//! The paper's replay harness measures closed-world batches; a serving
+//! system sees an *arrival process*. Four generators cover the shapes a
+//! production trace exhibits: homogeneous Poisson (steady load), a
+//! two-state MMPP (bursts), a sinusoidal diurnal ramp, and replay of a
+//! recorded timestamp trace. All draw query indices and inter-arrival
+//! randomness from an explicit seed, so every serving experiment replays
+//! exactly.
+
+use crate::workload::ReplaySuite;
+use crate::Rng;
+
+/// One timestamped request: when it arrives and which corpus query it is.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Arrival time on the simulated clock, seconds.
+    pub t_s: f64,
+    /// Index into the suite's query/feature arrays.
+    pub query_idx: usize,
+}
+
+/// Exponential inter-arrival draw at `rate` events/second.
+#[inline]
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() / rate
+}
+
+/// The supported arrival processes.
+#[derive(Debug, Clone)]
+pub enum TrafficPattern {
+    /// Homogeneous Poisson process at `rps` requests/second.
+    Poisson { rps: f64 },
+    /// Two-state Markov-modulated Poisson process: calm periods at
+    /// `base_rps` alternating with bursts at `burst_rps`; dwell times in
+    /// each state are exponential with mean `mean_dwell_s`.
+    Bursty { base_rps: f64, burst_rps: f64, mean_dwell_s: f64 },
+    /// Sinusoidal diurnal ramp: the instantaneous rate swings between
+    /// `min_rps` and `max_rps` with period `period_s` (thinning sampler).
+    Diurnal { min_rps: f64, max_rps: f64, period_s: f64 },
+    /// Replay a recorded, non-decreasing timestamp trace; cycled with the
+    /// trace's span if more arrivals are requested than it holds.
+    Replay { timestamps: Vec<f64> },
+}
+
+impl TrafficPattern {
+    pub fn label(&self) -> String {
+        match self {
+            TrafficPattern::Poisson { rps } => format!("poisson@{rps}rps"),
+            TrafficPattern::Bursty { base_rps, burst_rps, .. } => {
+                format!("bursty[{base_rps}/{burst_rps}rps]")
+            }
+            TrafficPattern::Diurnal { min_rps, max_rps, .. } => {
+                format!("diurnal[{min_rps}-{max_rps}rps]")
+            }
+            TrafficPattern::Replay { timestamps } => {
+                format!("replay[{} events]", timestamps.len())
+            }
+        }
+    }
+
+    /// Generate `n` arrivals drawing query indices uniformly from the whole
+    /// suite.
+    pub fn generate(&self, suite: &ReplaySuite, n: usize, seed: u64) -> Vec<Arrival> {
+        let pool: Vec<usize> = (0..suite.len()).collect();
+        self.generate_from(&pool, n, seed)
+    }
+
+    /// Generate `n` arrivals drawing query indices uniformly from `pool`
+    /// (e.g. only the generation datasets for a decode-heavy scenario).
+    pub fn generate_from(&self, pool: &[usize], n: usize, seed: u64) -> Vec<Arrival> {
+        assert!(!pool.is_empty(), "traffic needs a non-empty query pool");
+        let mut rng = crate::rng(seed);
+        let times = self.timestamps(n, &mut rng);
+        times
+            .into_iter()
+            .map(|t_s| Arrival { t_s, query_idx: pool[rng.gen_range(0, pool.len())] })
+            .collect()
+    }
+
+    fn timestamps(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            TrafficPattern::Poisson { rps } => {
+                assert!(rps > 0.0);
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += exp_gap(rng, rps);
+                    out.push(t);
+                }
+            }
+            TrafficPattern::Bursty { base_rps, burst_rps, mean_dwell_s } => {
+                assert!(base_rps > 0.0 && burst_rps > 0.0 && mean_dwell_s > 0.0);
+                let mut t = 0.0;
+                let mut burst = false;
+                let mut state_end = exp_gap(rng, 1.0 / mean_dwell_s);
+                while out.len() < n {
+                    let rate = if burst { burst_rps } else { base_rps };
+                    let gap = exp_gap(rng, rate);
+                    if t + gap > state_end {
+                        // Memoryless: jump to the state boundary, flip, and
+                        // redraw the gap under the new state's rate.
+                        t = state_end;
+                        burst = !burst;
+                        state_end = t + exp_gap(rng, 1.0 / mean_dwell_s);
+                        continue;
+                    }
+                    t += gap;
+                    out.push(t);
+                }
+            }
+            TrafficPattern::Diurnal { min_rps, max_rps, period_s } => {
+                assert!(min_rps > 0.0 && max_rps >= min_rps && period_s > 0.0);
+                // Lewis–Shedler thinning with λ_max as the majorant; the
+                // rate trough sits at t = 0 (cold start, like a new region).
+                let rate_at = |t: f64| {
+                    let phase = std::f64::consts::TAU * t / period_s;
+                    min_rps + (max_rps - min_rps) * 0.5 * (1.0 - phase.cos())
+                };
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += exp_gap(rng, max_rps);
+                    if rng.gen_f64() < rate_at(t) / max_rps {
+                        out.push(t);
+                    }
+                }
+            }
+            TrafficPattern::Replay { ref timestamps } => {
+                assert!(!timestamps.is_empty(), "replay trace is empty");
+                assert!(
+                    timestamps.windows(2).all(|w| w[0] <= w[1]),
+                    "replay trace must be non-decreasing"
+                );
+                // Rebase to t = 0: production traces carry wall-clock
+                // offsets, and serving the offset as idle time would
+                // swamp every energy comparison.
+                let t0 = timestamps[0];
+                let last = timestamps.last().unwrap() - t0;
+                // Cycle period: trace span plus one mean inter-arrival gap.
+                let span = last + last / timestamps.len() as f64;
+                for i in 0..n {
+                    let cycle = (i / timestamps.len()) as f64;
+                    out.push(timestamps[i % timestamps.len()] - t0 + cycle * span);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Dataset;
+
+    fn suite() -> ReplaySuite {
+        ReplaySuite::quick(3, 10)
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_sorted_and_in_pool() {
+        let s = suite();
+        let pool = s.dataset_indices(Dataset::NarrativeQa);
+        for pattern in [
+            TrafficPattern::Poisson { rps: 5.0 },
+            TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 20.0, mean_dwell_s: 1.0 },
+            TrafficPattern::Diurnal { min_rps: 1.0, max_rps: 10.0, period_s: 10.0 },
+            TrafficPattern::Replay { timestamps: vec![0.0, 0.5, 0.6, 2.0] },
+        ] {
+            let a = pattern.generate_from(&pool, 200, 9);
+            let b = pattern.generate_from(&pool, 200, 9);
+            assert_eq!(a, b, "{}", pattern.label());
+            assert_eq!(a.len(), 200);
+            assert!(
+                a.windows(2).all(|w| w[0].t_s <= w[1].t_s),
+                "{} not sorted",
+                pattern.label()
+            );
+            assert!(a.iter().all(|x| pool.contains(&x.query_idx)));
+            assert!(a[0].t_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn poisson_hits_the_requested_rate() {
+        let s = suite();
+        let a = TrafficPattern::Poisson { rps: 8.0 }.generate(&s, 4000, 1);
+        let rate = a.len() as f64 / a.last().unwrap().t_s;
+        assert!((rate - 8.0).abs() / 8.0 < 0.1, "rate {rate:.2}");
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Coefficient of variation of inter-arrival gaps: 1 for Poisson,
+        // substantially above 1 for an MMPP with well-separated rates.
+        let s = suite();
+        let cv = |arr: &[Arrival]| {
+            let gaps: Vec<f64> = arr.windows(2).map(|w| w[1].t_s - w[0].t_s).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m).powi(2)).sum::<f64>() / gaps.len() as f64;
+            v.sqrt() / m
+        };
+        let pois = TrafficPattern::Poisson { rps: 5.0 }.generate(&s, 3000, 2);
+        let burst = TrafficPattern::Bursty { base_rps: 1.0, burst_rps: 25.0, mean_dwell_s: 2.0 }
+            .generate(&s, 3000, 2);
+        assert!(cv(&burst) > cv(&pois) * 1.3, "cv {} vs {}", cv(&burst), cv(&pois));
+    }
+
+    #[test]
+    fn diurnal_peaks_midperiod() {
+        let s = suite();
+        let period = 20.0;
+        let a = TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 10.0, period_s: period }
+            .generate(&s, 2000, 4);
+        // Arrivals in the peak half of each cycle (quarter..three-quarter)
+        // must dominate the trough half.
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for x in &a {
+            let phase = (x.t_s / period).fract();
+            if (0.25..0.75).contains(&phase) {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(peak > 2 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn replay_cycles_beyond_the_trace() {
+        let s = suite();
+        let tr = TrafficPattern::Replay { timestamps: vec![0.1, 0.4, 1.0] };
+        let a = tr.generate(&s, 7, 5);
+        assert_eq!(a.len(), 7);
+        // First cycle reproduces the trace rebased to t = 0.
+        assert!((a[0].t_s - 0.0).abs() < 1e-12);
+        assert!((a[1].t_s - 0.3).abs() < 1e-12);
+        assert!((a[2].t_s - 0.9).abs() < 1e-12);
+        // Later cycles are offset copies, still sorted.
+        assert!(a[3].t_s > a[2].t_s);
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+    }
+
+    #[test]
+    fn replay_rebases_wall_clock_offsets() {
+        // A production trace with an un-rebased clock must not inject the
+        // offset as leading idle time.
+        let s = suite();
+        let tr = TrafficPattern::Replay { timestamps: vec![3600.0, 3600.5, 3601.0] };
+        let a = tr.generate(&s, 6, 5);
+        assert!((a[0].t_s - 0.0).abs() < 1e-12);
+        assert!((a[2].t_s - 1.0).abs() < 1e-12);
+        // Cycle period = span (1.0) + mean gap (1/3): no huge dead gaps.
+        assert!((a[3].t_s - (1.0 + 1.0 / 3.0)).abs() < 1e-9);
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty query pool")]
+    fn empty_pool_panics() {
+        TrafficPattern::Poisson { rps: 1.0 }.generate_from(&[], 5, 0);
+    }
+}

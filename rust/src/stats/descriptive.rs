@@ -1,4 +1,5 @@
-//! Descriptive statistics (Table II's mean/std/min/max/range).
+//! Descriptive statistics (Table II's mean/std/min/max/range) and streaming
+//! quantile estimation (P², for online SLO tracking in the serve layer).
 
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, Copy)]
@@ -60,6 +61,273 @@ mod tests {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.mean, 7.0);
+    }
+}
+
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac 1985).
+///
+/// Tracks one quantile in O(1) memory with five markers whose heights are
+/// adjusted by a piecewise-parabolic formula as observations stream in. The
+/// serve layer's SLO tracker and DVFS governor both read these estimates on
+/// the request path, where sorting the full latency history per decision
+/// would be O(n log n) per step.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights q0..q4 (q2 estimates the p-quantile).
+    q: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    count: usize,
+    /// Buffer for the first five observations.
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1), got {p}");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: [0.0; 5],
+        }
+    }
+
+    /// The quantile being estimated.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Feed one observation.
+    pub fn observe(&mut self, x: f64) {
+        if self.count < 5 {
+            self.init[self.count] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.q = self.init;
+            }
+            return;
+        }
+        // Locate the cell and stretch the extreme markers if needed.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        self.count += 1;
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Adjust interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let s = d.signum();
+                let cand = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < cand && cand < self.q[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, s)
+                };
+                self.n[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate (NaN before the first observation; exact for n ≤ 5).
+    pub fn value(&self) -> f64 {
+        if self.count < 5 {
+            return exact_quantile(&self.init[..self.count], self.p);
+        }
+        self.q[2]
+    }
+}
+
+/// The serve layer's standard percentile bundle: streaming p50/p95/p99.
+#[derive(Debug, Clone)]
+pub struct StreamingQuantiles {
+    q50: P2Quantile,
+    q95: P2Quantile,
+    q99: P2Quantile,
+}
+
+impl Default for StreamingQuantiles {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingQuantiles {
+    pub fn new() -> StreamingQuantiles {
+        StreamingQuantiles {
+            q50: P2Quantile::new(0.50),
+            q95: P2Quantile::new(0.95),
+            q99: P2Quantile::new(0.99),
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.q50.observe(x);
+        self.q95.observe(x);
+        self.q99.observe(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.q50.count()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.q50.value()
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.q95.value()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.q99.value()
+    }
+}
+
+/// Exact quantile of a sample (nearest-rank on the sorted data) — the
+/// reference the streaming estimator is validated against.
+pub fn exact_quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p * (s.len() as f64 - 1.0)).round() as usize;
+    s[idx]
+}
+
+#[cfg(test)]
+mod quantile_tests {
+    use super::*;
+    use crate::Rng;
+
+    #[test]
+    fn empty_and_small_sample_paths() {
+        let mut q = P2Quantile::new(0.5);
+        assert!(q.value().is_nan());
+        for x in [3.0, 1.0, 2.0] {
+            q.observe(x);
+        }
+        assert_eq!(q.value(), 2.0); // exact median of {1,2,3}
+        assert_eq!(q.count(), 3);
+    }
+
+    #[test]
+    fn uniform_stream_matches_exact_quantiles() {
+        let mut rng = Rng::seed_from_u64(17);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.gen_f64()).collect();
+        for p in [0.5, 0.95, 0.99] {
+            let mut q = P2Quantile::new(p);
+            for &x in &xs {
+                q.observe(x);
+            }
+            let exact = exact_quantile(&xs, p);
+            assert!(
+                (q.value() - exact).abs() < 0.02,
+                "p{p}: est {} vs exact {exact}",
+                q.value()
+            );
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_stream_stays_within_relative_band() {
+        // Exponential-ish latencies: the distribution the SLO tracker sees.
+        let mut rng = Rng::seed_from_u64(23);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| -(1.0 - rng.gen_f64()).ln() * 0.1)
+            .collect();
+        let mut q = P2Quantile::new(0.99);
+        for &x in &xs {
+            q.observe(x);
+        }
+        let exact = exact_quantile(&xs, 0.99);
+        assert!(
+            (q.value() - exact).abs() / exact < 0.10,
+            "p99 est {} vs exact {exact}",
+            q.value()
+        );
+    }
+
+    #[test]
+    fn estimates_are_ordered_and_bounded() {
+        let mut rng = Rng::seed_from_u64(31);
+        let mut sq = StreamingQuantiles::new();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..5_000 {
+            let x = rng.normal() * 3.0 + 10.0;
+            lo = lo.min(x);
+            hi = hi.max(x);
+            sq.observe(x);
+        }
+        assert!(sq.p50() <= sq.p95() && sq.p95() <= sq.p99());
+        assert!(sq.p50() >= lo && sq.p99() <= hi);
+        assert_eq!(sq.count(), 5_000);
+    }
+
+    #[test]
+    fn deterministic_given_same_stream() {
+        let feed = |seed| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut q = P2Quantile::new(0.95);
+            for _ in 0..1_000 {
+                q.observe(rng.gen_f64());
+            }
+            q.value()
+        };
+        assert_eq!(feed(5), feed(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "quantile must be in")]
+    fn rejects_out_of_range_p() {
+        P2Quantile::new(1.0);
     }
 }
 

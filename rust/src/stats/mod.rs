@@ -1,7 +1,8 @@
-//! Statistics substrate: descriptive stats, correlations (Pearson and
-//! partial), normalization, an L2-regularized logistic regression, and
-//! stratified k-fold cross-validation — everything Section V's analysis
-//! needs, implemented natively and property-tested.
+//! Statistics substrate: descriptive stats, streaming quantiles (P²),
+//! correlations (Pearson and partial), normalization, an L2-regularized
+//! logistic regression, and stratified k-fold cross-validation — everything
+//! Section V's analysis and the serve layer's online SLO tracking need,
+//! implemented natively and property-tested.
 
 pub mod correlation;
 pub mod crossval;
@@ -11,6 +12,6 @@ pub mod normalize;
 
 pub use correlation::{partial_correlation, pearson};
 pub use crossval::{stratified_kfold, cross_validate_accuracy};
-pub use descriptive::Summary;
+pub use descriptive::{exact_quantile, P2Quantile, StreamingQuantiles, Summary};
 pub use logistic::LogisticRegression;
 pub use normalize::{minmax_normalize, standardize, Standardizer};

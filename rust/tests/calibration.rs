@@ -154,8 +154,9 @@ fn t17_combined_savings() {
 fn all_experiments_run() {
     let c = Context::quick(0xA11, 30);
     let reports = ewatt::experiments::run_all(&c).unwrap();
-    // 18 tables (17 has a cross-check twin) + 6 figures.
-    assert_eq!(reports.len(), 18 + 1 + 6);
+    // 18 tables (17 has a cross-check twin) + 6 figures + the serve-layer
+    // SLO comparison.
+    assert_eq!(reports.len(), 18 + 1 + 6 + 1);
     for r in &reports {
         assert!(!r.rows.is_empty(), "{} produced no rows", r.id);
         assert!(!r.ascii().is_empty());

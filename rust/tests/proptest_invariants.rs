@@ -245,3 +245,189 @@ fn prop_token_count_matches_tokenize() {
         assert_eq!(token_count(s), tokenize(s).len(), "text {s:?}");
     }
 }
+
+/// NVML-style sampler: energy is non-negative for non-negative power, and
+/// invariant under splitting any segment into two same-power pieces (the
+/// trapezoidal integral is additive over split intervals). The exact
+/// integral is additive over trace concatenation.
+#[test]
+fn prop_sampler_energy_nonnegative_and_split_invariant() {
+    use ewatt::gpu::telemetry::{PowerSampler, PowerSegment};
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0x5A_0 ^ case);
+        let n = rng.gen_range(1, 6);
+        let trace: Vec<PowerSegment> = (0..n)
+            .map(|_| PowerSegment {
+                duration_s: rng.gen_range_f64(0.001, 0.2),
+                power_w: rng.gen_range_f64(0.0, 500.0),
+            })
+            .collect();
+        let sampler = PowerSampler::with_period(0.010);
+        let (e, _) = sampler.measure(&trace);
+        assert!(e >= 0.0, "case {case}: negative energy {e}");
+
+        // Split every segment at a random interior point: identical signal,
+        // identical sampled and exact energy.
+        let mut split = Vec::with_capacity(2 * trace.len());
+        for seg in &trace {
+            let cut = rng.gen_range_f64(0.2, 0.8) * seg.duration_s;
+            split.push(PowerSegment { duration_s: cut, power_w: seg.power_w });
+            split.push(PowerSegment { duration_s: seg.duration_s - cut, power_w: seg.power_w });
+        }
+        let (e_split, _) = sampler.measure(&split);
+        assert!(
+            (e - e_split).abs() < 1e-9,
+            "case {case}: split changed sampled energy {e} -> {e_split}"
+        );
+        assert!(
+            (PowerSampler::exact(&trace) - PowerSampler::exact(&split)).abs() < 1e-9,
+            "case {case}: split changed exact energy"
+        );
+
+        // Exact integral is additive over concatenation of disjoint traces.
+        let tail: Vec<PowerSegment> = (0..rng.gen_range(1, 4))
+            .map(|_| PowerSegment {
+                duration_s: rng.gen_range_f64(0.001, 0.1),
+                power_w: rng.gen_range_f64(0.0, 500.0),
+            })
+            .collect();
+        let mut joined = trace.clone();
+        joined.extend(tail.iter().cloned());
+        assert!(
+            (PowerSampler::exact(&joined)
+                - PowerSampler::exact(&trace)
+                - PowerSampler::exact(&tail))
+            .abs()
+                < 1e-9,
+            "case {case}: exact integral not additive"
+        );
+    }
+}
+
+/// DVFS policies: every set point a policy can return sits on the GPU's
+/// supported ladder, for random ladder choices and random governed bands.
+#[test]
+fn prop_policy_set_points_always_supported() {
+    use ewatt::coordinator::dvfs_policy::{DvfsPolicy, FrequencyPolicy, Phase};
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0xD0F5 ^ case);
+        let pick = |rng: &mut ewatt::Rng| *rng.choose(&gpu.freq_levels_mhz);
+        let (pre, dec) = (pick(&mut rng), pick(&mut rng));
+        let (a, b) = (pick(&mut rng), pick(&mut rng));
+        let policies = [
+            DvfsPolicy::Static(pick(&mut rng)),
+            DvfsPolicy::PhaseAware { prefill: pre, decode: dec },
+            DvfsPolicy::Governed { floor: a.min(b), ceil: a.max(b) },
+            DvfsPolicy::paper_phase_aware(&gpu),
+            DvfsPolicy::governed(&gpu),
+        ];
+        for p in policies {
+            for phase in [Phase::Prefill, Phase::Decode] {
+                let f = p.freq_for(phase, &gpu);
+                assert!(gpu.supports(f), "case {case}: {} -> {f} off-ladder", p.label());
+            }
+        }
+    }
+}
+
+/// Closed-loop governor: under arbitrary signal sequences, the decode set
+/// point never leaves its configured band and never leaves the ladder.
+#[test]
+fn prop_governor_stays_inside_its_band() {
+    use ewatt::coordinator::dvfs_policy::Phase;
+    use ewatt::serve::{FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor};
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0x60_0 ^ case);
+        let i = rng.gen_range(0, gpu.freq_levels_mhz.len());
+        let j = rng.gen_range(0, gpu.freq_levels_mhz.len());
+        let (floor, ceil) = (
+            gpu.freq_levels_mhz[i.min(j)],
+            gpu.freq_levels_mhz[i.max(j)],
+        );
+        let mut gov = HysteresisGovernor::new(&gpu, GovernorConfig::banded(&gpu, floor, ceil));
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += rng.gen_range_f64(0.0, 0.5);
+            let sig = GovernorSignal {
+                pressure: rng.gen_range_f64(0.0, 3.0),
+                queue_depth: rng.gen_range(0, 64),
+                active_seqs: rng.gen_range(0, 9),
+                completed: rng.gen_range(0, 500),
+                window_power_w: rng.gen_range_f64(0.0, 600.0),
+            };
+            let phase = if rng.gen_bool(0.2) { Phase::Prefill } else { Phase::Decode };
+            let f = gov.decide(t, phase, &sig, &gpu);
+            assert!(gpu.supports(f), "case {case}: off-ladder {f}");
+            assert!(
+                (floor..=ceil).contains(&f),
+                "case {case}: {f} outside [{floor}, {ceil}]"
+            );
+        }
+    }
+}
+
+/// Telemetry window: the windowed energy always equals the sum of the
+/// samples that are still inside the horizon (eviction is exact).
+#[test]
+fn prop_telemetry_window_eviction_is_exact() {
+    use ewatt::gpu::TelemetryWindow;
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0x7E1E ^ case);
+        let horizon = rng.gen_range_f64(0.1, 2.0);
+        let mut w = TelemetryWindow::new(horizon);
+        let mut samples: Vec<(f64, f64)> = Vec::new(); // (t_end, energy)
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += rng.gen_range_f64(0.0, 0.3);
+            let dur = rng.gen_range_f64(0.001, 0.05);
+            let e = rng.gen_range_f64(0.0, 20.0);
+            w.record(t, dur, e);
+            samples.push((t, e));
+            let want: f64 = samples
+                .iter()
+                .filter(|(te, _)| *te >= t - horizon)
+                .map(|(_, e)| e)
+                .sum();
+            assert!(
+                (w.energy_j() - want).abs() < 1e-9,
+                "case {case}: window {} vs recompute {want}",
+                w.energy_j()
+            );
+        }
+    }
+}
+
+/// Streaming P² quantiles: every estimate is bracketed by the extremes of
+/// the observed stream (marker heights are clamped between their
+/// neighbors, so interior markers can never escape [min, max]).
+#[test]
+fn prop_streaming_quantiles_bounded() {
+    use ewatt::stats::StreamingQuantiles;
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0xF2_F ^ case);
+        let mut sq = StreamingQuantiles::new();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let n = rng.gen_range(1, 2000);
+        for _ in 0..n {
+            // Mix of scales: uniform, heavy tail, constants.
+            let x = match rng.gen_range(0, 3) {
+                0 => rng.gen_f64(),
+                1 => -(1.0 - rng.gen_f64()).ln() * 10.0,
+                _ => 42.0,
+            };
+            lo = lo.min(x);
+            hi = hi.max(x);
+            sq.observe(x);
+        }
+        for (p, v) in [(50, sq.p50()), (95, sq.p95()), (99, sq.p99())] {
+            assert!(
+                v >= lo - 1e-12 && v <= hi + 1e-12,
+                "case {case}: p{p} estimate {v} escapes [{lo}, {hi}]"
+            );
+        }
+        assert_eq!(sq.count(), n);
+    }
+}
