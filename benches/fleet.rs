@@ -1,0 +1,88 @@
+//! Bench: the fleet layer's hot paths.
+//!
+//! Routing runs once per arrival (reading every replica's live status) and
+//! the attribution ledger is charged on every phase step of every replica —
+//! both sit on the serving path at traffic scale. One full routed+governed
+//! fleet run is the `ewatt fleet` regeneration unit.
+
+use ewatt::config::model::model_for_tier;
+use ewatt::config::{GpuSpec, ModelTier};
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::fleet::{
+    DifficultyTiered, EnergyAware, EnergyLedger, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
+    ReplicaStatus, RoundRobin,
+};
+use ewatt::serve::TrafficPattern;
+use ewatt::util::bench::{bench, report};
+use ewatt::workload::ReplaySuite;
+
+fn statuses(n: usize) -> Vec<ReplicaStatus> {
+    (0..n)
+        .map(|i| ReplicaStatus {
+            idx: i,
+            live: true,
+            tier: if i % 2 == 0 { ModelTier::B3 } else { ModelTier::B14 },
+            queue_depth: (i * 3) % 7,
+            active_seqs: i % 5,
+            now_s: i as f64 * 0.1,
+            window_power_w: 150.0 + 40.0 * i as f64,
+            busy_fraction: 0.6,
+            j_per_token: 0.5 + i as f64 * 0.7,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut results = Vec::new();
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(19, 40);
+
+    // Routing decision (per-arrival hot path), with and without features.
+    let reps = statuses(8);
+    let feats = suite.features[0];
+    let routers: Vec<Box<dyn FleetRouter>> = vec![
+        Box::new(RoundRobin::default()),
+        Box::new(LeastLoaded),
+        Box::new(DifficultyTiered::default()),
+        Box::new(EnergyAware::default()),
+    ];
+    for mut router in routers {
+        let label = format!("route [{:<22}] x10k over 8 replicas", router.label());
+        let r = reps.clone();
+        results.push(bench(&label, 5, 200, move || {
+            let mut acc = 0usize;
+            for i in 0..10_000usize {
+                let a = ewatt::serve::Arrival { t_s: i as f64 * 1e-3, query_idx: 0 };
+                acc += router.route(&a, Some(&feats), &r);
+            }
+            acc
+        }));
+    }
+
+    // Attribution ledger charges (per-phase-step hot path).
+    results.push(bench("ledger charge_decode batch 8 x10k", 5, 200, || {
+        let mut led = EnergyLedger::new(64);
+        let batch: Vec<usize> = (0..8).collect();
+        for i in 0..10_000 {
+            led.charge_decode(&batch, 4.0 + (i % 13) as f64);
+        }
+        led.totals().decode_j
+    }));
+
+    // One full routed+governed fleet run (the `ewatt fleet` unit).
+    let arrivals = TrafficPattern::Bursty { base_rps: 3.0, burst_rps: 10.0, mean_dwell_s: 3.0 }
+        .generate(&suite, 80, 3);
+    let cfg = FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, DvfsPolicy::governed(&gpu));
+    let sim = FleetSim::new(gpu.clone(), cfg);
+    let mono =
+        FleetConfig::homogeneous(model_for_tier(ModelTier::B14), 4, DvfsPolicy::baseline(&gpu));
+    let mono_sim = FleetSim::new(gpu, mono);
+    results.push(bench("fleet run 80 reqs [routed+governed]", 1, 10, || {
+        sim.run(&suite, &arrivals, &mut DifficultyTiered::default()).unwrap().energy_j
+    }));
+    results.push(bench("fleet run 80 reqs [monolithic-static]", 1, 10, || {
+        mono_sim.run(&suite, &arrivals, &mut LeastLoaded).unwrap().energy_j
+    }));
+
+    report("fleet routing + attribution", &results);
+}

@@ -2,19 +2,23 @@
 //! ("extensions to multi-GPU inference"). Extension feature, exercised by
 //! `ewatt ablation cluster`.
 //!
-//! Data-parallel serving: N identical simulated devices each hold a full
-//! model replica; batches are dispatched least-loaded-first. Reports
-//! makespan (wall time = busiest replica), aggregate energy, and the
-//! scaling efficiency of both.
+//! Since the fleet layer landed, `Cluster` is a thin offline facade over
+//! [`crate::fleet::FleetSim`]: the replay workload arrives all at once
+//! (t = 0), a least-loaded router stripes it across `n_replicas` identical
+//! replicas, and each replica runs the same iteration-level batching loop
+//! the online path uses — one codebase for both. Compared with the old
+//! fixed-batch dispatcher this admits per-request (prefills at batch 1,
+//! continuous decode batching), so splitting work across more replicas
+//! lowers decode occupancy slightly and costs a bounded energy overhead —
+//! the occupancy-fragmentation effect the cluster ablation now reports.
 
 use anyhow::Result;
 
 use crate::config::{GpuSpec, ModelSpec};
-use crate::engine::{Batcher, KvCacheManager};
-use crate::gpu::GpuSim;
-use crate::perf::{decode_step_cost, prefill_cost};
-use crate::text::tokenizer::token_count;
-use crate::workload::{Query, ReplaySuite};
+use crate::fleet::{FleetConfig, FleetSim, LeastLoaded, ReplicaSpec};
+use crate::serve::slo::Slo;
+use crate::serve::traffic::Arrival;
+use crate::workload::ReplaySuite;
 
 use super::dvfs_policy::DvfsPolicy;
 
@@ -63,53 +67,38 @@ impl Cluster {
         Cluster { gpu, model, n_replicas, policy }
     }
 
-    /// Replay `indices` at `batch`, dispatching batches least-loaded-first.
-    pub fn run(&self, suite: &ReplaySuite, indices: &[usize], batch: usize) -> Result<ClusterMetrics> {
-        let pre_sim = GpuSim::new(self.gpu.clone(), self.policy.prefill_freq(&self.gpu));
-        let dec_sim = GpuSim::new(self.gpu.clone(), self.policy.decode_freq(&self.gpu));
-        let mut kv: Vec<KvCacheManager> = (0..self.n_replicas)
-            .map(|_| KvCacheManager::new(&self.gpu, &self.model))
-            .collect();
-        let mut m = ClusterMetrics {
-            replica_busy_s: vec![0.0; self.n_replicas],
-            ..Default::default()
+    /// Replay `indices` through the fleet engine: every query arrives at
+    /// t = 0, replicas decode up to `max_batch` sequences concurrently,
+    /// dispatch is least-loaded.
+    pub fn run(
+        &self,
+        suite: &ReplaySuite,
+        indices: &[usize],
+        max_batch: usize,
+    ) -> Result<ClusterMetrics> {
+        let cfg = FleetConfig {
+            replicas: vec![
+                ReplicaSpec {
+                    model: self.model.clone(),
+                    policy: self.policy,
+                    live: true,
+                };
+                self.n_replicas
+            ],
+            max_batch,
+            // Offline replay: latency objectives are not under test.
+            slo: Slo::relaxed(),
+            ..FleetConfig::default()
         };
-        for group in Batcher::new(batch).batches(&suite.queries, indices) {
-            // Least-loaded dispatch.
-            let r = (0..self.n_replicas)
-                .min_by(|&a, &b| {
-                    m.replica_busy_s[a]
-                        .partial_cmp(&m.replica_busy_s[b])
-                        .unwrap()
-                })
-                .unwrap();
-            let queries: Vec<&Query> = group.iter().map(|&i| &suite.queries[i]).collect();
-            let seq = queries
-                .iter()
-                .map(|q| token_count(&q.text).max(1))
-                .max()
-                .unwrap();
-            let steps = queries.iter().map(|q| q.output_tokens).max().unwrap();
-            for q in &queries {
-                kv[r].admit(q.id, seq)?;
-            }
-            let passes = if steps == 0 { queries[0].dataset.n_options() } else { 1 };
-            for _ in 0..passes {
-                let res = pre_sim.execute(&prefill_cost(&self.model, queries.len(), seq));
-                m.replica_busy_s[r] += res.latency_s;
-                m.energy_j += res.energy_j;
-            }
-            for s in 0..steps {
-                let res = dec_sim.execute(&decode_step_cost(&self.model, queries.len(), seq + s));
-                m.replica_busy_s[r] += res.latency_s;
-                m.energy_j += res.energy_j;
-            }
-            for q in &queries {
-                kv[r].release(q.id);
-            }
-            m.queries += queries.len();
-        }
-        Ok(m)
+        let fleet = FleetSim::new(self.gpu.clone(), cfg);
+        let arrivals: Vec<Arrival> =
+            indices.iter().map(|&i| Arrival { t_s: 0.0, query_idx: i }).collect();
+        let out = fleet.run(suite, &arrivals, &mut LeastLoaded)?;
+        Ok(ClusterMetrics {
+            replica_busy_s: out.replicas.iter().map(|r| r.busy_s).collect(),
+            energy_j: out.energy_j,
+            queries: out.served,
+        })
     }
 }
 
@@ -132,16 +121,19 @@ mod tests {
     }
 
     #[test]
-    fn replicas_cut_makespan_not_energy() {
+    fn replicas_cut_makespan_at_bounded_energy_overhead() {
         let one = run_with(1);
         let four = run_with(4);
         assert_eq!(one.queries, four.queries);
-        // Energy is work-proportional: unchanged by parallelism.
-        assert!((four.energy_j / one.energy_j - 1.0).abs() < 0.01);
+        // Splitting the stream lowers decode occupancy per replica, so
+        // energy may rise — but only by the occupancy-fragmentation
+        // overhead, never collapse or explode.
+        let ratio = four.energy_j / one.energy_j;
+        assert!((0.95..1.40).contains(&ratio), "energy ratio {ratio:.3}");
         // Makespan scales down with decent efficiency.
         let speedup = one.makespan_s() / four.makespan_s();
-        assert!(speedup > 2.5, "speedup {speedup:.2} with 4 replicas");
-        assert!(four.balance() > 0.6, "balance {:.2}", four.balance());
+        assert!(speedup > 2.0, "speedup {speedup:.2} with 4 replicas");
+        assert!(four.balance() > 0.5, "balance {:.2}", four.balance());
     }
 
     #[test]
@@ -150,5 +142,13 @@ mod tests {
         assert_eq!(one.replica_busy_s.len(), 1);
         assert!(one.throughput_qps() > 0.0);
         assert!((one.balance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let a = run_with(2);
+        let b = run_with(2);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.replica_busy_s, b.replica_busy_s);
     }
 }

@@ -131,7 +131,10 @@ pub fn ablation_cluster(ctx: &Context) -> Result<Report> {
             format!("{:.2}", m.throughput_qps()),
         ]);
     }
-    r.note("energy is work-proportional (identical across replica counts); makespan scales with balance quality");
+    r.note(
+        "runs through the fleet engine: makespan scales with balance quality; energy \
+         rises slightly with replica count (lower decode occupancy per replica)",
+    );
     Ok(r)
 }
 

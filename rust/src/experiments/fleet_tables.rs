@@ -1,0 +1,178 @@
+//! Fleet serving comparison: monolithic-large vs routed heterogeneous
+//! deployments × static vs governed DVFS, online.
+//!
+//! Section VII of the paper multiplies the savings of workload-aware model
+//! selection (Table XV) and phase-aware DVFS (Table XI) *offline*, as an
+//! upper bound. This experiment runs the combination as a closed loop: a
+//! mixed-difficulty arrival stream hits a four-replica fleet through a
+//! live router while each replica's governor chases its own SLO pressure.
+//! Per-request energy comes from the attribution ledger, so the table can
+//! report joules/request as a distribution (mean and p99), not a ratio of
+//! aggregates. Deterministic in [`FLEET_SEED`].
+
+use anyhow::Result;
+
+use crate::config::model::model_for_tier;
+use crate::config::ModelTier;
+use crate::coordinator::DvfsPolicy;
+use crate::fleet::{DifficultyTiered, EnergyAware, FleetConfig, FleetRouter, FleetSim, LeastLoaded};
+use crate::quality::QualityModel;
+use crate::serve::TrafficPattern;
+
+use super::context::Context;
+use super::report::{pct0, Report};
+
+/// Master seed for the fleet arrival streams.
+pub const FLEET_SEED: u64 = 0xF1EE7;
+
+/// Requests simulated per (scenario, deployment) cell.
+const REQUESTS: usize = 160;
+
+/// Small/large tiers of the routed deployments (the paper's Table XV
+/// routing condensed to two tiers, as in `coordinator::Router`).
+const SMALL: ModelTier = ModelTier::B3;
+const LARGE: ModelTier = ModelTier::B14;
+
+/// Replicas per deployment (monolithic: 4 large; routed: 2 small + 2 large).
+const N_LARGE_ONLY: usize = 4;
+const N_SPLIT: usize = 2;
+
+/// Traffic scenarios, calibrated under the four-replica fleet's capacity so
+/// the comparison measures policy, not collapse.
+pub fn scenarios() -> Vec<(&'static str, TrafficPattern)> {
+    vec![
+        ("steady", TrafficPattern::Poisson { rps: 6.0 }),
+        (
+            "bursty",
+            TrafficPattern::Bursty { base_rps: 3.0, burst_rps: 10.0, mean_dwell_s: 3.0 },
+        ),
+    ]
+}
+
+/// The compared deployments: (name, fleet config, router).
+pub fn deployments(ctx: &Context) -> Vec<(String, FleetConfig, Box<dyn FleetRouter>)> {
+    let stat = DvfsPolicy::baseline(&ctx.gpu);
+    let gov = DvfsPolicy::governed(&ctx.gpu);
+    let mono = |p| FleetConfig::homogeneous(model_for_tier(LARGE), N_LARGE_ONLY, p);
+    let split = |p| FleetConfig::tiered(SMALL, N_SPLIT, LARGE, N_SPLIT, p);
+    let ll = || Box::new(LeastLoaded) as Box<dyn FleetRouter>;
+    vec![
+        ("monolithic-14B·static".into(), mono(stat), ll()),
+        ("monolithic-14B·governed".into(), mono(gov), ll()),
+        ("routed-3B/14B·static".into(), split(stat), Box::new(DifficultyTiered::default())),
+        ("routed-3B/14B·governed".into(), split(gov), Box::new(DifficultyTiered::default())),
+        ("energy-routed·governed".into(), split(gov), Box::new(EnergyAware::default())),
+    ]
+}
+
+/// The comparison table: attributed joules/request (mean + p99), tail
+/// latency, SLO attainment, and served quality per deployment.
+pub fn fleet_table(ctx: &Context) -> Result<Report> {
+    let qm = QualityModel::new();
+    let mut r = Report::new(
+        "fleet-serve",
+        "Heterogeneous fleet: routing x DVFS co-design under traffic",
+        &[
+            "Scenario", "Deployment", "Router", "Energy (J)", "J/req", "J/req p99",
+            "vs mono-static", "E2E p99 (s)", "SLO attain", "Quality", "Switches",
+        ],
+    );
+    for (si, (scenario, pattern)) in scenarios().into_iter().enumerate() {
+        let arrivals = pattern.generate(&ctx.suite, REQUESTS, FLEET_SEED ^ ((si as u64) << 8));
+        let mut base_jreq = None;
+        for (di, (name, cfg, mut router)) in deployments(ctx).into_iter().enumerate() {
+            let sim = FleetSim::new(ctx.gpu.clone(), cfg);
+            let label = router.label();
+            let o = sim.run(&ctx.suite, &arrivals, router.as_mut())?;
+            // Quality of what was actually served: each request sampled on
+            // the tier of the replica that decoded it.
+            let quality: f64 = arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    let tier = o.replicas[o.routed[i]].tier;
+                    let q = &ctx.suite.queries[a.query_idx];
+                    qm.sample(q, &ctx.suite.features[a.query_idx], tier)
+                })
+                .sum::<f64>()
+                / arrivals.len() as f64;
+            let jreq = o.attributed_joules_per_request();
+            let base = *base_jreq.get_or_insert(jreq);
+            r.row(vec![
+                scenario.to_string(),
+                name,
+                label,
+                format!("{:.0}", o.total_j()),
+                format!("{jreq:.1}"),
+                format!("{:.1}", o.attributed_joules_per_request_quantile(0.99)),
+                if di == 0 { "-".to_string() } else { pct0(100.0 * (1.0 - jreq / base)) },
+                format!("{:.2}", o.slo.e2e_p99()),
+                pct0(100.0 * o.slo.attainment()),
+                format!("{quality:.3}"),
+                o.freq_switches.to_string(),
+            ]);
+        }
+    }
+    r.note(format!(
+        "{REQUESTS} requests/cell over the full dataset mix; 4 replicas per deployment; \
+         J/req is per-request attributed energy (prefill+decode+switch+idle)"
+    ));
+    r.note(
+        "monolithic = 4x14B least-loaded; routed = 2x3B + 2x14B difficulty-tiered; \
+         energy-routed = same fleet, joules/token-aware routing",
+    );
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::quick(127, 40)
+    }
+
+    #[test]
+    fn table_has_all_cells_and_is_deterministic() {
+        let c = ctx();
+        let a = fleet_table(&c).unwrap();
+        assert_eq!(a.rows.len(), scenarios().len() * deployments(&c).len());
+        let b = fleet_table(&c).unwrap();
+        assert_eq!(a.csv(), b.csv());
+    }
+
+    #[test]
+    fn routed_governed_beats_monolithic_static_within_slo() {
+        // The PR's acceptance bar, per scenario: lower attributed J/req at
+        // equal (within-target) p99 SLO attainment.
+        let c = ctx();
+        for (si, (scenario, pattern)) in scenarios().into_iter().enumerate() {
+            let arrivals =
+                pattern.generate(&c.suite, REQUESTS, FLEET_SEED ^ ((si as u64) << 8));
+            let mut deps = deployments(&c);
+            let (_, mono_cfg, mut mono_router) = deps.remove(0);
+            let (_, routed_cfg, mut routed_router) = deps.remove(2); // routed-governed
+            let slo = mono_cfg.slo;
+            let mono = FleetSim::new(c.gpu.clone(), mono_cfg)
+                .run(&c.suite, &arrivals, mono_router.as_mut())
+                .unwrap();
+            let routed = FleetSim::new(c.gpu.clone(), routed_cfg)
+                .run(&c.suite, &arrivals, routed_router.as_mut())
+                .unwrap();
+            assert!(
+                routed.attributed_joules_per_request() < mono.attributed_joules_per_request(),
+                "{scenario}: routed {:.1} J/req vs mono {:.1} J/req",
+                routed.attributed_joules_per_request(),
+                mono.attributed_joules_per_request()
+            );
+            for (name, o) in [("mono", &mono), ("routed", &routed)] {
+                assert!(
+                    o.slo.e2e_p99() <= slo.e2e_p99_s,
+                    "{scenario}/{name}: p99 {:.2}s over the {:.1}s SLO",
+                    o.slo.e2e_p99(),
+                    slo.e2e_p99_s
+                );
+            }
+        }
+    }
+}

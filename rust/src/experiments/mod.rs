@@ -7,6 +7,7 @@ pub mod casestudy;
 pub mod context;
 pub mod dvfs_tables;
 pub mod figures;
+pub mod fleet_tables;
 pub mod quality_tables;
 pub mod report;
 pub mod runner;

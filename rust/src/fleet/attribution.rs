@@ -1,0 +1,197 @@
+//! Per-request energy attribution.
+//!
+//! A replica's power meter reads one number for the whole device, but a
+//! serving bill needs joules per *request*. The ledger splits measured
+//! energy across co-batched requests by phase, following how each phase
+//! actually shares the hardware:
+//!
+//! - **prefill**: each admission prefill runs for exactly one sequence, so
+//!   its energy is charged wholly to that request (attribution "by tokens
+//!   processed" — the step processes only that request's tokens);
+//! - **decode**: every co-batched sequence emits one token per step, so a
+//!   step's energy splits equally across the batch ("by tokens generated");
+//! - **switch**: a DVFS transition benefits the phase step that follows it
+//!   and is split across that step's requests;
+//! - **idle**: draw while a replica waits for arrivals is amortized equally
+//!   across the requests that replica ultimately served.
+//!
+//! Every split is exact by construction, so attributed energy sums back to
+//! the measured total — the conservation property the proptest suite and
+//! `examples/fleet_serve.rs` assert to 1e-6 relative error.
+
+/// Attributed energy of one request (or an aggregate of requests), by phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseEnergy {
+    /// Energy of this request's prefill passes, joules.
+    pub prefill_j: f64,
+    /// This request's share of co-batched decode steps, joules.
+    pub decode_j: f64,
+    /// This request's share of DVFS switch transitions, joules.
+    pub switch_j: f64,
+    /// This request's amortized share of replica idle draw, joules.
+    pub idle_j: f64,
+}
+
+impl PhaseEnergy {
+    /// Total attributed energy, joules.
+    pub fn total_j(&self) -> f64 {
+        self.prefill_j + self.decode_j + self.switch_j + self.idle_j
+    }
+
+    /// Accumulate another breakdown into this one.
+    pub fn add(&mut self, other: &PhaseEnergy) {
+        self.prefill_j += other.prefill_j;
+        self.decode_j += other.decode_j;
+        self.switch_j += other.switch_j;
+        self.idle_j += other.idle_j;
+    }
+
+    /// Active (policy-controlled) energy: everything but idle.
+    pub fn active_j(&self) -> f64 {
+        self.prefill_j + self.decode_j + self.switch_j
+    }
+}
+
+/// The attribution ledger: one [`PhaseEnergy`] account per request,
+/// indexed by arrival order.
+#[derive(Debug, Clone)]
+pub struct EnergyLedger {
+    per_request: Vec<PhaseEnergy>,
+}
+
+impl EnergyLedger {
+    /// A ledger with `n_requests` zeroed accounts.
+    pub fn new(n_requests: usize) -> EnergyLedger {
+        EnergyLedger { per_request: vec![PhaseEnergy::default(); n_requests] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.per_request.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_request.is_empty()
+    }
+
+    /// Charge one prefill pass to `req`.
+    pub fn charge_prefill(&mut self, req: usize, energy_j: f64) {
+        self.per_request[req].prefill_j += energy_j;
+    }
+
+    /// Split one decode step equally across the co-batched requests
+    /// (each generated exactly one token this step).
+    pub fn charge_decode(&mut self, reqs: &[usize], energy_j: f64) {
+        assert!(!reqs.is_empty(), "decode energy with no requests to charge");
+        let share = energy_j / reqs.len() as f64;
+        for &r in reqs {
+            self.per_request[r].decode_j += share;
+        }
+    }
+
+    /// Split one DVFS switch across the requests of the following step.
+    pub fn charge_switch(&mut self, reqs: &[usize], energy_j: f64) {
+        assert!(!reqs.is_empty(), "switch energy with no requests to charge");
+        let share = energy_j / reqs.len() as f64;
+        for &r in reqs {
+            self.per_request[r].switch_j += share;
+        }
+    }
+
+    /// Amortize a replica's idle draw equally across the requests it served.
+    pub fn charge_idle(&mut self, reqs: &[usize], energy_j: f64) {
+        if energy_j == 0.0 {
+            return;
+        }
+        assert!(!reqs.is_empty(), "idle energy with no served requests to amortize over");
+        let share = energy_j / reqs.len() as f64;
+        for &r in reqs {
+            self.per_request[r].idle_j += share;
+        }
+    }
+
+    /// One request's attributed breakdown.
+    pub fn request(&self, req: usize) -> PhaseEnergy {
+        self.per_request[req]
+    }
+
+    /// Attributed total per request, in arrival order.
+    pub fn joules(&self) -> Vec<f64> {
+        self.per_request.iter().map(|p| p.total_j()).collect()
+    }
+
+    /// Sum of all accounts (the conservation check's left-hand side).
+    pub fn totals(&self) -> PhaseEnergy {
+        let mut t = PhaseEnergy::default();
+        for p in &self.per_request {
+            t.add(p);
+        }
+        t
+    }
+
+    /// Sum over a subset of requests (per-replica conservation checks).
+    pub fn total_for(&self, reqs: &[usize]) -> f64 {
+        reqs.iter().map(|&r| self.per_request[r].total_j()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_sum_back_to_charges() {
+        let mut led = EnergyLedger::new(4);
+        led.charge_prefill(0, 10.0);
+        led.charge_decode(&[0, 1, 2], 9.0);
+        led.charge_switch(&[1, 2], 1.0);
+        led.charge_idle(&[0, 1, 2, 3], 2.0);
+        let t = led.totals();
+        assert!((t.prefill_j - 10.0).abs() < 1e-12);
+        assert!((t.decode_j - 9.0).abs() < 1e-12);
+        assert!((t.switch_j - 1.0).abs() < 1e-12);
+        assert!((t.idle_j - 2.0).abs() < 1e-12);
+        assert!((t.total_j() - 22.0).abs() < 1e-12);
+        assert!((led.joules().iter().sum::<f64>() - 22.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_split_is_equal_per_token() {
+        let mut led = EnergyLedger::new(3);
+        led.charge_decode(&[0, 1, 2], 6.0);
+        for r in 0..3 {
+            assert!((led.request(r).decode_j - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn active_excludes_idle() {
+        let mut led = EnergyLedger::new(1);
+        led.charge_prefill(0, 3.0);
+        led.charge_idle(&[0], 5.0);
+        let p = led.request(0);
+        assert!((p.active_j() - 3.0).abs() < 1e-12);
+        assert!((p.total_j() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_idle_needs_no_recipients() {
+        let mut led = EnergyLedger::new(1);
+        led.charge_idle(&[], 0.0); // no-op, must not panic
+        assert_eq!(led.totals(), PhaseEnergy::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "no served requests")]
+    fn idle_with_no_recipients_panics() {
+        EnergyLedger::new(1).charge_idle(&[], 1.0);
+    }
+
+    #[test]
+    fn total_for_subset() {
+        let mut led = EnergyLedger::new(3);
+        led.charge_prefill(0, 1.0);
+        led.charge_prefill(1, 2.0);
+        led.charge_prefill(2, 4.0);
+        assert!((led.total_for(&[0, 2]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,421 @@
+//! The heterogeneous fleet simulator.
+//!
+//! A discrete-event engine over N replicas (possibly different model
+//! tiers, each under its own frequency governor) fed by one arrival
+//! stream through a pluggable [`FleetRouter`]. The engine interleaves two
+//! event kinds on the simulated clock:
+//!
+//! - **arrival**: the router reads every replica's live status (backlog,
+//!   telemetry-window power, joules/token) and binds the request to
+//!   exactly one live replica;
+//! - **replica step**: the earliest runnable replica executes one unit of
+//!   work (an admission prefill or a batched decode step) under its own
+//!   governor.
+//!
+//! Arrivals are processed before any replica step at or after their
+//! timestamp, so routing always sees the fleet state as of the arrival
+//! instant — the co-design loop (router reacting to governor-driven power,
+//! governor reacting to router-driven load) the paper's offline Section
+//! VII analysis cannot express.
+
+use anyhow::Result;
+
+use crate::config::{GpuSpec, ModelSpec, ModelTier};
+use crate::coordinator::dvfs_policy::DvfsPolicy;
+use crate::serve::slo::{Slo, SloTracker};
+use crate::serve::traffic::Arrival;
+use crate::stats::exact_quantile;
+use crate::workload::ReplaySuite;
+
+use super::attribution::{EnergyLedger, PhaseEnergy};
+use super::replica::{Replica, ReplicaSpec};
+use super::router::FleetRouter;
+
+/// Fleet composition and serving parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub replicas: Vec<ReplicaSpec>,
+    /// Maximum sequences decoding concurrently per replica.
+    pub max_batch: usize,
+    pub slo: Slo,
+    /// Telemetry window horizon fed to each governor, seconds.
+    pub window_s: f64,
+}
+
+impl FleetConfig {
+    /// `n` identical replicas of `model` under one policy.
+    pub fn homogeneous(model: ModelSpec, n: usize, policy: DvfsPolicy) -> FleetConfig {
+        assert!(n >= 1);
+        FleetConfig {
+            replicas: vec![ReplicaSpec { model, policy, live: true }; n],
+            ..FleetConfig::default()
+        }
+    }
+
+    /// A two-tier fleet: `n_small` small-tier plus `n_large` large-tier
+    /// replicas, all under one policy (the Section VII deployment shape).
+    pub fn tiered(
+        small: ModelTier,
+        n_small: usize,
+        large: ModelTier,
+        n_large: usize,
+        policy: DvfsPolicy,
+    ) -> FleetConfig {
+        assert!(n_small + n_large >= 1);
+        let mut replicas = Vec::with_capacity(n_small + n_large);
+        for _ in 0..n_small {
+            replicas.push(ReplicaSpec::tiered(small, policy));
+        }
+        for _ in 0..n_large {
+            replicas.push(ReplicaSpec::tiered(large, policy));
+        }
+        FleetConfig { replicas, ..FleetConfig::default() }
+    }
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: Vec::new(),
+            max_batch: 8,
+            slo: Slo::interactive(),
+            window_s: 2.0,
+        }
+    }
+}
+
+/// Post-run summary of one replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaOutcome {
+    pub tier: ModelTier,
+    pub policy_label: String,
+    pub live: bool,
+    pub served: usize,
+    pub tokens_out: u64,
+    /// Busy (prefill + decode + switch) time, seconds.
+    pub busy_s: f64,
+    /// Active energy, joules.
+    pub energy_j: f64,
+    pub idle_j: f64,
+    pub switch_j: f64,
+    pub freq_switches: usize,
+    pub mean_decode_freq_mhz: f64,
+}
+
+/// Aggregate outcome of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub served: usize,
+    /// Active energy across the fleet (prefill + decode + switch), joules.
+    pub energy_j: f64,
+    /// Idle draw while replicas waited for routed arrivals, joules.
+    pub idle_j: f64,
+    /// Energy charged to DVFS transitions (subset of `energy_j`).
+    pub switch_j: f64,
+    /// Time the last request finished, seconds.
+    pub makespan_s: f64,
+    pub freq_switches: usize,
+    /// Fleet-level streaming SLO percentiles + attainment.
+    pub slo: SloTracker,
+    /// Attributed total energy per request, indexed by arrival order.
+    pub joules: Vec<f64>,
+    /// Fleet-wide attributed energy by phase (sums to `total_j()`).
+    pub breakdown: PhaseEnergy,
+    /// Which replica served each arrival.
+    pub routed: Vec<usize>,
+    pub replicas: Vec<ReplicaOutcome>,
+}
+
+impl FleetOutcome {
+    /// Active + idle energy, joules.
+    pub fn total_j(&self) -> f64 {
+        self.energy_j + self.idle_j
+    }
+
+    /// Mean *attributed* energy per request — active plus amortized idle,
+    /// the full per-request bill. Named explicitly because
+    /// [`crate::serve::ServeOutcome::joules_per_request`] is active-only;
+    /// compare that against [`Self::active_joules_per_request`] instead.
+    pub fn attributed_joules_per_request(&self) -> f64 {
+        self.total_j() / self.served.max(1) as f64
+    }
+
+    /// Mean *active* energy per request (comparable to
+    /// [`crate::serve::ServeOutcome::joules_per_request`]).
+    pub fn active_joules_per_request(&self) -> f64 {
+        self.energy_j / self.served.max(1) as f64
+    }
+
+    /// Quantile of the per-request attributed energy distribution.
+    pub fn attributed_joules_per_request_quantile(&self, p: f64) -> f64 {
+        exact_quantile(&self.joules, p)
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.served as f64 / self.makespan_s.max(1e-12)
+    }
+}
+
+/// The fleet engine.
+pub struct FleetSim {
+    pub gpu: GpuSpec,
+    pub cfg: FleetConfig,
+}
+
+impl FleetSim {
+    pub fn new(gpu: GpuSpec, cfg: FleetConfig) -> FleetSim {
+        assert!(!cfg.replicas.is_empty(), "fleet needs at least one replica");
+        assert!(cfg.replicas.iter().any(|r| r.live), "fleet needs at least one live replica");
+        assert!(cfg.max_batch >= 1);
+        FleetSim { gpu, cfg }
+    }
+
+    /// Serve `arrivals` through `router`. Deterministic: identical inputs
+    /// replay identical outcomes bit-for-bit.
+    pub fn run(
+        &self,
+        suite: &ReplaySuite,
+        arrivals: &[Arrival],
+        router: &mut dyn FleetRouter,
+    ) -> Result<FleetOutcome> {
+        let mut reps: Vec<Replica> = self
+            .cfg
+            .replicas
+            .iter()
+            .map(|spec| Replica::new(&self.gpu, spec.clone(), self.cfg.slo, self.cfg.window_s))
+            .collect();
+        let mut ledger = EnergyLedger::new(arrivals.len());
+        let mut fleet_tracker = SloTracker::new(self.cfg.slo);
+        let mut routed = vec![usize::MAX; arrivals.len()];
+        let mut statuses = Vec::with_capacity(reps.len());
+        let mut next = 0usize;
+
+        loop {
+            // Earliest runnable replica clock (work that would start next).
+            let t_step = reps
+                .iter()
+                .filter(|r| r.runnable())
+                .map(|r| r.now_s)
+                .fold(f64::INFINITY, f64::min);
+
+            if next < arrivals.len() && arrivals[next].t_s <= t_step {
+                // Route the arrival at its own timestamp, before any step
+                // that would start at or after it.
+                let a = arrivals[next];
+                statuses.clear();
+                statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
+                let choice = router.route(&a, suite.features.get(a.query_idx), &statuses);
+                assert!(
+                    choice < reps.len() && reps[choice].spec.live,
+                    "router {} picked replica {choice}, which is not a live replica",
+                    router.label()
+                );
+                reps[choice].enqueue(next, a);
+                routed[next] = choice;
+                next += 1;
+            } else if t_step.is_finite() {
+                // Step the earliest runnable replica (lowest index on ties).
+                let i = reps
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.runnable())
+                    .min_by(|(_, a), (_, b)| a.now_s.partial_cmp(&b.now_s).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                reps[i].step(suite, self.cfg.max_batch, &mut ledger, &mut fleet_tracker)?;
+            } else {
+                break; // no arrivals left, nothing in flight
+            }
+        }
+
+        let mut out = FleetOutcome {
+            served: 0,
+            energy_j: 0.0,
+            idle_j: 0.0,
+            switch_j: 0.0,
+            makespan_s: 0.0,
+            freq_switches: 0,
+            slo: fleet_tracker,
+            joules: Vec::new(),
+            breakdown: PhaseEnergy::default(),
+            routed,
+            replicas: Vec::with_capacity(reps.len()),
+        };
+        for rep in reps.iter_mut() {
+            rep.finalize(&mut ledger);
+            out.served += rep.served;
+            out.energy_j += rep.energy_j;
+            out.idle_j += rep.idle_j;
+            out.switch_j += rep.switch_j;
+            out.freq_switches += rep.freq_switches;
+            out.makespan_s = out.makespan_s.max(rep.last_finish_s);
+            out.replicas.push(ReplicaOutcome {
+                tier: rep.spec.model.tier,
+                policy_label: rep.spec.policy.label(),
+                live: rep.spec.live,
+                served: rep.served,
+                tokens_out: rep.tokens_out,
+                busy_s: rep.busy_s,
+                energy_j: rep.energy_j,
+                idle_j: rep.idle_j,
+                switch_j: rep.switch_j,
+                freq_switches: rep.freq_switches,
+                mean_decode_freq_mhz: rep.mean_decode_freq_mhz(),
+            });
+        }
+        out.joules = ledger.joules();
+        out.breakdown = ledger.totals();
+        debug_assert!(
+            (out.breakdown.total_j() - out.total_j()).abs() <= 1e-6 * out.total_j().max(1e-12),
+            "attribution lost energy: {} vs {}",
+            out.breakdown.total_j(),
+            out.total_j()
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::model_for_tier;
+    use crate::fleet::router::{DifficultyTiered, EnergyAware, LeastLoaded, RoundRobin};
+    use crate::serve::TrafficPattern;
+
+    fn suite() -> ReplaySuite {
+        ReplaySuite::quick(91, 16)
+    }
+
+    fn arrivals(s: &ReplaySuite, n: usize) -> Vec<Arrival> {
+        TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 }
+            .generate(s, n, 0xF1EE7)
+    }
+
+    fn tiered_cfg(policy: DvfsPolicy) -> FleetConfig {
+        FleetConfig::tiered(ModelTier::B1, 2, ModelTier::B8, 2, policy)
+    }
+
+    #[test]
+    fn serves_everything_and_conserves_energy_under_every_router() {
+        let s = suite();
+        let arr = arrivals(&s, 48);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let sim = FleetSim::new(gpu.clone(), tiered_cfg(DvfsPolicy::governed(&gpu)));
+        let routers: Vec<Box<dyn FleetRouter>> = vec![
+            Box::new(RoundRobin::default()),
+            Box::new(LeastLoaded),
+            Box::new(DifficultyTiered::default()),
+            Box::new(EnergyAware::default()),
+        ];
+        for mut router in routers {
+            let o = sim.run(&s, &arr, router.as_mut()).unwrap();
+            assert_eq!(o.served, arr.len(), "{}", router.label());
+            assert_eq!(o.slo.completed(), arr.len());
+            assert_eq!(o.joules.len(), arr.len());
+            assert!(o.routed.iter().all(|&r| r < 4), "{}", router.label());
+            let attributed: f64 = o.joules.iter().sum();
+            let rel = (attributed - o.total_j()).abs() / o.total_j();
+            assert!(rel < 1e-6, "{}: conservation off by {rel:e}", router.label());
+            // The last arrival finishes after it arrives.
+            assert!(o.makespan_s >= arr.last().unwrap().t_s);
+            assert!(o.energy_j > 0.0 && o.switch_j <= o.energy_j);
+        }
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let s = suite();
+        let arr = arrivals(&s, 32);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let sim = FleetSim::new(gpu.clone(), tiered_cfg(DvfsPolicy::governed(&gpu)));
+        let a = sim.run(&s, &arr, &mut DifficultyTiered::default()).unwrap();
+        let b = sim.run(&s, &arr, &mut DifficultyTiered::default()).unwrap();
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.joules, b.joules);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn difficulty_router_sends_hard_queries_to_the_large_tier() {
+        let s = suite();
+        let arr = arrivals(&s, 48);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let sim = FleetSim::new(gpu.clone(), tiered_cfg(DvfsPolicy::baseline(&gpu)));
+        let mut router = DifficultyTiered::default();
+        let o = sim.run(&s, &arr, &mut router).unwrap();
+        for (i, a) in arr.iter().enumerate() {
+            let hard = router.is_hard(&s.features[a.query_idx]);
+            let tier = sim.cfg.replicas[o.routed[i]].model.tier;
+            if hard {
+                assert_eq!(tier, ModelTier::B8, "hard query {i} routed to {tier:?}");
+            } else {
+                assert_eq!(tier, ModelTier::B1, "easy query {i} routed to {tier:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dead_replicas_hold_no_traffic() {
+        let s = suite();
+        let arr = arrivals(&s, 24);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let mut cfg =
+            FleetConfig::homogeneous(model_for_tier(ModelTier::B1), 3, DvfsPolicy::Static(2842));
+        cfg.replicas[1].live = false;
+        let sim = FleetSim::new(gpu, cfg);
+        let o = sim.run(&s, &arr, &mut RoundRobin::default()).unwrap();
+        assert_eq!(o.served, arr.len());
+        assert!(o.routed.iter().all(|&r| r != 1));
+        assert_eq!(o.replicas[1].served, 0);
+        assert_eq!(o.replicas[1].energy_j, 0.0);
+    }
+
+    #[test]
+    fn more_replicas_cut_makespan_under_load() {
+        let s = suite();
+        // A slam of simultaneous arrivals: parallelism must help makespan.
+        let arr: Vec<Arrival> =
+            (0..32).map(|i| Arrival { t_s: 0.0, query_idx: i % s.len() }).collect();
+        let gpu = GpuSpec::rtx_pro_6000();
+        let run = |n: usize| {
+            let cfg = FleetConfig::homogeneous(
+                model_for_tier(ModelTier::B3),
+                n,
+                DvfsPolicy::Static(2842),
+            );
+            FleetSim::new(gpu.clone(), cfg)
+                .run(&s, &arr, &mut LeastLoaded)
+                .unwrap()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.served, four.served);
+        assert!(
+            one.makespan_s / four.makespan_s > 2.0,
+            "speedup {:.2}",
+            one.makespan_s / four.makespan_s
+        );
+    }
+
+    #[test]
+    fn governed_fleet_saves_energy_vs_static_within_slo() {
+        let s = suite();
+        let arr = arrivals(&s, 64);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let cfg = |p| FleetConfig::homogeneous(model_for_tier(ModelTier::B8), 2, p);
+        let stat = FleetSim::new(gpu.clone(), cfg(DvfsPolicy::baseline(&gpu)))
+            .run(&s, &arr, &mut LeastLoaded)
+            .unwrap();
+        let gov = FleetSim::new(gpu.clone(), cfg(DvfsPolicy::governed(&gpu)))
+            .run(&s, &arr, &mut LeastLoaded)
+            .unwrap();
+        let savings = 1.0 - gov.energy_j / stat.energy_j;
+        assert!(savings > 0.15, "governed fleet savings {savings:.3}");
+        assert!(
+            gov.slo.e2e_p99() <= gov.slo.slo.e2e_p99_s,
+            "governed p99 {:.2}s over SLO",
+            gov.slo.e2e_p99()
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Heterogeneous governed fleets: routing × DVFS co-design, online.
+//!
+//! The paper's Section VII combines workload-aware model selection with
+//! phase-aware DVFS *offline*, as an upper bound. This layer runs the
+//! combination as a closed loop under real traffic:
+//!
+//! - [`replica`]: one serving device — its own model tier, frequency
+//!   governor, KV cache, admission queue, and telemetry window — advanced
+//!   event-by-event so N replicas interleave on one simulated clock;
+//! - [`router`]: pluggable arrival routing over live replica state
+//!   (round-robin, least-loaded, semantic-difficulty tiering, and
+//!   energy-per-token-aware selection);
+//! - [`engine`]: the discrete-event fleet simulator binding them together;
+//! - [`attribution`]: per-request energy attribution — each replica's
+//!   measured joules split across co-batched requests by phase (prefill by
+//!   tokens processed, decode by tokens generated, idle amortized), exact
+//!   by construction.
+//!
+//! `ewatt fleet` and `examples/fleet_serve.rs` reproduce the Section VII
+//! comparison (monolithic-large vs routed fleet × static vs governed DVFS)
+//! as an online result; `coordinator::Cluster` replays its offline
+//! workloads through the same engine.
+
+pub mod attribution;
+pub mod engine;
+pub mod replica;
+pub mod router;
+
+pub use attribution::{EnergyLedger, PhaseEnergy};
+pub use engine::{FleetConfig, FleetOutcome, FleetSim, ReplicaOutcome};
+pub use replica::{Replica, ReplicaSpec};
+pub use router::{
+    DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,
+};

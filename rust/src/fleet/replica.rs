@@ -1,0 +1,497 @@
+//! One governed serving replica inside a fleet.
+//!
+//! Each replica is a self-contained serving device: its own simulated GPU,
+//! frequency governor, KV-cache manager, admission queue, SLO tracker, and
+//! telemetry window — the same iteration-level batching discipline as
+//! [`crate::serve::ServeSim`], but advanced event-by-event by the fleet
+//! engine so replicas interleave correctly on the shared simulated clock.
+//! One `step()` call executes exactly one unit of work (one admission
+//! prefill or one batched decode step), which is the granularity arrivals
+//! can be routed between.
+//!
+//! Unlike `ServeSim` (a generation-workload loop that treats every request
+//! as ≥ 1 decode token), the replica inherits the offline engines'
+//! classification semantics: zero-output queries are scored with one
+//! prefill pass per answer option and complete at admission, with no
+//! decode phase — so `coordinator::Cluster` replays full mixed suites
+//! through the fleet engine faithfully. It also gates admission on KV-cache
+//! capacity, which `ServeSim` does not model.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::config::model::model_for_tier;
+use crate::config::{FreqMHz, GpuSpec, ModelSpec, ModelTier};
+use crate::coordinator::dvfs_policy::{DvfsPolicy, Phase};
+use crate::engine::KvCacheManager;
+use crate::gpu::{GpuSim, TelemetryWindow};
+use crate::perf::{decode_step_cost, prefill_cost};
+use crate::serve::governor::{
+    FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop,
+};
+use crate::serve::slo::{Slo, SloTracker};
+use crate::serve::traffic::Arrival;
+use crate::text::tokenizer::token_count;
+use crate::workload::ReplaySuite;
+
+use super::attribution::EnergyLedger;
+use super::router::ReplicaStatus;
+
+/// Static description of one fleet member.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    /// The model this replica serves (fleets may mix tiers).
+    pub model: ModelSpec,
+    /// Frequency policy: `Governed` bands run the closed-loop hysteresis
+    /// controller; anything else runs open-loop.
+    pub policy: DvfsPolicy,
+    /// Dead replicas hold no traffic (router invariant fodder).
+    pub live: bool,
+}
+
+impl ReplicaSpec {
+    /// A live replica serving one of the paper's model tiers.
+    pub fn tiered(tier: ModelTier, policy: DvfsPolicy) -> ReplicaSpec {
+        ReplicaSpec { model: model_for_tier(tier), policy, live: true }
+    }
+}
+
+/// One queued request (arrival plus its fleet-wide request index).
+#[derive(Debug, Clone, Copy)]
+struct Queued {
+    req: usize,
+    arrival: Arrival,
+}
+
+/// One decoding sequence.
+struct ActiveSeq {
+    req: usize,
+    arrival_s: f64,
+    first_token_s: f64,
+    tokens: usize,
+    remaining: usize,
+    ctx: usize,
+}
+
+/// EWMA weight for the live joules/token estimate (per decode step).
+const J_PER_TOKEN_ALPHA: f64 = 0.2;
+
+/// A replica's mutable serving state.
+pub struct Replica {
+    pub spec: ReplicaSpec,
+    gpu: GpuSim,
+    gov: Box<dyn FreqGovernor>,
+    wants_signal: bool,
+    kv: KvCacheManager,
+    queue: VecDeque<Queued>,
+    active: Vec<ActiveSeq>,
+    /// This replica's local clock, seconds.
+    pub now_s: f64,
+    /// Per-replica SLO tracker (feeds this replica's governor).
+    pub tracker: SloTracker,
+    window: TelemetryWindow,
+    /// Completion time of the last request this replica finished.
+    pub last_finish_s: f64,
+
+    // Accounting.
+    pub busy_s: f64,
+    pub energy_j: f64,
+    pub idle_j: f64,
+    pub switch_j: f64,
+    pub freq_switches: usize,
+    pub served: usize,
+    pub tokens_out: u64,
+    served_reqs: Vec<usize>,
+    decode_freq_dt: f64,
+    decode_dt: f64,
+    j_per_token_ewma: f64,
+    /// Cold-start joules/token prior, precomputed at construction — the
+    /// router reads replica status on every arrival, and evaluating the
+    /// roofline model there would put it on the routing hot path.
+    cold_j_per_token: f64,
+    /// Scratch buffer of in-flight request ids (attribution hot path).
+    req_scratch: Vec<usize>,
+}
+
+impl Replica {
+    pub fn new(gpu: &GpuSpec, spec: ReplicaSpec, slo: Slo, window_s: f64) -> Replica {
+        let gov: Box<dyn FreqGovernor> = match spec.policy {
+            DvfsPolicy::Governed { floor, ceil } => {
+                Box::new(HysteresisGovernor::new(gpu, GovernorConfig::banded(gpu, floor, ceil)))
+            }
+            open => Box::new(OpenLoop(open)),
+        };
+        let wants_signal = gov.wants_signal();
+        let kv = KvCacheManager::new(gpu, &spec.model);
+        let f0 = spec.policy.prefill_freq(gpu);
+        let gpu_sim = GpuSim::new(gpu.clone(), f0);
+        let cold_j_per_token = gpu_sim.execute(&decode_step_cost(&spec.model, 1, 256)).energy_j;
+        Replica {
+            gpu: gpu_sim,
+            gov,
+            wants_signal,
+            kv,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            now_s: 0.0,
+            tracker: SloTracker::new(slo),
+            window: TelemetryWindow::new(window_s),
+            last_finish_s: 0.0,
+            busy_s: 0.0,
+            energy_j: 0.0,
+            idle_j: 0.0,
+            switch_j: 0.0,
+            freq_switches: 0,
+            served: 0,
+            tokens_out: 0,
+            served_reqs: Vec::new(),
+            decode_freq_dt: 0.0,
+            decode_dt: 0.0,
+            j_per_token_ewma: 0.0,
+            cold_j_per_token,
+            req_scratch: Vec::new(),
+            spec,
+        }
+    }
+
+    /// Whether this replica has work to execute.
+    pub fn runnable(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Time-weighted mean decode set point, MHz.
+    pub fn mean_decode_freq_mhz(&self) -> f64 {
+        if self.decode_dt > 0.0 {
+            self.decode_freq_dt / self.decode_dt
+        } else {
+            0.0
+        }
+    }
+
+    /// Requests this replica completed, by fleet-wide request index.
+    pub fn served_reqs(&self) -> &[usize] {
+        &self.served_reqs
+    }
+
+    /// Live joules per generated token: telemetry-derived EWMA once this
+    /// replica has decoded; the construction-time roofline prior (batch 1
+    /// at the cold-start set point) before that, so energy-aware routing
+    /// can rank replicas from the first arrival without putting a model
+    /// evaluation on the routing hot path.
+    pub fn j_per_token(&self) -> f64 {
+        if self.tokens_out > 0 {
+            self.j_per_token_ewma
+        } else {
+            self.cold_j_per_token
+        }
+    }
+
+    /// Router-facing snapshot.
+    pub fn status(&self, idx: usize) -> ReplicaStatus {
+        ReplicaStatus {
+            idx,
+            live: self.spec.live,
+            tier: self.spec.model.tier,
+            queue_depth: self.queue.len(),
+            active_seqs: self.active.len(),
+            now_s: self.now_s,
+            window_power_w: self.window.mean_power_w(),
+            busy_fraction: self.window.busy_fraction(),
+            j_per_token: self.j_per_token(),
+        }
+    }
+
+    /// Accept one routed arrival. If the replica was idle in the simulated
+    /// past, the wait until `arrival.t_s` is charged at idle power (that
+    /// draw is later amortized over the requests this replica serves).
+    pub fn enqueue(&mut self, req: usize, arrival: Arrival) {
+        assert!(self.spec.live, "routed to a dead replica");
+        if !self.runnable() && self.now_s < arrival.t_s {
+            self.idle_j += (arrival.t_s - self.now_s) * self.gpu.spec.p_idle_w;
+            self.now_s = arrival.t_s;
+        }
+        self.queue.push_back(Queued { req, arrival });
+    }
+
+    fn signal(&self) -> GovernorSignal {
+        if !self.wants_signal {
+            return GovernorSignal::default();
+        }
+        GovernorSignal {
+            pressure: self.tracker.pressure(),
+            queue_depth: self.queue.len(),
+            active_seqs: self.active.len(),
+            completed: self.tracker.completed(),
+            window_power_w: self.window.mean_power_w(),
+        }
+    }
+
+    /// Apply a set-point change, charging the switch latency at idle power
+    /// to the requests of the step that follows.
+    fn switch_to(&mut self, f: FreqMHz, beneficiaries: &[usize], ledger: &mut EnergyLedger) {
+        let dt = self.gpu.set_freq(f);
+        if dt > 0.0 {
+            let e = dt * self.gpu.spec.p_idle_w;
+            self.now_s += dt;
+            self.busy_s += dt;
+            self.energy_j += e;
+            self.switch_j += e;
+            self.freq_switches += 1;
+            ledger.charge_switch(beneficiaries, e);
+        }
+    }
+
+    fn complete(
+        &mut self,
+        req: usize,
+        arrival_s: f64,
+        first_token_s: f64,
+        tokens: usize,
+        fleet: &mut SloTracker,
+    ) {
+        let ttft = first_token_s - arrival_s;
+        let e2e = self.now_s - arrival_s;
+        let tbt = if tokens > 0 { (self.now_s - first_token_s) / tokens as f64 } else { 0.0 };
+        self.tracker.record(ttft, tbt, e2e);
+        fleet.record(ttft, tbt, e2e);
+        self.kv.release(req as u64);
+        self.served += 1;
+        self.served_reqs.push(req);
+        self.last_finish_s = self.now_s;
+    }
+
+    /// Execute one unit of work: admit one queued request (its prefill
+    /// passes), or run one decode step for the active batch. Requests that
+    /// do not fit the KV cache wait until decode drains capacity.
+    pub fn step(
+        &mut self,
+        suite: &ReplaySuite,
+        max_batch: usize,
+        ledger: &mut EnergyLedger,
+        fleet: &mut SloTracker,
+    ) -> Result<()> {
+        debug_assert!(self.runnable(), "step() on an idle replica");
+        if !self.queue.is_empty() && self.active.len() < max_batch {
+            let head = *self.queue.front().unwrap();
+            let q = &suite.queries[head.arrival.query_idx];
+            let input = token_count(&q.text).max(1);
+            // Reserve the full sequence (prompt + output budget) up front.
+            if self.kv.admit(head.req as u64, input + q.output_tokens).is_ok() {
+                self.queue.pop_front();
+                return self.admit(head, input, suite, ledger, fleet);
+            }
+            if self.active.is_empty() {
+                bail!(
+                    "request {} ({} prompt + {} output tokens) cannot fit the \
+                     empty KV cache of a {} replica",
+                    head.req,
+                    input,
+                    q.output_tokens,
+                    self.spec.model.name
+                );
+            }
+            // KV full: fall through and decode until sequences release it.
+        }
+        self.decode_step(ledger, fleet);
+        Ok(())
+    }
+
+    /// Prefill (and, for classification, score) one admitted request.
+    fn admit(
+        &mut self,
+        head: Queued,
+        input: usize,
+        suite: &ReplaySuite,
+        ledger: &mut EnergyLedger,
+        fleet: &mut SloTracker,
+    ) -> Result<()> {
+        let q = &suite.queries[head.arrival.query_idx];
+        let sig = self.signal();
+        let f = self.gov.decide(self.now_s, Phase::Prefill, &sig, &self.gpu.spec);
+        self.switch_to(f, &[head.req], ledger);
+        // Classification scores every answer option with its own forward
+        // pass (log-likelihood mode); generation prefills once.
+        let passes = if q.output_tokens == 0 { q.dataset.n_options() } else { 1 };
+        for _ in 0..passes {
+            let r = self.gpu.execute(&prefill_cost(&self.spec.model, 1, input));
+            self.now_s += r.latency_s;
+            self.busy_s += r.latency_s;
+            self.energy_j += r.energy_j;
+            self.window.record(self.now_s, r.latency_s, r.energy_j);
+            ledger.charge_prefill(head.req, r.energy_j);
+        }
+        if q.output_tokens == 0 {
+            // No decode phase: the request completes at prefill end.
+            self.complete(head.req, head.arrival.t_s, self.now_s, 0, fleet);
+        } else {
+            self.active.push(ActiveSeq {
+                req: head.req,
+                arrival_s: head.arrival.t_s,
+                first_token_s: self.now_s,
+                tokens: 0,
+                remaining: q.output_tokens,
+                ctx: input,
+            });
+        }
+        Ok(())
+    }
+
+    /// One decode step for the whole running batch.
+    fn decode_step(&mut self, ledger: &mut EnergyLedger, fleet: &mut SloTracker) {
+        debug_assert!(!self.active.is_empty(), "decode with an empty batch");
+        self.req_scratch.clear();
+        self.req_scratch.extend(self.active.iter().map(|s| s.req));
+        let sig = self.signal();
+        let f = self.gov.decide(self.now_s, Phase::Decode, &sig, &self.gpu.spec);
+        // The scratch slice cannot stay borrowed across `&mut self` calls;
+        // take it out and put it back (no allocation either way).
+        let scratch = std::mem::take(&mut self.req_scratch);
+        self.switch_to(f, &scratch, ledger);
+        let ctx = self.active.iter().map(|s| s.ctx).max().unwrap();
+        let r = self.gpu.execute(&decode_step_cost(&self.spec.model, self.active.len(), ctx));
+        self.now_s += r.latency_s;
+        self.busy_s += r.latency_s;
+        self.energy_j += r.energy_j;
+        self.window.record(self.now_s, r.latency_s, r.energy_j);
+        self.decode_freq_dt += f as f64 * r.latency_s;
+        self.decode_dt += r.latency_s;
+        ledger.charge_decode(&scratch, r.energy_j);
+        self.req_scratch = scratch;
+
+        let j_tok = r.energy_j / self.active.len() as f64;
+        self.j_per_token_ewma = if self.tokens_out == 0 {
+            j_tok
+        } else {
+            (1.0 - J_PER_TOKEN_ALPHA) * self.j_per_token_ewma + J_PER_TOKEN_ALPHA * j_tok
+        };
+        self.tokens_out += self.active.len() as u64;
+
+        let mut finished: Vec<(usize, f64, f64, usize)> = Vec::new();
+        self.active.retain_mut(|s| {
+            s.remaining -= 1;
+            s.tokens += 1;
+            s.ctx += 1;
+            if s.remaining == 0 {
+                finished.push((s.req, s.arrival_s, s.first_token_s, s.tokens));
+                false
+            } else {
+                true
+            }
+        });
+        for (req, arrival_s, first_token_s, tokens) in finished {
+            self.complete(req, arrival_s, first_token_s, tokens, fleet);
+        }
+    }
+
+    /// Amortize this replica's idle draw across the requests it served.
+    /// Call once, after the fleet drains.
+    pub fn finalize(&mut self, ledger: &mut EnergyLedger) {
+        debug_assert!(
+            self.idle_j == 0.0 || !self.served_reqs.is_empty(),
+            "idle energy on a replica that served nothing"
+        );
+        ledger.charge_idle(&self.served_reqs, self.idle_j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelTier;
+    use crate::workload::Dataset;
+
+    fn setup() -> (ReplaySuite, Replica) {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let suite = ReplaySuite::quick(71, 8);
+        let rep = Replica::new(
+            &gpu,
+            ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(2842)),
+            Slo::interactive(),
+            2.0,
+        );
+        (suite, rep)
+    }
+
+    #[test]
+    fn serves_a_generation_request_end_to_end() {
+        let (suite, mut rep) = setup();
+        let idx = suite.dataset_indices(Dataset::NarrativeQa)[0];
+        let mut ledger = EnergyLedger::new(1);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
+        assert!(rep.runnable());
+        while rep.runnable() {
+            rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+        }
+        rep.finalize(&mut ledger);
+        assert_eq!(rep.served, 1);
+        assert_eq!(fleet.completed(), 1);
+        assert_eq!(rep.tokens_out as usize, suite.queries[idx].output_tokens);
+        let total = rep.energy_j + rep.idle_j;
+        let attributed = ledger.total_for(&[0]);
+        assert!(
+            (attributed - total).abs() / total < 1e-9,
+            "attributed {attributed} vs measured {total}"
+        );
+    }
+
+    #[test]
+    fn classification_completes_at_admission_with_option_passes() {
+        let (suite, mut rep) = setup();
+        let idx = suite.dataset_indices(Dataset::BoolQ)[0];
+        let mut ledger = EnergyLedger::new(1);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
+        rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+        assert!(!rep.runnable());
+        assert_eq!(rep.served, 1);
+        assert_eq!(rep.tokens_out, 0);
+        // Both BoolQ option passes are charged as prefill.
+        assert!(ledger.request(0).prefill_j > 0.0);
+        assert_eq!(ledger.request(0).decode_j, 0.0);
+    }
+
+    #[test]
+    fn idle_wait_is_charged_and_amortized() {
+        let (suite, mut rep) = setup();
+        let idx = suite.dataset_indices(Dataset::TruthfulQa)[0];
+        let mut ledger = EnergyLedger::new(1);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival { t_s: 1.5, query_idx: idx });
+        let expect_idle = 1.5 * rep.gpu.spec.p_idle_w;
+        assert!((rep.idle_j - expect_idle).abs() < 1e-9);
+        while rep.runnable() {
+            rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+        }
+        rep.finalize(&mut ledger);
+        assert!((ledger.request(0).idle_j - expect_idle).abs() < 1e-9);
+    }
+
+    #[test]
+    fn j_per_token_prior_orders_model_tiers() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let small = Replica::new(
+            &gpu,
+            ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(2842)),
+            Slo::interactive(),
+            2.0,
+        );
+        let large = Replica::new(
+            &gpu,
+            ReplicaSpec::tiered(ModelTier::B14, DvfsPolicy::Static(2842)),
+            Slo::interactive(),
+            2.0,
+        );
+        assert!(small.j_per_token() < large.j_per_token());
+        assert!(small.j_per_token() > 0.0);
+    }
+}

@@ -1,0 +1,411 @@
+//! Energy-aware fleet routing.
+//!
+//! Where [`crate::coordinator::router::Router`] picks a model *tier* for a
+//! query offline, a fleet router must pick a live *replica* online, reading
+//! each replica's instantaneous state (backlog, live joules-per-token, and
+//! the telemetry window's busy fraction and mean power). Four disciplines,
+//! in increasing awareness:
+//!
+//! - [`RoundRobin`]: cycle over live replicas (the baseline every
+//!   production load balancer implements);
+//! - [`LeastLoaded`]: minimize backlog (queue + in-flight sequences);
+//! - [`DifficultyTiered`]: semantic-difficulty tiering — easy queries to
+//!   the smallest live model tier, hard queries to the largest, using the
+//!   quality surrogate's feature difficulty (Section V-E4's rule recast as
+//!   a score); degrades to round-robin when features are unavailable;
+//! - [`EnergyAware`]: minimize predicted joules/token from each replica's
+//!   live telemetry, with a backlog penalty so cheap replicas don't drown.
+//!
+//! Invariants (asserted by `rust/tests/proptest_invariants.rs`): every
+//! request routes to exactly one live replica, and the difficulty router
+//! without features reproduces round-robin's choices exactly.
+
+use crate::config::ModelTier;
+use crate::coordinator::router::ENTITY_THRESHOLD;
+use crate::features::FeatureVector;
+use crate::quality::QualityModel;
+use crate::serve::traffic::Arrival;
+
+/// Live, router-visible snapshot of one replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaStatus {
+    /// Index into the fleet's replica array.
+    pub idx: usize,
+    /// Whether this replica accepts traffic.
+    pub live: bool,
+    /// Model size tier this replica serves.
+    pub tier: ModelTier,
+    /// Requests waiting in the replica's admission queue.
+    pub queue_depth: usize,
+    /// Sequences currently decoding.
+    pub active_seqs: usize,
+    /// The replica's local clock, seconds.
+    pub now_s: f64,
+    /// Mean power over the replica's telemetry window, watts.
+    pub window_power_w: f64,
+    /// Busy fraction of the telemetry window.
+    pub busy_fraction: f64,
+    /// Live joules per generated token (telemetry-derived once the replica
+    /// has decoded; model-derived prior while cold).
+    pub j_per_token: f64,
+}
+
+impl ReplicaStatus {
+    /// Outstanding work: queued plus in-flight.
+    pub fn backlog(&self) -> usize {
+        self.queue_depth + self.active_seqs
+    }
+}
+
+/// A routing discipline: pick the replica index for one arrival.
+///
+/// Implementations must return the index of a **live** replica; the fleet
+/// engine panics otherwise. `features` is `None` when the serving stack has
+/// no feature extractor on the request path (difficulty-aware disciplines
+/// must still route — see [`DifficultyTiered`]).
+pub trait FleetRouter {
+    fn route(
+        &mut self,
+        arrival: &Arrival,
+        features: Option<&FeatureVector>,
+        replicas: &[ReplicaStatus],
+    ) -> usize;
+
+    fn label(&self) -> String;
+}
+
+fn assert_some_live(replicas: &[ReplicaStatus]) {
+    assert!(
+        replicas.iter().any(|r| r.live),
+        "fleet router called with no live replicas"
+    );
+}
+
+/// Cycle over live replicas in index order.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl FleetRouter for RoundRobin {
+    fn route(
+        &mut self,
+        _arrival: &Arrival,
+        _features: Option<&FeatureVector>,
+        replicas: &[ReplicaStatus],
+    ) -> usize {
+        assert_some_live(replicas);
+        loop {
+            let i = self.cursor % replicas.len();
+            self.cursor = self.cursor.wrapping_add(1);
+            if replicas[i].live {
+                return i;
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        "round-robin".into()
+    }
+}
+
+/// Minimum backlog among live replicas; ties break to the lowest index.
+#[derive(Debug, Clone, Default)]
+pub struct LeastLoaded;
+
+/// Least-loaded selection over an arbitrary live subset (shared by the
+/// difficulty router's within-tier choice).
+fn least_loaded_where(
+    replicas: &[ReplicaStatus],
+    keep: impl Fn(&ReplicaStatus) -> bool,
+) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for r in replicas.iter().filter(|r| r.live && keep(r)) {
+        match best {
+            None => best = Some(r.idx),
+            Some(b) => {
+                if r.backlog() < replicas[b].backlog() {
+                    best = Some(r.idx);
+                }
+            }
+        }
+    }
+    best
+}
+
+impl FleetRouter for LeastLoaded {
+    fn route(
+        &mut self,
+        _arrival: &Arrival,
+        _features: Option<&FeatureVector>,
+        replicas: &[ReplicaStatus],
+    ) -> usize {
+        assert_some_live(replicas);
+        least_loaded_where(replicas, |_| true).expect("a live replica exists")
+    }
+
+    fn label(&self) -> String {
+        "least-loaded".into()
+    }
+}
+
+/// The feature-difficulty score at the paper's easy/hard rule boundary:
+/// a causal-question-free query at the entity-density cutoff (Section
+/// V-E4). Because `causal_question` is binary and its difficulty weight
+/// exceeds this threshold on its own, scoring against it reproduces the
+/// paper's rule exactly: hard ⇔ causal question ∨ entity density ≥ 0.20.
+pub fn rule_boundary_difficulty() -> f64 {
+    QualityModel::feature_difficulty(&FeatureVector {
+        input_length: 0,
+        complexity_score: 0.0,
+        reasoning_complexity: 0.0,
+        entity_density: ENTITY_THRESHOLD,
+        token_entropy: 0.0,
+        causal_question: 0.0,
+    })
+}
+
+/// Semantic-difficulty tiering: easy queries go to the smallest live model
+/// tier, hard queries to the largest, least-loaded within the tier group.
+/// Without features it degrades to round-robin over all live replicas.
+#[derive(Debug, Clone)]
+pub struct DifficultyTiered {
+    /// Queries with feature difficulty at or above this are "hard".
+    pub threshold: f64,
+    fallback: RoundRobin,
+}
+
+impl Default for DifficultyTiered {
+    fn default() -> Self {
+        DifficultyTiered { threshold: rule_boundary_difficulty(), fallback: RoundRobin::default() }
+    }
+}
+
+impl DifficultyTiered {
+    pub fn with_threshold(threshold: f64) -> Self {
+        DifficultyTiered { threshold, ..Default::default() }
+    }
+
+    /// Whether this router would call the query hard.
+    pub fn is_hard(&self, f: &FeatureVector) -> bool {
+        QualityModel::feature_difficulty(f) >= self.threshold
+    }
+}
+
+impl FleetRouter for DifficultyTiered {
+    fn route(
+        &mut self,
+        arrival: &Arrival,
+        features: Option<&FeatureVector>,
+        replicas: &[ReplicaStatus],
+    ) -> usize {
+        assert_some_live(replicas);
+        let f = match features {
+            // No features on the request path: no difficulty signal, so the
+            // only safe behaviour is the uniform baseline.
+            None => return self.fallback.route(arrival, None, replicas),
+            Some(f) => f,
+        };
+        let live_tiers = replicas.iter().filter(|r| r.live).map(|r| r.tier);
+        let target = if self.is_hard(f) {
+            live_tiers.max().expect("a live replica exists")
+        } else {
+            live_tiers.min().expect("a live replica exists")
+        };
+        least_loaded_where(replicas, |r| r.tier == target).expect("target tier is live")
+    }
+
+    fn label(&self) -> String {
+        format!("difficulty[thr={:.3}]", self.threshold)
+    }
+}
+
+/// Minimize predicted marginal joules/token, read off each replica's live
+/// telemetry (the joules/token estimate plus the window's busy fraction),
+/// with a backlog penalty so the cheapest replica is not swamped:
+/// score = j/token · (1 + penalty·backlog) · (1 + busy_fraction).
+#[derive(Debug, Clone)]
+pub struct EnergyAware {
+    /// Relative cost of one unit of backlog (0 = pure energy greed).
+    pub load_penalty: f64,
+}
+
+impl Default for EnergyAware {
+    fn default() -> Self {
+        EnergyAware { load_penalty: 0.5 }
+    }
+}
+
+impl FleetRouter for EnergyAware {
+    fn route(
+        &mut self,
+        _arrival: &Arrival,
+        _features: Option<&FeatureVector>,
+        replicas: &[ReplicaStatus],
+    ) -> usize {
+        assert_some_live(replicas);
+        let mut best: Option<(usize, f64)> = None;
+        for r in replicas.iter().filter(|r| r.live) {
+            // A saturated telemetry window means no headroom: marginal
+            // work there queues behind a full pipeline.
+            let score = r.j_per_token
+                * (1.0 + self.load_penalty * r.backlog() as f64)
+                * (1.0 + r.busy_fraction);
+            let better = match best {
+                None => true,
+                Some((_, s)) => score < s,
+            };
+            if better {
+                best = Some((r.idx, score));
+            }
+        }
+        best.expect("a live replica exists").0
+    }
+
+    fn label(&self) -> String {
+        format!("energy-aware[penalty={:.2}]", self.load_penalty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn status(idx: usize, tier: ModelTier, backlog: usize, j_tok: f64) -> ReplicaStatus {
+        ReplicaStatus {
+            idx,
+            live: true,
+            tier,
+            queue_depth: backlog,
+            active_seqs: 0,
+            now_s: 0.0,
+            window_power_w: 200.0,
+            busy_fraction: 0.5,
+            j_per_token: j_tok,
+        }
+    }
+
+    fn arr() -> Arrival {
+        Arrival { t_s: 0.0, query_idx: 0 }
+    }
+
+    fn easy_features() -> FeatureVector {
+        FeatureVector {
+            input_length: 10,
+            complexity_score: 0.2,
+            reasoning_complexity: 0.0,
+            entity_density: 0.05,
+            token_entropy: 3.0,
+            causal_question: 0.0,
+        }
+    }
+
+    fn hard_features() -> FeatureVector {
+        FeatureVector { entity_density: 0.5, causal_question: 1.0, ..easy_features() }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_dead() {
+        let mut rr = RoundRobin::default();
+        let mut reps = vec![
+            status(0, ModelTier::B3, 0, 1.0),
+            status(1, ModelTier::B3, 0, 1.0),
+            status(2, ModelTier::B3, 0, 1.0),
+        ];
+        reps[1].live = false;
+        let picks: Vec<usize> = (0..4).map(|_| rr.route(&arr(), None, &reps)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_backlog_lowest_index_on_tie() {
+        let mut ll = LeastLoaded;
+        let reps = vec![
+            status(0, ModelTier::B3, 3, 1.0),
+            status(1, ModelTier::B3, 1, 1.0),
+            status(2, ModelTier::B3, 1, 1.0),
+        ];
+        assert_eq!(ll.route(&arr(), None, &reps), 1);
+    }
+
+    #[test]
+    fn difficulty_routes_easy_small_hard_large() {
+        let mut dr = DifficultyTiered::default();
+        let reps = vec![
+            status(0, ModelTier::B14, 0, 4.0),
+            status(1, ModelTier::B3, 5, 1.0),
+            status(2, ModelTier::B14, 1, 4.0),
+        ];
+        // Easy → the (only) B3 replica even though it is busier.
+        assert_eq!(dr.route(&arr(), Some(&easy_features()), &reps), 1);
+        // Hard → least-loaded among the B14 replicas.
+        assert_eq!(dr.route(&arr(), Some(&hard_features()), &reps), 2);
+    }
+
+    #[test]
+    fn difficulty_without_features_is_round_robin() {
+        let mut dr = DifficultyTiered::default();
+        let mut rr = RoundRobin::default();
+        let reps = vec![
+            status(0, ModelTier::B3, 0, 1.0),
+            status(1, ModelTier::B14, 0, 4.0),
+        ];
+        for _ in 0..6 {
+            assert_eq!(dr.route(&arr(), None, &reps), rr.route(&arr(), None, &reps));
+        }
+    }
+
+    #[test]
+    fn rule_boundary_threshold_separates_paper_examples() {
+        let dr = DifficultyTiered::default();
+        assert!(!dr.is_hard(&easy_features()));
+        assert!(dr.is_hard(&hard_features()));
+        // A causal question alone is hard (causal weight exceeds the margin
+        // left under the boundary by zero entity density).
+        let causal_only = FeatureVector { causal_question: 1.0, ..easy_features() };
+        assert!(dr.is_hard(&causal_only));
+    }
+
+    #[test]
+    fn score_threshold_agrees_with_the_paper_rule_exactly() {
+        // causal_question is binary in extracted features, so the weighted
+        // score against the causal-free boundary must reproduce the
+        // offline router's AND-rule on every real query.
+        use crate::coordinator::router::Router;
+        use crate::features::FeatureExtractor;
+        use crate::workload::{gen, Dataset};
+        let dr = DifficultyTiered::default();
+        let fx = FeatureExtractor::new();
+        for case in 0..64u64 {
+            let mut rng = crate::rng(0xD1FF ^ case);
+            let d = *rng.choose(&Dataset::ALL);
+            let q = gen::generate(d, 1, case * 101, &mut rng).remove(0);
+            let f = fx.extract(&q.text);
+            assert_eq!(
+                dr.is_hard(&f),
+                !Router::is_easy_rule(&f),
+                "case {case}: score threshold diverged from the rule on {:?}",
+                q.text
+            );
+        }
+    }
+
+    #[test]
+    fn energy_aware_trades_cheapness_against_backlog() {
+        let mut ea = EnergyAware::default();
+        // Cheap replica, empty: wins outright.
+        let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 0, 1.0)];
+        assert_eq!(ea.route(&arr(), None, &reps), 1);
+        // Cheap replica deeply backlogged: 1.0·(1+0.5·12) = 7 > 4 → B14.
+        let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 12, 1.0)];
+        assert_eq!(ea.route(&arr(), None, &reps), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no live replicas")]
+    fn all_dead_panics() {
+        let mut reps = vec![status(0, ModelTier::B3, 0, 1.0)];
+        reps[0].live = false;
+        LeastLoaded.route(&arr(), None, &reps);
+    }
+}

@@ -16,12 +16,16 @@
 //! - serving under traffic: [`serve`] (arrival processes, SLO tracking,
 //!   and the closed-loop DVFS governor driving the event-driven serving
 //!   simulator — the online version of the paper's Section VII case study)
+//! - fleet serving: [`fleet`] (heterogeneous governed replica fleets with
+//!   difficulty- and energy-aware routing, and per-request energy
+//!   attribution — Section VII's routing × DVFS co-design run closed-loop)
 
 pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiments;
 pub mod features;
+pub mod fleet;
 pub mod gpu;
 pub mod perf;
 pub mod quality;

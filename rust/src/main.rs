@@ -6,6 +6,7 @@
 //! ewatt all            [...]             # every table + figure
 //! ewatt sweep          [...]             # raw DVFS sweep cells as CSV
 //! ewatt slo            [...]             # SLO-aware serving comparison
+//! ewatt fleet          [...]             # heterogeneous governed fleet comparison
 //! ewatt serve [--tier t3] [--batch 4] [--n 16] [--max-new 32]
 //!             [--prefill-mhz 2842] [--decode-mhz 180]   # real PJRT path
 //! ewatt info                              # testbed + model inventory
@@ -84,6 +85,10 @@ fn run() -> Result<()> {
             let ctx = build_context(&args);
             emit(&[ewatt::experiments::slo_tables::slo_table(&ctx)?], &args)
         }
+        Some("fleet") => {
+            let ctx = build_context(&args);
+            emit(&[ewatt::experiments::fleet_tables::fleet_table(&ctx)?], &args)
+        }
         Some("ablation") => {
             let name = args
                 .positional
@@ -108,7 +113,7 @@ fn run() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: ewatt <table N | figure N | all | sweep | slo | ablation [name] | serve | info> \
+                "usage: ewatt <table N | figure N | all | sweep | slo | fleet | ablation [name] | serve | info> \
                  [--paper] [--seed N] [--queries N] [--out DIR]"
             );
             bail!("no subcommand")

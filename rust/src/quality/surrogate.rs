@@ -59,11 +59,19 @@ impl QualityModel {
             .expect("all datasets present")
     }
 
+    /// Noise-free semantic difficulty from features alone — the observable
+    /// part of [`Self::difficulty`]. This is what an online router can see
+    /// at request time (the latent noise is unknowable before serving), so
+    /// the fleet layer's difficulty-tiered routing keys on it.
+    pub fn feature_difficulty(x: &FeatureVector) -> f64 {
+        W_ENTITY * x.entity_density + W_CAUSAL * x.causal_question
+    }
+
     /// Latent difficulty of a query (higher = harder), centred near the
     /// dataset's feature profile.
     pub fn difficulty(&self, q: &Query, x: &FeatureVector) -> f64 {
         let u = latent_noise(q.id);
-        W_ENTITY * x.entity_density + W_CAUSAL * x.causal_question + SIGMA_U * u
+        Self::feature_difficulty(x) + SIGMA_U * u
     }
 
     /// Dataset-mean difficulty (for centring), from the generator profile.

@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::config::{FreqMHz, GpuSpec, ModelSpec};
 use crate::coordinator::dvfs_policy::{DvfsPolicy, Phase};
+use crate::fleet::attribution::{EnergyLedger, PhaseEnergy};
 use crate::gpu::{GpuSim, TelemetryWindow};
 use crate::perf::{decode_step_cost, prefill_cost};
 use crate::text::tokenizer::token_count;
@@ -66,6 +67,13 @@ pub struct ServeOutcome {
     pub max_queue_depth: usize,
     /// Streaming SLO percentiles + attainment.
     pub slo: SloTracker,
+    /// Attributed energy per request (arrival order): prefill charged by
+    /// tokens processed, decode split by tokens generated across the batch,
+    /// switches to the step they precede, idle amortized over all requests.
+    /// Sums to [`Self::total_j`] — see [`crate::fleet::attribution`].
+    pub joules: Vec<f64>,
+    /// The same attribution aggregated by phase across all requests.
+    pub attributed_phase_breakdown: PhaseEnergy,
 }
 
 impl ServeOutcome {
@@ -84,6 +92,8 @@ impl ServeOutcome {
 
 /// One in-flight sequence.
 struct Active {
+    /// Index into the arrival stream (the attribution ledger's key).
+    req: usize,
     arrival_s: f64,
     /// Completion time of this sequence's prefill (first token out).
     first_token_s: f64,
@@ -133,8 +143,10 @@ impl ServeSim {
     ) -> Result<ServeOutcome> {
         let mut now = 0.0f64;
         let mut next = 0usize; // cursor into `arrivals`
-        let mut queue: VecDeque<Arrival> = VecDeque::new();
+        let mut queue: VecDeque<(usize, Arrival)> = VecDeque::new();
         let mut active: Vec<Active> = Vec::new();
+        let mut ledger = EnergyLedger::new(arrivals.len());
+        let mut req_scratch: Vec<usize> = Vec::new();
 
         let mut tracker = SloTracker::new(self.cfg.slo);
         let mut window = TelemetryWindow::new(self.cfg.window_s);
@@ -155,6 +167,8 @@ impl ServeSim {
             mean_decode_freq_mhz: 0.0,
             max_queue_depth: 0,
             slo: tracker.clone(), // placeholder; replaced at the end
+            joules: Vec::new(),
+            attributed_phase_breakdown: PhaseEnergy::default(),
         };
         let mut decode_freq_dt = 0.0f64; // Σ f·dt over decode steps
         let mut decode_dt = 0.0f64;
@@ -162,7 +176,7 @@ impl ServeSim {
         while next < arrivals.len() || !queue.is_empty() || !active.is_empty() {
             // Pull everything that has arrived by `now` into the queue.
             while next < arrivals.len() && arrivals[next].t_s <= now {
-                queue.push_back(arrivals[next]);
+                queue.push_back((next, arrivals[next]));
                 next += 1;
             }
             out.max_queue_depth = out.max_queue_depth.max(queue.len());
@@ -178,21 +192,23 @@ impl ServeSim {
             // Admit queued requests at the step boundary, each paying its
             // own prefill (iteration-level scheduling).
             while active.len() < self.cfg.max_batch && !queue.is_empty() {
-                let arr = queue.pop_front().unwrap();
+                let (req, arr) = queue.pop_front().unwrap();
                 let sig = if wants_signal {
                     signal(&tracker, &queue, &active, &window)
                 } else {
                     GovernorSignal::default()
                 };
                 let f = gov.decide(now, Phase::Prefill, &sig, &self.gpu);
-                self.switch_to(&mut gpu, f, &mut now, &mut out);
+                self.switch_to(&mut gpu, f, &mut now, &mut out, &[req], &mut ledger);
                 let q = &suite.queries[arr.query_idx];
                 let input = token_count(&q.text).max(1);
                 let r = gpu.execute(&prefill_cost(&self.model, 1, input));
                 now += r.latency_s;
                 out.energy_j += r.energy_j;
                 window.record(now, r.latency_s, r.energy_j);
+                ledger.charge_prefill(req, r.energy_j);
                 active.push(Active {
+                    req,
                     arrival_s: arr.t_s,
                     first_token_s: now,
                     tokens: 0,
@@ -201,7 +217,7 @@ impl ServeSim {
                 });
                 // Requests that arrived during this prefill become eligible.
                 while next < arrivals.len() && arrivals[next].t_s <= now {
-                    queue.push_back(arrivals[next]);
+                    queue.push_back((next, arrivals[next]));
                     next += 1;
                 }
                 out.max_queue_depth = out.max_queue_depth.max(queue.len());
@@ -214,12 +230,15 @@ impl ServeSim {
                 GovernorSignal::default()
             };
             let f = gov.decide(now, Phase::Decode, &sig, &self.gpu);
-            self.switch_to(&mut gpu, f, &mut now, &mut out);
+            req_scratch.clear();
+            req_scratch.extend(active.iter().map(|s| s.req));
+            self.switch_to(&mut gpu, f, &mut now, &mut out, &req_scratch, &mut ledger);
             let ctx = active.iter().map(|s| s.ctx).max().unwrap();
             let r = gpu.execute(&decode_step_cost(&self.model, active.len(), ctx));
             now += r.latency_s;
             out.energy_j += r.energy_j;
             window.record(now, r.latency_s, r.energy_j);
+            ledger.charge_decode(&req_scratch, r.energy_j);
             decode_freq_dt += f as f64 * r.latency_s;
             decode_dt += r.latency_s;
 
@@ -245,11 +264,28 @@ impl ServeSim {
         out.makespan_s = now;
         out.mean_decode_freq_mhz = if decode_dt > 0.0 { decode_freq_dt / decode_dt } else { 0.0 };
         out.slo = tracker;
+        // Idle draw waits for arrivals, so amortize it across all of them.
+        if out.idle_j > 0.0 {
+            let everyone: Vec<usize> = (0..arrivals.len()).collect();
+            ledger.charge_idle(&everyone, out.idle_j);
+        }
+        out.joules = ledger.joules();
+        out.attributed_phase_breakdown = ledger.totals();
         Ok(out)
     }
 
-    /// Apply a set-point change, charging the switch latency at idle power.
-    fn switch_to(&self, gpu: &mut GpuSim, f: FreqMHz, now: &mut f64, out: &mut ServeOutcome) {
+    /// Apply a set-point change, charging the switch latency at idle power
+    /// to the requests of the step that follows.
+    #[allow(clippy::too_many_arguments)]
+    fn switch_to(
+        &self,
+        gpu: &mut GpuSim,
+        f: FreqMHz,
+        now: &mut f64,
+        out: &mut ServeOutcome,
+        reqs: &[usize],
+        ledger: &mut EnergyLedger,
+    ) {
         let dt = gpu.set_freq(f);
         if dt > 0.0 {
             let e = dt * self.gpu.p_idle_w;
@@ -257,13 +293,14 @@ impl ServeSim {
             out.energy_j += e;
             out.switch_j += e;
             out.freq_switches += 1;
+            ledger.charge_switch(reqs, e);
         }
     }
 }
 
 fn signal(
     tracker: &SloTracker,
-    queue: &VecDeque<Arrival>,
+    queue: &VecDeque<(usize, Arrival)>,
     active: &[Active],
     window: &TelemetryWindow,
 ) -> GovernorSignal {
@@ -316,6 +353,35 @@ mod tests {
             assert!(o.makespan_s >= arrivals.last().unwrap().t_s);
             assert!(o.total_j() >= o.energy_j);
             assert!(o.switch_j <= o.energy_j);
+        }
+    }
+
+    #[test]
+    fn attribution_sums_to_total_energy() {
+        let (suite, sim, pool) = setup();
+        let arrivals = bursty(&pool, 60);
+        for policy in [
+            DvfsPolicy::Static(2842),
+            DvfsPolicy::PhaseAware { prefill: 2842, decode: 180 },
+            DvfsPolicy::governed(&sim.gpu),
+        ] {
+            let o = sim.run(&suite, &arrivals, &policy).unwrap();
+            assert_eq!(o.joules.len(), arrivals.len());
+            let attributed: f64 = o.joules.iter().sum();
+            let rel = (attributed - o.total_j()).abs() / o.total_j();
+            assert!(rel < 1e-6, "{}: conservation off by {rel:e}", policy.label());
+            // Phase components reconcile with the loop's own accounting.
+            let b = &o.attributed_phase_breakdown;
+            assert!((b.total_j() - o.total_j()).abs() / o.total_j() < 1e-6);
+            assert!((b.switch_j - o.switch_j).abs() <= 1e-9 * o.switch_j.max(1.0));
+            assert!((b.idle_j - o.idle_j).abs() <= 1e-9 * o.idle_j.max(1.0));
+            assert!(
+                (b.prefill_j + b.decode_j - (o.energy_j - o.switch_j)).abs()
+                    <= 1e-6 * o.energy_j,
+                "{}: prefill+decode mismatch",
+                policy.label()
+            );
+            assert!(o.joules.iter().all(|&j| j > 0.0), "every request costs energy");
         }
     }
 

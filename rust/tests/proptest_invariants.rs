@@ -399,6 +399,177 @@ fn prop_telemetry_window_eviction_is_exact() {
     }
 }
 
+/// Energy-attribution conservation: for random traffic, fleet mixes, and
+/// policies, per-request attributed energy sums to the measured total
+/// (active + idle) within 1e-6 relative error — fleet-wide and per replica.
+#[test]
+fn prop_attribution_conserves_energy() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::fleet::{
+        DifficultyTiered, EnergyAware, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
+        ReplicaSpec, RoundRobin,
+    };
+    use ewatt::serve::TrafficPattern;
+    let gpu = GpuSpec::rtx_pro_6000();
+    let tiers = [ModelTier::B1, ModelTier::B3, ModelTier::B8];
+    for case in 0..12u64 {
+        let mut rng = ewatt::rng(0xA77_0 ^ case);
+        let suite = ReplaySuite::quick(case, 10);
+        let n_replicas = rng.gen_range(1, 5);
+        let replicas: Vec<ReplicaSpec> = (0..n_replicas)
+            .map(|_| {
+                let policy = match rng.gen_range(0, 3) {
+                    0 => DvfsPolicy::Static(*rng.choose(&gpu.freq_levels_mhz)),
+                    1 => DvfsPolicy::paper_phase_aware(&gpu),
+                    _ => DvfsPolicy::governed(&gpu),
+                };
+                ReplicaSpec::tiered(*rng.choose(&tiers), policy)
+            })
+            .collect();
+        let cfg = FleetConfig { replicas, ..FleetConfig::default() };
+        let sim = FleetSim::new(gpu.clone(), cfg);
+        let arrivals = TrafficPattern::Poisson { rps: 1.0 + rng.gen_f64() * 6.0 }
+            .generate(&suite, 12 + rng.gen_range(0, 24), case);
+        let mut router: Box<dyn FleetRouter> = match rng.gen_range(0, 4) {
+            0 => Box::new(RoundRobin::default()),
+            1 => Box::new(LeastLoaded),
+            2 => Box::new(DifficultyTiered::default()),
+            _ => Box::new(EnergyAware::default()),
+        };
+        let o = sim.run(&suite, &arrivals, router.as_mut()).unwrap();
+        assert_eq!(o.served, arrivals.len(), "case {case}");
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel < 1e-6, "case {case} [{}]: fleet conservation {rel:e}", router.label());
+        let bd = (o.breakdown.total_j() - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(bd < 1e-6, "case {case}: breakdown conservation {bd:e}");
+        // Per replica: attributed energy of the requests it served equals
+        // its own meter (every request is served where it was routed).
+        for (r, rep) in o.replicas.iter().enumerate() {
+            let mine: Vec<usize> =
+                (0..arrivals.len()).filter(|&i| o.routed[i] == r).collect();
+            let attributed: f64 = mine.iter().map(|&i| o.joules[i]).sum();
+            let measured = rep.energy_j + rep.idle_j;
+            assert!(
+                (attributed - measured).abs() <= 1e-6 * measured.max(1e-12),
+                "case {case} replica {r}: {attributed} vs {measured}"
+            );
+        }
+    }
+}
+
+/// Single-replica serving loop: the same conservation property holds for
+/// `ServeOutcome::joules` under every policy class.
+#[test]
+fn prop_serve_outcome_attribution_conserves() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::serve::{ServeSim, ServeSimConfig, TrafficPattern};
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..12u64 {
+        let mut rng = ewatt::rng(0x5E2_E ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let pool: Vec<usize> = {
+            let mut p = suite.dataset_indices(Dataset::TruthfulQa);
+            p.extend(suite.dataset_indices(Dataset::NarrativeQa));
+            p
+        };
+        let sim = ServeSim::new(
+            gpu.clone(),
+            model_for_tier(*rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8])),
+            ServeSimConfig::default(),
+        );
+        let arrivals = TrafficPattern::Bursty {
+            base_rps: 0.5 + rng.gen_f64() * 2.0,
+            burst_rps: 4.0 + rng.gen_f64() * 6.0,
+            mean_dwell_s: 2.0,
+        }
+        .generate_from(&pool, 10 + rng.gen_range(0, 30), case);
+        let policy = match rng.gen_range(0, 3) {
+            0 => DvfsPolicy::Static(*rng.choose(&gpu.freq_levels_mhz)),
+            1 => DvfsPolicy::paper_phase_aware(&gpu),
+            _ => DvfsPolicy::governed(&gpu),
+        };
+        let o = sim.run(&suite, &arrivals, &policy).unwrap();
+        assert_eq!(o.joules.len(), arrivals.len(), "case {case}");
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel < 1e-6, "case {case} [{}]: conservation {rel:e}", policy.label());
+        assert!(
+            (o.attributed_phase_breakdown.active_j() - o.energy_j).abs()
+                <= 1e-6 * o.energy_j.max(1e-12),
+            "case {case}: active attribution mismatch"
+        );
+    }
+}
+
+/// Fleet routers: every request is routed to exactly one live replica —
+/// across random fleet sizes, liveness patterns, and backlog states — and
+/// the difficulty router without features reproduces round-robin exactly.
+#[test]
+fn prop_router_invariants() {
+    use ewatt::fleet::{
+        DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,
+    };
+    use ewatt::serve::Arrival;
+    let fx = FeatureExtractor::new();
+    let tiers = ModelTier::ALL;
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0x2007_E ^ case);
+        let n = rng.gen_range(1, 7);
+        let mut reps: Vec<ReplicaStatus> = (0..n)
+            .map(|idx| ReplicaStatus {
+                idx,
+                live: rng.gen_bool(0.7),
+                tier: *rng.choose(&tiers),
+                queue_depth: rng.gen_range(0, 20),
+                active_seqs: rng.gen_range(0, 9),
+                now_s: rng.gen_f64() * 10.0,
+                window_power_w: rng.gen_f64() * 500.0,
+                busy_fraction: rng.gen_f64(),
+                j_per_token: 0.1 + rng.gen_f64() * 10.0,
+            })
+            .collect();
+        // Guarantee at least one live replica.
+        let forced = rng.gen_range(0, n);
+        reps[forced].live = true;
+
+        let d = *rng.choose(&Dataset::ALL);
+        let q = gen::generate(d, 1, case * 37, &mut rng).remove(0);
+        let f = fx.extract(&q.text);
+        let a = Arrival { t_s: rng.gen_f64(), query_idx: 0 };
+
+        let mut routers: Vec<Box<dyn FleetRouter>> = vec![
+            Box::new(RoundRobin::default()),
+            Box::new(LeastLoaded),
+            Box::new(DifficultyTiered::default()),
+            Box::new(EnergyAware::default()),
+        ];
+        for router in routers.iter_mut() {
+            for features in [Some(&f), None] {
+                let pick = router.route(&a, features, &reps);
+                assert!(pick < reps.len(), "case {case} [{}]: out of range", router.label());
+                assert!(
+                    reps[pick].live,
+                    "case {case} [{}]: routed to dead replica {pick}",
+                    router.label()
+                );
+            }
+        }
+
+        // Degradation: featureless difficulty routing == round-robin, call
+        // by call, from fresh state.
+        let mut dr = DifficultyTiered::default();
+        let mut rr = RoundRobin::default();
+        for _ in 0..12 {
+            assert_eq!(
+                dr.route(&a, None, &reps),
+                rr.route(&a, None, &reps),
+                "case {case}: difficulty-without-features diverged from round-robin"
+            );
+        }
+    }
+}
+
 /// Streaming P² quantiles: every estimate is bracketed by the extremes of
 /// the observed stream (marker heights are clamped between their
 /// neighbors, so interior markers can never escape [min, max]).
