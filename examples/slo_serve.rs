@@ -53,8 +53,10 @@ fn main() -> anyhow::Result<()> {
         let base = *static_energy.get_or_insert(o.energy_j);
         println!("[{}]", policy.label());
         println!(
-            "  energy {:.0} J ({:.2} J/req){}  |  idle {:.0} J, switch {:.2} J over {} switches",
+            "  energy {:.0} J ({:.2} J/req active, {:.2} attributed){}  |  idle {:.0} J, \
+             switch {:.2} J over {} switches",
             o.energy_j,
+            o.active_joules_per_request(),
             o.joules_per_request(),
             if o.energy_j == base {
                 "".to_string()

@@ -5,8 +5,9 @@
 //! Since the fleet layer landed, `Cluster` is a thin offline facade over
 //! [`crate::fleet::FleetSim`]: the replay workload arrives all at once
 //! (t = 0), a least-loaded router stripes it across `n_replicas` identical
-//! replicas, and each replica runs the same iteration-level batching loop
-//! the online path uses — one codebase for both. Compared with the old
+//! replicas, and each replica runs the single iteration-level batching
+//! loop the whole codebase shares ([`crate::fleet::engine::drive`] — the
+//! same core behind `serve::ServeSim`). Compared with the old
 //! fixed-batch dispatcher this admits per-request (prefills at batch 1,
 //! continuous decode batching), so splitting work across more replicas
 //! lowers decode occupancy slightly and costs a bounded energy overhead —

@@ -23,7 +23,8 @@ impl ServeMetrics {
             return f64::NAN;
         }
         let mut xs = self.latencies_s.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample sorts last instead of panicking.
+        xs.sort_by(f64::total_cmp);
         let idx = ((xs.len() as f64 - 1.0) * p / 100.0).round() as usize;
         xs[idx]
     }
@@ -49,12 +50,22 @@ impl ServeMetrics {
         self.tokens_out as f64 / self.wall_s
     }
 
+    /// Mean energy per generated token. `NaN` when no tokens were produced
+    /// (matching the crate-wide convention: degenerate runs report `NaN`,
+    /// never a silent zero).
     pub fn joules_per_token(&self) -> f64 {
-        self.energy_j / self.tokens_out.max(1) as f64
+        if self.tokens_out == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.tokens_out as f64
     }
 
+    /// Mean energy per served request. `NaN` when nothing was served.
     pub fn joules_per_request(&self) -> f64 {
-        self.energy_j / self.requests.max(1) as f64
+        if self.requests == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.requests as f64
     }
 }
 
@@ -80,10 +91,25 @@ mod tests {
     }
 
     #[test]
+    fn percentile_survives_a_nan_latency_sample() {
+        // A wall-clock glitch can hand the tracker a NaN latency; the
+        // percentile readout must not panic mid-run (regression for the
+        // old `partial_cmp().unwrap()` sort).
+        let mut m = ServeMetrics::default();
+        for l in [0.2, f64::NAN, 0.1] {
+            m.record(l, 1.0, 1);
+        }
+        assert_eq!(m.percentile(0.0), 0.1);
+        assert!(m.percentile(100.0).is_nan());
+    }
+
+    #[test]
     fn empty_metrics_are_nan_not_panic() {
         let m = ServeMetrics::default();
         assert!(m.percentile(50.0).is_nan());
         assert!(m.mean_latency_s().is_nan());
         assert!(m.throughput_rps().is_nan());
+        assert!(m.joules_per_token().is_nan());
+        assert!(m.joules_per_request().is_nan());
     }
 }

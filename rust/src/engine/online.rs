@@ -60,7 +60,8 @@ impl OnlineMetrics {
             return f64::NAN;
         }
         let mut xs = self.latencies_s.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample sorts last instead of panicking.
+        xs.sort_by(f64::total_cmp);
         xs[((xs.len() as f64 - 1.0) * p / 100.0).round() as usize]
     }
 
@@ -68,12 +69,24 @@ impl OnlineMetrics {
         self.served as f64 / self.makespan_s.max(1e-12)
     }
 
+    /// SLO violations per served request. `NaN` when the run served
+    /// nothing — a degenerate case callers must handle explicitly, not a
+    /// silent 0% violation rate.
     pub fn violation_rate(&self) -> f64 {
-        self.slo_violations as f64 / self.served.max(1) as f64
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.slo_violations as f64 / self.served as f64
     }
 
+    /// Mean energy per served request. `NaN` when nothing was served
+    /// (the old `served.max(1)` guard reported the whole run's energy as
+    /// one request's bill).
     pub fn joules_per_request(&self) -> f64 {
-        self.energy_j / self.served.max(1) as f64
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.served as f64
     }
 }
 
@@ -304,6 +317,24 @@ mod tests {
         let thr = lo.throughput_rps() / hi.throughput_rps();
         assert!(savings > 0.30, "online savings {savings:.3}");
         assert!(thr > 0.95, "throughput ratio {thr:.3}");
+    }
+
+    #[test]
+    fn percentile_survives_a_nan_latency_sample() {
+        // Regression: `partial_cmp().unwrap()` panicked on NaN; total_cmp
+        // sorts NaN after every finite latency instead.
+        let mut m = OnlineMetrics::default();
+        m.latencies_s.extend([0.3, f64::NAN, 0.1, 0.2]);
+        m.served = 4;
+        assert_eq!(m.percentile(0.0), 0.1);
+        assert!(m.percentile(100.0).is_nan());
+    }
+
+    #[test]
+    fn zero_served_metrics_are_nan_not_silent() {
+        let m = OnlineMetrics::default();
+        assert!(m.violation_rate().is_nan());
+        assert!(m.joules_per_request().is_nan());
     }
 
     #[test]

@@ -38,12 +38,24 @@ impl ReplayMetrics {
         }
     }
 
+    /// Mean energy per replayed query. `NaN` for an empty run — the old
+    /// `queries.max(1)` guard silently reported 0 J/query instead of
+    /// signaling the degenerate case.
     pub fn energy_per_query(&self) -> f64 {
-        self.energy_j / self.queries.max(1) as f64
+        if self.queries == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.queries as f64
     }
 
+    /// Mean energy per generated token. `NaN` when the replay produced no
+    /// tokens (e.g. a classification-only slice) — previously the whole
+    /// run's energy was attributed to one phantom token.
     pub fn energy_per_token(&self) -> f64 {
-        self.energy_j / self.tokens_out.max(1) as f64
+        if self.tokens_out == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.tokens_out as f64
     }
 }
 
@@ -216,6 +228,13 @@ mod tests {
         assert!(lat < 0.10, "latency Δ {lat:+.3}");
         assert_eq!(hi.queries, suite.len());
         assert_eq!(hi.per_query.len(), suite.len());
+    }
+
+    #[test]
+    fn empty_replay_reports_nan_not_zero() {
+        let m = ReplayMetrics::default();
+        assert!(m.energy_per_query().is_nan());
+        assert!(m.energy_per_token().is_nan());
     }
 
     #[test]

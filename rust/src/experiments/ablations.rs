@@ -56,6 +56,15 @@ pub fn ablation_batching(ctx: &Context) -> Result<Report> {
                 },
             );
             let m = sim.run(&queries)?;
+            // Zero-served runs now report NaN rates instead of silent
+            // zeros; a table cell must never be in that state.
+            anyhow::ensure!(
+                m.served == queries.len(),
+                "{batching:?}/{}: served {}/{} requests",
+                policy.label(),
+                m.served,
+                queries.len()
+            );
             r.row(vec![
                 format!("{batching:?}"),
                 policy.label(),

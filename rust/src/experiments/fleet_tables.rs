@@ -84,6 +84,14 @@ pub fn fleet_table(ctx: &Context) -> Result<Report> {
             let sim = FleetSim::new(ctx.gpu.clone(), cfg);
             let label = router.label();
             let o = sim.run(&ctx.suite, &arrivals, router.as_mut())?;
+            // Guard the degenerate case explicitly: a zero-served cell
+            // would render every attributed per-request column NaN.
+            anyhow::ensure!(
+                o.served == arrivals.len(),
+                "{scenario}/{name}: served {}/{} requests",
+                o.served,
+                arrivals.len()
+            );
             // Quality of what was actually served: each request sampled on
             // the tier of the replica that decoded it.
             let quality: f64 = arrivals

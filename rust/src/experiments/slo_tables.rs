@@ -81,6 +81,15 @@ pub fn slo_table(ctx: &Context) -> Result<Report> {
         let mut base_energy = None;
         for policy in policies(ctx) {
             let o = sim.run(&ctx.suite, &arrivals, &policy)?;
+            // A zero-served cell would make every per-request column NaN;
+            // that is a broken scenario, not a reportable row.
+            anyhow::ensure!(
+                o.served == arrivals.len(),
+                "{name}/{}: served {}/{} requests",
+                policy.label(),
+                o.served,
+                arrivals.len()
+            );
             let base = *base_energy.get_or_insert(o.energy_j);
             r.row(vec![
                 name.to_string(),
@@ -107,7 +116,12 @@ pub fn slo_table(ctx: &Context) -> Result<Report> {
         1e3 * sim.cfg.slo.tbt_p95_s,
         sim.cfg.slo.e2e_p99_s
     ));
-    r.note("energy is active (prefill+decode+switch); idle draw is policy-independent".to_string());
+    r.note(
+        "energy and 'vs static' are active (prefill+decode+switch; idle draw is \
+         policy-independent); J/req is attributed total (active + amortized idle) over served, \
+         identical to summing the per-request attribution ledger"
+            .to_string(),
+    );
     Ok(r)
 }
 

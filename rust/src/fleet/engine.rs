@@ -100,6 +100,8 @@ pub struct ReplicaOutcome {
     pub switch_j: f64,
     pub freq_switches: usize,
     pub mean_decode_freq_mhz: f64,
+    /// Deepest admission-queue backlog this replica observed.
+    pub max_queue_depth: usize,
 }
 
 /// Aggregate outcome of one fleet run.
@@ -133,17 +135,25 @@ impl FleetOutcome {
     }
 
     /// Mean *attributed* energy per request — active plus amortized idle,
-    /// the full per-request bill. Named explicitly because
-    /// [`crate::serve::ServeOutcome::joules_per_request`] is active-only;
-    /// compare that against [`Self::active_joules_per_request`] instead.
+    /// the full per-request bill, consistent with summing [`Self::joules`]
+    /// (the same convention as
+    /// [`crate::serve::ServeOutcome::joules_per_request`]). `NaN` when the
+    /// run served nothing — a degenerate case the experiment tables assert
+    /// against rather than silently reporting a number.
     pub fn attributed_joules_per_request(&self) -> f64 {
-        self.total_j() / self.served.max(1) as f64
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.total_j() / self.served as f64
     }
 
-    /// Mean *active* energy per request (comparable to
-    /// [`crate::serve::ServeOutcome::joules_per_request`]).
+    /// Mean *active* (prefill + decode + switch) energy per request —
+    /// the policy-controlled quantity. `NaN` when nothing was served.
     pub fn active_joules_per_request(&self) -> f64 {
-        self.energy_j / self.served.max(1) as f64
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.served as f64
     }
 
     /// Quantile of the per-request attributed energy distribution.
@@ -186,47 +196,15 @@ impl FleetSim {
             .collect();
         let mut ledger = EnergyLedger::new(arrivals.len());
         let mut fleet_tracker = SloTracker::new(self.cfg.slo);
-        let mut routed = vec![usize::MAX; arrivals.len()];
-        let mut statuses = Vec::with_capacity(reps.len());
-        let mut next = 0usize;
-
-        loop {
-            // Earliest runnable replica clock (work that would start next).
-            let t_step = reps
-                .iter()
-                .filter(|r| r.runnable())
-                .map(|r| r.now_s)
-                .fold(f64::INFINITY, f64::min);
-
-            if next < arrivals.len() && arrivals[next].t_s <= t_step {
-                // Route the arrival at its own timestamp, before any step
-                // that would start at or after it.
-                let a = arrivals[next];
-                statuses.clear();
-                statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
-                let choice = router.route(&a, suite.features.get(a.query_idx), &statuses);
-                assert!(
-                    choice < reps.len() && reps[choice].spec.live,
-                    "router {} picked replica {choice}, which is not a live replica",
-                    router.label()
-                );
-                reps[choice].enqueue(next, a);
-                routed[next] = choice;
-                next += 1;
-            } else if t_step.is_finite() {
-                // Step the earliest runnable replica (lowest index on ties).
-                let i = reps
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, r)| r.runnable())
-                    .min_by(|(_, a), (_, b)| a.now_s.partial_cmp(&b.now_s).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap();
-                reps[i].step(suite, self.cfg.max_batch, &mut ledger, &mut fleet_tracker)?;
-            } else {
-                break; // no arrivals left, nothing in flight
-            }
-        }
+        let routed = drive(
+            &mut reps,
+            suite,
+            arrivals,
+            router,
+            self.cfg.max_batch,
+            &mut ledger,
+            &mut fleet_tracker,
+        )?;
 
         let mut out = FleetOutcome {
             served: 0,
@@ -261,6 +239,7 @@ impl FleetSim {
                 switch_j: rep.switch_j,
                 freq_switches: rep.freq_switches,
                 mean_decode_freq_mhz: rep.mean_decode_freq_mhz(),
+                max_queue_depth: rep.max_queue_depth,
             });
         }
         out.joules = ledger.joules();
@@ -273,6 +252,68 @@ impl FleetSim {
         );
         Ok(out)
     }
+}
+
+/// The shared continuous-batching event loop: advance `reps` through one
+/// arrival stream. Each arrival is routed at its own timestamp against
+/// live replica state, before any replica step that would start at or
+/// after it; otherwise the earliest runnable replica executes one unit of
+/// work under its own governor. This is the single loop behind both
+/// [`FleetSim::run`] and the one-replica [`crate::serve::ServeSim`]
+/// facade — there is deliberately no second copy anywhere.
+///
+/// Returns which replica served each arrival, indexed by arrival order.
+pub fn drive(
+    reps: &mut [Replica],
+    suite: &ReplaySuite,
+    arrivals: &[Arrival],
+    router: &mut dyn FleetRouter,
+    max_batch: usize,
+    ledger: &mut EnergyLedger,
+    tracker: &mut SloTracker,
+) -> Result<Vec<usize>> {
+    let mut routed = vec![usize::MAX; arrivals.len()];
+    let mut statuses = Vec::with_capacity(reps.len());
+    let mut next = 0usize;
+
+    loop {
+        // Earliest runnable replica clock (work that would start next).
+        let t_step = reps
+            .iter()
+            .filter(|r| r.runnable())
+            .map(|r| r.now_s)
+            .fold(f64::INFINITY, f64::min);
+
+        if next < arrivals.len() && arrivals[next].t_s <= t_step {
+            let a = arrivals[next];
+            statuses.clear();
+            statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
+            let choice = router.route(&a, suite.features.get(a.query_idx), &statuses);
+            assert!(
+                choice < reps.len() && reps[choice].spec.live,
+                "router {} picked replica {choice}, which is not a live replica",
+                router.label()
+            );
+            reps[choice].enqueue(next, a);
+            routed[next] = choice;
+            next += 1;
+        } else if t_step.is_finite() {
+            // Step the earliest runnable replica (lowest index on ties;
+            // total_cmp so a corrupted NaN clock loudly picks a stable
+            // order instead of panicking mid-run).
+            let i = reps
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.runnable())
+                .min_by(|(_, a), (_, b)| a.now_s.total_cmp(&b.now_s))
+                .map(|(i, _)| i)
+                .unwrap();
+            reps[i].step(suite, max_batch, ledger, tracker)?;
+        } else {
+            break; // no arrivals left, nothing in flight
+        }
+    }
+    Ok(routed)
 }
 
 #[cfg(test)]

@@ -18,7 +18,10 @@
 //!
 //! `ewatt fleet` and `examples/fleet_serve.rs` reproduce the Section VII
 //! comparison (monolithic-large vs routed fleet × static vs governed DVFS)
-//! as an online result; `coordinator::Cluster` replays its offline
+//! as an online result. The [`engine::drive`] loop is the **only**
+//! continuous-batching event loop in the codebase: `FleetSim` drives N
+//! replicas through it, the single-device [`crate::serve::ServeSim`] is a
+//! facade over one replica, and `coordinator::Cluster` replays its offline
 //! workloads through the same engine.
 
 pub mod attribution;
@@ -27,7 +30,7 @@ pub mod replica;
 pub mod router;
 
 pub use attribution::{EnergyLedger, PhaseEnergy};
-pub use engine::{FleetConfig, FleetOutcome, FleetSim, ReplicaOutcome};
+pub use engine::{drive, FleetConfig, FleetOutcome, FleetSim, ReplicaOutcome};
 pub use replica::{Replica, ReplicaSpec};
 pub use router::{
     DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,

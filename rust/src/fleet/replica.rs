@@ -1,21 +1,20 @@
-//! One governed serving replica inside a fleet.
+//! One governed serving replica — **the** continuous-batching loop.
 //!
 //! Each replica is a self-contained serving device: its own simulated GPU,
 //! frequency governor, KV-cache manager, admission queue, SLO tracker, and
-//! telemetry window — the same iteration-level batching discipline as
-//! [`crate::serve::ServeSim`], but advanced event-by-event by the fleet
-//! engine so replicas interleave correctly on the shared simulated clock.
-//! One `step()` call executes exactly one unit of work (one admission
-//! prefill or one batched decode step), which is the granularity arrivals
-//! can be routed between.
+//! telemetry window, advanced event-by-event so N replicas interleave
+//! correctly on the shared simulated clock. One `step()` call executes
+//! exactly one unit of work (one admission prefill or one batched decode
+//! step), which is the granularity arrivals can be routed between.
 //!
-//! Unlike `ServeSim` (a generation-workload loop that treats every request
-//! as ≥ 1 decode token), the replica inherits the offline engines'
-//! classification semantics: zero-output queries are scored with one
-//! prefill pass per answer option and complete at admission, with no
-//! decode phase — so `coordinator::Cluster` replays full mixed suites
-//! through the fleet engine faithfully. It also gates admission on KV-cache
-//! capacity, which `ServeSim` does not model.
+//! This is the single batching/governor/attribution core the whole
+//! codebase shares: [`crate::fleet::FleetSim`] drives N replicas through a
+//! router, [`crate::serve::ServeSim`] is a thin facade over exactly one
+//! replica, and `coordinator::Cluster` replays offline workloads through
+//! the fleet engine. Classification (zero-output) queries are scored with
+//! one prefill pass per answer option and complete at admission, with no
+//! decode phase; admission is gated on KV-cache capacity (a request that
+//! does not fit waits until decode drains sequences).
 
 use std::collections::VecDeque;
 
@@ -27,9 +26,7 @@ use crate::coordinator::dvfs_policy::{DvfsPolicy, Phase};
 use crate::engine::KvCacheManager;
 use crate::gpu::{GpuSim, TelemetryWindow};
 use crate::perf::{decode_step_cost, prefill_cost};
-use crate::serve::governor::{
-    FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop,
-};
+use crate::serve::governor::{governor_for, FreqGovernor, GovernorSignal};
 use crate::serve::slo::{Slo, SloTracker};
 use crate::serve::traffic::Arrival;
 use crate::text::tokenizer::token_count;
@@ -93,6 +90,8 @@ pub struct Replica {
     window: TelemetryWindow,
     /// Completion time of the last request this replica finished.
     pub last_finish_s: f64,
+    /// Deepest admission-queue backlog observed.
+    pub max_queue_depth: usize,
 
     // Accounting.
     pub busy_s: f64,
@@ -116,15 +115,25 @@ pub struct Replica {
 
 impl Replica {
     pub fn new(gpu: &GpuSpec, spec: ReplicaSpec, slo: Slo, window_s: f64) -> Replica {
-        let gov: Box<dyn FreqGovernor> = match spec.policy {
-            DvfsPolicy::Governed { floor, ceil } => {
-                Box::new(HysteresisGovernor::new(gpu, GovernorConfig::banded(gpu, floor, ceil)))
-            }
-            open => Box::new(OpenLoop(open)),
-        };
+        let gov = governor_for(&spec.policy, gpu);
+        Replica::with_governor(gpu, spec, gov, slo, window_s)
+    }
+
+    /// Build a replica around a caller-supplied governor — the serve
+    /// facade's pluggable path. `spec.policy` is metadata here (labels,
+    /// router snapshots); `gov` makes every frequency decision.
+    pub fn with_governor(
+        gpu: &GpuSpec,
+        spec: ReplicaSpec,
+        mut gov: Box<dyn FreqGovernor>,
+        slo: Slo,
+        window_s: f64,
+    ) -> Replica {
         let wants_signal = gov.wants_signal();
         let kv = KvCacheManager::new(gpu, &spec.model);
-        let f0 = spec.policy.prefill_freq(gpu);
+        // Cold-start set point: the governor's first prefill decision (for
+        // every built-in policy this equals `policy.prefill_freq`).
+        let f0 = gov.decide(0.0, Phase::Prefill, &GovernorSignal::default(), gpu);
         let gpu_sim = GpuSim::new(gpu.clone(), f0);
         let cold_j_per_token = gpu_sim.execute(&decode_step_cost(&spec.model, 1, 256)).energy_j;
         Replica {
@@ -138,6 +147,7 @@ impl Replica {
             tracker: SloTracker::new(slo),
             window: TelemetryWindow::new(window_s),
             last_finish_s: 0.0,
+            max_queue_depth: 0,
             busy_s: 0.0,
             energy_j: 0.0,
             idle_j: 0.0,
@@ -220,6 +230,7 @@ impl Replica {
             self.now_s = arrival.t_s;
         }
         self.queue.push_back(Queued { req, arrival });
+        self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
     }
 
     fn signal(&self) -> GovernorSignal {

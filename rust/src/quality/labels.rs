@@ -73,7 +73,8 @@ pub fn easy_hard_labels(suite: &ReplaySuite, qm: &QualityMatrix) -> Vec<bool> {
     for d in Dataset::ALL {
         let idx = suite.dataset_indices(d);
         let mut vals: Vec<f64> = idx.iter().map(|&i| means[i]).collect();
-        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN mean (empty matrix row) sorts last, not panics.
+        vals.sort_by(f64::total_cmp);
         let median = vals[vals.len() / 2];
         for &i in &idx {
             easy[i] = means[i] > median;

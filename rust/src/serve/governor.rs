@@ -47,6 +47,19 @@ pub trait FreqGovernor {
     }
 }
 
+/// Build the governor a [`DvfsPolicy`] implies: `Governed` bands get the
+/// closed-loop [`HysteresisGovernor`], everything else the [`OpenLoop`]
+/// adapter. The single construction point both the fleet replica and the
+/// serve facade use, so one policy always means one controller.
+pub fn governor_for(policy: &DvfsPolicy, gpu: &GpuSpec) -> Box<dyn FreqGovernor> {
+    match *policy {
+        DvfsPolicy::Governed { floor, ceil } => {
+            Box::new(HysteresisGovernor::new(gpu, GovernorConfig::banded(gpu, floor, ceil)))
+        }
+        open => Box::new(OpenLoop(open)),
+    }
+}
+
 /// Open-loop adapter: a fixed policy as a (non-reacting) governor.
 pub struct OpenLoop(pub DvfsPolicy);
 
@@ -362,6 +375,17 @@ mod tests {
     fn off_ladder_band_panics() {
         let g = gpu();
         HysteresisGovernor::new(&g, GovernorConfig::banded(&g, 200, 2842));
+    }
+
+    #[test]
+    fn governor_factory_matches_policy_class() {
+        let g = gpu();
+        let mut closed = governor_for(&DvfsPolicy::governed(&g), &g);
+        assert!(closed.wants_signal());
+        assert_eq!(closed.decide(0.0, Phase::Prefill, &slack(), &g), g.f_max_mhz);
+        let mut open = governor_for(&DvfsPolicy::Static(960), &g);
+        assert!(!open.wants_signal());
+        assert_eq!(open.decide(0.0, Phase::Decode, &overload(), &g), 960);
     }
 
     #[test]

@@ -13,16 +13,19 @@
 //!   adapter for any [`crate::coordinator::DvfsPolicy`], and the
 //!   closed-loop [`HysteresisGovernor`] (fast-up/slow-down over the
 //!   supported frequency ladder, driven by SLO pressure),
-//! - [`simloop`]: the discrete-event serving loop — continuous batching,
-//!   queueing delay, per-phase set points, and switch-overhead accounting
-//!   on the simulated GPU.
+//! - [`simloop`]: the serving facade — a one-replica fleet driven through
+//!   the shared [`crate::fleet`] continuous-batching loop (queueing delay,
+//!   per-phase set points, switch-overhead accounting, KV admission
+//!   gating, per-request energy attribution).
 
 pub mod governor;
 pub mod simloop;
 pub mod slo;
 pub mod traffic;
 
-pub use governor::{FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop};
+pub use governor::{
+    governor_for, FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop,
+};
 pub use simloop::{ServeOutcome, ServeSim, ServeSimConfig};
 pub use slo::{Slo, SloTracker};
 pub use traffic::{Arrival, TrafficPattern};

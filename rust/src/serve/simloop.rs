@@ -1,28 +1,31 @@
-//! The traffic-driven serving loop.
+//! The traffic-driven serving facade.
 //!
-//! A discrete-event simulation of one device serving an arrival stream
-//! with iteration-level (continuous) batching: queued requests join the
-//! running batch at decode-step boundaries, paying their prefill; finished
-//! sequences leave immediately. The frequency governor is consulted at
-//! every phase boundary, set-point changes charge the DVFS switch
-//! overhead at idle power, and per-request TTFT / time-between-tokens /
-//! end-to-end latencies stream into the SLO tracker the governor reads —
-//! the closed loop the paper's offline upper-bound analysis (Section
-//! VII-C) motivates but does not run.
-
-use std::collections::VecDeque;
+//! `ServeSim` serves one device under one arrival stream — but it owns no
+//! event loop of its own. It constructs a **one-replica fleet** and drives
+//! it through [`crate::fleet::engine::drive`], the same continuous-batching
+//! core `FleetSim` runs N replicas through: queued requests join the
+//! running batch at decode-step boundaries (paying their prefill), the
+//! governor is consulted at every phase boundary, set-point changes charge
+//! the DVFS switch overhead at idle power, and per-request TTFT /
+//! time-between-tokens / end-to-end latencies stream into the SLO tracker
+//! the governor reads.
+//!
+//! Because the loop is shared, the serve path inherits two behaviors it
+//! historically lacked: admission is gated on KV-cache capacity, and
+//! classification (zero-output) queries are scored with one prefill pass
+//! per answer option and complete at admission, with no decode phase.
 
 use anyhow::Result;
 
-use crate::config::{FreqMHz, GpuSpec, ModelSpec};
-use crate::coordinator::dvfs_policy::{DvfsPolicy, Phase};
+use crate::config::{GpuSpec, ModelSpec};
+use crate::coordinator::dvfs_policy::DvfsPolicy;
 use crate::fleet::attribution::{EnergyLedger, PhaseEnergy};
-use crate::gpu::{GpuSim, TelemetryWindow};
-use crate::perf::{decode_step_cost, prefill_cost};
-use crate::text::tokenizer::token_count;
+use crate::fleet::engine::drive;
+use crate::fleet::replica::{Replica, ReplicaSpec};
+use crate::fleet::router::RoundRobin;
 use crate::workload::ReplaySuite;
 
-use super::governor::{FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop};
+use super::governor::{governor_for, FreqGovernor};
 use super::slo::{Slo, SloTracker};
 use super::traffic::Arrival;
 
@@ -69,8 +72,8 @@ pub struct ServeOutcome {
     pub slo: SloTracker,
     /// Attributed energy per request (arrival order): prefill charged by
     /// tokens processed, decode split by tokens generated across the batch,
-    /// switches to the step they precede, idle amortized over all requests.
-    /// Sums to [`Self::total_j`] — see [`crate::fleet::attribution`].
+    /// switches to the step they precede, idle amortized over the requests
+    /// served. Sums to [`Self::total_j`] — see [`crate::fleet::attribution`].
     pub joules: Vec<f64>,
     /// The same attribution aggregated by phase across all requests.
     pub attributed_phase_breakdown: PhaseEnergy,
@@ -81,8 +84,27 @@ impl ServeOutcome {
         self.energy_j + self.idle_j
     }
 
+    /// Mean *attributed* energy per request: the ledger total (active plus
+    /// amortized idle) over served requests, so this agrees with summing
+    /// [`Self::joules`] — the convention the `ewatt slo` and `ewatt fleet`
+    /// tables report. `NaN` when the run served nothing (a degenerate case
+    /// the experiment tables assert against rather than silently printing
+    /// a number). For the policy-controlled quantity alone use
+    /// [`Self::active_joules_per_request`].
     pub fn joules_per_request(&self) -> f64 {
-        self.energy_j / self.served.max(1) as f64
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.total_j() / self.served as f64
+    }
+
+    /// Mean *active* (prefill + decode + switch) energy per served
+    /// request. `NaN` when nothing was served.
+    pub fn active_joules_per_request(&self) -> f64 {
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.energy_j / self.served as f64
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -90,19 +112,9 @@ impl ServeOutcome {
     }
 }
 
-/// One in-flight sequence.
-struct Active {
-    /// Index into the arrival stream (the attribution ledger's key).
-    req: usize,
-    arrival_s: f64,
-    /// Completion time of this sequence's prefill (first token out).
-    first_token_s: f64,
-    tokens: usize,
-    remaining: usize,
-    ctx: usize,
-}
-
-/// The traffic-driven serving simulator.
+/// The traffic-driven serving simulator: a thin facade over a one-replica
+/// fleet. All batching, governor, and attribution behavior lives in
+/// [`crate::fleet::Replica`].
 pub struct ServeSim {
     pub gpu: GpuSpec,
     pub model: ModelSpec,
@@ -124,14 +136,7 @@ impl ServeSim {
         arrivals: &[Arrival],
         policy: &DvfsPolicy,
     ) -> Result<ServeOutcome> {
-        match *policy {
-            DvfsPolicy::Governed { floor, ceil } => {
-                let cfg = GovernorConfig::banded(&self.gpu, floor, ceil);
-                let mut gov = HysteresisGovernor::new(&self.gpu, cfg);
-                self.run_with(suite, arrivals, &mut gov)
-            }
-            open => self.run_with(suite, arrivals, &mut OpenLoop(open)),
-        }
+        self.run_replica(suite, arrivals, *policy, governor_for(policy, &self.gpu))
     }
 
     /// Serve under any [`FreqGovernor`] implementation (the pluggable path).
@@ -139,177 +144,49 @@ impl ServeSim {
         &self,
         suite: &ReplaySuite,
         arrivals: &[Arrival],
-        gov: &mut dyn FreqGovernor,
+        gov: Box<dyn FreqGovernor>,
     ) -> Result<ServeOutcome> {
-        let mut now = 0.0f64;
-        let mut next = 0usize; // cursor into `arrivals`
-        let mut queue: VecDeque<(usize, Arrival)> = VecDeque::new();
-        let mut active: Vec<Active> = Vec::new();
-        let mut ledger = EnergyLedger::new(arrivals.len());
-        let mut req_scratch: Vec<usize> = Vec::new();
-
-        let mut tracker = SloTracker::new(self.cfg.slo);
-        let mut window = TelemetryWindow::new(self.cfg.window_s);
-        // Open-loop governors ignore the signal; skip building it for them
-        // (the window percentiles sit on the per-step hot path).
-        let wants_signal = gov.wants_signal();
-
-        let first = gov.decide(now, Phase::Prefill, &GovernorSignal::default(), &self.gpu);
-        let mut gpu = GpuSim::new(self.gpu.clone(), first);
-
-        let mut out = ServeOutcome {
-            served: 0,
-            energy_j: 0.0,
-            idle_j: 0.0,
-            switch_j: 0.0,
-            makespan_s: 0.0,
-            freq_switches: 0,
-            mean_decode_freq_mhz: 0.0,
-            max_queue_depth: 0,
-            slo: tracker.clone(), // placeholder; replaced at the end
-            joules: Vec::new(),
-            attributed_phase_breakdown: PhaseEnergy::default(),
-        };
-        let mut decode_freq_dt = 0.0f64; // Σ f·dt over decode steps
-        let mut decode_dt = 0.0f64;
-
-        while next < arrivals.len() || !queue.is_empty() || !active.is_empty() {
-            // Pull everything that has arrived by `now` into the queue.
-            while next < arrivals.len() && arrivals[next].t_s <= now {
-                queue.push_back((next, arrivals[next]));
-                next += 1;
-            }
-            out.max_queue_depth = out.max_queue_depth.max(queue.len());
-
-            if active.is_empty() && queue.is_empty() {
-                // Nothing in flight: idle forward to the next arrival.
-                let t_next = arrivals[next].t_s; // loop guard ⇒ next is valid
-                out.idle_j += (t_next - now) * self.gpu.p_idle_w;
-                now = t_next;
-                continue;
-            }
-
-            // Admit queued requests at the step boundary, each paying its
-            // own prefill (iteration-level scheduling).
-            while active.len() < self.cfg.max_batch && !queue.is_empty() {
-                let (req, arr) = queue.pop_front().unwrap();
-                let sig = if wants_signal {
-                    signal(&tracker, &queue, &active, &window)
-                } else {
-                    GovernorSignal::default()
-                };
-                let f = gov.decide(now, Phase::Prefill, &sig, &self.gpu);
-                self.switch_to(&mut gpu, f, &mut now, &mut out, &[req], &mut ledger);
-                let q = &suite.queries[arr.query_idx];
-                let input = token_count(&q.text).max(1);
-                let r = gpu.execute(&prefill_cost(&self.model, 1, input));
-                now += r.latency_s;
-                out.energy_j += r.energy_j;
-                window.record(now, r.latency_s, r.energy_j);
-                ledger.charge_prefill(req, r.energy_j);
-                active.push(Active {
-                    req,
-                    arrival_s: arr.t_s,
-                    first_token_s: now,
-                    tokens: 0,
-                    remaining: q.output_tokens.max(1),
-                    ctx: input,
-                });
-                // Requests that arrived during this prefill become eligible.
-                while next < arrivals.len() && arrivals[next].t_s <= now {
-                    queue.push_back((next, arrivals[next]));
-                    next += 1;
-                }
-                out.max_queue_depth = out.max_queue_depth.max(queue.len());
-            }
-
-            // One decode step for the whole running batch.
-            let sig = if wants_signal {
-                signal(&tracker, &queue, &active, &window)
-            } else {
-                GovernorSignal::default()
-            };
-            let f = gov.decide(now, Phase::Decode, &sig, &self.gpu);
-            req_scratch.clear();
-            req_scratch.extend(active.iter().map(|s| s.req));
-            self.switch_to(&mut gpu, f, &mut now, &mut out, &req_scratch, &mut ledger);
-            let ctx = active.iter().map(|s| s.ctx).max().unwrap();
-            let r = gpu.execute(&decode_step_cost(&self.model, active.len(), ctx));
-            now += r.latency_s;
-            out.energy_j += r.energy_j;
-            window.record(now, r.latency_s, r.energy_j);
-            ledger.charge_decode(&req_scratch, r.energy_j);
-            decode_freq_dt += f as f64 * r.latency_s;
-            decode_dt += r.latency_s;
-
-            for s in active.iter_mut() {
-                s.remaining -= 1;
-                s.tokens += 1;
-                s.ctx += 1;
-            }
-            active.retain(|s| {
-                if s.remaining == 0 {
-                    let e2e = now - s.arrival_s;
-                    let ttft = s.first_token_s - s.arrival_s;
-                    let tbt = (now - s.first_token_s) / s.tokens as f64;
-                    tracker.record(ttft, tbt, e2e);
-                    out.served += 1;
-                    false
-                } else {
-                    true
-                }
-            });
-        }
-
-        out.makespan_s = now;
-        out.mean_decode_freq_mhz = if decode_dt > 0.0 { decode_freq_dt / decode_dt } else { 0.0 };
-        out.slo = tracker;
-        // Idle draw waits for arrivals, so amortize it across all of them.
-        if out.idle_j > 0.0 {
-            let everyone: Vec<usize> = (0..arrivals.len()).collect();
-            ledger.charge_idle(&everyone, out.idle_j);
-        }
-        out.joules = ledger.joules();
-        out.attributed_phase_breakdown = ledger.totals();
-        Ok(out)
+        // The policy is replica metadata only; `gov` makes every decision.
+        self.run_replica(suite, arrivals, DvfsPolicy::Static(self.gpu.f_max_mhz), gov)
     }
 
-    /// Apply a set-point change, charging the switch latency at idle power
-    /// to the requests of the step that follows.
-    #[allow(clippy::too_many_arguments)]
-    fn switch_to(
+    /// The facade body: one replica, driven by the shared fleet loop.
+    fn run_replica(
         &self,
-        gpu: &mut GpuSim,
-        f: FreqMHz,
-        now: &mut f64,
-        out: &mut ServeOutcome,
-        reqs: &[usize],
-        ledger: &mut EnergyLedger,
-    ) {
-        let dt = gpu.set_freq(f);
-        if dt > 0.0 {
-            let e = dt * self.gpu.p_idle_w;
-            *now += dt;
-            out.energy_j += e;
-            out.switch_j += e;
-            out.freq_switches += 1;
-            ledger.charge_switch(reqs, e);
-        }
-    }
-}
-
-fn signal(
-    tracker: &SloTracker,
-    queue: &VecDeque<(usize, Arrival)>,
-    active: &[Active],
-    window: &TelemetryWindow,
-) -> GovernorSignal {
-    GovernorSignal {
-        pressure: tracker.pressure(),
-        queue_depth: queue.len(),
-        active_seqs: active.len(),
-        completed: tracker.completed(),
-        window_power_w: window.mean_power_w(),
+        suite: &ReplaySuite,
+        arrivals: &[Arrival],
+        policy: DvfsPolicy,
+        gov: Box<dyn FreqGovernor>,
+    ) -> Result<ServeOutcome> {
+        let spec = ReplicaSpec { model: self.model.clone(), policy, live: true };
+        let mut reps =
+            [Replica::with_governor(&self.gpu, spec, gov, self.cfg.slo, self.cfg.window_s)];
+        let mut ledger = EnergyLedger::new(arrivals.len());
+        let mut tracker = SloTracker::new(self.cfg.slo);
+        drive(
+            &mut reps,
+            suite,
+            arrivals,
+            &mut RoundRobin::default(),
+            self.cfg.max_batch,
+            &mut ledger,
+            &mut tracker,
+        )?;
+        let [mut rep] = reps;
+        rep.finalize(&mut ledger);
+        Ok(ServeOutcome {
+            served: rep.served,
+            energy_j: rep.energy_j,
+            idle_j: rep.idle_j,
+            switch_j: rep.switch_j,
+            makespan_s: rep.last_finish_s,
+            freq_switches: rep.freq_switches,
+            mean_decode_freq_mhz: rep.mean_decode_freq_mhz(),
+            max_queue_depth: rep.max_queue_depth,
+            slo: tracker,
+            joules: ledger.joules(),
+            attributed_phase_breakdown: ledger.totals(),
+        })
     }
 }
 
@@ -382,6 +259,10 @@ mod tests {
                 policy.label()
             );
             assert!(o.joules.iter().all(|&j| j > 0.0), "every request costs energy");
+            // J/req agrees with the ledger it is derived from.
+            let jreq = attributed / o.served as f64;
+            assert!((o.joules_per_request() - jreq).abs() <= 1e-9 * jreq);
+            assert!(o.active_joules_per_request() <= o.joules_per_request());
         }
     }
 
@@ -460,5 +341,46 @@ mod tests {
         // Under heavy backlog TTFT p95 must exceed a lone prefill's time by
         // a wide margin (queue wait dominates).
         assert!(o.slo.ttft_p95() > 0.05, "ttft p95 {:.4}s", o.slo.ttft_p95());
+    }
+
+    #[test]
+    fn classification_requests_complete_at_admission_without_decode() {
+        // Inherited from the shared replica loop: a zero-output query is
+        // scored with one prefill pass per answer option and never enters
+        // the decode batch.
+        let (suite, sim, _) = setup();
+        let idx = suite.dataset_indices(Dataset::BoolQ)[0];
+        let arrivals = vec![Arrival { t_s: 0.0, query_idx: idx }];
+        let o = sim.run(&suite, &arrivals, &DvfsPolicy::Static(2842)).unwrap();
+        assert_eq!(o.served, 1);
+        assert_eq!(o.slo.completed(), 1);
+        assert!(o.attributed_phase_breakdown.prefill_j > 0.0);
+        assert_eq!(o.attributed_phase_breakdown.decode_j, 0.0);
+        assert_eq!(o.mean_decode_freq_mhz, 0.0, "no decode step ran");
+        assert!(o.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn zero_served_reports_nan_not_a_silent_number() {
+        let (suite, sim, _) = setup();
+        let o = sim.run(&suite, &[], &DvfsPolicy::Static(2842)).unwrap();
+        assert_eq!(o.served, 0);
+        assert!(o.joules_per_request().is_nan());
+        assert!(o.active_joules_per_request().is_nan());
+        assert!(o.joules.is_empty());
+    }
+
+    #[test]
+    fn pluggable_governor_path_matches_policy_dispatch() {
+        let (suite, sim, pool) = setup();
+        let arrivals = bursty(&pool, 30);
+        let p = DvfsPolicy::paper_phase_aware(&sim.gpu);
+        let via_policy = sim.run(&suite, &arrivals, &p).unwrap();
+        let via_gov = sim
+            .run_with(&suite, &arrivals, governor_for(&p, &sim.gpu))
+            .unwrap();
+        assert_eq!(via_policy.energy_j, via_gov.energy_j);
+        assert_eq!(via_policy.joules, via_gov.joules);
+        assert_eq!(via_policy.makespan_s, via_gov.makespan_s);
     }
 }

@@ -116,7 +116,8 @@ impl P2Quantile {
             self.init[self.count] = x;
             self.count += 1;
             if self.count == 5 {
-                self.init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // total_cmp: a NaN observation must not panic the stream.
+                self.init.sort_by(f64::total_cmp);
                 self.q = self.init;
             }
             return;
@@ -230,13 +231,15 @@ impl StreamingQuantiles {
 }
 
 /// Exact quantile of a sample (nearest-rank on the sorted data) — the
-/// reference the streaming estimator is validated against.
+/// reference the streaming estimator is validated against. NaN samples
+/// sort after every finite value (total order), so a poisoned sample
+/// degrades the top quantiles instead of panicking the sort.
 pub fn exact_quantile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let idx = (p * (s.len() as f64 - 1.0)).round() as usize;
     s[idx]
 }
@@ -255,6 +258,19 @@ mod quantile_tests {
         }
         assert_eq!(q.value(), 2.0); // exact median of {1,2,3}
         assert_eq!(q.count(), 3);
+    }
+
+    #[test]
+    fn nan_sample_degrades_top_quantiles_without_panicking() {
+        // Regression: `partial_cmp().unwrap()` panicked on a NaN latency.
+        assert_eq!(exact_quantile(&[2.0, f64::NAN, 1.0, 3.0], 0.0), 1.0);
+        assert!(exact_quantile(&[2.0, f64::NAN, 1.0, 3.0], 1.0).is_nan());
+        // The streaming estimator's init sort tolerates NaN too.
+        let mut q = P2Quantile::new(0.5);
+        for x in [1.0, f64::NAN, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            q.observe(x);
+        }
+        assert_eq!(q.count(), 7);
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! The serve/fleet unification contract.
+//!
+//! `serve::ServeSim` is a facade over a one-replica `fleet::Replica`
+//! driven by the shared `fleet::engine::drive` loop. These tests pin that
+//! contract from outside the crate: the facade and an explicitly
+//! constructed one-replica fleet must agree request-by-request (identical
+//! attributed `joules` vectors, not merely close aggregates), mixed
+//! workloads with zero-output classification queries must flow through the
+//! serve path without a decode phase, and the pre-unification documented
+//! `ServeOutcome` invariants — attribution conservation ≤ 1e-6 and ≥ 25%
+//! governed active-energy savings within the p99 SLO on the `slo_serve`
+//! scenario — must keep holding through the shared core.
+
+use ewatt::config::model::{model_for_tier, ModelTier};
+use ewatt::config::GpuSpec;
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::fleet::{FleetConfig, FleetSim, ReplicaSpec, RoundRobin};
+use ewatt::serve::{Arrival, ServeSim, ServeSimConfig, TrafficPattern};
+use ewatt::workload::{Dataset, ReplaySuite};
+
+fn policies(gpu: &GpuSpec) -> [DvfsPolicy; 3] {
+    [
+        DvfsPolicy::Static(gpu.f_max_mhz),
+        DvfsPolicy::paper_phase_aware(gpu),
+        DvfsPolicy::governed(gpu),
+    ]
+}
+
+/// Property: for random mixed-workload traffic, model tiers, and policy
+/// classes, the `ServeSim` facade and a one-replica `FleetSim` produce the
+/// same outcome — bit-identical per-request energy attribution, served
+/// counts, SLO percentiles — and both conserve energy to 1e-6.
+#[test]
+fn prop_serve_facade_equals_one_replica_fleet() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let tiers = [ModelTier::B1, ModelTier::B3, ModelTier::B8];
+    for case in 0..10u64 {
+        let mut rng = ewatt::rng(0x0F1_CE ^ case);
+        let suite = ReplaySuite::quick(case, 10);
+        // Full dataset mix: generation AND zero-output classification.
+        let arrivals = TrafficPattern::Bursty {
+            base_rps: 1.0 + rng.gen_f64() * 3.0,
+            burst_rps: 5.0 + rng.gen_f64() * 6.0,
+            mean_dwell_s: 2.0,
+        }
+        .generate(&suite, 16 + rng.gen_range(0, 24), case);
+        let tier = *rng.choose(&tiers);
+        for policy in policies(&gpu) {
+            let cfg = ServeSimConfig::default();
+            let serve = ServeSim::new(gpu.clone(), model_for_tier(tier), cfg.clone())
+                .run(&suite, &arrivals, &policy)
+                .unwrap();
+            let fleet_cfg = FleetConfig {
+                replicas: vec![ReplicaSpec::tiered(tier, policy)],
+                max_batch: cfg.max_batch,
+                slo: cfg.slo,
+                window_s: cfg.window_s,
+            };
+            let fleet = FleetSim::new(gpu.clone(), fleet_cfg)
+                .run(&suite, &arrivals, &mut RoundRobin::default())
+                .unwrap();
+
+            let label = policy.label();
+            assert_eq!(serve.served, fleet.served, "case {case} [{label}]");
+            assert_eq!(serve.joules, fleet.joules, "case {case} [{label}]: attribution diverged");
+            assert_eq!(serve.energy_j, fleet.energy_j, "case {case} [{label}]");
+            assert_eq!(serve.idle_j, fleet.idle_j, "case {case} [{label}]");
+            assert_eq!(serve.switch_j, fleet.switch_j, "case {case} [{label}]");
+            assert_eq!(serve.freq_switches, fleet.freq_switches, "case {case} [{label}]");
+            assert_eq!(serve.makespan_s, fleet.makespan_s, "case {case} [{label}]");
+            assert_eq!(serve.max_queue_depth, fleet.replicas[0].max_queue_depth);
+            assert_eq!(serve.slo.e2e_p99(), fleet.slo.e2e_p99(), "case {case} [{label}]");
+            assert_eq!(serve.slo.completed(), fleet.slo.completed());
+
+            for (name, attributed, total) in [
+                ("serve", serve.joules.iter().sum::<f64>(), serve.total_j()),
+                ("fleet", fleet.joules.iter().sum::<f64>(), fleet.total_j()),
+            ] {
+                let rel = (attributed - total).abs() / total.max(1e-12);
+                assert!(rel < 1e-6, "case {case} [{label}] {name}: conservation {rel:e}");
+            }
+        }
+    }
+}
+
+/// A zero-output (classification) request flows through the serve path:
+/// scored with one prefill pass per answer option, completed at admission,
+/// no decode phase — the semantics the serve loop lacked before it was
+/// collapsed onto `fleet::Replica`.
+#[test]
+fn classification_flows_through_serve_without_decode() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(77, 12);
+    let sim = ServeSim::new(gpu, model_for_tier(ModelTier::B3), ServeSimConfig::default());
+    for ds in [Dataset::BoolQ, Dataset::HellaSwag] {
+        let idx = suite.dataset_indices(ds);
+        assert!(!idx.is_empty(), "{ds:?} slice empty");
+        let q = &suite.queries[idx[0]];
+        assert_eq!(q.output_tokens, 0, "{ds:?} is not zero-output");
+        let arrivals = vec![Arrival { t_s: 0.5, query_idx: idx[0] }];
+        let o = sim.run(&suite, &arrivals, &DvfsPolicy::Static(2842)).unwrap();
+        assert_eq!(o.served, 1, "{ds:?}");
+        assert_eq!(o.slo.completed(), 1);
+        let b = &o.attributed_phase_breakdown;
+        assert!(b.prefill_j > 0.0, "{ds:?}: option passes charge prefill");
+        assert_eq!(b.decode_j, 0.0, "{ds:?}: no decode phase may run");
+        assert_eq!(o.mean_decode_freq_mhz, 0.0);
+        // All measured energy lands on the one request.
+        let total = o.total_j();
+        assert!((o.joules[0] - total).abs() <= 1e-9 * total.max(1.0));
+    }
+}
+
+/// The pre-unification acceptance bar, re-pinned through the shared loop:
+/// on the `slo_serve` scenario (bursty MMPP over the generation corpus)
+/// the governed band saves ≥ 25% active energy vs `Static(f_max)` while
+/// holding the p99 end-to-end SLO, and attribution stays conservative.
+#[test]
+fn governed_acceptance_bar_holds_through_the_shared_loop() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(42, 40);
+    let mut pool = suite.dataset_indices(Dataset::TruthfulQa);
+    pool.extend(suite.dataset_indices(Dataset::NarrativeQa));
+    let arrivals = TrafficPattern::Bursty { base_rps: 1.5, burst_rps: 7.0, mean_dwell_s: 3.0 }
+        .generate_from(&pool, 100, 0xC10C);
+    let sim = ServeSim::new(gpu.clone(), model_for_tier(ModelTier::B8), ServeSimConfig::default());
+
+    let base = sim.run(&suite, &arrivals, &DvfsPolicy::baseline(&gpu)).unwrap();
+    let gov = sim.run(&suite, &arrivals, &DvfsPolicy::governed(&gpu)).unwrap();
+    assert_eq!(base.served, arrivals.len());
+    assert_eq!(gov.served, arrivals.len());
+
+    let savings = 1.0 - gov.energy_j / base.energy_j;
+    assert!(savings >= 0.25, "governed active-energy savings {savings:.3} below the bar");
+    assert!(
+        gov.slo.e2e_p99() <= sim.cfg.slo.e2e_p99_s,
+        "governed p99 {:.2}s over the {:.2}s SLO",
+        gov.slo.e2e_p99(),
+        sim.cfg.slo.e2e_p99_s
+    );
+    for o in [&base, &gov] {
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j();
+        assert!(rel < 1e-6, "conservation off by {rel:e}");
+        // J/req now agrees with the ledger by construction.
+        let jreq = attributed / o.served as f64;
+        assert!((o.joules_per_request() - jreq).abs() <= 1e-9 * jreq);
+    }
+}

@@ -120,6 +120,22 @@ macro_rules! bail {
     ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
 }
 
+/// Early-return an `Err(anyhow!(..))` unless `cond` holds (the real
+/// anyhow's `ensure!`, including the condition-only form).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +171,18 @@ mod tests {
         assert_eq!(e.root_cause(), "bad tier t99");
         let direct = anyhow!("x = {}", 7);
         assert_eq!(format!("{direct}"), "x = 7");
+    }
+
+    #[test]
+    fn ensure_macro_both_forms() {
+        fn guarded(n: usize) -> Result<usize> {
+            ensure!(n > 0, "served {n} requests");
+            ensure!(n < 100);
+            Ok(n)
+        }
+        assert_eq!(guarded(5).unwrap(), 5);
+        assert_eq!(format!("{}", guarded(0).unwrap_err()), "served 0 requests");
+        assert!(format!("{}", guarded(100).unwrap_err()).contains("n < 100"));
     }
 
     #[test]
