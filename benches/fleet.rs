@@ -10,7 +10,7 @@ use ewatt::config::{GpuSpec, ModelTier};
 use ewatt::coordinator::DvfsPolicy;
 use ewatt::fleet::{
     DifficultyTiered, EnergyAware, EnergyLedger, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
-    ReplicaStatus, RoundRobin,
+    ReactiveConfig, ReplicaState, ReplicaStatus, RoundRobin,
 };
 use ewatt::serve::TrafficPattern;
 use ewatt::util::bench::{bench, report};
@@ -20,7 +20,7 @@ fn statuses(n: usize) -> Vec<ReplicaStatus> {
     (0..n)
         .map(|i| ReplicaStatus {
             idx: i,
-            live: true,
+            state: ReplicaState::Live,
             tier: if i % 2 == 0 { ModelTier::B3 } else { ModelTier::B14 },
             queue_depth: (i * 3) % 7,
             active_seqs: i % 5,
@@ -84,5 +84,22 @@ fn main() {
         mono_sim.run(&suite, &arrivals, &mut LeastLoaded).unwrap().energy_j
     }));
 
-    report("fleet routing + attribution", &results);
+    // The elastic loop: autoscaler consulted per arrival, lifecycle events
+    // interleaved with steps — the overhead the lifecycle layer adds to
+    // the same continuous-batching core.
+    let diurnal = TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 30.0 }
+        .generate(&suite, 80, 3);
+    let elastic_cfg = FleetConfig::elastic(
+        model_for_tier(ModelTier::B8),
+        4,
+        1,
+        DvfsPolicy::governed(&GpuSpec::rtx_pro_6000()),
+        ReactiveConfig::default(),
+    );
+    let elastic_sim = FleetSim::new(GpuSpec::rtx_pro_6000(), elastic_cfg);
+    results.push(bench("fleet run 80 reqs [elastic 1..4]", 1, 10, || {
+        elastic_sim.run(&suite, &diurnal, &mut LeastLoaded).unwrap().energy_j
+    }));
+
+    report("fleet routing + attribution + lifecycle", &results);
 }

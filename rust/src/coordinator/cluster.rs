@@ -16,7 +16,7 @@
 use anyhow::Result;
 
 use crate::config::{GpuSpec, ModelSpec};
-use crate::fleet::{FleetConfig, FleetSim, LeastLoaded, ReplicaSpec};
+use crate::fleet::{FleetConfig, FleetSim, LeastLoaded, ReplicaSpec, ReplicaState};
 use crate::serve::slo::Slo;
 use crate::serve::traffic::Arrival;
 use crate::workload::ReplaySuite;
@@ -82,7 +82,7 @@ impl Cluster {
                 ReplicaSpec {
                     model: self.model.clone(),
                     policy: self.policy,
-                    live: true,
+                    state: ReplicaState::Live,
                 };
                 self.n_replicas
             ],

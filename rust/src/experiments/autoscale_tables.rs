@@ -1,0 +1,212 @@
+//! Elastic fleet comparison: static peak provisioning vs autoscaling vs
+//! autoscaling under replica failures, on diurnal traffic.
+//!
+//! The paper's Section VII upper bound fixes the fleet size; its diurnal/
+//! bursty traffic discussion implies the opposite regime dominates real
+//! bills — replicas idling off-peak burn idle power that per-token policy
+//! cannot touch. This experiment runs the tradeoff end-to-end: a sinusoidal
+//! diurnal arrival stream hits (a) a peak-provisioned static fleet, (b) the
+//! same fleet under the reactive autoscaler (cold-start energy + warm-up
+//! delay charged on every scale-up), and (c) the autoscaled fleet with a
+//! seeded MTBF/MTTR crash/recovery process injected. Per-request energy
+//! comes from the attribution ledger (cold starts amortized like idle), so
+//! J/req reflects the full provisioning bill. Deterministic in
+//! [`AUTOSCALE_SEED`].
+
+use anyhow::Result;
+
+use crate::config::model::model_for_tier;
+use crate::config::ModelTier;
+use crate::coordinator::DvfsPolicy;
+use crate::fleet::{
+    FailureConfig, FleetConfig, FleetOutcome, FleetSim, LeastLoaded, ReactiveConfig,
+};
+use crate::serve::TrafficPattern;
+
+use super::context::Context;
+use super::report::{pct0, Report};
+
+/// Master seed for the diurnal arrival stream and the failure process.
+pub const AUTOSCALE_SEED: u64 = 0xE1A57;
+
+/// Requests simulated per deployment (spans ≈ two diurnal periods).
+const REQUESTS: usize = 900;
+
+/// Peak-provisioned replica count (the static baseline's fleet size and
+/// the autoscaler's ceiling).
+const N_PEAK: usize = 4;
+
+/// Model tier every replica serves.
+const TIER: ModelTier = ModelTier::B8;
+
+/// The diurnal arrival process: deep troughs (where a static fleet idles)
+/// and peaks sized to need most of the provisioned replicas.
+pub fn diurnal() -> TrafficPattern {
+    TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 8.0, period_s: 120.0 }
+}
+
+/// The reactive scaler tuning used across the elastic comparisons.
+pub fn reactive() -> ReactiveConfig {
+    ReactiveConfig { min_live: 1, max_live: N_PEAK, ..ReactiveConfig::default() }
+}
+
+/// The injected failure process (MTBF/MTTR per replica, seconds).
+pub fn failures() -> FailureConfig {
+    FailureConfig { mtbf_s: 60.0, mttr_s: 20.0, seed: AUTOSCALE_SEED ^ 0xFA11 }
+}
+
+/// The compared deployments: (name, fleet config). All share one model
+/// tier, the governed DVFS band, and least-loaded routing, so the deltas
+/// isolate the lifecycle policy.
+pub fn deployments(ctx: &Context) -> Vec<(String, FleetConfig)> {
+    let gov = DvfsPolicy::governed(&ctx.gpu);
+    let model = model_for_tier(TIER);
+    let static_peak = FleetConfig::homogeneous(model.clone(), N_PEAK, gov);
+    let autoscaled = FleetConfig::elastic(model.clone(), N_PEAK, 1, gov, reactive());
+    let mut autoscaled_failures = FleetConfig::elastic(model, N_PEAK, 1, gov, reactive());
+    autoscaled_failures.failures = Some(failures());
+    vec![
+        (format!("static-{N_PEAK}"), static_peak),
+        ("autoscaled".into(), autoscaled),
+        ("autoscaled+failures".into(), autoscaled_failures),
+    ]
+}
+
+/// Run one deployment on the shared diurnal stream.
+pub fn run_deployment(ctx: &Context, cfg: FleetConfig) -> Result<FleetOutcome> {
+    let arrivals = diurnal().generate(&ctx.suite, REQUESTS, AUTOSCALE_SEED);
+    FleetSim::new(ctx.gpu.clone(), cfg).run(&ctx.suite, &arrivals, &mut LeastLoaded)
+}
+
+/// The comparison table: full-bill joules/request, tail latency, SLO
+/// attainment, and lifecycle counters per deployment.
+pub fn autoscale_table(ctx: &Context) -> Result<Report> {
+    let mut r = Report::new(
+        "autoscale",
+        "Elastic fleet: static peak provisioning vs autoscaling vs failures",
+        &[
+            "Deployment", "Served", "Total (J)", "Idle (J)", "Cold (J)", "J/req",
+            "vs static", "E2E p99 (s)", "SLO attain", "Up/Down", "Fail/Req", "Mean live",
+        ],
+    );
+    let mut base_jreq = None;
+    for (di, (name, cfg)) in deployments(ctx).into_iter().enumerate() {
+        let o = run_deployment(ctx, cfg)?;
+        // Guard the degenerate case explicitly: a zero-served cell would
+        // render every attributed per-request column NaN.
+        anyhow::ensure!(
+            o.served == REQUESTS,
+            "{name}: served {}/{REQUESTS} requests",
+            o.served
+        );
+        let jreq = o.attributed_joules_per_request();
+        let base = *base_jreq.get_or_insert(jreq);
+        r.row(vec![
+            name,
+            o.served.to_string(),
+            format!("{:.0}", o.total_j()),
+            format!("{:.0}", o.idle_j),
+            format!("{:.0}", o.coldstart_j),
+            format!("{jreq:.1}"),
+            if di == 0 { "-".to_string() } else { pct0(100.0 * (1.0 - jreq / base)) },
+            format!("{:.2}", o.slo.e2e_p99()),
+            pct0(100.0 * o.slo.attainment()),
+            format!("{}/{}", o.lifecycle.scale_ups, o.lifecycle.scale_downs),
+            format!("{}/{}", o.lifecycle.failures, o.lifecycle.requeued),
+            format!("{:.2}", o.mean_live_replicas),
+        ]);
+    }
+    r.note(format!(
+        "{REQUESTS} requests over {} (≈2 periods); all deployments: {N_PEAK}x{} replicas, \
+         governed DVFS, least-loaded routing; J/req is the full attributed bill \
+         (prefill+decode+switch+idle+cold-start)",
+        diurnal().label(),
+        TIER.label(),
+    ));
+    r.note(format!(
+        "autoscaled: reactive hysteresis (min 1, max {N_PEAK}), cold start {:.0} J + {:.0} s \
+         warm-up; failures: MTBF {:.0} s, MTTR {:.0} s per replica, crashes requeue \
+         in-flight work with original arrival timestamps",
+        FleetConfig::default().cold_start.energy_j,
+        FleetConfig::default().cold_start.warmup_s,
+        failures().mtbf_s,
+        failures().mttr_s,
+    ));
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::quick(127, 40)
+    }
+
+    #[test]
+    fn table_has_all_cells_and_is_deterministic() {
+        let c = ctx();
+        let a = autoscale_table(&c).unwrap();
+        assert_eq!(a.rows.len(), deployments(&c).len());
+        let b = autoscale_table(&c).unwrap();
+        assert_eq!(a.csv(), b.csv());
+    }
+
+    #[test]
+    fn autoscaling_beats_static_peak_on_joules_per_request_within_slo() {
+        // The PR's acceptance bar: the elastic fleet undercuts peak
+        // provisioning on the full attributed bill while holding the p99
+        // end-to-end SLO, cold starts included.
+        let c = ctx();
+        let mut deps = deployments(&c);
+        let (_, auto_cfg) = deps.remove(1);
+        let (_, static_cfg) = deps.remove(0);
+        let slo = static_cfg.slo;
+        let st = run_deployment(&c, static_cfg).unwrap();
+        let au = run_deployment(&c, auto_cfg).unwrap();
+        assert!(au.coldstart_j > 0.0, "autoscaled run never paid a cold start");
+        assert!(au.lifecycle.scale_ups > 0 && au.lifecycle.scale_downs > 0);
+        assert!(
+            au.mean_live_replicas < st.mean_live_replicas,
+            "autoscaling kept {} live on average vs static {}",
+            au.mean_live_replicas,
+            st.mean_live_replicas
+        );
+        assert!(
+            au.attributed_joules_per_request() < st.attributed_joules_per_request(),
+            "autoscaled {:.1} J/req vs static {:.1} J/req",
+            au.attributed_joules_per_request(),
+            st.attributed_joules_per_request()
+        );
+        for (name, o) in [("static", &st), ("autoscaled", &au)] {
+            assert!(
+                o.slo.e2e_p99() <= slo.e2e_p99_s,
+                "{name}: p99 {:.2}s over the {:.1}s SLO",
+                o.slo.e2e_p99(),
+                slo.e2e_p99_s
+            );
+        }
+    }
+
+    #[test]
+    fn failure_injection_conserves_energy_and_loses_nothing() {
+        let c = ctx();
+        let (_, cfg) = deployments(&c).remove(2);
+        let o = run_deployment(&c, cfg).unwrap();
+        assert_eq!(o.served, REQUESTS, "requests lost under failures");
+        assert_eq!(o.slo.completed(), REQUESTS);
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j();
+        assert!(rel < 1e-6, "conservation off by {rel:e} under failure injection");
+        // Each request is completed by exactly one replica.
+        let mut counts = vec![0usize; REQUESTS];
+        for r in &o.replicas {
+            assert!(r.served <= REQUESTS);
+        }
+        for (req, &rep) in o.served_by.iter().enumerate() {
+            assert!(rep < o.replicas.len(), "request {req} unserved");
+            counts[req] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 1));
+    }
+}

@@ -93,12 +93,14 @@ pub fn fleet_table(ctx: &Context) -> Result<Report> {
                 arrivals.len()
             );
             // Quality of what was actually served: each request sampled on
-            // the tier of the replica that decoded it.
+            // the tier of the replica that *completed* it (identical to
+            // first-routed here, but robust if failure injection is ever
+            // enabled in these deployments).
             let quality: f64 = arrivals
                 .iter()
                 .enumerate()
                 .map(|(i, a)| {
-                    let tier = o.replicas[o.routed[i]].tier;
+                    let tier = o.replicas[o.served_by[i]].tier;
                     let q = &ctx.suite.queries[a.query_idx];
                     qm.sample(q, &ctx.suite.features[a.query_idx], tier)
                 })

@@ -3,6 +3,7 @@
 //! per-experiment acceptance bands; `rust/tests/calibration.rs` asserts them.
 
 pub mod ablations;
+pub mod autoscale_tables;
 pub mod casestudy;
 pub mod context;
 pub mod dvfs_tables;

@@ -13,7 +13,11 @@
 //! - **switch**: a DVFS transition benefits the phase step that follows it
 //!   and is split across that step's requests;
 //! - **idle**: draw while a replica waits for arrivals is amortized equally
-//!   across the requests that replica ultimately served.
+//!   across the requests that replica ultimately served;
+//! - **cold start**: boot/weight-load energy paid when the autoscaler (or
+//!   failure recovery) warms a replica up, amortized like idle — over the
+//!   requests the warmed replica serves, falling back to the whole run's
+//!   requests when a warm-up never ended up serving anything.
 //!
 //! Every split is exact by construction, so attributed energy sums back to
 //! the measured total — the conservation property the proptest suite and
@@ -30,12 +34,15 @@ pub struct PhaseEnergy {
     pub switch_j: f64,
     /// This request's amortized share of replica idle draw, joules.
     pub idle_j: f64,
+    /// This request's amortized share of cold-start (boot + weight-load)
+    /// energy, joules. Zero unless the fleet scaled or recovered.
+    pub coldstart_j: f64,
 }
 
 impl PhaseEnergy {
     /// Total attributed energy, joules.
     pub fn total_j(&self) -> f64 {
-        self.prefill_j + self.decode_j + self.switch_j + self.idle_j
+        self.prefill_j + self.decode_j + self.switch_j + self.idle_j + self.coldstart_j
     }
 
     /// Accumulate another breakdown into this one.
@@ -44,6 +51,7 @@ impl PhaseEnergy {
         self.decode_j += other.decode_j;
         self.switch_j += other.switch_j;
         self.idle_j += other.idle_j;
+        self.coldstart_j += other.coldstart_j;
     }
 
     /// Active (policy-controlled) energy: everything but idle.
@@ -106,6 +114,18 @@ impl EnergyLedger {
         let share = energy_j / reqs.len() as f64;
         for &r in reqs {
             self.per_request[r].idle_j += share;
+        }
+    }
+
+    /// Amortize a replica's cold-start energy equally across `reqs`.
+    pub fn charge_coldstart(&mut self, reqs: &[usize], energy_j: f64) {
+        if energy_j == 0.0 {
+            return;
+        }
+        assert!(!reqs.is_empty(), "cold-start energy with no requests to amortize over");
+        let share = energy_j / reqs.len() as f64;
+        for &r in reqs {
+            self.per_request[r].coldstart_j += share;
         }
     }
 
@@ -184,6 +204,25 @@ mod tests {
     #[should_panic(expected = "no served requests")]
     fn idle_with_no_recipients_panics() {
         EnergyLedger::new(1).charge_idle(&[], 1.0);
+    }
+
+    #[test]
+    fn coldstart_amortizes_like_idle_and_counts_in_totals() {
+        let mut led = EnergyLedger::new(4);
+        led.charge_coldstart(&[], 0.0); // no-op, must not panic
+        led.charge_coldstart(&[0, 1], 8.0);
+        led.charge_prefill(0, 2.0);
+        assert!((led.request(0).coldstart_j - 4.0).abs() < 1e-12);
+        assert!((led.request(1).coldstart_j - 4.0).abs() < 1e-12);
+        assert!((led.totals().total_j() - 10.0).abs() < 1e-12);
+        // Cold start is provisioning cost, not serving-path active energy.
+        assert!((led.totals().active_j() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "no requests to amortize")]
+    fn coldstart_with_no_recipients_panics() {
+        EnergyLedger::new(1).charge_coldstart(&[], 1.0);
     }
 
     #[test]

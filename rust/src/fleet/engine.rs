@@ -2,23 +2,28 @@
 //!
 //! A discrete-event engine over N replicas (possibly different model
 //! tiers, each under its own frequency governor) fed by one arrival
-//! stream through a pluggable [`FleetRouter`]. The engine interleaves two
-//! event kinds on the simulated clock:
+//! stream through a pluggable [`FleetRouter`]. The engine interleaves
+//! three event kinds on the simulated clock:
 //!
-//! - **arrival**: the router reads every replica's live status (backlog,
-//!   telemetry-window power, joules/token) and binds the request to
-//!   exactly one live replica;
-//! - **replica step**: the earliest runnable replica executes one unit of
+//! - **arrival**: the autoscaler reads fleet state and may start warming
+//!   or draining replicas, then the router reads every replica's live
+//!   status (backlog, telemetry-window power, joules/token) and binds the
+//!   request to exactly one live replica;
+//! - **replica step**: the earliest steppable replica executes one unit of
 //!   work (an admission prefill or a batched decode step) under its own
-//!   governor.
+//!   governor;
+//! - **lifecycle event**: a warm-up completes (`Warming → Live`), a
+//!   replica crashes (`Live → Cold`, in-flight requests requeued through
+//!   the router with their original arrival timestamps), or a repair
+//!   completes (`Cold → Warming`, charging a fresh cold start).
 //!
 //! Arrivals are processed before any replica step at or after their
 //! timestamp, so routing always sees the fleet state as of the arrival
 //! instant — the co-design loop (router reacting to governor-driven power,
-//! governor reacting to router-driven load) the paper's offline Section
-//! VII analysis cannot express.
+//! governor reacting to router-driven load, autoscaler reacting to both)
+//! the paper's offline Section VII analysis cannot express.
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::config::{GpuSpec, ModelSpec, ModelTier};
 use crate::coordinator::dvfs_policy::DvfsPolicy;
@@ -28,8 +33,12 @@ use crate::stats::exact_quantile;
 use crate::workload::ReplaySuite;
 
 use super::attribution::{EnergyLedger, PhaseEnergy};
+use super::lifecycle::{
+    earlier, AutoscalePolicy, ColdStart, FailureConfig, FailureModel, Lifecycle, LifecycleEvent,
+    LifecycleStats, PendingRequeue, ReactiveConfig, ReplicaState, ScaleAction,
+};
 use super::replica::{Replica, ReplicaSpec};
-use super::router::FleetRouter;
+use super::router::{FleetRouter, ReplicaStatus};
 
 /// Fleet composition and serving parameters.
 #[derive(Debug, Clone)]
@@ -40,6 +49,12 @@ pub struct FleetConfig {
     pub slo: Slo,
     /// Telemetry window horizon fed to each governor, seconds.
     pub window_s: f64,
+    /// Scaling discipline ([`AutoscalePolicy::Static`] = fixed fleet).
+    pub autoscale: AutoscalePolicy,
+    /// Seeded replica crash/repair process (`None` = no failures).
+    pub failures: Option<FailureConfig>,
+    /// Energy + delay of bringing a `Cold` replica `Live`.
+    pub cold_start: ColdStart,
 }
 
 impl FleetConfig {
@@ -47,7 +62,10 @@ impl FleetConfig {
     pub fn homogeneous(model: ModelSpec, n: usize, policy: DvfsPolicy) -> FleetConfig {
         assert!(n >= 1);
         FleetConfig {
-            replicas: vec![ReplicaSpec { model, policy, live: true }; n],
+            replicas: vec![
+                ReplicaSpec { model, policy, state: ReplicaState::Live };
+                n
+            ],
             ..FleetConfig::default()
         }
     }
@@ -71,6 +89,26 @@ impl FleetConfig {
         }
         FleetConfig { replicas, ..FleetConfig::default() }
     }
+
+    /// An elastic fleet: `n` provisioned replicas of which `initial_live`
+    /// start `Live` and the rest `Cold`, scaled by a reactive autoscaler
+    /// capped at the provisioned count.
+    pub fn elastic(
+        model: ModelSpec,
+        n: usize,
+        initial_live: usize,
+        policy: DvfsPolicy,
+        scale: ReactiveConfig,
+    ) -> FleetConfig {
+        assert!(n >= 1 && (1..=n).contains(&initial_live));
+        let mut cfg = FleetConfig::homogeneous(model, n, policy);
+        for spec in cfg.replicas[initial_live..].iter_mut() {
+            spec.state = ReplicaState::Cold;
+        }
+        cfg.autoscale =
+            AutoscalePolicy::Reactive(ReactiveConfig { max_live: n.min(scale.max_live), ..scale });
+        cfg
+    }
 }
 
 impl Default for FleetConfig {
@@ -80,6 +118,9 @@ impl Default for FleetConfig {
             max_batch: 8,
             slo: Slo::interactive(),
             window_s: 2.0,
+            autoscale: AutoscalePolicy::Static,
+            failures: None,
+            cold_start: ColdStart::default(),
         }
     }
 }
@@ -89,7 +130,8 @@ impl Default for FleetConfig {
 pub struct ReplicaOutcome {
     pub tier: ModelTier,
     pub policy_label: String,
-    pub live: bool,
+    /// Lifecycle state at the end of the run.
+    pub state: ReplicaState,
     pub served: usize,
     pub tokens_out: u64,
     /// Busy (prefill + decode + switch) time, seconds.
@@ -98,6 +140,8 @@ pub struct ReplicaOutcome {
     pub energy_j: f64,
     pub idle_j: f64,
     pub switch_j: f64,
+    /// Cold-start energy this replica's warm-ups charged, joules.
+    pub coldstart_j: f64,
     pub freq_switches: usize,
     pub mean_decode_freq_mhz: f64,
     /// Deepest admission-queue backlog this replica observed.
@@ -114,6 +158,8 @@ pub struct FleetOutcome {
     pub idle_j: f64,
     /// Energy charged to DVFS transitions (subset of `energy_j`).
     pub switch_j: f64,
+    /// Cold-start (boot + weight-load) energy across all warm-ups, joules.
+    pub coldstart_j: f64,
     /// Time the last request finished, seconds.
     pub makespan_s: f64,
     pub freq_switches: usize,
@@ -123,20 +169,27 @@ pub struct FleetOutcome {
     pub joules: Vec<f64>,
     /// Fleet-wide attributed energy by phase (sums to `total_j()`).
     pub breakdown: PhaseEnergy,
-    /// Which replica served each arrival.
+    /// Which replica each arrival was first routed to.
     pub routed: Vec<usize>,
+    /// Which replica ultimately *completed* each arrival (differs from
+    /// `routed` only for crash-requeued requests).
+    pub served_by: Vec<usize>,
+    /// Scale/failure/requeue counters for the run.
+    pub lifecycle: LifecycleStats,
+    /// Time-weighted mean count of `Live` replicas over the makespan.
+    pub mean_live_replicas: f64,
     pub replicas: Vec<ReplicaOutcome>,
 }
 
 impl FleetOutcome {
-    /// Active + idle energy, joules.
+    /// Active + idle + cold-start energy, joules.
     pub fn total_j(&self) -> f64 {
-        self.energy_j + self.idle_j
+        self.energy_j + self.idle_j + self.coldstart_j
     }
 
-    /// Mean *attributed* energy per request — active plus amortized idle,
-    /// the full per-request bill, consistent with summing [`Self::joules`]
-    /// (the same convention as
+    /// Mean *attributed* energy per request — active plus amortized idle
+    /// and cold starts, the full per-request bill, consistent with summing
+    /// [`Self::joules`] (the same convention as
     /// [`crate::serve::ServeOutcome::joules_per_request`]). `NaN` when the
     /// run served nothing — a degenerate case the experiment tables assert
     /// against rather than silently reporting a number.
@@ -175,8 +228,11 @@ pub struct FleetSim {
 impl FleetSim {
     pub fn new(gpu: GpuSpec, cfg: FleetConfig) -> FleetSim {
         assert!(!cfg.replicas.is_empty(), "fleet needs at least one replica");
-        assert!(cfg.replicas.iter().any(|r| r.live), "fleet needs at least one live replica");
         assert!(cfg.max_batch >= 1);
+        // NOTE: liveness is deliberately *not* asserted here. A fleet may
+        // start all-`Cold` under an autoscaler that warms capacity on the
+        // first arrival; a fleet that is dead when traffic actually needs
+        // it is a typed error from the state machine inside [`drive`].
         FleetSim { gpu, cfg }
     }
 
@@ -194,8 +250,16 @@ impl FleetSim {
             .iter()
             .map(|spec| Replica::new(&self.gpu, spec.clone(), self.cfg.slo, self.cfg.window_s))
             .collect();
+        let initial_live = reps.iter().filter(|r| r.state.routable()).count();
         let mut ledger = EnergyLedger::new(arrivals.len());
         let mut fleet_tracker = SloTracker::new(self.cfg.slo);
+        let mut lifecycle = Lifecycle::new(
+            self.cfg.autoscale.build(),
+            self.cfg
+                .failures
+                .map(|f| FailureModel::new(f, self.cfg.replicas.len())),
+            self.cfg.cold_start,
+        );
         let routed = drive(
             &mut reps,
             suite,
@@ -204,6 +268,7 @@ impl FleetSim {
             self.cfg.max_batch,
             &mut ledger,
             &mut fleet_tracker,
+            &mut lifecycle,
         )?;
 
         let mut out = FleetOutcome {
@@ -211,41 +276,62 @@ impl FleetSim {
             energy_j: 0.0,
             idle_j: 0.0,
             switch_j: 0.0,
+            coldstart_j: 0.0,
             makespan_s: 0.0,
             freq_switches: 0,
             slo: fleet_tracker,
             joules: Vec::new(),
             breakdown: PhaseEnergy::default(),
             routed,
+            served_by: vec![usize::MAX; arrivals.len()],
+            lifecycle: lifecycle.stats,
+            mean_live_replicas: 0.0,
             replicas: Vec::with_capacity(reps.len()),
         };
+        // Overhead (idle, cold starts) of replicas that never completed a
+        // request cannot be amortized locally; spread it over the whole
+        // run so the bill still sums to the meter.
+        let mut unattributed = PhaseEnergy::default();
         for rep in reps.iter_mut() {
-            rep.finalize(&mut ledger);
+            unattributed.add(&rep.finalize(&mut ledger));
+            for &req in rep.served_reqs() {
+                out.served_by[req] = out.replicas.len();
+            }
             out.served += rep.served;
             out.energy_j += rep.energy_j;
             out.idle_j += rep.idle_j;
             out.switch_j += rep.switch_j;
+            out.coldstart_j += rep.coldstart_j;
             out.freq_switches += rep.freq_switches;
             out.makespan_s = out.makespan_s.max(rep.last_finish_s);
             out.replicas.push(ReplicaOutcome {
                 tier: rep.spec.model.tier,
                 policy_label: rep.spec.policy.label(),
-                live: rep.spec.live,
+                state: rep.state,
                 served: rep.served,
                 tokens_out: rep.tokens_out,
                 busy_s: rep.busy_s,
                 energy_j: rep.energy_j,
                 idle_j: rep.idle_j,
                 switch_j: rep.switch_j,
+                coldstart_j: rep.coldstart_j,
                 freq_switches: rep.freq_switches,
                 mean_decode_freq_mhz: rep.mean_decode_freq_mhz(),
                 max_queue_depth: rep.max_queue_depth,
             });
         }
+        if unattributed.total_j() > 0.0 {
+            let all: Vec<usize> = (0..arrivals.len()).collect();
+            ledger.charge_idle(&all, unattributed.idle_j);
+            ledger.charge_coldstart(&all, unattributed.coldstart_j);
+        }
+        out.mean_live_replicas = lifecycle.mean_live(initial_live, out.makespan_s);
         out.joules = ledger.joules();
         out.breakdown = ledger.totals();
         debug_assert!(
-            (out.breakdown.total_j() - out.total_j()).abs() <= 1e-6 * out.total_j().max(1e-12),
+            out.served < arrivals.len()
+                || (out.breakdown.total_j() - out.total_j()).abs()
+                    <= 1e-6 * out.total_j().max(1e-12),
             "attribution lost energy: {} vs {}",
             out.breakdown.total_j(),
             out.total_j()
@@ -254,15 +340,220 @@ impl FleetSim {
     }
 }
 
+/// Route one request against the fleet's status snapshots, enqueueing it
+/// on the chosen replica (which may not start on it before `not_before_s`
+/// — the requeue path's causality floor). `refresh` rebuilds `statuses`
+/// from the replicas first; pass `false` only when the caller just built
+/// them and nothing has mutated since (the autoscaler-held arrival path).
+#[allow(clippy::too_many_arguments)]
+fn route_one(
+    reps: &mut [Replica],
+    suite: &ReplaySuite,
+    router: &mut dyn FleetRouter,
+    statuses: &mut Vec<ReplicaStatus>,
+    refresh: bool,
+    req: usize,
+    arrival: Arrival,
+    not_before_s: f64,
+) -> usize {
+    if refresh {
+        statuses.clear();
+        statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
+    }
+    let choice = router.route(&arrival, suite.features.get(arrival.query_idx), statuses);
+    assert!(
+        choice < reps.len() && reps[choice].state.routable(),
+        "router {} picked replica {choice}, which is not a live replica",
+        router.label()
+    );
+    reps[choice].enqueue_at(req, arrival, not_before_s);
+    choice
+}
+
+/// Earliest pending lifecycle event: warm-up completions (read off replica
+/// states) merged with the failure model's crash/repair schedule.
+fn next_lifecycle_event(
+    reps: &[Replica],
+    lifecycle: &Lifecycle,
+) -> Option<(f64, LifecycleEvent)> {
+    let mut best = lifecycle.failures.as_ref().and_then(|f| f.next_event());
+    for (i, r) in reps.iter().enumerate() {
+        if let ReplicaState::Warming { until_s } = r.state {
+            best = earlier(best, Some((until_s, LifecycleEvent::WarmDone(i))));
+        }
+    }
+    best
+}
+
+/// Apply one lifecycle event at its scheduled time.
+fn apply_lifecycle_event(
+    reps: &mut [Replica],
+    suite: &ReplaySuite,
+    router: &mut dyn FleetRouter,
+    statuses: &mut Vec<ReplicaStatus>,
+    lifecycle: &mut Lifecycle,
+    t_ev: f64,
+    ev: LifecycleEvent,
+) {
+    match ev {
+        LifecycleEvent::WarmDone(i) => {
+            reps[i].finish_warmup(t_ev);
+            lifecycle.log_live_delta(t_ev, 1);
+            if let Some(fm) = lifecycle.failures.as_mut() {
+                fm.arm(i, t_ev);
+            }
+            // Requests stranded by a crash while nothing was live route
+            // now, oldest (lowest request index) first.
+            while let Some(p) = lifecycle.pending.pop_front() {
+                route_one(
+                    reps,
+                    suite,
+                    router,
+                    statuses,
+                    true,
+                    p.req,
+                    p.arrival,
+                    p.not_before_s.max(t_ev),
+                );
+            }
+        }
+        LifecycleEvent::Recover(i) => {
+            lifecycle
+                .failures
+                .as_mut()
+                .expect("recovery without a failure model")
+                .recovered(i);
+            // Recovery is a fresh cold start: boot energy + warm-up again.
+            // (Defensive: skip if something else already revived it — the
+            // autoscaler never warms an under-repair replica, so in
+            // practice the state here is always `Cold`.)
+            if reps[i].state == ReplicaState::Cold {
+                lifecycle.stats.recoveries += 1;
+                reps[i].start_warming(t_ev, &lifecycle.cold_start);
+            }
+        }
+        LifecycleEvent::Fail(i) => {
+            lifecycle
+                .failures
+                .as_mut()
+                .expect("crash without a failure model")
+                .crash(i, t_ev);
+            lifecycle.stats.failures += 1;
+            lifecycle.log_live_delta(t_ev, -1);
+            let lost = reps[i].crash(t_ev);
+            lifecycle.stats.requeued += lost.len();
+            let any_live = reps.iter().any(|r| r.state.routable());
+            for (req, arrival) in lost {
+                if any_live {
+                    // Through the router, original arrival timestamp, but
+                    // no replica may start on it before the crash instant.
+                    route_one(reps, suite, router, statuses, true, req, arrival, t_ev);
+                } else {
+                    lifecycle.pending.push_back(PendingRequeue {
+                        req,
+                        arrival,
+                        not_before_s: t_ev,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Consult the autoscaler at an arrival instant and apply its decision.
+/// Rebuilds `statuses` as the decision input; returns whether any replica
+/// was mutated (when not, the snapshot is still current for routing).
+fn apply_autoscale(
+    reps: &mut [Replica],
+    statuses: &mut Vec<ReplicaStatus>,
+    lifecycle: &mut Lifecycle,
+    t_s: f64,
+    slo_pressure: f64,
+) -> bool {
+    statuses.clear();
+    statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
+    let mut mutated = false;
+    match lifecycle.autoscaler.decide(t_s, statuses, slo_pressure) {
+        ScaleAction::Hold => {}
+        ScaleAction::Up(n) => {
+            for _ in 0..n {
+                // Rescue a draining replica first: it is warm, holds its
+                // KV cache, and costs neither boot energy nor delay.
+                let rescue = reps.iter().position(|r| r.state == ReplicaState::Draining);
+                // A crashed machine cannot be warmed until its repair
+                // completes — only healthy cold replicas are candidates.
+                let cold = reps
+                    .iter()
+                    .enumerate()
+                    .find(|&(i, r)| {
+                        r.state == ReplicaState::Cold
+                            && !lifecycle
+                                .failures
+                                .as_ref()
+                                .is_some_and(|fm| fm.under_repair(i))
+                    })
+                    .map(|(i, _)| i);
+                if let Some(i) = rescue {
+                    reps[i].state = ReplicaState::Live;
+                    lifecycle.log_live_delta(t_s, 1);
+                    if let Some(fm) = lifecycle.failures.as_mut() {
+                        fm.arm(i, t_s);
+                    }
+                    lifecycle.stats.scale_ups += 1;
+                    mutated = true;
+                } else if let Some(i) = cold {
+                    reps[i].start_warming(t_s, &lifecycle.cold_start);
+                    lifecycle.stats.scale_ups += 1;
+                    mutated = true;
+                } else {
+                    break; // nothing healthy left to bring up
+                }
+            }
+        }
+        ScaleAction::Down(n) => {
+            for _ in 0..n {
+                let live: Vec<usize> = reps
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.state.routable())
+                    .map(|(i, _)| i)
+                    .collect();
+                // Engine floor regardless of autoscaler: never drain the
+                // last live replica out from under the router.
+                if live.len() <= 1 {
+                    break;
+                }
+                let i = live
+                    .into_iter()
+                    .min_by_key(|&i| (reps[i].queue_depth() + reps[i].active_seqs(), i))
+                    .expect("live replicas exist");
+                reps[i].begin_drain(t_s);
+                lifecycle.log_live_delta(t_s, -1);
+                if let Some(fm) = lifecycle.failures.as_mut() {
+                    fm.disarm(i);
+                }
+                lifecycle.stats.scale_downs += 1;
+                mutated = true;
+            }
+        }
+    }
+    mutated
+}
+
 /// The shared continuous-batching event loop: advance `reps` through one
 /// arrival stream. Each arrival is routed at its own timestamp against
 /// live replica state, before any replica step that would start at or
-/// after it; otherwise the earliest runnable replica executes one unit of
-/// work under its own governor. This is the single loop behind both
+/// after it; otherwise the earliest steppable replica executes one unit of
+/// work under its own governor. Lifecycle events (warm-ups, crashes,
+/// repairs) interleave in time order while work remains; once the last
+/// request drains the run ends. This is the single loop behind both
 /// [`FleetSim::run`] and the one-replica [`crate::serve::ServeSim`]
-/// facade — there is deliberately no second copy anywhere.
+/// facade — there is deliberately no second copy anywhere. Under an inert
+/// lifecycle ([`Lifecycle::inert`]) the loop is bit-identical to the
+/// fixed-fleet loop it grew from (pinned by `rust/tests/unification.rs`).
 ///
-/// Returns which replica served each arrival, indexed by arrival order.
+/// Returns which replica each arrival was first routed to.
+#[allow(clippy::too_many_arguments)]
 pub fn drive(
     reps: &mut [Replica],
     suite: &ReplaySuite,
@@ -271,46 +562,113 @@ pub fn drive(
     max_batch: usize,
     ledger: &mut EnergyLedger,
     tracker: &mut SloTracker,
+    lifecycle: &mut Lifecycle,
 ) -> Result<Vec<usize>> {
     let mut routed = vec![usize::MAX; arrivals.len()];
     let mut statuses = Vec::with_capacity(reps.len());
     let mut next = 0usize;
 
+    // Arm the failure clocks of initially-live replicas.
+    if let Some(fm) = lifecycle.failures.as_mut() {
+        for (i, r) in reps.iter().enumerate() {
+            if r.state.routable() {
+                fm.arm(i, 0.0);
+            }
+        }
+    }
+
     loop {
-        // Earliest runnable replica clock (work that would start next).
+        // Earliest steppable replica clock (work that would start next).
         let t_step = reps
             .iter()
-            .filter(|r| r.runnable())
+            .filter(|r| r.can_step())
             .map(|r| r.now_s)
             .fold(f64::INFINITY, f64::min);
+        let t_arr = if next < arrivals.len() { arrivals[next].t_s } else { f64::INFINITY };
 
-        if next < arrivals.len() && arrivals[next].t_s <= t_step {
+        // Run complete: all arrivals routed, nothing requeued, no work
+        // left. Lifecycle events scheduled beyond this point never fire —
+        // the simulation ends with the last request, so a quiet fleet is
+        // not crashed/recovered forever after.
+        if !t_arr.is_finite() && !t_step.is_finite() && lifecycle.pending.is_empty() {
+            break;
+        }
+
+        if !lifecycle.is_inert() {
+            if let Some((t_ev, ev)) = next_lifecycle_event(reps, lifecycle) {
+                if t_ev <= t_arr.min(t_step) {
+                    apply_lifecycle_event(reps, suite, router, &mut statuses, lifecycle, t_ev, ev);
+                    continue;
+                }
+            }
+        }
+
+        if next < arrivals.len() && t_arr <= t_step {
             let a = arrivals[next];
-            statuses.clear();
-            statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
-            let choice = router.route(&a, suite.features.get(a.query_idx), &statuses);
-            assert!(
-                choice < reps.len() && reps[choice].spec.live,
-                "router {} picked replica {choice}, which is not a live replica",
-                router.label()
-            );
-            reps[choice].enqueue(next, a);
-            routed[next] = choice;
+            // When the autoscaler ran and held, the status snapshot it
+            // read is still current — routing can reuse it instead of
+            // recomputing every replica's telemetry readout.
+            let mut statuses_current = false;
+            if !lifecycle.is_inert() {
+                let pressure = tracker.pressure();
+                statuses_current =
+                    !apply_autoscale(reps, &mut statuses, lifecycle, a.t_s, pressure);
+            }
+            if !reps.iter().any(|r| r.state.routable()) {
+                // No live capacity for this arrival. If capacity is on its
+                // way (warming or under repair), fast-forward to that
+                // event and retry; otherwise the fleet is dead mid-run —
+                // a typed error, not a deadlock. (This is the liveness
+                // validation that used to be a constructor assert, now
+                // enforced by the state machine at the moment it matters.)
+                match next_lifecycle_event(reps, lifecycle) {
+                    Some((t_ev, ev)) => {
+                        apply_lifecycle_event(
+                            reps,
+                            suite,
+                            router,
+                            &mut statuses,
+                            lifecycle,
+                            t_ev,
+                            ev,
+                        );
+                        continue;
+                    }
+                    None => bail!(
+                        "fleet has no live replica and none warming or recovering at \
+                         t={:.3}s (arrival {}/{})",
+                        a.t_s,
+                        next,
+                        arrivals.len()
+                    ),
+                }
+            }
+            routed[next] =
+                route_one(reps, suite, router, &mut statuses, !statuses_current, next, a, a.t_s);
             next += 1;
         } else if t_step.is_finite() {
-            // Step the earliest runnable replica (lowest index on ties;
+            // Step the earliest steppable replica (lowest index on ties;
             // total_cmp so a corrupted NaN clock loudly picks a stable
             // order instead of panicking mid-run).
             let i = reps
                 .iter()
                 .enumerate()
-                .filter(|(_, r)| r.runnable())
+                .filter(|(_, r)| r.can_step())
                 .min_by(|(_, a), (_, b)| a.now_s.total_cmp(&b.now_s))
                 .map(|(i, _)| i)
                 .unwrap();
             reps[i].step(suite, max_batch, ledger, tracker)?;
+            if reps[i].state == ReplicaState::Draining && !reps[i].runnable() {
+                reps[i].power_off_drained();
+            }
         } else {
-            break; // no arrivals left, nothing in flight
+            // Only reachable with requeued requests in hand and no live,
+            // warming, or recovering replica to ever take them.
+            ensure!(
+                lifecycle.pending.is_empty(),
+                "requeued requests stranded: fleet has no live, warming, or recovering replica"
+            );
+            unreachable!("event loop stalled with no work and no pending requests");
         }
     }
     Ok(routed)
@@ -354,12 +712,17 @@ mod tests {
             assert_eq!(o.slo.completed(), arr.len());
             assert_eq!(o.joules.len(), arr.len());
             assert!(o.routed.iter().all(|&r| r < 4), "{}", router.label());
+            assert_eq!(o.routed, o.served_by, "no failures: first route serves");
             let attributed: f64 = o.joules.iter().sum();
             let rel = (attributed - o.total_j()).abs() / o.total_j();
             assert!(rel < 1e-6, "{}: conservation off by {rel:e}", router.label());
             // The last arrival finishes after it arrives.
             assert!(o.makespan_s >= arr.last().unwrap().t_s);
             assert!(o.energy_j > 0.0 && o.switch_j <= o.energy_j);
+            // Fixed fleet: no lifecycle churn, everything stays live.
+            assert_eq!(o.lifecycle, LifecycleStats::default());
+            assert_eq!(o.coldstart_j, 0.0);
+            assert!((o.mean_live_replicas - 4.0).abs() < 1e-12);
         }
     }
 
@@ -397,19 +760,61 @@ mod tests {
     }
 
     #[test]
-    fn dead_replicas_hold_no_traffic() {
+    fn cold_replicas_hold_no_traffic() {
         let s = suite();
         let arr = arrivals(&s, 24);
         let gpu = GpuSpec::rtx_pro_6000();
         let mut cfg =
             FleetConfig::homogeneous(model_for_tier(ModelTier::B1), 3, DvfsPolicy::Static(2842));
-        cfg.replicas[1].live = false;
+        cfg.replicas[1].state = ReplicaState::Cold;
         let sim = FleetSim::new(gpu, cfg);
         let o = sim.run(&s, &arr, &mut RoundRobin::default()).unwrap();
         assert_eq!(o.served, arr.len());
         assert!(o.routed.iter().all(|&r| r != 1));
         assert_eq!(o.replicas[1].served, 0);
         assert_eq!(o.replicas[1].energy_j, 0.0);
+        assert!((o.mean_live_replicas - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_dead_fleet_is_a_typed_error_not_a_panic() {
+        let s = suite();
+        let arr = arrivals(&s, 4);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let mut cfg =
+            FleetConfig::homogeneous(model_for_tier(ModelTier::B1), 2, DvfsPolicy::Static(2842));
+        for r in cfg.replicas.iter_mut() {
+            r.state = ReplicaState::Cold;
+        }
+        let err = FleetSim::new(gpu, cfg)
+            .run(&s, &arr, &mut RoundRobin::default())
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("no live replica"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn permanent_failure_of_the_whole_fleet_mid_run_is_a_typed_error() {
+        // One replica, unrepairable failures, enough traffic that the
+        // crash lands mid-run: the engine must surface a typed error for
+        // the stranded work instead of deadlocking or corrupting numbers.
+        let s = suite();
+        let arr = TrafficPattern::Poisson { rps: 1.0 }.generate(&s, 400, 0xDEAD);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let mut cfg =
+            FleetConfig::homogeneous(model_for_tier(ModelTier::B3), 1, DvfsPolicy::Static(2842));
+        cfg.failures =
+            Some(FailureConfig { mtbf_s: 20.0, mttr_s: f64::INFINITY, seed: 0xF00D });
+        let err = FleetSim::new(gpu, cfg)
+            .run(&s, &arr, &mut RoundRobin::default())
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("stranded") || msg.contains("no live replica"),
+            "unexpected error: {msg}"
+        );
     }
 
     #[test]
@@ -457,6 +862,130 @@ mod tests {
             gov.slo.e2e_p99() <= gov.slo.slo.e2e_p99_s,
             "governed p99 {:.2}s over SLO",
             gov.slo.e2e_p99()
+        );
+    }
+
+    #[test]
+    fn autoscaler_scales_up_under_pressure_and_down_on_slack() {
+        let s = suite();
+        // A hard burst followed by a long quiet tail: the reactive scaler
+        // must warm capacity for the burst and drain it afterwards.
+        let mut arr: Vec<Arrival> =
+            (0..40).map(|i| Arrival { t_s: 0.05 * i as f64, query_idx: i % s.len() }).collect();
+        for i in 0..16 {
+            arr.push(Arrival { t_s: 60.0 + 10.0 * i as f64, query_idx: i % s.len() });
+        }
+        let gpu = GpuSpec::rtx_pro_6000();
+        let cfg = FleetConfig::elastic(
+            model_for_tier(ModelTier::B3),
+            4,
+            1,
+            DvfsPolicy::Static(2842),
+            ReactiveConfig { cooldown_s: 2.0, ..ReactiveConfig::default() },
+        );
+        let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
+        assert_eq!(o.served, arr.len());
+        assert!(o.lifecycle.scale_ups >= 1, "never scaled up: {:?}", o.lifecycle);
+        assert!(o.lifecycle.scale_downs >= 1, "never scaled down: {:?}", o.lifecycle);
+        assert!(o.coldstart_j > 0.0, "cold starts must be charged");
+        assert!(
+            o.mean_live_replicas > 1.0 && o.mean_live_replicas < 4.0,
+            "mean live {:.2} outside (1, 4)",
+            o.mean_live_replicas
+        );
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j();
+        assert!(rel < 1e-6, "conservation off by {rel:e}");
+        // The breakdown carries the cold-start energy explicitly.
+        assert!((o.breakdown.coldstart_j - o.coldstart_j).abs() <= 1e-9 * o.coldstart_j);
+    }
+
+    #[test]
+    fn scale_from_zero_waits_for_warmup_then_serves() {
+        let s = suite();
+        let arr = TrafficPattern::Poisson { rps: 2.0 }.generate(&s, 12, 0xC01D);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let mut cfg = FleetConfig::elastic(
+            model_for_tier(ModelTier::B3),
+            2,
+            1,
+            DvfsPolicy::Static(2842),
+            ReactiveConfig::default(),
+        );
+        // Everything cold at t = 0: the autoscaler must bootstrap.
+        cfg.replicas[0].state = ReplicaState::Cold;
+        let warmup = cfg.cold_start.warmup_s;
+        let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
+        assert_eq!(o.served, arr.len());
+        assert!(o.lifecycle.scale_ups >= 1);
+        assert!(o.coldstart_j > 0.0);
+        // Nothing can finish before the first warm-up elapses.
+        assert!(
+            o.makespan_s >= arr[0].t_s + warmup,
+            "served before warm-up: makespan {:.2}",
+            o.makespan_s
+        );
+    }
+
+    #[test]
+    fn failures_requeue_in_flight_work_and_conserve_energy() {
+        let s = suite();
+        let arr = TrafficPattern::Poisson { rps: 3.0 }.generate(&s, 96, 0xFA11);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let mut cfg =
+            FleetConfig::homogeneous(model_for_tier(ModelTier::B3), 3, DvfsPolicy::Static(2842));
+        cfg.failures = Some(FailureConfig { mtbf_s: 12.0, mttr_s: 6.0, seed: 0xBAD });
+        let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
+        assert_eq!(o.served, arr.len(), "every request survives the crashes");
+        assert_eq!(o.slo.completed(), arr.len());
+        assert!(o.lifecycle.failures > 0, "MTBF 12s over this run must crash something");
+        assert!(o.lifecycle.recoveries > 0);
+        assert!(o.coldstart_j > 0.0, "recovery cold starts are charged");
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j();
+        assert!(rel < 1e-6, "conservation off by {rel:e}");
+        // Requeued requests were completed by a different replica than
+        // first routed (at least sometimes, given > 0 requeues).
+        if o.lifecycle.requeued > 0 {
+            let moved = (0..arr.len()).filter(|&i| o.routed[i] != o.served_by[i]).count();
+            assert!(moved > 0, "requeues recorded but nothing moved replicas");
+        }
+    }
+
+    #[test]
+    fn requeued_requests_keep_original_arrival_latency_accounting() {
+        // Deterministic crash construction: the failure stream for seed
+        // 0x5EED crashes replica 0 at t ≈ 1.22 s; twelve generation
+        // requests arriving through t = 1.1 s cannot possibly have drained
+        // by then on one replica, so the crash is guaranteed to catch work
+        // in flight and requeue it.
+        let s = suite();
+        let gen_idx: Vec<usize> =
+            (0..s.len()).filter(|&i| s.queries[i].output_tokens > 0).collect();
+        let arr: Vec<Arrival> = (0..12)
+            .map(|i| Arrival { t_s: 0.1 * i as f64, query_idx: gen_idx[i % gen_idx.len()] })
+            .collect();
+        let gpu = GpuSpec::rtx_pro_6000();
+        let mut cfg = FleetConfig::elastic(
+            model_for_tier(ModelTier::B3),
+            2,
+            1,
+            DvfsPolicy::Static(2842),
+            ReactiveConfig { cooldown_s: 0.5, high_backlog: 2.0, ..ReactiveConfig::default() },
+        );
+        cfg.failures = Some(FailureConfig { mtbf_s: 1.5, mttr_s: 4.0, seed: 0x5EED });
+        let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
+        assert_eq!(o.served, arr.len());
+        assert!(o.lifecycle.failures > 0, "the t≈1.22s crash must land mid-run");
+        assert!(o.lifecycle.requeued > 0, "the crash must catch work in flight");
+        // A requeued request's end-to-end latency spans the crash: its
+        // original arrival predates the crash, so the fleet tail must
+        // include the repair or warm-up detour (several seconds), far
+        // beyond any undisturbed service time.
+        assert!(
+            o.slo.e2e_p99() > 1.0,
+            "requeued tail {:.3}s does not reflect the original arrival",
+            o.slo.e2e_p99()
         );
     }
 }

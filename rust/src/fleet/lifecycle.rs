@@ -1,0 +1,735 @@
+//! Replica lifecycle: autoscaling, cold starts, and failure/recovery.
+//!
+//! The paper's Section VII upper bound assumes a fixed fleet, but under
+//! diurnal traffic most of a deployment's energy is burned by replicas
+//! idling off-peak — idle and provisioning energy dominate real serving
+//! bills, not per-token energy. This module gives the fleet a lifecycle:
+//!
+//! - [`ReplicaState`]: the per-replica state machine
+//!   `Live → Draining → Cold → Warming → Live`. Routers only ever see
+//!   `Live` replicas; `Draining` replicas finish their in-flight work and
+//!   power off; `Cold` replicas draw nothing; `Warming` replicas have paid
+//!   a cold-start energy charge and come live after a warm-up delay.
+//! - [`Autoscaler`]: the scaling discipline consulted on every arrival.
+//!   [`ReactiveAutoscaler`] applies queue-pressure/SLO-headroom hysteresis
+//!   (scale up fast on backlog or SLO pressure, down slowly on sustained
+//!   slack, with a cooldown between actions); [`StaticAutoscaler`] is the
+//!   fixed-fleet no-op baseline.
+//! - [`FailureModel`]: seeded MTBF/MTTR replica crashes on the discrete-
+//!   event clock. A crash drops the replica to `Cold`, requeues its
+//!   in-flight requests through the router **with their original arrival
+//!   timestamps**, and schedules recovery (a fresh cold start) one
+//!   exponential repair time later.
+//!
+//! All lifecycle randomness derives from explicit seeds (one independent
+//! stream per replica), so elastic runs replay bit-for-bit — the property
+//! `rust/tests/scenarios.rs` pins with golden traces.
+
+use std::collections::VecDeque;
+
+use crate::serve::traffic::Arrival;
+use crate::Rng;
+
+use super::router::ReplicaStatus;
+
+/// The per-replica lifecycle state machine.
+///
+/// Legal transitions (driven by [`crate::fleet::engine::drive`]):
+///
+/// ```text
+///   Live ──scale-down──▶ Draining ──queue empties──▶ Cold
+///   Live ──────────────────crash─────────────────▶ Cold
+///   Cold ──scale-up / recovery──▶ Warming ──warm-up elapses──▶ Live
+///   Draining ──scale-up (rescue, no cold start)──▶ Live
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplicaState {
+    /// Accepting traffic and executing work.
+    Live,
+    /// Finishing in-flight work; receives no new routes; powers off when
+    /// its queue and batch drain.
+    Draining,
+    /// Powered off: no idle draw, no work, invisible to routers.
+    Cold,
+    /// Booting after a cold start; comes `Live` at `until_s`.
+    Warming { until_s: f64 },
+}
+
+impl ReplicaState {
+    /// Whether a router may bind new arrivals to this replica.
+    pub fn routable(self) -> bool {
+        matches!(self, ReplicaState::Live)
+    }
+
+    /// Whether the replica may execute work it already holds.
+    pub fn can_work(self) -> bool {
+        matches!(self, ReplicaState::Live | ReplicaState::Draining)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ReplicaState::Live => "live",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Cold => "cold",
+            ReplicaState::Warming { .. } => "warming",
+        }
+    }
+}
+
+/// Cost of bringing a `Cold` replica `Live`: the boot + weight-load energy
+/// charged to the ledger at scale-up, and the delay before the replica can
+/// take traffic. The warm-up period's draw is folded into `energy_j` (the
+/// replica is not separately billed idle power while `Warming`).
+#[derive(Debug, Clone, Copy)]
+pub struct ColdStart {
+    pub energy_j: f64,
+    pub warmup_s: f64,
+}
+
+impl Default for ColdStart {
+    fn default() -> Self {
+        // ~10 s of near-TDP draw while the server boots, loads weights into
+        // HBM, and captures graphs — the provisioning cost that makes
+        // scale-to-zero a tradeoff rather than a free lunch.
+        ColdStart { energy_j: 3000.0, warmup_s: 10.0 }
+    }
+}
+
+/// One autoscaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Hold,
+    /// Bring up to `n` replicas toward `Live` (rescuing `Draining`
+    /// replicas first, then cold-starting `Cold` ones).
+    Up(usize),
+    /// Drain up to `n` `Live` replicas.
+    Down(usize),
+}
+
+/// A scaling discipline, consulted by the fleet engine on every arrival
+/// (before the arrival is routed, so a scale-up starts warming at the
+/// moment demand appears).
+pub trait Autoscaler {
+    /// `slo_pressure` is the fleet tracker's control signal
+    /// (1.0 = at target, >1 = violating).
+    fn decide(&mut self, now_s: f64, replicas: &[ReplicaStatus], slo_pressure: f64)
+        -> ScaleAction;
+
+    fn label(&self) -> String;
+
+    /// Whether this autoscaler can ever change the fleet. The engine skips
+    /// status snapshots and pressure computation for static fleets, keeping
+    /// the fixed-fleet hot path identical to the pre-lifecycle loop.
+    fn is_static(&self) -> bool {
+        false
+    }
+}
+
+/// Fixed fleet: never scales (the baseline every comparison runs against).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticAutoscaler;
+
+impl Autoscaler for StaticAutoscaler {
+    fn decide(&mut self, _: f64, _: &[ReplicaStatus], _: f64) -> ScaleAction {
+        ScaleAction::Hold
+    }
+
+    fn label(&self) -> String {
+        "static".into()
+    }
+
+    fn is_static(&self) -> bool {
+        true
+    }
+}
+
+/// Tuning of the reactive autoscaler's hysteresis band.
+#[derive(Debug, Clone, Copy)]
+pub struct ReactiveConfig {
+    /// Never drain below this many live replicas.
+    pub min_live: usize,
+    /// Never warm beyond this many live-or-warming replicas.
+    pub max_live: usize,
+    /// Scale up when mean backlog per live replica reaches this.
+    pub high_backlog: f64,
+    /// Scale down only when mean backlog per live replica is at or below
+    /// this (must sit well under `high_backlog` — the hysteresis band).
+    pub low_backlog: f64,
+    /// Scale up regardless of backlog when SLO pressure reaches this.
+    pub high_pressure: f64,
+    /// Scale down only when SLO pressure is at or below this (headroom).
+    pub low_pressure: f64,
+    /// Minimum seconds between scale actions (anti-flap; matching it to
+    /// the cold-start warm-up keeps at most one replica warming per wave).
+    pub cooldown_s: f64,
+}
+
+impl Default for ReactiveConfig {
+    fn default() -> Self {
+        ReactiveConfig {
+            min_live: 1,
+            max_live: usize::MAX,
+            high_backlog: 3.0,
+            low_backlog: 0.75,
+            high_pressure: 1.0,
+            low_pressure: 0.8,
+            cooldown_s: 12.0,
+        }
+    }
+}
+
+/// Queue-pressure/SLO-headroom hysteresis scaler: up fast when backlog per
+/// live replica or SLO pressure crosses the high watermark, down one
+/// replica at a time when both sit below the low watermarks, with a
+/// cooldown between actions so warm-ups are not stacked blindly.
+#[derive(Debug, Clone)]
+pub struct ReactiveAutoscaler {
+    pub cfg: ReactiveConfig,
+    last_action_s: f64,
+}
+
+impl ReactiveAutoscaler {
+    pub fn new(cfg: ReactiveConfig) -> ReactiveAutoscaler {
+        assert!(cfg.min_live >= 1, "reactive autoscaler needs min_live >= 1");
+        assert!(cfg.max_live >= cfg.min_live, "max_live below min_live");
+        assert!(
+            cfg.low_backlog < cfg.high_backlog,
+            "inverted backlog hysteresis band"
+        );
+        assert!(
+            cfg.low_pressure < cfg.high_pressure,
+            "inverted pressure hysteresis band"
+        );
+        assert!(cfg.cooldown_s >= 0.0);
+        ReactiveAutoscaler { cfg, last_action_s: f64::NEG_INFINITY }
+    }
+}
+
+impl Default for ReactiveAutoscaler {
+    fn default() -> Self {
+        ReactiveAutoscaler::new(ReactiveConfig::default())
+    }
+}
+
+impl Autoscaler for ReactiveAutoscaler {
+    fn decide(
+        &mut self,
+        now_s: f64,
+        replicas: &[ReplicaStatus],
+        slo_pressure: f64,
+    ) -> ScaleAction {
+        let live = replicas.iter().filter(|r| r.live()).count();
+        let warming = replicas
+            .iter()
+            .filter(|r| matches!(r.state, ReplicaState::Warming { .. }))
+            .count();
+        let coming = live + warming;
+        // Below the floor (initial cold fleet, or a crash took the last
+        // replica): restore capacity immediately, cooldown notwithstanding.
+        if coming < self.cfg.min_live {
+            self.last_action_s = now_s;
+            return ScaleAction::Up(self.cfg.min_live - coming);
+        }
+        if now_s - self.last_action_s < self.cfg.cooldown_s {
+            return ScaleAction::Hold;
+        }
+        let backlog: usize =
+            replicas.iter().filter(|r| r.live()).map(|r| r.backlog()).sum();
+        let per_live = if live > 0 { backlog as f64 / live as f64 } else { f64::INFINITY };
+        if (per_live >= self.cfg.high_backlog || slo_pressure >= self.cfg.high_pressure)
+            && coming < self.cfg.max_live
+        {
+            self.last_action_s = now_s;
+            return ScaleAction::Up(1);
+        }
+        // Down only with real slack on *both* signals, nothing warming
+        // (capacity in flight means a recent up-wave), and floor respected.
+        if warming == 0
+            && per_live <= self.cfg.low_backlog
+            && slo_pressure <= self.cfg.low_pressure
+            && live > self.cfg.min_live
+        {
+            self.last_action_s = now_s;
+            return ScaleAction::Down(1);
+        }
+        ScaleAction::Hold
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "reactive[{}-{};bl {}/{}]",
+            self.cfg.min_live,
+            if self.cfg.max_live == usize::MAX {
+                "fleet".to_string()
+            } else {
+                self.cfg.max_live.to_string()
+            },
+            self.cfg.low_backlog,
+            self.cfg.high_backlog
+        )
+    }
+}
+
+/// Which autoscaler a [`crate::fleet::FleetConfig`] builds (plain data, so
+/// fleet configs stay `Clone`).
+#[derive(Debug, Clone)]
+pub enum AutoscalePolicy {
+    Static,
+    Reactive(ReactiveConfig),
+}
+
+impl AutoscalePolicy {
+    pub fn build(&self) -> Box<dyn Autoscaler> {
+        match self {
+            AutoscalePolicy::Static => Box::new(StaticAutoscaler),
+            AutoscalePolicy::Reactive(cfg) => Box::new(ReactiveAutoscaler::new(*cfg)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.build().label()
+    }
+}
+
+/// Seeded replica failure/recovery process: crashes strike `Live` replicas
+/// after an exponential MTBF; repair completes after an exponential MTTR,
+/// upon which the replica cold-starts back toward `Live`. `mttr_s` may be
+/// `f64::INFINITY` to model unrepaired permanent failures.
+#[derive(Debug, Clone, Copy)]
+pub struct FailureConfig {
+    /// Mean time between failures while live, seconds.
+    pub mtbf_s: f64,
+    /// Mean time to repair after a crash, seconds.
+    pub mttr_s: f64,
+    /// Master seed; each replica derives an independent stream.
+    pub seed: u64,
+}
+
+/// A lifecycle event the failure model or state machine schedules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LifecycleEvent {
+    /// A `Warming` replica reaches `Live`.
+    WarmDone(usize),
+    /// A crashed replica's repair completes (begins a cold start).
+    Recover(usize),
+    /// A `Live` replica crashes.
+    Fail(usize),
+}
+
+impl LifecycleEvent {
+    /// Tie-break rank at equal event times: capacity comes up before more
+    /// goes down, so requeues at a coincident instant can route.
+    fn rank(self) -> u8 {
+        match self {
+            LifecycleEvent::WarmDone(_) => 0,
+            LifecycleEvent::Recover(_) => 1,
+            LifecycleEvent::Fail(_) => 2,
+        }
+    }
+
+    fn replica(self) -> usize {
+        match self {
+            LifecycleEvent::WarmDone(i)
+            | LifecycleEvent::Recover(i)
+            | LifecycleEvent::Fail(i) => i,
+        }
+    }
+}
+
+/// Pick the earlier of two optional timed events (rank, then replica index
+/// on exact ties — fully deterministic).
+pub(crate) fn earlier(
+    a: Option<(f64, LifecycleEvent)>,
+    b: Option<(f64, LifecycleEvent)>,
+) -> Option<(f64, LifecycleEvent)> {
+    match (a, b) {
+        (None, x) | (x, None) => x,
+        (Some((ta, ea)), Some((tb, eb))) => {
+            let pick_a = match ta.total_cmp(&tb) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => {
+                    (ea.rank(), ea.replica()) <= (eb.rank(), eb.replica())
+                }
+            };
+            if pick_a {
+                Some((ta, ea))
+            } else {
+                Some((tb, eb))
+            }
+        }
+    }
+}
+
+fn exp_draw(rng: &mut Rng, mean_s: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() * mean_s
+}
+
+/// Per-replica failure clock.
+#[derive(Debug, Clone)]
+struct FailClock {
+    rng: Rng,
+    /// Scheduled crash time while the replica is live.
+    fail_at_s: Option<f64>,
+    /// Scheduled repair-completion time while the replica is down.
+    recover_at_s: Option<f64>,
+}
+
+/// The runtime failure process over one fleet.
+#[derive(Debug, Clone)]
+pub struct FailureModel {
+    cfg: FailureConfig,
+    clocks: Vec<FailClock>,
+}
+
+impl FailureModel {
+    pub fn new(cfg: FailureConfig, n_replicas: usize) -> FailureModel {
+        assert!(cfg.mtbf_s > 0.0, "MTBF must be positive");
+        assert!(cfg.mttr_s > 0.0, "MTTR must be positive");
+        let clocks = (0..n_replicas)
+            .map(|i| FailClock {
+                // Independent stream per replica: failures on one replica
+                // never perturb another's schedule.
+                rng: crate::rng(cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                fail_at_s: None,
+                recover_at_s: None,
+            })
+            .collect();
+        FailureModel { cfg, clocks }
+    }
+
+    /// Start the MTBF clock when replica `i` goes live.
+    pub fn arm(&mut self, i: usize, now_s: f64) {
+        let c = &mut self.clocks[i];
+        c.fail_at_s = Some(now_s + exp_draw(&mut c.rng, self.cfg.mtbf_s));
+    }
+
+    /// Stop the MTBF clock (replica left `Live` without crashing).
+    pub fn disarm(&mut self, i: usize) {
+        self.clocks[i].fail_at_s = None;
+    }
+
+    /// Record the crash of replica `i` and schedule its repair.
+    pub fn crash(&mut self, i: usize, now_s: f64) {
+        let c = &mut self.clocks[i];
+        c.fail_at_s = None;
+        c.recover_at_s = Some(now_s + exp_draw(&mut c.rng, self.cfg.mttr_s));
+    }
+
+    /// Clear the repair schedule once recovery begins.
+    pub fn recovered(&mut self, i: usize) {
+        self.clocks[i].recover_at_s = None;
+    }
+
+    /// Whether replica `i` is down awaiting repair (an autoscaler cannot
+    /// warm a crashed machine before its repair completes).
+    pub fn under_repair(&self, i: usize) -> bool {
+        self.clocks[i].recover_at_s.is_some()
+    }
+
+    /// Earliest scheduled crash or repair completion.
+    pub fn next_event(&self) -> Option<(f64, LifecycleEvent)> {
+        let mut best: Option<(f64, LifecycleEvent)> = None;
+        for (i, c) in self.clocks.iter().enumerate() {
+            if let Some(t) = c.fail_at_s {
+                if t.is_finite() {
+                    best = earlier(best, Some((t, LifecycleEvent::Fail(i))));
+                }
+            }
+            if let Some(t) = c.recover_at_s {
+                if t.is_finite() {
+                    best = earlier(best, Some((t, LifecycleEvent::Recover(i))));
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Lifecycle counters surfaced on [`crate::fleet::FleetOutcome`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LifecycleStats {
+    /// Autoscaler-initiated warm-ups (including drain rescues).
+    pub scale_ups: usize,
+    /// Autoscaler-initiated drains.
+    pub scale_downs: usize,
+    /// Replica crashes injected by the failure model.
+    pub failures: usize,
+    /// Repairs that completed (began a recovery cold start).
+    pub recoveries: usize,
+    /// In-flight requests re-routed after crashes.
+    pub requeued: usize,
+}
+
+/// A requeued request waiting for a live replica (only populated while the
+/// fleet has zero live replicas at a crash instant).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PendingRequeue {
+    pub req: usize,
+    pub arrival: Arrival,
+    /// The earliest time the replacement replica may start on it (the
+    /// crash instant — the work provably hadn't finished before then).
+    pub not_before_s: f64,
+}
+
+/// The engine-side lifecycle runtime: autoscaler + failure model + cold
+/// start config, plus the bookkeeping `drive()` threads through a run.
+pub struct Lifecycle {
+    pub autoscaler: Box<dyn Autoscaler>,
+    pub failures: Option<FailureModel>,
+    pub cold_start: ColdStart,
+    pub stats: LifecycleStats,
+    /// (time, ±1) deltas of the live-replica count, for the time-weighted
+    /// mean live count reported on the outcome.
+    pub(crate) live_deltas: Vec<(f64, i64)>,
+    pub(crate) pending: VecDeque<PendingRequeue>,
+    /// Fast path: a static autoscaler with no failure model makes the
+    /// whole lifecycle machinery inert (the fixed-fleet loop).
+    inert: bool,
+}
+
+impl Lifecycle {
+    pub fn new(
+        autoscaler: Box<dyn Autoscaler>,
+        failures: Option<FailureModel>,
+        cold_start: ColdStart,
+    ) -> Lifecycle {
+        let inert = autoscaler.is_static() && failures.is_none();
+        Lifecycle {
+            autoscaler,
+            failures,
+            cold_start,
+            stats: LifecycleStats::default(),
+            live_deltas: Vec::new(),
+            pending: VecDeque::new(),
+            inert,
+        }
+    }
+
+    /// The fixed-fleet lifecycle: no scaling, no failures. This is the
+    /// configuration under which `drive()` is bit-identical to the
+    /// pre-lifecycle loop (pinned by `rust/tests/unification.rs`).
+    pub fn inert() -> Lifecycle {
+        Lifecycle::new(Box::new(StaticAutoscaler), None, ColdStart::default())
+    }
+
+    pub fn is_inert(&self) -> bool {
+        self.inert
+    }
+
+    pub(crate) fn log_live_delta(&mut self, t_s: f64, delta: i64) {
+        self.live_deltas.push((t_s, delta));
+    }
+
+    /// Time-weighted mean live-replica count over `[0, horizon_s]`.
+    pub(crate) fn mean_live(&self, initial_live: usize, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            return initial_live as f64;
+        }
+        let mut deltas = self.live_deltas.clone();
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut live = initial_live as i64;
+        let mut t_prev = 0.0;
+        let mut area = 0.0;
+        for (t, d) in deltas {
+            let tc = t.clamp(0.0, horizon_s);
+            area += live as f64 * (tc - t_prev);
+            t_prev = tc;
+            live += d;
+        }
+        area += live as f64 * (horizon_s - t_prev);
+        area / horizon_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelTier;
+
+    fn status(idx: usize, state: ReplicaState, backlog: usize) -> ReplicaStatus {
+        ReplicaStatus {
+            idx,
+            state,
+            tier: ModelTier::B8,
+            queue_depth: backlog,
+            active_seqs: 0,
+            now_s: 0.0,
+            window_power_w: 0.0,
+            busy_fraction: 0.0,
+            j_per_token: 1.0,
+        }
+    }
+
+    #[test]
+    fn state_machine_predicates() {
+        assert!(ReplicaState::Live.routable() && ReplicaState::Live.can_work());
+        assert!(!ReplicaState::Draining.routable() && ReplicaState::Draining.can_work());
+        assert!(!ReplicaState::Cold.routable() && !ReplicaState::Cold.can_work());
+        let w = ReplicaState::Warming { until_s: 5.0 };
+        assert!(!w.routable() && !w.can_work());
+        assert_eq!(w.label(), "warming");
+    }
+
+    #[test]
+    fn reactive_scales_up_on_backlog_and_down_on_slack() {
+        let mut a = ReactiveAutoscaler::new(ReactiveConfig {
+            cooldown_s: 10.0,
+            ..ReactiveConfig::default()
+        });
+        let busy = vec![status(0, ReplicaState::Live, 8), status(1, ReplicaState::Cold, 0)];
+        assert_eq!(a.decide(0.0, &busy, 0.0), ScaleAction::Up(1));
+        // Cooldown blocks an immediate second action.
+        assert_eq!(a.decide(1.0, &busy, 0.0), ScaleAction::Hold);
+        // After cooldown with slack on both live replicas: scale down.
+        let slack = vec![status(0, ReplicaState::Live, 0), status(1, ReplicaState::Live, 0)];
+        assert_eq!(a.decide(20.0, &slack, 0.1), ScaleAction::Down(1));
+    }
+
+    #[test]
+    fn reactive_scales_up_on_slo_pressure_alone() {
+        let mut a = ReactiveAutoscaler::default();
+        let reps = vec![status(0, ReplicaState::Live, 0), status(1, ReplicaState::Cold, 0)];
+        assert_eq!(a.decide(100.0, &reps, 1.4), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn reactive_holds_inside_the_hysteresis_band() {
+        let mut a = ReactiveAutoscaler::default();
+        // Backlog between the watermarks, pressure moderate: hold.
+        let reps = vec![status(0, ReplicaState::Live, 2), status(1, ReplicaState::Live, 1)];
+        assert_eq!(a.decide(100.0, &reps, 0.9), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn reactive_respects_floor_ceiling_and_warming_capacity() {
+        let cfg = ReactiveConfig { min_live: 1, max_live: 2, ..ReactiveConfig::default() };
+        let mut a = ReactiveAutoscaler::new(cfg);
+        // One live + one warming at the ceiling: no further up.
+        let reps = vec![
+            status(0, ReplicaState::Live, 50),
+            status(1, ReplicaState::Warming { until_s: 9.0 }, 0),
+            status(2, ReplicaState::Cold, 0),
+        ];
+        assert_eq!(a.decide(100.0, &reps, 2.0), ScaleAction::Hold);
+        // Never drains below the floor, even with zero load.
+        let one = vec![status(0, ReplicaState::Live, 0)];
+        assert_eq!(a.decide(200.0, &one, 0.0), ScaleAction::Hold);
+        // A dead fleet (crash took the last live replica) restores the
+        // floor immediately, ignoring the cooldown.
+        let dead = vec![status(0, ReplicaState::Cold, 0), status(1, ReplicaState::Cold, 0)];
+        assert_eq!(a.decide(200.1, &dead, 0.0), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn reactive_does_not_scale_down_while_warming() {
+        let mut a = ReactiveAutoscaler::new(ReactiveConfig {
+            min_live: 1,
+            ..ReactiveConfig::default()
+        });
+        let reps = vec![
+            status(0, ReplicaState::Live, 0),
+            status(1, ReplicaState::Live, 0),
+            status(2, ReplicaState::Warming { until_s: 50.0 }, 0),
+        ];
+        assert_eq!(a.decide(100.0, &reps, 0.0), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn failure_model_is_deterministic_and_per_replica_independent() {
+        let cfg = FailureConfig { mtbf_s: 100.0, mttr_s: 20.0, seed: 7 };
+        let mut a = FailureModel::new(cfg, 3);
+        let mut b = FailureModel::new(cfg, 3);
+        for fm in [&mut a, &mut b] {
+            fm.arm(0, 0.0);
+            fm.arm(1, 0.0);
+            fm.arm(2, 0.0);
+        }
+        let ea = a.next_event().unwrap();
+        assert_eq!(ea, b.next_event().unwrap());
+        // Disarming the scheduled replica leaves the others' times intact.
+        let (t_first, ev) = ea;
+        a.disarm(ev.replica());
+        let (t_second, ev2) = a.next_event().unwrap();
+        assert!(t_second >= t_first);
+        assert_ne!(ev2.replica(), ev.replica());
+    }
+
+    #[test]
+    fn failure_model_crash_schedules_recovery_and_infinite_mttr_never_recovers() {
+        let mut fm = FailureModel::new(FailureConfig { mtbf_s: 50.0, mttr_s: 10.0, seed: 3 }, 1);
+        fm.arm(0, 0.0);
+        let (t_fail, ev) = fm.next_event().unwrap();
+        assert!(matches!(ev, LifecycleEvent::Fail(0)));
+        fm.crash(0, t_fail);
+        let (t_rec, ev) = fm.next_event().unwrap();
+        assert!(matches!(ev, LifecycleEvent::Recover(0)));
+        assert!(t_rec > t_fail);
+        fm.recovered(0);
+        assert!(fm.next_event().is_none());
+
+        // Permanent failures: no recovery event is ever scheduled.
+        let mut dead =
+            FailureModel::new(FailureConfig { mtbf_s: 50.0, mttr_s: f64::INFINITY, seed: 3 }, 1);
+        dead.arm(0, 0.0);
+        let (t, _) = dead.next_event().unwrap();
+        dead.crash(0, t);
+        assert!(dead.next_event().is_none());
+    }
+
+    #[test]
+    fn event_tie_breaking_is_total() {
+        let warm = Some((5.0, LifecycleEvent::WarmDone(1)));
+        let fail = Some((5.0, LifecycleEvent::Fail(0)));
+        // Capacity up before capacity down at the same instant.
+        assert_eq!(earlier(warm, fail), warm);
+        assert_eq!(earlier(fail, warm), warm);
+        let f0 = Some((5.0, LifecycleEvent::Fail(0)));
+        let f1 = Some((5.0, LifecycleEvent::Fail(1)));
+        assert_eq!(earlier(f1, f0), f0);
+        assert_eq!(earlier(None, f0), f0);
+    }
+
+    #[test]
+    fn mean_live_integrates_transitions() {
+        let mut lc = Lifecycle::inert();
+        // 2 live for 10 s, then 1 for 10 s, then 3 for 20 s.
+        lc.log_live_delta(10.0, -1);
+        lc.log_live_delta(20.0, 2);
+        let m = lc.mean_live(2, 40.0);
+        let want = (2.0 * 10.0 + 1.0 * 10.0 + 3.0 * 20.0) / 40.0;
+        assert!((m - want).abs() < 1e-12, "{m} vs {want}");
+        // Transitions beyond the horizon contribute nothing.
+        lc.log_live_delta(100.0, -2);
+        assert!((lc.mean_live(2, 40.0) - want).abs() < 1e-12);
+        assert_eq!(lc.mean_live(5, 0.0), 5.0);
+    }
+
+    #[test]
+    fn inert_lifecycle_detection() {
+        assert!(Lifecycle::inert().is_inert());
+        let reactive = Lifecycle::new(
+            Box::new(ReactiveAutoscaler::default()),
+            None,
+            ColdStart::default(),
+        );
+        assert!(!reactive.is_inert());
+        let failing = Lifecycle::new(
+            Box::new(StaticAutoscaler),
+            Some(FailureModel::new(
+                FailureConfig { mtbf_s: 10.0, mttr_s: 5.0, seed: 0 },
+                2,
+            )),
+            ColdStart::default(),
+        );
+        assert!(!failing.is_inert());
+    }
+
+    #[test]
+    fn autoscale_policy_builds_matching_discipline() {
+        assert!(AutoscalePolicy::Static.build().is_static());
+        let r = AutoscalePolicy::Reactive(ReactiveConfig::default()).build();
+        assert!(!r.is_static());
+        assert!(r.label().starts_with("reactive"));
+    }
+}

@@ -16,21 +16,37 @@
 //!   tokens processed, decode by tokens generated, idle amortized), exact
 //!   by construction.
 //!
+//! - [`lifecycle`]: the elastic layer — the per-replica state machine
+//!   (`Live → Draining → Cold → Warming → Live`), autoscaling disciplines
+//!   (reactive queue-pressure/SLO-headroom hysteresis vs the static
+//!   baseline), cold-start energy charging, and a seeded MTBF/MTTR
+//!   failure/recovery process that requeues in-flight work through the
+//!   router with original arrival timestamps.
+//!
 //! `ewatt fleet` and `examples/fleet_serve.rs` reproduce the Section VII
 //! comparison (monolithic-large vs routed fleet × static vs governed DVFS)
-//! as an online result. The [`engine::drive`] loop is the **only**
-//! continuous-batching event loop in the codebase: `FleetSim` drives N
-//! replicas through it, the single-device [`crate::serve::ServeSim`] is a
-//! facade over one replica, and `coordinator::Cluster` replays its offline
-//! workloads through the same engine.
+//! as an online result; `ewatt autoscale` and `examples/elastic_fleet.rs`
+//! run the elastic comparison (static peak provisioning vs autoscaling vs
+//! autoscaling under failures) on diurnal traffic. The [`engine::drive`]
+//! loop is the **only** continuous-batching event loop in the codebase:
+//! `FleetSim` drives N replicas through it, the single-device
+//! [`crate::serve::ServeSim`] is a facade over one replica, and
+//! `coordinator::Cluster` replays its offline workloads through the same
+//! engine.
 
 pub mod attribution;
 pub mod engine;
+pub mod lifecycle;
 pub mod replica;
 pub mod router;
 
 pub use attribution::{EnergyLedger, PhaseEnergy};
 pub use engine::{drive, FleetConfig, FleetOutcome, FleetSim, ReplicaOutcome};
+pub use lifecycle::{
+    AutoscalePolicy, Autoscaler, ColdStart, FailureConfig, FailureModel, Lifecycle,
+    LifecycleStats, ReactiveAutoscaler, ReactiveConfig, ReplicaState, ScaleAction,
+    StaticAutoscaler,
+};
 pub use replica::{Replica, ReplicaSpec};
 pub use router::{
     DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,

@@ -32,7 +32,8 @@ use crate::serve::traffic::Arrival;
 use crate::text::tokenizer::token_count;
 use crate::workload::ReplaySuite;
 
-use super::attribution::EnergyLedger;
+use super::attribution::{EnergyLedger, PhaseEnergy};
+use super::lifecycle::{ColdStart, ReplicaState};
 use super::router::ReplicaStatus;
 
 /// Static description of one fleet member.
@@ -43,14 +44,15 @@ pub struct ReplicaSpec {
     /// Frequency policy: `Governed` bands run the closed-loop hysteresis
     /// controller; anything else runs open-loop.
     pub policy: DvfsPolicy,
-    /// Dead replicas hold no traffic (router invariant fodder).
-    pub live: bool,
+    /// Initial lifecycle state. `Cold` replicas are provisioned capacity
+    /// an autoscaler may warm up; only `Live` replicas hold traffic.
+    pub state: ReplicaState,
 }
 
 impl ReplicaSpec {
     /// A live replica serving one of the paper's model tiers.
     pub fn tiered(tier: ModelTier, policy: DvfsPolicy) -> ReplicaSpec {
-        ReplicaSpec { model: model_for_tier(tier), policy, live: true }
+        ReplicaSpec { model: model_for_tier(tier), policy, state: ReplicaState::Live }
     }
 }
 
@@ -64,6 +66,8 @@ struct Queued {
 /// One decoding sequence.
 struct ActiveSeq {
     req: usize,
+    /// Corpus query (kept so a crash can requeue the original arrival).
+    query_idx: usize,
     arrival_s: f64,
     first_token_s: f64,
     tokens: usize,
@@ -77,6 +81,9 @@ const J_PER_TOKEN_ALPHA: f64 = 0.2;
 /// A replica's mutable serving state.
 pub struct Replica {
     pub spec: ReplicaSpec,
+    /// Current lifecycle state (initialized from `spec.state`, driven by
+    /// the engine's autoscaler/failure events).
+    pub state: ReplicaState,
     gpu: GpuSim,
     gov: Box<dyn FreqGovernor>,
     wants_signal: bool,
@@ -98,6 +105,8 @@ pub struct Replica {
     pub energy_j: f64,
     pub idle_j: f64,
     pub switch_j: f64,
+    /// Boot/weight-load energy charged to this replica's cold starts.
+    pub coldstart_j: f64,
     pub freq_switches: usize,
     pub served: usize,
     pub tokens_out: u64,
@@ -137,6 +146,7 @@ impl Replica {
         let gpu_sim = GpuSim::new(gpu.clone(), f0);
         let cold_j_per_token = gpu_sim.execute(&decode_step_cost(&spec.model, 1, 256)).energy_j;
         Replica {
+            state: spec.state,
             gpu: gpu_sim,
             gov,
             wants_signal,
@@ -152,6 +162,7 @@ impl Replica {
             energy_j: 0.0,
             idle_j: 0.0,
             switch_j: 0.0,
+            coldstart_j: 0.0,
             freq_switches: 0,
             served: 0,
             tokens_out: 0,
@@ -168,6 +179,12 @@ impl Replica {
     /// Whether this replica has work to execute.
     pub fn runnable(&self) -> bool {
         !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// Whether the engine may step this replica now: it holds work and its
+    /// lifecycle state permits executing it (`Live` or `Draining`).
+    pub fn can_step(&self) -> bool {
+        self.state.can_work() && self.runnable()
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -209,7 +226,7 @@ impl Replica {
     pub fn status(&self, idx: usize) -> ReplicaStatus {
         ReplicaStatus {
             idx,
-            live: self.spec.live,
+            state: self.state,
             tier: self.spec.model.tier,
             queue_depth: self.queue.len(),
             active_seqs: self.active.len(),
@@ -224,13 +241,98 @@ impl Replica {
     /// past, the wait until `arrival.t_s` is charged at idle power (that
     /// draw is later amortized over the requests this replica serves).
     pub fn enqueue(&mut self, req: usize, arrival: Arrival) {
-        assert!(self.spec.live, "routed to a dead replica");
-        if !self.runnable() && self.now_s < arrival.t_s {
-            self.idle_j += (arrival.t_s - self.now_s) * self.gpu.spec.p_idle_w;
-            self.now_s = arrival.t_s;
+        self.enqueue_at(req, arrival, arrival.t_s);
+    }
+
+    /// Accept a routed request that may not start before `not_before_s`
+    /// (a crash-requeued request keeps its *original* arrival timestamp
+    /// for latency accounting, but the replacement replica can only start
+    /// on it after the crash instant).
+    pub fn enqueue_at(&mut self, req: usize, arrival: Arrival, not_before_s: f64) {
+        assert!(self.state.routable(), "routed to a non-live replica ({})", self.state.label());
+        let start_s = arrival.t_s.max(not_before_s);
+        if !self.runnable() && self.now_s < start_s {
+            self.idle_j += (start_s - self.now_s) * self.gpu.spec.p_idle_w;
+            self.now_s = start_s;
         }
         self.queue.push_back(Queued { req, arrival });
         self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
+    }
+
+    /// Begin a cold start at `t_s`: charge the boot energy and schedule
+    /// the `Warming → Live` transition. Caller guarantees `Cold`.
+    pub fn start_warming(&mut self, t_s: f64, cold: &ColdStart) {
+        debug_assert_eq!(self.state, ReplicaState::Cold, "warming a non-cold replica");
+        self.coldstart_j += cold.energy_j;
+        self.state = ReplicaState::Warming { until_s: t_s + cold.warmup_s };
+    }
+
+    /// Complete a warm-up: the replica is `Live` from `t_s` on (its local
+    /// clock jumps forward; the cold period was powered off, not idle).
+    pub fn finish_warmup(&mut self, t_s: f64) {
+        debug_assert!(
+            matches!(self.state, ReplicaState::Warming { .. }),
+            "finish_warmup on a {} replica",
+            self.state.label()
+        );
+        self.state = ReplicaState::Live;
+        if self.now_s < t_s {
+            self.now_s = t_s;
+        }
+    }
+
+    /// Scale-down at `t_s`: stop accepting traffic and finish in-flight
+    /// work. An already-idle replica powers off immediately (charging the
+    /// idle draw it burned waiting up to the decision instant). Returns
+    /// whether the replica went straight to `Cold`.
+    pub fn begin_drain(&mut self, t_s: f64) -> bool {
+        debug_assert_eq!(self.state, ReplicaState::Live, "draining a non-live replica");
+        if self.runnable() {
+            self.state = ReplicaState::Draining;
+            false
+        } else {
+            if self.now_s < t_s {
+                self.idle_j += (t_s - self.now_s) * self.gpu.spec.p_idle_w;
+                self.now_s = t_s;
+            }
+            self.state = ReplicaState::Cold;
+            true
+        }
+    }
+
+    /// Power off a `Draining` replica whose work has drained.
+    pub fn power_off_drained(&mut self) {
+        debug_assert!(self.state == ReplicaState::Draining && !self.runnable());
+        self.state = ReplicaState::Cold;
+    }
+
+    /// Crash at `t_s`: drop to `Cold`, release every in-flight sequence's
+    /// KV reservation, and hand back the lost requests (with their
+    /// original arrivals, sorted by request index) for requeueing. The
+    /// crash instant is the causality floor for re-executing them
+    /// elsewhere: the engine processes a crash only once every steppable
+    /// clock has reached `t_s` (so busy replacement replicas already sit
+    /// at or past it) and [`Self::enqueue_at`] fast-forwards idle ones.
+    /// A step that straddled the crash completes first (work is lost at
+    /// step granularity); its partial energy stays charged to the lost
+    /// requests, exactly as a real meter would have recorded it.
+    pub fn crash(&mut self, t_s: f64) -> Vec<(usize, Arrival)> {
+        if !self.runnable() && self.now_s < t_s {
+            // It idled powered-on until the moment it died.
+            self.idle_j += (t_s - self.now_s) * self.gpu.spec.p_idle_w;
+            self.now_s = t_s;
+        }
+        let mut lost: Vec<(usize, Arrival)> =
+            self.queue.drain(..).map(|q| (q.req, q.arrival)).collect();
+        lost.extend(self.active.drain(..).map(|s| {
+            (s.req, Arrival { t_s: s.arrival_s, query_idx: s.query_idx })
+        }));
+        for &(req, _) in &lost {
+            self.kv.release(req as u64);
+        }
+        lost.sort_unstable_by_key(|&(req, _)| req);
+        self.state = ReplicaState::Cold;
+        lost
     }
 
     fn signal(&self) -> GovernorSignal {
@@ -346,6 +448,7 @@ impl Replica {
         } else {
             self.active.push(ActiveSeq {
                 req: head.req,
+                query_idx: head.arrival.query_idx,
                 arrival_s: head.arrival.t_s,
                 first_token_s: self.now_s,
                 tokens: 0,
@@ -403,14 +506,25 @@ impl Replica {
         }
     }
 
-    /// Amortize this replica's idle draw across the requests it served.
-    /// Call once, after the fleet drains.
-    pub fn finalize(&mut self, ledger: &mut EnergyLedger) {
-        debug_assert!(
-            self.idle_j == 0.0 || !self.served_reqs.is_empty(),
-            "idle energy on a replica that served nothing"
-        );
-        ledger.charge_idle(&self.served_reqs, self.idle_j);
+    /// Amortize this replica's idle draw and cold-start energy across the
+    /// requests it served. Call once, after the fleet drains. Returns the
+    /// overhead that could **not** be attributed locally (a replica that
+    /// was warmed, idled, or crashed without ever completing a request) —
+    /// the engine spreads that remainder over the whole run's requests so
+    /// conservation still holds exactly.
+    pub fn finalize(&mut self, ledger: &mut EnergyLedger) -> PhaseEnergy {
+        let mut leftover = PhaseEnergy::default();
+        if self.served_reqs.is_empty() {
+            // Prefill/decode/switch energy needs no handling here even if
+            // nonzero: those charges already sit on the accounts of the
+            // (crash-requeued) requests the steps ran for.
+            leftover.idle_j = self.idle_j;
+            leftover.coldstart_j = self.coldstart_j;
+        } else {
+            ledger.charge_idle(&self.served_reqs, self.idle_j);
+            ledger.charge_coldstart(&self.served_reqs, self.coldstart_j);
+        }
+        leftover
     }
 }
 
@@ -485,6 +599,93 @@ mod tests {
         }
         rep.finalize(&mut ledger);
         assert!((ledger.request(0).idle_j - expect_idle).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crash_requeues_in_flight_with_original_arrivals_and_releases_kv() {
+        let (suite, mut rep) = setup();
+        let gen_idx = suite.dataset_indices(Dataset::NarrativeQa);
+        let mut ledger = EnergyLedger::new(3);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival { t_s: 0.25, query_idx: gen_idx[0] });
+        rep.enqueue(1, Arrival { t_s: 0.50, query_idx: gen_idx[1] });
+        rep.enqueue(2, Arrival { t_s: 0.75, query_idx: gen_idx[2] });
+        // Admit two into the batch, leave one queued, decode a little.
+        for _ in 0..5 {
+            rep.step(&suite, 2, &mut ledger, &mut fleet).unwrap();
+        }
+        assert!(rep.active_seqs() > 0 && rep.queue_depth() > 0);
+        let spent = rep.energy_j;
+        let lost = rep.crash(rep.now_s + 0.1);
+        assert_eq!(rep.state, ReplicaState::Cold);
+        assert!(!rep.runnable());
+        // Every in-flight request comes back, in request order, with its
+        // original arrival timestamp intact.
+        assert_eq!(lost.iter().map(|&(r, _)| r).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(lost[0].1.t_s, 0.25);
+        assert_eq!(lost[1].1.t_s, 0.50);
+        assert_eq!(lost[2].1.t_s, 0.75);
+        // The partial work's energy stays on the lost requests' accounts
+        // (idle is only ledgered at finalize, so compare active energy).
+        let attributed: f64 = ledger.total_for(&[0, 1, 2]);
+        assert!((attributed - spent).abs() < 1e-9, "{attributed} vs {spent}");
+        assert_eq!(rep.served, 0);
+    }
+
+    #[test]
+    fn idle_drain_powers_off_immediately_and_charges_the_wait() {
+        let (_, mut rep) = setup();
+        rep.now_s = 2.0;
+        let powered_off = rep.begin_drain(5.0);
+        assert!(powered_off);
+        assert_eq!(rep.state, ReplicaState::Cold);
+        let expect = 3.0 * GpuSpec::rtx_pro_6000().p_idle_w;
+        assert!((rep.idle_j - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_drain_finishes_work_before_powering_off() {
+        let (suite, mut rep) = setup();
+        let idx = suite.dataset_indices(Dataset::TruthfulQa)[0];
+        let mut ledger = EnergyLedger::new(1);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
+        assert!(!rep.begin_drain(0.0));
+        assert_eq!(rep.state, ReplicaState::Draining);
+        assert!(rep.can_step(), "draining replica must finish its work");
+        while rep.can_step() {
+            rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+        }
+        rep.power_off_drained();
+        assert_eq!(rep.state, ReplicaState::Cold);
+        assert_eq!(rep.served, 1, "drained work completes normally");
+    }
+
+    #[test]
+    fn warming_charges_cold_start_and_comes_live_on_schedule() {
+        let (_, mut rep) = setup();
+        rep.state = ReplicaState::Cold;
+        let cold = ColdStart { energy_j: 2500.0, warmup_s: 8.0 };
+        rep.start_warming(10.0, &cold);
+        assert_eq!(rep.state, ReplicaState::Warming { until_s: 18.0 });
+        assert_eq!(rep.coldstart_j, 2500.0);
+        assert!(!rep.can_step() && !rep.state.routable());
+        rep.finish_warmup(18.0);
+        assert_eq!(rep.state, ReplicaState::Live);
+        assert_eq!(rep.now_s, 18.0, "clock jumps over the cold gap without idle draw");
+        assert_eq!(rep.idle_j, 0.0);
+    }
+
+    #[test]
+    fn finalize_returns_unattributable_overhead_when_nothing_served() {
+        let (_, mut rep) = setup();
+        rep.state = ReplicaState::Cold;
+        rep.start_warming(0.0, &ColdStart::default());
+        rep.finish_warmup(ColdStart::default().warmup_s);
+        let mut ledger = EnergyLedger::new(1);
+        let leftover = rep.finalize(&mut ledger);
+        assert_eq!(leftover.coldstart_j, ColdStart::default().energy_j);
+        assert_eq!(ledger.totals().coldstart_j, 0.0, "nothing charged locally");
     }
 
     #[test]

@@ -26,13 +26,17 @@ use crate::features::FeatureVector;
 use crate::quality::QualityModel;
 use crate::serve::traffic::Arrival;
 
+use super::lifecycle::ReplicaState;
+
 /// Live, router-visible snapshot of one replica.
 #[derive(Debug, Clone)]
 pub struct ReplicaStatus {
     /// Index into the fleet's replica array.
     pub idx: usize,
-    /// Whether this replica accepts traffic.
-    pub live: bool,
+    /// Lifecycle state (autoscalers read `Warming`/`Draining`
+    /// capacity-in-flight; routers only ever pick [`Self::live`]
+    /// replicas).
+    pub state: ReplicaState,
     /// Model size tier this replica serves.
     pub tier: ModelTier,
     /// Requests waiting in the replica's admission queue.
@@ -51,6 +55,12 @@ pub struct ReplicaStatus {
 }
 
 impl ReplicaStatus {
+    /// Whether this replica accepts traffic (`state` is `Live`) — derived,
+    /// so it can never disagree with the state machine.
+    pub fn live(&self) -> bool {
+        self.state.routable()
+    }
+
     /// Outstanding work: queued plus in-flight.
     pub fn backlog(&self) -> usize {
         self.queue_depth + self.active_seqs
@@ -76,7 +86,7 @@ pub trait FleetRouter {
 
 fn assert_some_live(replicas: &[ReplicaStatus]) {
     assert!(
-        replicas.iter().any(|r| r.live),
+        replicas.iter().any(|r| r.live()),
         "fleet router called with no live replicas"
     );
 }
@@ -98,7 +108,7 @@ impl FleetRouter for RoundRobin {
         loop {
             let i = self.cursor % replicas.len();
             self.cursor = self.cursor.wrapping_add(1);
-            if replicas[i].live {
+            if replicas[i].live() {
                 return i;
             }
         }
@@ -120,7 +130,7 @@ fn least_loaded_where(
     keep: impl Fn(&ReplicaStatus) -> bool,
 ) -> Option<usize> {
     let mut best: Option<usize> = None;
-    for r in replicas.iter().filter(|r| r.live && keep(r)) {
+    for r in replicas.iter().filter(|r| r.live() && keep(r)) {
         match best {
             None => best = Some(r.idx),
             Some(b) => {
@@ -206,7 +216,7 @@ impl FleetRouter for DifficultyTiered {
             None => return self.fallback.route(arrival, None, replicas),
             Some(f) => f,
         };
-        let live_tiers = replicas.iter().filter(|r| r.live).map(|r| r.tier);
+        let live_tiers = replicas.iter().filter(|r| r.live()).map(|r| r.tier);
         let target = if self.is_hard(f) {
             live_tiers.max().expect("a live replica exists")
         } else {
@@ -245,7 +255,7 @@ impl FleetRouter for EnergyAware {
     ) -> usize {
         assert_some_live(replicas);
         let mut best: Option<(usize, f64)> = None;
-        for r in replicas.iter().filter(|r| r.live) {
+        for r in replicas.iter().filter(|r| r.live()) {
             // A saturated telemetry window means no headroom: marginal
             // work there queues behind a full pipeline.
             let score = r.j_per_token
@@ -274,7 +284,7 @@ mod tests {
     fn status(idx: usize, tier: ModelTier, backlog: usize, j_tok: f64) -> ReplicaStatus {
         ReplicaStatus {
             idx,
-            live: true,
+            state: ReplicaState::Live,
             tier,
             queue_depth: backlog,
             active_seqs: 0,
@@ -312,7 +322,7 @@ mod tests {
             status(1, ModelTier::B3, 0, 1.0),
             status(2, ModelTier::B3, 0, 1.0),
         ];
-        reps[1].live = false;
+        reps[1].state = ReplicaState::Cold;
         let picks: Vec<usize> = (0..4).map(|_| rr.route(&arr(), None, &reps)).collect();
         assert_eq!(picks, vec![0, 2, 0, 2]);
     }
@@ -405,7 +415,7 @@ mod tests {
     #[should_panic(expected = "no live replicas")]
     fn all_dead_panics() {
         let mut reps = vec![status(0, ModelTier::B3, 0, 1.0)];
-        reps[0].live = false;
+        reps[0].state = ReplicaState::Cold;
         LeastLoaded.route(&arr(), None, &reps);
     }
 }

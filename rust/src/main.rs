@@ -7,6 +7,7 @@
 //! ewatt sweep          [...]             # raw DVFS sweep cells as CSV
 //! ewatt slo            [...]             # SLO-aware serving comparison
 //! ewatt fleet          [...]             # heterogeneous governed fleet comparison
+//! ewatt autoscale      [...]             # elastic fleet: static-N vs autoscaled (+failures)
 //! ewatt serve [--tier t3] [--batch 4] [--n 16] [--max-new 32]
 //!             [--prefill-mhz 2842] [--decode-mhz 180]   # real PJRT path
 //! ewatt info                              # testbed + model inventory
@@ -89,6 +90,13 @@ fn run() -> Result<()> {
             let ctx = build_context(&args);
             emit(&[ewatt::experiments::fleet_tables::fleet_table(&ctx)?], &args)
         }
+        Some("autoscale") => {
+            let ctx = build_context(&args);
+            emit(
+                &[ewatt::experiments::autoscale_tables::autoscale_table(&ctx)?],
+                &args,
+            )
+        }
         Some("ablation") => {
             let name = args
                 .positional
@@ -113,7 +121,8 @@ fn run() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: ewatt <table N | figure N | all | sweep | slo | fleet | ablation [name] | serve | info> \
+                "usage: ewatt <table N | figure N | all | sweep | slo | fleet | autoscale | \
+                 ablation [name] | serve | info> \
                  [--paper] [--seed N] [--queries N] [--out DIR]"
             );
             bail!("no subcommand")

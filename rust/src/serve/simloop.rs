@@ -21,6 +21,7 @@ use crate::config::{GpuSpec, ModelSpec};
 use crate::coordinator::dvfs_policy::DvfsPolicy;
 use crate::fleet::attribution::{EnergyLedger, PhaseEnergy};
 use crate::fleet::engine::drive;
+use crate::fleet::lifecycle::{Lifecycle, ReplicaState};
 use crate::fleet::replica::{Replica, ReplicaSpec};
 use crate::fleet::router::RoundRobin;
 use crate::workload::ReplaySuite;
@@ -158,11 +159,13 @@ impl ServeSim {
         policy: DvfsPolicy,
         gov: Box<dyn FreqGovernor>,
     ) -> Result<ServeOutcome> {
-        let spec = ReplicaSpec { model: self.model.clone(), policy, live: true };
+        let spec = ReplicaSpec { model: self.model.clone(), policy, state: ReplicaState::Live };
         let mut reps =
             [Replica::with_governor(&self.gpu, spec, gov, self.cfg.slo, self.cfg.window_s)];
         let mut ledger = EnergyLedger::new(arrivals.len());
         let mut tracker = SloTracker::new(self.cfg.slo);
+        // One always-live replica, no autoscaling, no failures: the inert
+        // lifecycle keeps this facade bit-identical to the fixed loop.
         drive(
             &mut reps,
             suite,
@@ -171,9 +174,14 @@ impl ServeSim {
             self.cfg.max_batch,
             &mut ledger,
             &mut tracker,
+            &mut Lifecycle::inert(),
         )?;
         let [mut rep] = reps;
-        rep.finalize(&mut ledger);
+        let leftover = rep.finalize(&mut ledger);
+        debug_assert!(
+            leftover.total_j() == 0.0,
+            "a lone always-live replica cannot accrue unattributable overhead"
+        );
         Ok(ServeOutcome {
             served: rep.served,
             energy_j: rep.energy_j,

@@ -261,4 +261,31 @@ mod tests {
     fn empty_pool_panics() {
         TrafficPattern::Poisson { rps: 1.0 }.generate_from(&[], 5, 0);
     }
+
+    // The replay-trace contract, pinned: an out-of-order trace is
+    // *rejected* (loudly, at generation time — not silently sorted, which
+    // would hide a corrupted production trace), while duplicate
+    // timestamps are legal (real traces batch arrivals on coarse clocks)
+    // and replay deterministically in trace order.
+
+    #[test]
+    #[should_panic(expected = "replay trace must be non-decreasing")]
+    fn replay_rejects_unsorted_traces() {
+        let s = suite();
+        TrafficPattern::Replay { timestamps: vec![0.0, 2.0, 1.0] }.generate(&s, 3, 0);
+    }
+
+    #[test]
+    fn replay_accepts_duplicate_timestamps_deterministically() {
+        let s = suite();
+        let tr = TrafficPattern::Replay { timestamps: vec![0.0, 0.5, 0.5, 0.5, 1.0] };
+        let a = tr.generate(&s, 10, 11);
+        let b = tr.generate(&s, 10, 11);
+        assert_eq!(a, b);
+        // Duplicates survive as simultaneous arrivals, in trace order.
+        assert_eq!(a[1].t_s, 0.5);
+        assert_eq!(a[2].t_s, 0.5);
+        assert_eq!(a[3].t_s, 0.5);
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+    }
 }

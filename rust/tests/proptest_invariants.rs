@@ -508,7 +508,8 @@ fn prop_serve_outcome_attribution_conserves() {
 #[test]
 fn prop_router_invariants() {
     use ewatt::fleet::{
-        DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,
+        DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaState, ReplicaStatus,
+        RoundRobin,
     };
     use ewatt::serve::Arrival;
     let fx = FeatureExtractor::new();
@@ -517,21 +518,24 @@ fn prop_router_invariants() {
         let mut rng = ewatt::rng(0x2007_E ^ case);
         let n = rng.gen_range(1, 7);
         let mut reps: Vec<ReplicaStatus> = (0..n)
-            .map(|idx| ReplicaStatus {
-                idx,
-                live: rng.gen_bool(0.7),
-                tier: *rng.choose(&tiers),
-                queue_depth: rng.gen_range(0, 20),
-                active_seqs: rng.gen_range(0, 9),
-                now_s: rng.gen_f64() * 10.0,
-                window_power_w: rng.gen_f64() * 500.0,
-                busy_fraction: rng.gen_f64(),
-                j_per_token: 0.1 + rng.gen_f64() * 10.0,
+            .map(|idx| {
+                let live = rng.gen_bool(0.7);
+                ReplicaStatus {
+                    idx,
+                    state: if live { ReplicaState::Live } else { ReplicaState::Cold },
+                    tier: *rng.choose(&tiers),
+                    queue_depth: rng.gen_range(0, 20),
+                    active_seqs: rng.gen_range(0, 9),
+                    now_s: rng.gen_f64() * 10.0,
+                    window_power_w: rng.gen_f64() * 500.0,
+                    busy_fraction: rng.gen_f64(),
+                    j_per_token: 0.1 + rng.gen_f64() * 10.0,
+                }
             })
             .collect();
         // Guarantee at least one live replica.
         let forced = rng.gen_range(0, n);
-        reps[forced].live = true;
+        reps[forced].state = ReplicaState::Live;
 
         let d = *rng.choose(&Dataset::ALL);
         let q = gen::generate(d, 1, case * 37, &mut rng).remove(0);
@@ -549,7 +553,7 @@ fn prop_router_invariants() {
                 let pick = router.route(&a, features, &reps);
                 assert!(pick < reps.len(), "case {case} [{}]: out of range", router.label());
                 assert!(
-                    reps[pick].live,
+                    reps[pick].live(),
                     "case {case} [{}]: routed to dead replica {pick}",
                     router.label()
                 );
@@ -567,6 +571,127 @@ fn prop_router_invariants() {
                 "case {case}: difficulty-without-features diverged from round-robin"
             );
         }
+    }
+}
+
+/// Lifecycle churn: under random elastic fleets (reactive autoscaling +
+/// seeded MTBF/MTTR failures + random cold-start costs) and random traffic
+/// shapes, (a) every request is served exactly once — nothing lost,
+/// nothing double-served, even across crash requeues; (b) energy
+/// attribution conserves to 1e-6 with cold starts included; (c) every pass
+/// of a request through the router carries its original arrival timestamp
+/// (crash requeues reuse the arrival, never a rewritten one); and (d) the
+/// whole churn replays deterministically.
+#[test]
+fn prop_lifecycle_churn_conserves_and_loses_nothing() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::features::FeatureVector;
+    use ewatt::fleet::{
+        ColdStart, FailureConfig, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
+        ReactiveConfig, ReplicaStatus,
+    };
+    use ewatt::serve::{Arrival, TrafficPattern};
+
+    /// Router wrapper logging every (timestamp bits, query) it is asked to
+    /// place — requeues flow through the router, so the log exposes them.
+    struct Recording {
+        inner: LeastLoaded,
+        log: Vec<(u64, usize)>,
+    }
+    impl FleetRouter for Recording {
+        fn route(
+            &mut self,
+            arrival: &Arrival,
+            features: Option<&FeatureVector>,
+            replicas: &[ReplicaStatus],
+        ) -> usize {
+            self.log.push((arrival.t_s.to_bits(), arrival.query_idx));
+            self.inner.route(arrival, features, replicas)
+        }
+        fn label(&self) -> String {
+            "recording[least-loaded]".into()
+        }
+    }
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..10u64 {
+        let mut rng = ewatt::rng(0xE1A5_71C ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let n = 2 + rng.gen_range(0, 3);
+        let tier = *rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8]);
+        let mut cfg = FleetConfig::elastic(
+            model_for_tier(tier),
+            n,
+            1,
+            DvfsPolicy::governed(&gpu),
+            ReactiveConfig {
+                cooldown_s: 1.0 + rng.gen_f64() * 10.0,
+                ..ReactiveConfig::default()
+            },
+        );
+        cfg.failures = Some(FailureConfig {
+            mtbf_s: 8.0 + rng.gen_f64() * 30.0,
+            mttr_s: 2.0 + rng.gen_f64() * 10.0,
+            seed: case.wrapping_mul(977),
+        });
+        cfg.cold_start = ColdStart {
+            energy_j: 500.0 + rng.gen_f64() * 4000.0,
+            warmup_s: 1.0 + rng.gen_f64() * 8.0,
+        };
+        let pattern = match rng.gen_range(0, 3) {
+            0 => TrafficPattern::Poisson { rps: 1.0 + rng.gen_f64() * 3.0 },
+            1 => TrafficPattern::Bursty { base_rps: 1.0, burst_rps: 6.0, mean_dwell_s: 2.0 },
+            _ => TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 20.0 },
+        };
+        let arrivals = pattern.generate(&suite, 20 + rng.gen_range(0, 40), case);
+        let sim = FleetSim::new(gpu.clone(), cfg);
+        let mut router = Recording { inner: LeastLoaded, log: Vec::new() };
+        let o = sim.run(&suite, &arrivals, &mut router).unwrap();
+
+        // (a) exactly once.
+        assert_eq!(o.served, arrivals.len(), "case {case}: lost requests");
+        assert_eq!(o.slo.completed(), arrivals.len(), "case {case}");
+        let per_replica: usize = o.replicas.iter().map(|r| r.served).sum();
+        assert_eq!(per_replica, arrivals.len(), "case {case}: double-serve");
+        assert!(
+            o.served_by.iter().all(|&r| r < n),
+            "case {case}: a request has no serving replica"
+        );
+
+        // (b) conservation with cold starts in the bill.
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel < 1e-6, "case {case}: conservation off by {rel:e}");
+        assert!(
+            (o.breakdown.coldstart_j - o.coldstart_j).abs() <= 1e-9 * o.coldstart_j.max(1.0),
+            "case {case}: ledger cold-start diverges from metered"
+        );
+
+        // (c) requeues pass through the router with original timestamps:
+        // the route log is exactly `arrivals + requeued` long, and its
+        // distinct (timestamp, query) pairs are precisely the arrival
+        // stream's — a rewritten timestamp would mint a new pair.
+        assert_eq!(
+            router.log.len(),
+            arrivals.len() + o.lifecycle.requeued,
+            "case {case}: route count vs requeues"
+        );
+        let mut seen = router.log.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        let mut want: Vec<(u64, usize)> =
+            arrivals.iter().map(|a| (a.t_s.to_bits(), a.query_idx)).collect();
+        want.sort_unstable();
+        want.dedup();
+        assert_eq!(seen, want, "case {case}: router saw a non-original arrival");
+
+        // (d) the whole churn replays bit-for-bit.
+        let mut router2 = Recording { inner: LeastLoaded, log: Vec::new() };
+        let o2 = sim.run(&suite, &arrivals, &mut router2).unwrap();
+        assert_eq!(o.joules, o2.joules, "case {case}: nondeterministic energy");
+        assert_eq!(router.log, router2.log, "case {case}: nondeterministic routing");
+        assert_eq!(o.lifecycle, o2.lifecycle, "case {case}: nondeterministic lifecycle");
+        assert_eq!(o.served_by, o2.served_by, "case {case}");
     }
 }
 

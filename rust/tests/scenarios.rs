@@ -1,0 +1,268 @@
+//! Golden-trace scenario regression suite.
+//!
+//! Six seeded serving scenarios spanning the stack — traffic shapes
+//! (Poisson / bursty / diurnal) × fleets (one-replica, mixed-tier,
+//! elastic, failing) × policies (static / governed) — each pinned on
+//! total joules, active energy, makespan, served count, e2e p99, and the
+//! lifecycle counters. The goal is the regression that bit PR 4: a
+//! refactor of the serving loop silently shifting energy numbers. Any
+//! intentional change to the dynamics now has to re-bless the snapshot.
+//!
+//! Mechanics:
+//! - every scenario runs **twice in-process** and must agree bit-for-bit
+//!   (hard determinism pin, independent of any snapshot file);
+//! - results are then compared against `rust/tests/snapshots/scenarios.snap`
+//!   to 1e-9 relative tolerance (full-precision values, loose enough only
+//!   for cross-platform libm 1-ulp noise). If the snapshot is missing it
+//!   is bootstrapped and the test passes — commit the generated file to
+//!   pin the numbers. Set `EWATT_UPDATE_SNAPSHOTS=1` to re-bless.
+//!
+//! CI runs this suite twice in sequence and diffs the outputs, so within
+//! one job the first run blesses and the second must reproduce it exactly.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use ewatt::config::model::model_for_tier;
+use ewatt::config::{GpuSpec, ModelTier};
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::fleet::{
+    DifficultyTiered, EnergyAware, FailureConfig, FleetConfig, FleetOutcome, FleetRouter,
+    FleetSim, LeastLoaded, ReactiveConfig, RoundRobin,
+};
+use ewatt::serve::TrafficPattern;
+use ewatt::workload::ReplaySuite;
+
+/// One pinned scenario: name, fleet, router factory, traffic, request count.
+struct Scenario {
+    name: &'static str,
+    cfg: FleetConfig,
+    router: fn() -> Box<dyn FleetRouter>,
+    pattern: TrafficPattern,
+    requests: usize,
+    seed: u64,
+}
+
+fn scenarios(gpu: &GpuSpec) -> Vec<Scenario> {
+    let b8 = || model_for_tier(ModelTier::B8);
+    let gov = DvfsPolicy::governed(gpu);
+    let stat = DvfsPolicy::Static(gpu.f_max_mhz);
+    let elastic = |failures: Option<FailureConfig>| {
+        let mut cfg = FleetConfig::elastic(
+            b8(),
+            3,
+            1,
+            gov,
+            ReactiveConfig { min_live: 1, max_live: 3, ..ReactiveConfig::default() },
+        );
+        cfg.failures = failures;
+        cfg
+    };
+    vec![
+        Scenario {
+            name: "poisson-1rep-static",
+            cfg: FleetConfig::homogeneous(b8(), 1, stat),
+            router: || Box::new(RoundRobin::default()),
+            pattern: TrafficPattern::Poisson { rps: 1.5 },
+            requests: 48,
+            seed: 0x5CE1,
+        },
+        Scenario {
+            name: "poisson-1rep-governed",
+            cfg: FleetConfig::homogeneous(b8(), 1, gov),
+            router: || Box::new(RoundRobin::default()),
+            pattern: TrafficPattern::Poisson { rps: 1.5 },
+            requests: 48,
+            seed: 0x5CE1,
+        },
+        Scenario {
+            name: "bursty-tiered-governed-difficulty",
+            cfg: FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, gov),
+            router: || Box::new(DifficultyTiered::default()),
+            pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
+            requests: 72,
+            seed: 0x5CE2,
+        },
+        Scenario {
+            name: "bursty-tiered-static-energy-aware",
+            cfg: FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, stat),
+            router: || Box::new(EnergyAware::default()),
+            pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
+            requests: 72,
+            seed: 0x5CE2,
+        },
+        Scenario {
+            name: "diurnal-elastic-autoscaled",
+            cfg: elastic(None),
+            router: || Box::new(LeastLoaded),
+            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
+            requests: 160,
+            seed: 0x5CE3,
+        },
+        Scenario {
+            name: "diurnal-elastic-failures",
+            cfg: elastic(Some(FailureConfig { mtbf_s: 60.0, mttr_s: 15.0, seed: 0xFA11 })),
+            router: || Box::new(LeastLoaded),
+            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
+            requests: 160,
+            seed: 0x5CE3,
+        },
+    ]
+}
+
+fn run_scenario(gpu: &GpuSpec, suite: &ReplaySuite, sc: &Scenario) -> FleetOutcome {
+    let arrivals = sc.pattern.generate(suite, sc.requests, sc.seed);
+    let mut router = (sc.router)();
+    FleetSim::new(gpu.clone(), sc.cfg.clone())
+        .run(suite, &arrivals, router.as_mut())
+        .unwrap_or_else(|e| panic!("{}: {e}", sc.name))
+}
+
+/// The pinned observables of one run, one text line per scenario.
+fn snapshot_line(name: &str, o: &FleetOutcome) -> String {
+    let mut s = String::new();
+    write!(
+        s,
+        "{name} served={} total_j={:.17e} energy_j={:.17e} coldstart_j={:.17e} \
+         makespan_s={:.17e} e2e_p99_s={:.17e} switches={} ups={} downs={} \
+         failures={} requeued={}",
+        o.served,
+        o.total_j(),
+        o.energy_j,
+        o.coldstart_j,
+        o.makespan_s,
+        o.slo.e2e_p99(),
+        o.freq_switches,
+        o.lifecycle.scale_ups,
+        o.lifecycle.scale_downs,
+        o.lifecycle.failures,
+        o.lifecycle.requeued,
+    )
+    .unwrap();
+    s
+}
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/snapshots/scenarios.snap")
+}
+
+/// Compare one stored line against a fresh one: integer fields exactly,
+/// float fields to 1e-9 relative tolerance.
+fn lines_match(stored: &str, fresh: &str) -> std::result::Result<(), String> {
+    let fields = |l: &str| l.split_whitespace().map(String::from).collect::<Vec<_>>();
+    let a = fields(stored);
+    let b = fields(fresh);
+    if a.len() != b.len() {
+        return Err(format!("field count {} vs {}", a.len(), b.len()));
+    }
+    for (fa, fb) in a.iter().zip(&b) {
+        if fa == fb {
+            continue;
+        }
+        let (ka, va) = fa.split_once('=').ok_or_else(|| format!("malformed field {fa}"))?;
+        let (kb, vb) = fb.split_once('=').ok_or_else(|| format!("malformed field {fb}"))?;
+        if ka != kb {
+            return Err(format!("field order diverged: {ka} vs {kb}"));
+        }
+        let (x, y): (f64, f64) = match (va.parse(), vb.parse()) {
+            (Ok(x), Ok(y)) => (x, y),
+            _ => return Err(format!("{ka}: {va} vs {vb}")),
+        };
+        let rel = (x - y).abs() / x.abs().max(1e-300);
+        if rel > 1e-9 {
+            return Err(format!("{ka}: {va} vs {vb} (rel {rel:.2e})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn golden_scenarios_are_deterministic_and_match_snapshots() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(17, 24);
+    let mut lines = Vec::new();
+    for sc in scenarios(&gpu) {
+        // Hard determinism pin: two in-process runs must agree bit-for-bit
+        // before any snapshot is consulted.
+        let a = run_scenario(&gpu, &suite, &sc);
+        let b = run_scenario(&gpu, &suite, &sc);
+        assert_eq!(a.joules, b.joules, "{}: nondeterministic attribution", sc.name);
+        assert_eq!(a.routed, b.routed, "{}: nondeterministic routing", sc.name);
+        assert_eq!(a.served_by, b.served_by, "{}", sc.name);
+        assert_eq!(snapshot_line(sc.name, &a), snapshot_line(sc.name, &b), "{}", sc.name);
+        // Cross-scenario sanity that does not depend on blessed numbers.
+        assert_eq!(a.served, sc.requests, "{}: dropped requests", sc.name);
+        let attributed: f64 = a.joules.iter().sum();
+        let rel = (attributed - a.total_j()).abs() / a.total_j();
+        assert!(rel < 1e-6, "{}: conservation off by {rel:e}", sc.name);
+        lines.push(snapshot_line(sc.name, &a));
+    }
+    let fresh = lines.join("\n") + "\n";
+
+    let path = snapshot_path();
+    let update = std::env::var("EWATT_UPDATE_SNAPSHOTS").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(&path) {
+        Ok(stored) if !update => {
+            let stored_lines: Vec<&str> = stored.lines().collect();
+            assert_eq!(
+                stored_lines.len(),
+                lines.len(),
+                "snapshot has {} scenarios, run produced {} — \
+                 re-bless with EWATT_UPDATE_SNAPSHOTS=1 if intentional",
+                stored_lines.len(),
+                lines.len()
+            );
+            for (stored_line, fresh_line) in stored_lines.iter().zip(&lines) {
+                if let Err(why) = lines_match(stored_line, fresh_line) {
+                    panic!(
+                        "golden scenario drifted: {why}\n  stored: {stored_line}\n  \
+                         fresh:  {fresh_line}\nEnergy/latency numbers moved — if this \
+                         change is intentional, re-bless with EWATT_UPDATE_SNAPSHOTS=1 \
+                         and commit the snapshot."
+                    );
+                }
+            }
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("snapshot dir");
+            std::fs::write(&path, &fresh).expect("write snapshot");
+            eprintln!(
+                "scenarios: blessed {} golden lines into {} — commit this file to pin them",
+                lines.len(),
+                path.display()
+            );
+        }
+    }
+}
+
+/// The two elastic scenarios differ from their static siblings in the
+/// direction the physics demands — guarded here so the snapshot never
+/// blesses an obviously wrong regime.
+#[test]
+fn scenario_relationships_hold() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(17, 24);
+    let all = scenarios(&gpu);
+    let by_name = |n: &str| all.iter().find(|s| s.name == n).unwrap();
+
+    let stat = run_scenario(&gpu, &suite, by_name("poisson-1rep-static"));
+    let gov = run_scenario(&gpu, &suite, by_name("poisson-1rep-governed"));
+    assert!(
+        gov.energy_j < stat.energy_j,
+        "governed ({:.0} J) must undercut static ({:.0} J) on active energy",
+        gov.energy_j,
+        stat.energy_j
+    );
+
+    let auto = run_scenario(&gpu, &suite, by_name("diurnal-elastic-autoscaled"));
+    assert!(auto.lifecycle.scale_ups > 0, "elastic scenario never scaled");
+    assert!(auto.coldstart_j > 0.0);
+
+    let fail = run_scenario(&gpu, &suite, by_name("diurnal-elastic-failures"));
+    assert_eq!(fail.served, auto.served, "failures must not lose requests");
+    assert!(
+        fail.lifecycle.failures > 0,
+        "failure scenario injected no failures — MTBF too long for the horizon?"
+    );
+}

@@ -55,6 +55,10 @@ fn prop_serve_facade_equals_one_replica_fleet() {
                 max_batch: cfg.max_batch,
                 slo: cfg.slo,
                 window_s: cfg.window_s,
+                // Inert lifecycle: no autoscaling, no failures — the
+                // configuration under which the elastic loop must remain
+                // bit-identical to the fixed-fleet loop it grew from.
+                ..FleetConfig::default()
             };
             let fleet = FleetSim::new(gpu.clone(), fleet_cfg)
                 .run(&suite, &arrivals, &mut RoundRobin::default())
