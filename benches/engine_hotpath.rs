@@ -52,6 +52,39 @@ fn main() {
         (prefill_cost(&m32, 8, 300).flops, decode_step_cost(&m32, 8, 300).flops)
     }));
 
+    // Step selection at fleet scale: the indexed event queue vs the
+    // reference linear scan, identical seeded stream (the `ewatt bench`
+    // harness runs the same pair at million-arrival scale).
+    {
+        use ewatt::coordinator::DvfsPolicy;
+        use ewatt::fleet::{FleetConfig, FleetSim, ReplicaSpec, RoundRobin, StepSelector};
+        use ewatt::serve::TrafficPattern;
+        use ewatt::workload::ReplaySuite;
+
+        let suite = ReplaySuite::quick(23, 32);
+        let arrivals = TrafficPattern::Poisson { rps: 64.0 }.generate(&suite, 2_000, 0xB37C);
+        let cfg = FleetConfig::builder()
+            .replicas(
+                16,
+                ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(gpu.f_max_mhz)),
+            )
+            .build()
+            .unwrap();
+        let fleet_sim = FleetSim::new(gpu.clone(), cfg);
+        for (name, sel) in [
+            ("fleet step-select 16rep x2k [indexed]", StepSelector::Indexed),
+            ("fleet step-select 16rep x2k [linear ref]", StepSelector::LinearReference),
+        ] {
+            let s = &fleet_sim;
+            let (su, a) = (&suite, &arrivals);
+            results.push(bench(name, 1, 5, move || {
+                s.run_with_selector(su, a, &mut RoundRobin::default(), sel)
+                    .unwrap()
+                    .energy_j
+            }));
+        }
+    }
+
     // Real PJRT path (skipped when artifacts are absent).
     match Manifest::load(artifact::default_dir()) {
         Err(_) => eprintln!("artifacts not built; skipping PJRT rows"),

@@ -5,12 +5,11 @@
 //! both sit on the serving path at traffic scale. One full routed+governed
 //! fleet run is the `ewatt fleet` regeneration unit.
 
-use ewatt::config::model::model_for_tier;
 use ewatt::config::{GpuSpec, ModelTier};
 use ewatt::coordinator::DvfsPolicy;
 use ewatt::fleet::{
     DifficultyTiered, EnergyAware, EnergyLedger, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
-    ReactiveConfig, ReplicaState, ReplicaStatus, RoundRobin,
+    ReactiveConfig, ReplicaSpec, ReplicaState, ReplicaStatus, RoundRobin, StepSelector,
 };
 use ewatt::serve::TrafficPattern;
 use ewatt::util::bench::{bench, report};
@@ -72,13 +71,29 @@ fn main() {
     // One full routed+governed fleet run (the `ewatt fleet` unit).
     let arrivals = TrafficPattern::Bursty { base_rps: 3.0, burst_rps: 10.0, mean_dwell_s: 3.0 }
         .generate(&suite, 80, 3);
-    let cfg = FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, DvfsPolicy::governed(&gpu));
+    let cfg = FleetConfig::builder()
+        .replicas(2, ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::governed(&gpu)))
+        .replicas(2, ReplicaSpec::tiered(ModelTier::B14, DvfsPolicy::governed(&gpu)))
+        .build()
+        .unwrap();
     let sim = FleetSim::new(gpu.clone(), cfg);
-    let mono =
-        FleetConfig::homogeneous(model_for_tier(ModelTier::B14), 4, DvfsPolicy::baseline(&gpu));
+    let mono = FleetConfig::builder()
+        .replicas(4, ReplicaSpec::tiered(ModelTier::B14, DvfsPolicy::baseline(&gpu)))
+        .build()
+        .unwrap();
     let mono_sim = FleetSim::new(gpu, mono);
     results.push(bench("fleet run 80 reqs [routed+governed]", 1, 10, || {
         sim.run(&suite, &arrivals, &mut DifficultyTiered::default()).unwrap().energy_j
+    }));
+    results.push(bench("fleet run 80 reqs [routed, linear ref]", 1, 10, || {
+        sim.run_with_selector(
+            &suite,
+            &arrivals,
+            &mut DifficultyTiered::default(),
+            StepSelector::LinearReference,
+        )
+        .unwrap()
+        .energy_j
     }));
     results.push(bench("fleet run 80 reqs [monolithic-static]", 1, 10, || {
         mono_sim.run(&suite, &arrivals, &mut LeastLoaded).unwrap().energy_j
@@ -89,13 +104,13 @@ fn main() {
     // the same continuous-batching core.
     let diurnal = TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 30.0 }
         .generate(&suite, 80, 3);
-    let elastic_cfg = FleetConfig::elastic(
-        model_for_tier(ModelTier::B8),
-        4,
-        1,
-        DvfsPolicy::governed(&GpuSpec::rtx_pro_6000()),
-        ReactiveConfig::default(),
-    );
+    let gov8 = ReplicaSpec::tiered(ModelTier::B8, DvfsPolicy::governed(&GpuSpec::rtx_pro_6000()));
+    let elastic_cfg = FleetConfig::builder()
+        .replica(gov8.clone())
+        .replicas(3, ReplicaSpec { state: ReplicaState::Cold, ..gov8 })
+        .reactive(ReactiveConfig { max_live: 4, ..ReactiveConfig::default() })
+        .build()
+        .unwrap();
     let elastic_sim = FleetSim::new(GpuSpec::rtx_pro_6000(), elastic_cfg);
     results.push(bench("fleet run 80 reqs [elastic 1..4]", 1, 10, || {
         elastic_sim.run(&suite, &diurnal, &mut LeastLoaded).unwrap().energy_j

@@ -26,7 +26,8 @@ use ewatt::config::model::model_for_tier;
 use ewatt::config::{GpuSpec, ModelTier};
 use ewatt::coordinator::DvfsPolicy;
 use ewatt::fleet::{
-    FailureConfig, FleetConfig, FleetOutcome, FleetSim, LeastLoaded, ReactiveConfig,
+    FailureConfig, FleetConfig, FleetOutcome, FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec,
+    ReplicaState,
 };
 use ewatt::serve::TrafficPattern;
 use ewatt::workload::ReplaySuite;
@@ -94,17 +95,28 @@ fn main() -> anyhow::Result<()> {
     let model = model_for_tier(ModelTier::B8);
     let scale = ReactiveConfig { min_live: 1, max_live: N_PEAK, ..ReactiveConfig::default() };
 
-    let static_cfg = FleetConfig::homogeneous(model.clone(), N_PEAK, gov);
+    let live = ReplicaSpec { model, policy: gov, state: ReplicaState::Live };
+    let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
+
+    let static_cfg =
+        FleetConfig::builder().replicas(N_PEAK, live.clone()).build()?;
     let slo = static_cfg.slo;
     let st = FleetSim::new(gpu.clone(), static_cfg).run(&suite, &arrivals, &mut LeastLoaded)?;
     describe(&format!("static-{N_PEAK} · governed · least-loaded"), &st);
 
-    let auto_cfg = FleetConfig::elastic(model.clone(), N_PEAK, 1, gov, scale);
+    let elastic = || {
+        FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(N_PEAK - 1, cold.clone())
+            .reactive(ReactiveConfig { max_live: N_PEAK, ..scale })
+    };
+    let auto_cfg = elastic().build()?;
     let au = FleetSim::new(gpu.clone(), auto_cfg).run(&suite, &arrivals, &mut LeastLoaded)?;
     describe("autoscaled 1..4 · governed · least-loaded", &au);
 
-    let mut fail_cfg = FleetConfig::elastic(model, N_PEAK, 1, gov, scale);
-    fail_cfg.failures = Some(FailureConfig { mtbf_s: 60.0, mttr_s: 20.0, seed: 0xFA11 });
+    let fail_cfg = elastic()
+        .failures(FailureConfig { mtbf_s: 60.0, mttr_s: 20.0, seed: 0xFA11 })
+        .build()?;
     let fa = FleetSim::new(gpu, fail_cfg).run(&suite, &arrivals, &mut LeastLoaded)?;
     describe("autoscaled + failures (MTBF 60s, MTTR 20s)", &fa);
 

@@ -18,10 +18,11 @@
 //!
 //! Run: `cargo run --release --example fleet_serve`
 
-use ewatt::config::model::model_for_tier;
 use ewatt::config::{GpuSpec, ModelTier};
 use ewatt::coordinator::DvfsPolicy;
-use ewatt::fleet::{DifficultyTiered, FleetConfig, FleetOutcome, FleetRouter, FleetSim, LeastLoaded};
+use ewatt::fleet::{
+    DifficultyTiered, FleetConfig, FleetOutcome, FleetRouter, FleetSim, LeastLoaded, ReplicaSpec,
+};
 use ewatt::serve::TrafficPattern;
 use ewatt::workload::ReplaySuite;
 
@@ -83,14 +84,17 @@ fn main() -> anyhow::Result<()> {
         arrivals.last().unwrap().t_s
     );
 
-    let mono_cfg =
-        FleetConfig::homogeneous(model_for_tier(ModelTier::B14), 4, DvfsPolicy::baseline(&gpu));
+    let mono_cfg = FleetConfig::builder()
+        .replicas(4, ReplicaSpec::tiered(ModelTier::B14, DvfsPolicy::baseline(&gpu)))
+        .build()?;
     let slo = mono_cfg.slo;
     let mono = FleetSim::new(gpu.clone(), mono_cfg).run(&suite, &arrivals, &mut LeastLoaded)?;
     describe("monolithic-14B · static@fmax · least-loaded", &mono);
 
-    let routed_cfg =
-        FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, DvfsPolicy::governed(&gpu));
+    let routed_cfg = FleetConfig::builder()
+        .replicas(2, ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::governed(&gpu)))
+        .replicas(2, ReplicaSpec::tiered(ModelTier::B14, DvfsPolicy::governed(&gpu)))
+        .build()?;
     let mut router = DifficultyTiered::default();
     let routed = FleetSim::new(gpu.clone(), routed_cfg).run(&suite, &arrivals, &mut router)?;
     describe(

@@ -15,11 +15,11 @@
 
 use anyhow::Result;
 
-use crate::config::model::model_for_tier;
 use crate::config::ModelTier;
 use crate::coordinator::DvfsPolicy;
 use crate::fleet::{
-    FailureConfig, FleetConfig, FleetOutcome, FleetSim, LeastLoaded, ReactiveConfig,
+    FailureConfig, FleetConfig, FleetOutcome, FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec,
+    ReplicaState,
 };
 use crate::serve::TrafficPattern;
 
@@ -60,11 +60,23 @@ pub fn failures() -> FailureConfig {
 /// isolate the lifecycle policy.
 pub fn deployments(ctx: &Context) -> Vec<(String, FleetConfig)> {
     let gov = DvfsPolicy::governed(&ctx.gpu);
-    let model = model_for_tier(TIER);
-    let static_peak = FleetConfig::homogeneous(model.clone(), N_PEAK, gov);
-    let autoscaled = FleetConfig::elastic(model.clone(), N_PEAK, 1, gov, reactive());
-    let mut autoscaled_failures = FleetConfig::elastic(model, N_PEAK, 1, gov, reactive());
-    autoscaled_failures.failures = Some(failures());
+    let live = ReplicaSpec::tiered(TIER, gov);
+    let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
+    let static_peak = FleetConfig::builder()
+        .replicas(N_PEAK, live.clone())
+        .build()
+        .expect("static deployment config is valid");
+    let elastic = || {
+        FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(N_PEAK - 1, cold.clone())
+            .reactive(reactive())
+    };
+    let autoscaled = elastic().build().expect("autoscaled deployment config is valid");
+    let autoscaled_failures = elastic()
+        .failures(failures())
+        .build()
+        .expect("failure deployment config is valid");
     vec![
         (format!("static-{N_PEAK}"), static_peak),
         ("autoscaled".into(), autoscaled),

@@ -1,0 +1,300 @@
+//! `ewatt bench` — the engine hot-path perf-regression harness.
+//!
+//! Times the shared continuous-batching engine on its headline hot path
+//! (a 16-replica fleet under round-robin Poisson traffic, a million
+//! arrivals by default) twice: once with the indexed event queue
+//! ([`StepSelector::Indexed`], the production path) and once with the
+//! reference linear scan ([`StepSelector::LinearReference`], the oracle
+//! the property tests pin the queue against). Both runs serve the exact
+//! same seeded arrival stream, so the ratio isolates the step-selection
+//! machinery from the simulation physics.
+//!
+//! Results append to a tracked trajectory file (`BENCH_engine.json` at
+//! the repo root, format `{"entries":[...],"format":1}`) keyed on the
+//! benchmark configuration (replicas × arrivals × seed). `--check`
+//! additionally gates against the last blessed entry for the same
+//! configuration: the indexed mean may not exceed [`REGRESSION_BUDGET`]×
+//! the blessed wall time. Every run also asserts the indexed path beats
+//! the linear reference by at least `--min-speedup` (default
+//! [`DEFAULT_MIN_SPEEDUP`]).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::config::{GpuSpec, ModelTier};
+use crate::coordinator::DvfsPolicy;
+use crate::fleet::{FleetConfig, FleetSim, ReplicaSpec, RoundRobin, StepSelector};
+use crate::serve::{Arrival, TrafficPattern};
+use crate::util::bench::fmt_dur;
+use crate::util::json::JsonValue;
+use crate::workload::ReplaySuite;
+
+/// `--check` budget: the indexed mean may grow to at most this multiple of
+/// the last blessed wall time for the same configuration before the gate
+/// fails (25% headroom for runner noise; real regressions are larger).
+pub const REGRESSION_BUDGET: f64 = 1.25;
+
+/// Default floor on indexed-vs-linear speedup at headline scale.
+pub const DEFAULT_MIN_SPEEDUP: f64 = 3.0;
+
+/// Most recent entries kept per trajectory file.
+const MAX_ENTRIES: usize = 50;
+
+/// One `ewatt bench` invocation's knobs (CLI flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Fleet size of the headline configuration (`--replicas`).
+    pub replicas: usize,
+    /// Arrival-stream length (`--arrivals`).
+    pub arrivals: usize,
+    /// Master seed for the suite and arrival stream (`--seed`).
+    pub seed: u64,
+    /// Full runs averaged per selector (`--iters`).
+    pub iters: usize,
+    /// Gate against the blessed trajectory instead of just appending
+    /// (`--check`).
+    pub check: bool,
+    /// Required indexed-vs-linear speedup (`--min-speedup`).
+    pub min_speedup: f64,
+    /// Trajectory file (`--json`), repo-root `BENCH_engine.json` by default.
+    pub path: PathBuf,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            replicas: 16,
+            arrivals: 1_000_000,
+            seed: 0xB37C,
+            iters: 1,
+            check: false,
+            min_speedup: DEFAULT_MIN_SPEEDUP,
+            path: PathBuf::from("BENCH_engine.json"),
+        }
+    }
+}
+
+/// Run the harness: measure both selectors, enforce the speedup floor and
+/// (under `--check`) the regression budget, then append to the trajectory.
+pub fn run(opts: &BenchOptions) -> Result<()> {
+    ensure!(opts.replicas >= 1, "need at least one replica");
+    ensure!(opts.arrivals >= 1, "need at least one arrival");
+    ensure!(opts.iters >= 1, "need at least one iteration");
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(opts.seed ^ 0x51, 48);
+    // Load scales with the fleet so bigger fleets stay busy rather than
+    // stretching the simulated horizon.
+    let pattern = TrafficPattern::Poisson { rps: 8.0 * opts.replicas as f64 };
+    let arrivals = pattern.generate(&suite, opts.arrivals, opts.seed);
+    let cfg = FleetConfig::builder()
+        .replicas(
+            opts.replicas,
+            ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(gpu.f_max_mhz)),
+        )
+        .build()?;
+    let sim = FleetSim::new(gpu, cfg);
+
+    eprintln!(
+        "engine bench: {} replicas x {} arrivals (seed {:#x}, {} iter/selector) ...",
+        opts.replicas,
+        opts.arrivals,
+        opts.seed,
+        opts.iters
+    );
+    let indexed = measure(&sim, &suite, &arrivals, StepSelector::Indexed, opts.iters)?;
+    let linear = measure(&sim, &suite, &arrivals, StepSelector::LinearReference, opts.iters)?;
+    let speedup = linear.as_secs_f64() / indexed.as_secs_f64();
+    println!("indexed queue   : {}", fmt_dur(indexed));
+    println!("linear reference: {}", fmt_dur(linear));
+    println!("speedup         : {speedup:.2}x (floor {:.1}x)", opts.min_speedup);
+
+    let mut entries = load(&opts.path)?;
+    if opts.check {
+        match last_matching(&entries, opts) {
+            Some(prev_ms) => {
+                let cur_ms = 1e3 * indexed.as_secs_f64();
+                let budget_ms = prev_ms * REGRESSION_BUDGET;
+                ensure!(
+                    cur_ms <= budget_ms,
+                    "hot-path regression: indexed mean {cur_ms:.1} ms vs blessed \
+                     {prev_ms:.1} ms (budget {budget_ms:.1} ms = {REGRESSION_BUDGET}x)"
+                );
+                println!("regression gate : {cur_ms:.1} ms within {budget_ms:.1} ms budget");
+            }
+            None => eprintln!(
+                "no blessed entry for this configuration in {} — blessing this run",
+                opts.path.display()
+            ),
+        }
+    }
+    ensure!(
+        speedup >= opts.min_speedup,
+        "indexed selector is only {speedup:.2}x faster than the linear reference \
+         (need >= {:.1}x)",
+        opts.min_speedup
+    );
+
+    entries.push(entry(opts, indexed, linear, speedup));
+    if entries.len() > MAX_ENTRIES {
+        let drop = entries.len() - MAX_ENTRIES;
+        entries.drain(..drop);
+    }
+    save(&opts.path, &entries)?;
+    println!("recorded entry in {}", opts.path.display());
+    Ok(())
+}
+
+/// Mean wall time of `iters` full runs under one selector.
+fn measure(
+    sim: &FleetSim,
+    suite: &ReplaySuite,
+    arrivals: &[Arrival],
+    selector: StepSelector,
+    iters: usize,
+) -> Result<Duration> {
+    let mut total = Duration::ZERO;
+    let mut served = 0usize;
+    for _ in 0..iters {
+        let mut router = RoundRobin::default();
+        let t0 = Instant::now();
+        let o = sim.run_with_selector(suite, arrivals, &mut router, selector)?;
+        total += t0.elapsed();
+        served += o.served;
+    }
+    ensure!(served == iters * arrivals.len(), "bench run dropped requests");
+    Ok(total / iters as u32)
+}
+
+/// Seeds are recorded as hex strings so 64-bit values round-trip exactly
+/// through the f64-backed JSON number type.
+fn seed_key(seed: u64) -> String {
+    format!("{seed:#x}")
+}
+
+fn entry(opts: &BenchOptions, indexed: Duration, linear: Duration, speedup: f64) -> JsonValue {
+    let unix_s = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut m = BTreeMap::new();
+    m.insert("replicas".to_string(), JsonValue::Number(opts.replicas as f64));
+    m.insert("arrivals".to_string(), JsonValue::Number(opts.arrivals as f64));
+    m.insert("seed".to_string(), JsonValue::String(seed_key(opts.seed)));
+    m.insert("iters".to_string(), JsonValue::Number(opts.iters as f64));
+    m.insert(
+        "indexed_ms".to_string(),
+        JsonValue::Number(1e3 * indexed.as_secs_f64()),
+    );
+    m.insert(
+        "linear_ms".to_string(),
+        JsonValue::Number(1e3 * linear.as_secs_f64()),
+    );
+    m.insert("speedup".to_string(), JsonValue::Number(speedup));
+    m.insert("unix_s".to_string(), JsonValue::Number(unix_s as f64));
+    JsonValue::Object(m)
+}
+
+/// Last blessed indexed wall time (ms) for this exact configuration.
+fn last_matching(entries: &[JsonValue], opts: &BenchOptions) -> Option<f64> {
+    let seed = seed_key(opts.seed);
+    entries.iter().rev().find_map(|e| {
+        let same = e.get("replicas").and_then(JsonValue::as_usize) == Some(opts.replicas)
+            && e.get("arrivals").and_then(JsonValue::as_usize) == Some(opts.arrivals)
+            && e.get("seed").and_then(JsonValue::as_str) == Some(seed.as_str());
+        if same {
+            e.get("indexed_ms").and_then(JsonValue::as_f64)
+        } else {
+            None
+        }
+    })
+}
+
+fn load(path: &Path) -> Result<Vec<JsonValue>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let doc = JsonValue::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    ensure!(
+        doc.get("format").and_then(JsonValue::as_usize) == Some(1),
+        "{}: unsupported trajectory format",
+        path.display()
+    );
+    Ok(doc
+        .get("entries")
+        .and_then(JsonValue::as_array)
+        .map(<[JsonValue]>::to_vec)
+        .unwrap_or_default())
+}
+
+fn save(path: &Path, entries: &[JsonValue]) -> Result<()> {
+    let mut m = BTreeMap::new();
+    m.insert("format".to_string(), JsonValue::Number(1.0));
+    m.insert("entries".to_string(), JsonValue::Array(entries.to_vec()));
+    let text = JsonValue::Object(m).to_string() + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(path: PathBuf, check: bool) -> BenchOptions {
+        BenchOptions {
+            replicas: 2,
+            arrivals: 40,
+            seed: 0x7E57,
+            iters: 1,
+            check,
+            // At toy scale queue overhead can exceed the scan savings; the
+            // smoke test exercises the harness, not the headline ratio.
+            min_speedup: 0.0,
+            path,
+        }
+    }
+
+    #[test]
+    fn blesses_then_gates_a_trajectory() {
+        let path = std::env::temp_dir().join(format!("ewatt_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        run(&tiny(path.clone(), false)).unwrap();
+        let first = load(&path).unwrap();
+        assert_eq!(first.len(), 1);
+        assert!(first[0].get("indexed_ms").and_then(JsonValue::as_f64).unwrap() > 0.0);
+        assert_eq!(
+            first[0].get("seed").and_then(JsonValue::as_str),
+            Some("0x7e57")
+        );
+
+        // Re-bless with a huge wall time so the --check pass/fail outcomes
+        // below are timing-proof on any machine.
+        let opts = tiny(path.clone(), false);
+        let slow = entry(&opts, Duration::from_secs(3600), Duration::from_secs(7200), 2.0);
+        save(&path, &[slow]).unwrap();
+        run(&tiny(path.clone(), true)).unwrap();
+        assert_eq!(load(&path).unwrap().len(), 2);
+
+        // A blessed entry no real run can beat must trip the gate.
+        let fast = entry(&opts, Duration::from_nanos(1), Duration::from_nanos(4), 4.0);
+        save(&path, &[fast]).unwrap();
+        assert!(run(&tiny(path.clone(), true)).is_err());
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn matching_is_keyed_on_configuration() {
+        let opts = tiny(PathBuf::from("unused.json"), false);
+        let e = entry(&opts, Duration::from_millis(10), Duration::from_millis(40), 4.0);
+        assert_eq!(last_matching(&[e.clone()], &opts), Some(10.0));
+        let other = BenchOptions { replicas: 3, ..opts };
+        assert_eq!(last_matching(&[e], &other), None);
+    }
+}

@@ -12,10 +12,11 @@
 
 use anyhow::Result;
 
-use crate::config::model::model_for_tier;
 use crate::config::ModelTier;
 use crate::coordinator::DvfsPolicy;
-use crate::fleet::{DifficultyTiered, EnergyAware, FleetConfig, FleetRouter, FleetSim, LeastLoaded};
+use crate::fleet::{
+    DifficultyTiered, EnergyAware, FleetConfig, FleetRouter, FleetSim, LeastLoaded, ReplicaSpec,
+};
 use crate::quality::QualityModel;
 use crate::serve::TrafficPattern;
 
@@ -53,8 +54,19 @@ pub fn scenarios() -> Vec<(&'static str, TrafficPattern)> {
 pub fn deployments(ctx: &Context) -> Vec<(String, FleetConfig, Box<dyn FleetRouter>)> {
     let stat = DvfsPolicy::baseline(&ctx.gpu);
     let gov = DvfsPolicy::governed(&ctx.gpu);
-    let mono = |p| FleetConfig::homogeneous(model_for_tier(LARGE), N_LARGE_ONLY, p);
-    let split = |p| FleetConfig::tiered(SMALL, N_SPLIT, LARGE, N_SPLIT, p);
+    let mono = |p| {
+        FleetConfig::builder()
+            .replicas(N_LARGE_ONLY, ReplicaSpec::tiered(LARGE, p))
+            .build()
+            .expect("monolithic deployment config is valid")
+    };
+    let split = |p| {
+        FleetConfig::builder()
+            .replicas(N_SPLIT, ReplicaSpec::tiered(SMALL, p))
+            .replicas(N_SPLIT, ReplicaSpec::tiered(LARGE, p))
+            .build()
+            .expect("routed deployment config is valid")
+    };
     let ll = || Box::new(LeastLoaded) as Box<dyn FleetRouter>;
     vec![
         ("monolithic-14B·static".into(), mono(stat), ll()),

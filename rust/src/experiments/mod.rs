@@ -7,6 +7,7 @@ pub mod autoscale_tables;
 pub mod casestudy;
 pub mod context;
 pub mod dvfs_tables;
+pub mod engine_bench;
 pub mod figures;
 pub mod fleet_tables;
 pub mod quality_tables;

@@ -22,6 +22,12 @@
 //! Every split is exact by construction, so attributed energy sums back to
 //! the measured total — the conservation property the proptest suite and
 //! `examples/fleet_serve.rs` assert to 1e-6 relative error.
+//!
+//! Storage is a struct-of-arrays arena: one flat `f64` column per phase,
+//! sized once at construction. A million-request run allocates five slabs
+//! up front and every charge is a bare indexed `+=` into one column — no
+//! per-entry allocation, and phase-local charge patterns (decode steps hit
+//! only the decode column) stay cache-dense.
 
 /// Attributed energy of one request (or an aggregate of requests), by phase.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -60,30 +66,59 @@ impl PhaseEnergy {
     }
 }
 
+/// Anything that can absorb serving-path energy charges.
+///
+/// [`EnergyLedger`] is the canonical sink. The fleet engine's parallel gap
+/// stepping hands each worker thread a [`ChargeLog`] instead, then replays
+/// the logs into the real ledger in replica order — per-gap charge sets are
+/// disjoint across replicas, so the replay is bit-identical to having
+/// charged the ledger inline.
+///
+/// Idle and cold-start amortization are *not* part of the sink: they are
+/// finalization-time bookkeeping, never charged from inside a step.
+pub trait EnergySink {
+    /// Charge one prefill pass to `req`.
+    fn charge_prefill(&mut self, req: usize, energy_j: f64);
+    /// Split one decode step equally across the co-batched requests.
+    fn charge_decode(&mut self, reqs: &[usize], energy_j: f64);
+    /// Split one DVFS switch across the requests of the following step.
+    fn charge_switch(&mut self, reqs: &[usize], energy_j: f64);
+}
+
 /// The attribution ledger: one [`PhaseEnergy`] account per request,
-/// indexed by arrival order.
+/// indexed by arrival order, stored as per-phase columns.
 #[derive(Debug, Clone)]
 pub struct EnergyLedger {
-    per_request: Vec<PhaseEnergy>,
+    prefill_j: Vec<f64>,
+    decode_j: Vec<f64>,
+    switch_j: Vec<f64>,
+    idle_j: Vec<f64>,
+    coldstart_j: Vec<f64>,
 }
 
 impl EnergyLedger {
     /// A ledger with `n_requests` zeroed accounts.
     pub fn new(n_requests: usize) -> EnergyLedger {
-        EnergyLedger { per_request: vec![PhaseEnergy::default(); n_requests] }
+        EnergyLedger {
+            prefill_j: vec![0.0; n_requests],
+            decode_j: vec![0.0; n_requests],
+            switch_j: vec![0.0; n_requests],
+            idle_j: vec![0.0; n_requests],
+            coldstart_j: vec![0.0; n_requests],
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.per_request.len()
+        self.prefill_j.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.per_request.is_empty()
+        self.prefill_j.is_empty()
     }
 
     /// Charge one prefill pass to `req`.
     pub fn charge_prefill(&mut self, req: usize, energy_j: f64) {
-        self.per_request[req].prefill_j += energy_j;
+        self.prefill_j[req] += energy_j;
     }
 
     /// Split one decode step equally across the co-batched requests
@@ -92,7 +127,7 @@ impl EnergyLedger {
         assert!(!reqs.is_empty(), "decode energy with no requests to charge");
         let share = energy_j / reqs.len() as f64;
         for &r in reqs {
-            self.per_request[r].decode_j += share;
+            self.decode_j[r] += share;
         }
     }
 
@@ -101,7 +136,7 @@ impl EnergyLedger {
         assert!(!reqs.is_empty(), "switch energy with no requests to charge");
         let share = energy_j / reqs.len() as f64;
         for &r in reqs {
-            self.per_request[r].switch_j += share;
+            self.switch_j[r] += share;
         }
     }
 
@@ -113,7 +148,7 @@ impl EnergyLedger {
         assert!(!reqs.is_empty(), "idle energy with no served requests to amortize over");
         let share = energy_j / reqs.len() as f64;
         for &r in reqs {
-            self.per_request[r].idle_j += share;
+            self.idle_j[r] += share;
         }
     }
 
@@ -125,32 +160,126 @@ impl EnergyLedger {
         assert!(!reqs.is_empty(), "cold-start energy with no requests to amortize over");
         let share = energy_j / reqs.len() as f64;
         for &r in reqs {
-            self.per_request[r].coldstart_j += share;
+            self.coldstart_j[r] += share;
         }
     }
 
     /// One request's attributed breakdown.
     pub fn request(&self, req: usize) -> PhaseEnergy {
-        self.per_request[req]
+        PhaseEnergy {
+            prefill_j: self.prefill_j[req],
+            decode_j: self.decode_j[req],
+            switch_j: self.switch_j[req],
+            idle_j: self.idle_j[req],
+            coldstart_j: self.coldstart_j[req],
+        }
     }
 
     /// Attributed total per request, in arrival order.
     pub fn joules(&self) -> Vec<f64> {
-        self.per_request.iter().map(|p| p.total_j()).collect()
+        (0..self.len()).map(|r| self.request(r).total_j()).collect()
     }
 
     /// Sum of all accounts (the conservation check's left-hand side).
     pub fn totals(&self) -> PhaseEnergy {
         let mut t = PhaseEnergy::default();
-        for p in &self.per_request {
-            t.add(p);
+        for r in 0..self.len() {
+            t.add(&self.request(r));
         }
         t
     }
 
     /// Sum over a subset of requests (per-replica conservation checks).
     pub fn total_for(&self, reqs: &[usize]) -> f64 {
-        reqs.iter().map(|&r| self.per_request[r].total_j()).sum()
+        reqs.iter().map(|&r| self.request(r).total_j()).sum()
+    }
+}
+
+impl EnergySink for EnergyLedger {
+    fn charge_prefill(&mut self, req: usize, energy_j: f64) {
+        EnergyLedger::charge_prefill(self, req, energy_j);
+    }
+
+    fn charge_decode(&mut self, reqs: &[usize], energy_j: f64) {
+        EnergyLedger::charge_decode(self, reqs, energy_j);
+    }
+
+    fn charge_switch(&mut self, reqs: &[usize], energy_j: f64) {
+        EnergyLedger::charge_switch(self, reqs, energy_j);
+    }
+}
+
+/// One recorded serving-path charge. Multi-request charges index into the
+/// owning [`ChargeLog`]'s request arena instead of allocating per op.
+#[derive(Debug, Clone, Copy)]
+enum ChargeOp {
+    Prefill { req: usize, energy_j: f64 },
+    /// Decode step over `reqs[lo..hi]` of the arena.
+    Decode { lo: usize, hi: usize, energy_j: f64 },
+    /// Switch charge over `reqs[lo..hi]` of the arena.
+    Switch { lo: usize, hi: usize, energy_j: f64 },
+}
+
+/// A deferred charge buffer: records the exact sequence of serving-path
+/// charges so they can be replayed into an [`EnergyLedger`] later.
+///
+/// Replay applies the identical operations with the identical grouping (and
+/// therefore identical equal-share divisions), so `log.replay(&mut ledger)`
+/// leaves the ledger bit-identical to having charged it directly.
+#[derive(Debug, Clone, Default)]
+pub struct ChargeLog {
+    ops: Vec<ChargeOp>,
+    /// Arena of request indices referenced by multi-request ops.
+    reqs: Vec<usize>,
+}
+
+impl ChargeLog {
+    /// Number of recorded charge operations.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    fn push_span(&mut self, reqs: &[usize]) -> (usize, usize) {
+        let lo = self.reqs.len();
+        self.reqs.extend_from_slice(reqs);
+        (lo, self.reqs.len())
+    }
+
+    /// Apply every recorded charge to `ledger`, in recording order.
+    pub fn replay(&self, ledger: &mut EnergyLedger) {
+        for op in &self.ops {
+            match *op {
+                ChargeOp::Prefill { req, energy_j } => ledger.charge_prefill(req, energy_j),
+                ChargeOp::Decode { lo, hi, energy_j } => {
+                    ledger.charge_decode(&self.reqs[lo..hi], energy_j)
+                }
+                ChargeOp::Switch { lo, hi, energy_j } => {
+                    ledger.charge_switch(&self.reqs[lo..hi], energy_j)
+                }
+            }
+        }
+    }
+}
+
+impl EnergySink for ChargeLog {
+    fn charge_prefill(&mut self, req: usize, energy_j: f64) {
+        self.ops.push(ChargeOp::Prefill { req, energy_j });
+    }
+
+    fn charge_decode(&mut self, reqs: &[usize], energy_j: f64) {
+        assert!(!reqs.is_empty(), "decode energy with no requests to charge");
+        let (lo, hi) = self.push_span(reqs);
+        self.ops.push(ChargeOp::Decode { lo, hi, energy_j });
+    }
+
+    fn charge_switch(&mut self, reqs: &[usize], energy_j: f64) {
+        assert!(!reqs.is_empty(), "switch energy with no requests to charge");
+        let (lo, hi) = self.push_span(reqs);
+        self.ops.push(ChargeOp::Switch { lo, hi, energy_j });
     }
 }
 
@@ -232,5 +361,36 @@ mod tests {
         led.charge_prefill(1, 2.0);
         led.charge_prefill(2, 4.0);
         assert!((led.total_for(&[0, 2]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn charge_log_replay_is_bit_identical_to_direct_charging() {
+        let charge = |sink: &mut dyn EnergySink| {
+            sink.charge_prefill(0, 7.25);
+            sink.charge_switch(&[0], 0.125);
+            sink.charge_decode(&[0, 1, 2], 10.0); // 10/3 is not exact in binary
+            sink.charge_decode(&[1, 2], 0.3);
+            sink.charge_prefill(2, 1.0 / 3.0);
+        };
+        let mut direct = EnergyLedger::new(3);
+        charge(&mut direct);
+
+        let mut log = ChargeLog::default();
+        charge(&mut log);
+        assert_eq!(log.len(), 5);
+        let mut replayed = EnergyLedger::new(3);
+        log.replay(&mut replayed);
+
+        for r in 0..3 {
+            // Bit-identity, not tolerance: replay must apply the very same
+            // divisions in the very same order.
+            assert_eq!(direct.request(r), replayed.request(r), "request {r}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no requests to charge")]
+    fn charge_log_rejects_empty_decode_like_the_ledger() {
+        ChargeLog::default().charge_decode(&[], 1.0);
     }
 }

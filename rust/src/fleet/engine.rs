@@ -9,9 +9,14 @@
 //!   or draining replicas, then the router reads every replica's live
 //!   status (backlog, telemetry-window power, joules/token) and binds the
 //!   request to exactly one live replica;
-//! - **replica step**: the earliest steppable replica executes one unit of
-//!   work (an admission prefill or a batched decode step) under its own
-//!   governor;
+//! - **replica step**: the earliest steppable replica — located through an
+//!   indexed event queue over replica clocks ([`EventQueue`]), not a
+//!   per-iteration linear rescan — executes one unit of work (an admission
+//!   prefill or a batched decode step) under its own governor. When the
+//!   gap to the next arrival or lifecycle point is wide enough, independent
+//!   replicas step on worker threads and their ledger/tracker effects are
+//!   replayed in exact sequential order, so parallelism never changes a
+//!   single bit of the physics;
 //! - **lifecycle event**: a warm-up completes (`Warming → Live`), a
 //!   replica crashes (`Live → Cold`, in-flight requests requeued through
 //!   the router with their original arrival timestamps), or a repair
@@ -23,20 +28,24 @@
 //! governor reacting to router-driven load, autoscaler reacting to both)
 //! the paper's offline Section VII analysis cannot express.
 
+use std::cmp::Ordering;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{GpuSpec, ModelSpec, ModelTier};
 use crate::coordinator::dvfs_policy::DvfsPolicy;
-use crate::serve::slo::{Slo, SloTracker};
+use crate::serve::slo::{RecordSink, Slo, SloTracker};
 use crate::serve::traffic::Arrival;
 use crate::stats::exact_quantile;
+use crate::util::parallel::par_map_mut;
 use crate::workload::ReplaySuite;
 
-use super::attribution::{EnergyLedger, PhaseEnergy};
+use super::attribution::{ChargeLog, EnergyLedger, PhaseEnergy};
 use super::lifecycle::{
     earlier, AutoscalePolicy, ColdStart, FailureConfig, FailureModel, Lifecycle, LifecycleEvent,
     LifecycleStats, PendingRequeue, ReactiveConfig, ReplicaState, ScaleAction,
 };
+use super::queue::EventQueue;
 use super::replica::{Replica, ReplicaSpec};
 use super::router::{FleetRouter, ReplicaStatus};
 
@@ -58,20 +67,28 @@ pub struct FleetConfig {
 }
 
 impl FleetConfig {
+    /// Start a validated fleet configuration. Terminal [`build`]
+    /// (`FleetConfigBuilder::build`) checks every cross-field invariant
+    /// (non-empty fleet, hysteresis band ordering, non-negative cold-start
+    /// cost, positive MTBF/MTTR) and returns a typed error instead of
+    /// panicking mid-run.
+    pub fn builder() -> FleetConfigBuilder {
+        FleetConfigBuilder { cfg: FleetConfig::default() }
+    }
+
     /// `n` identical replicas of `model` under one policy.
+    #[deprecated(note = "use FleetConfig::builder().replicas(n, spec).build()")]
     pub fn homogeneous(model: ModelSpec, n: usize, policy: DvfsPolicy) -> FleetConfig {
         assert!(n >= 1);
-        FleetConfig {
-            replicas: vec![
-                ReplicaSpec { model, policy, state: ReplicaState::Live };
-                n
-            ],
-            ..FleetConfig::default()
-        }
+        FleetConfig::builder()
+            .replicas(n, ReplicaSpec { model, policy, state: ReplicaState::Live })
+            .build()
+            .expect("homogeneous fleet is always valid")
     }
 
     /// A two-tier fleet: `n_small` small-tier plus `n_large` large-tier
     /// replicas, all under one policy (the Section VII deployment shape).
+    #[deprecated(note = "use FleetConfig::builder() with two replicas() calls")]
     pub fn tiered(
         small: ModelTier,
         n_small: usize,
@@ -80,19 +97,17 @@ impl FleetConfig {
         policy: DvfsPolicy,
     ) -> FleetConfig {
         assert!(n_small + n_large >= 1);
-        let mut replicas = Vec::with_capacity(n_small + n_large);
-        for _ in 0..n_small {
-            replicas.push(ReplicaSpec::tiered(small, policy));
-        }
-        for _ in 0..n_large {
-            replicas.push(ReplicaSpec::tiered(large, policy));
-        }
-        FleetConfig { replicas, ..FleetConfig::default() }
+        FleetConfig::builder()
+            .replicas(n_small, ReplicaSpec::tiered(small, policy))
+            .replicas(n_large, ReplicaSpec::tiered(large, policy))
+            .build()
+            .expect("tiered fleet is always valid")
     }
 
     /// An elastic fleet: `n` provisioned replicas of which `initial_live`
     /// start `Live` and the rest `Cold`, scaled by a reactive autoscaler
     /// capped at the provisioned count.
+    #[deprecated(note = "use FleetConfig::builder() with replicas() + reactive()")]
     pub fn elastic(
         model: ModelSpec,
         n: usize,
@@ -101,13 +116,14 @@ impl FleetConfig {
         scale: ReactiveConfig,
     ) -> FleetConfig {
         assert!(n >= 1 && (1..=n).contains(&initial_live));
-        let mut cfg = FleetConfig::homogeneous(model, n, policy);
-        for spec in cfg.replicas[initial_live..].iter_mut() {
-            spec.state = ReplicaState::Cold;
-        }
-        cfg.autoscale =
-            AutoscalePolicy::Reactive(ReactiveConfig { max_live: n.min(scale.max_live), ..scale });
-        cfg
+        let live = ReplicaSpec { model, policy, state: ReplicaState::Live };
+        let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
+        FleetConfig::builder()
+            .replicas(initial_live, live)
+            .replicas(n - initial_live, cold)
+            .reactive(ReactiveConfig { max_live: n.min(scale.max_live), ..scale })
+            .build()
+            .expect("elastic fleet with a provisioned-count cap is always valid")
     }
 }
 
@@ -122,6 +138,111 @@ impl Default for FleetConfig {
             failures: None,
             cold_start: ColdStart::default(),
         }
+    }
+}
+
+/// Fluent constructor for [`FleetConfig`]. All invariants are validated
+/// once, at [`build`](FleetConfigBuilder::build), so a malformed config is
+/// a recoverable `Err` at construction instead of an assert deep inside
+/// the event loop.
+#[derive(Debug, Clone)]
+pub struct FleetConfigBuilder {
+    cfg: FleetConfig,
+}
+
+impl FleetConfigBuilder {
+    /// Append one replica.
+    pub fn replica(mut self, spec: ReplicaSpec) -> Self {
+        self.cfg.replicas.push(spec);
+        self
+    }
+
+    /// Append `n` identical replicas.
+    pub fn replicas(mut self, n: usize, spec: ReplicaSpec) -> Self {
+        for _ in 0..n {
+            self.cfg.replicas.push(spec.clone());
+        }
+        self
+    }
+
+    /// Maximum sequences decoding concurrently per replica.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    pub fn slo(mut self, slo: Slo) -> Self {
+        self.cfg.slo = slo;
+        self
+    }
+
+    /// Telemetry window horizon fed to each governor, seconds.
+    pub fn window_s(mut self, s: f64) -> Self {
+        self.cfg.window_s = s;
+        self
+    }
+
+    pub fn autoscale(mut self, policy: AutoscalePolicy) -> Self {
+        self.cfg.autoscale = policy;
+        self
+    }
+
+    /// Shorthand for a reactive autoscaling discipline.
+    pub fn reactive(self, cfg: ReactiveConfig) -> Self {
+        self.autoscale(AutoscalePolicy::Reactive(cfg))
+    }
+
+    pub fn failures(mut self, f: FailureConfig) -> Self {
+        self.cfg.failures = Some(f);
+        self
+    }
+
+    pub fn cold_start(mut self, c: ColdStart) -> Self {
+        self.cfg.cold_start = c;
+        self
+    }
+
+    /// Validate every invariant and hand back the config.
+    pub fn build(self) -> Result<FleetConfig> {
+        let cfg = self.cfg;
+        ensure!(!cfg.replicas.is_empty(), "fleet needs at least one replica");
+        ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        ensure!(
+            cfg.window_s.is_finite() && cfg.window_s > 0.0,
+            "telemetry window must be positive, got {} s",
+            cfg.window_s
+        );
+        if let AutoscalePolicy::Reactive(r) = &cfg.autoscale {
+            ensure!(r.min_live >= 1, "reactive autoscaler needs min_live >= 1");
+            ensure!(
+                r.max_live >= r.min_live,
+                "max_live {} below min_live {}",
+                r.max_live,
+                r.min_live
+            );
+            ensure!(
+                r.low_backlog < r.high_backlog,
+                "inverted backlog hysteresis band: low {} >= high {}",
+                r.low_backlog,
+                r.high_backlog
+            );
+            ensure!(
+                r.low_pressure < r.high_pressure,
+                "inverted pressure hysteresis band: low {} >= high {}",
+                r.low_pressure,
+                r.high_pressure
+            );
+            ensure!(r.cooldown_s >= 0.0, "cooldown must be non-negative");
+        }
+        ensure!(
+            cfg.cold_start.energy_j >= 0.0 && cfg.cold_start.warmup_s >= 0.0,
+            "cold-start energy and warm-up delay must be non-negative"
+        );
+        if let Some(f) = &cfg.failures {
+            ensure!(f.mtbf_s > 0.0, "MTBF must be positive");
+            ensure!(f.mttr_s > 0.0, "MTTR must be positive");
+        }
+        Ok(cfg)
     }
 }
 
@@ -244,6 +365,20 @@ impl FleetSim {
         arrivals: &[Arrival],
         router: &mut dyn FleetRouter,
     ) -> Result<FleetOutcome> {
+        self.run_with_selector(suite, arrivals, router, StepSelector::Indexed)
+    }
+
+    /// [`Self::run`] with an explicit step-selection strategy. The
+    /// [`StepSelector::LinearReference`] path is the O(fleet)-per-step
+    /// oracle the indexed engine is property-tested and benchmarked
+    /// against; outcomes are bit-identical by construction.
+    pub fn run_with_selector(
+        &self,
+        suite: &ReplaySuite,
+        arrivals: &[Arrival],
+        router: &mut dyn FleetRouter,
+        selector: StepSelector,
+    ) -> Result<FleetOutcome> {
         let mut reps: Vec<Replica> = self
             .cfg
             .replicas
@@ -260,15 +395,18 @@ impl FleetSim {
                 .map(|f| FailureModel::new(f, self.cfg.replicas.len())),
             self.cfg.cold_start,
         );
-        let routed = drive(
+        let routed = drive_with(
             &mut reps,
-            suite,
-            arrivals,
-            router,
-            self.cfg.max_batch,
-            &mut ledger,
-            &mut fleet_tracker,
-            &mut lifecycle,
+            EngineCtx {
+                suite,
+                arrivals,
+                router,
+                max_batch: self.cfg.max_batch,
+                ledger: &mut ledger,
+                tracker: &mut fleet_tracker,
+                lifecycle: &mut lifecycle,
+            },
+            selector,
         )?;
 
         let mut out = FleetOutcome {
@@ -340,39 +478,578 @@ impl FleetSim {
     }
 }
 
-/// Route one request against the fleet's status snapshots, enqueueing it
-/// on the chosen replica (which may not start on it before `not_before_s`
-/// — the requeue path's causality floor). `refresh` rebuilds `statuses`
-/// from the replicas first; pass `false` only when the caller just built
-/// them and nothing has mutated since (the autoscaler-held arrival path).
-#[allow(clippy::too_many_arguments)]
-fn route_one(
+/// Everything [`drive`] borrows for one run: the workload and arrival
+/// stream it consumes, plus the router/ledger/tracker/lifecycle state it
+/// mutates. Collapsing the old 8-parameter signature into one borrowed
+/// struct keeps call sites readable and lets the context grow without
+/// another signature migration.
+pub struct EngineCtx<'a> {
+    pub suite: &'a ReplaySuite,
+    pub arrivals: &'a [Arrival],
+    pub router: &'a mut dyn FleetRouter,
+    /// Maximum sequences decoding concurrently per replica.
+    pub max_batch: usize,
+    pub ledger: &'a mut EnergyLedger,
+    pub tracker: &'a mut SloTracker,
+    pub lifecycle: &'a mut Lifecycle,
+}
+
+/// How [`drive_with`] locates the earliest steppable replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepSelector {
+    /// The production path: an [`EventQueue`] keyed on replica clocks
+    /// (O(log fleet) per step), cached status snapshots refreshed only for
+    /// replicas that changed, and parallel stepping across wide gaps.
+    Indexed,
+    /// The original O(fleet)-per-step linear scan, kept as the property-
+    /// test oracle and benchmark baseline. Bit-identical outcomes to
+    /// [`StepSelector::Indexed`] are a hard invariant.
+    LinearReference,
+}
+
+/// The shared continuous-batching event loop: advance `reps` through one
+/// arrival stream. Each arrival is routed at its own timestamp against
+/// live replica state, before any replica step that would start at or
+/// after it; otherwise the earliest steppable replica — found through the
+/// indexed event queue over replica clocks ([`EventQueue`]; invalidation
+/// rule documented there), falling back to a linear scan only under
+/// [`StepSelector::LinearReference`] — executes one unit of work under its
+/// own governor. When the gap to the next arrival or lifecycle point is
+/// wide, independent replicas step on worker threads and their
+/// ledger/tracker effects replay in exact sequential order, so the
+/// parallelism is unobservable in the physics. Lifecycle events
+/// (warm-ups, crashes, repairs) interleave in time order while work
+/// remains; once the last request drains the run ends. This is the single
+/// loop behind both [`FleetSim::run`] and the one-replica
+/// [`crate::serve::ServeSim`] facade — there is deliberately no second
+/// copy anywhere. Under an inert lifecycle ([`Lifecycle::inert`]) the
+/// loop is bit-identical to the fixed-fleet loop it grew from (pinned by
+/// `rust/tests/unification.rs`).
+///
+/// Returns which replica each arrival was first routed to.
+pub fn drive(reps: &mut [Replica], ctx: EngineCtx<'_>) -> Result<Vec<usize>> {
+    drive_with(reps, ctx, StepSelector::Indexed)
+}
+
+/// [`drive`] with an explicit [`StepSelector`].
+pub fn drive_with(
     reps: &mut [Replica],
-    suite: &ReplaySuite,
-    router: &mut dyn FleetRouter,
-    statuses: &mut Vec<ReplicaStatus>,
-    refresh: bool,
-    req: usize,
-    arrival: Arrival,
-    not_before_s: f64,
-) -> usize {
-    if refresh {
-        statuses.clear();
-        statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
+    ctx: EngineCtx<'_>,
+    selector: StepSelector,
+) -> Result<Vec<usize>> {
+    let EngineCtx { suite, arrivals, router, max_batch, ledger, tracker, lifecycle } = ctx;
+
+    // Arm the failure clocks of initially-live replicas.
+    if let Some(fm) = lifecycle.failures.as_mut() {
+        for (i, r) in reps.iter().enumerate() {
+            if r.state.routable() {
+                fm.arm(i, 0.0);
+            }
+        }
     }
-    let choice = router.route(&arrival, suite.features.get(arrival.query_idx), statuses);
-    assert!(
-        choice < reps.len() && reps[choice].state.routable(),
-        "router {} picked replica {choice}, which is not a live replica",
-        router.label()
-    );
-    reps[choice].enqueue_at(req, arrival, not_before_s);
-    choice
+
+    let n = reps.len();
+    let mut eng = Engine {
+        suite,
+        arrivals,
+        router,
+        max_batch,
+        ledger,
+        tracker,
+        lifecycle,
+        indexed: selector == StepSelector::Indexed,
+        queue: EventQueue::new(n),
+        statuses: Vec::with_capacity(n),
+        status_dirty: vec![true; n],
+        cached_ev: None,
+        ev_dirty: true,
+    };
+    if eng.indexed {
+        for i in 0..n {
+            eng.touched(reps, i);
+        }
+    }
+    eng.run(reps)
+}
+
+/// Minimum gap width (to the next arrival/lifecycle point) worth fanning
+/// replica stepping out to worker threads.
+const PAR_MIN_GAP_S: f64 = 0.25;
+/// Minimum steppable replicas for a parallel gap.
+const PAR_MIN_REPS: usize = 3;
+/// Minimum total backlog (queued + active sequences) for a parallel gap.
+const PAR_MIN_BACKLOG: usize = 64;
+
+/// Per-replica result of one parallel gap: the deferred ledger charges and
+/// tracker records to replay in sequential order, plus the first error (if
+/// any) with its pre-step time so the merge can surface exactly the error
+/// the sequential loop would have hit first.
+struct GapResult {
+    stepped: bool,
+    charges: ChargeLog,
+    /// `(pre-step time, ttft, tbt, e2e)` per completed request.
+    records: Vec<(f64, f64, f64, f64)>,
+    err: Option<(f64, String)>,
+}
+
+/// A [`RecordSink`] that tags every record with the pre-step clock of the
+/// step that produced it, so records from concurrent replicas can be
+/// re-interleaved into the exact order the sequential loop feeds the
+/// fleet tracker (ascending pre-step time, then replica index).
+struct RecordLog {
+    t: f64,
+    records: Vec<(f64, f64, f64, f64)>,
+}
+
+impl RecordSink for RecordLog {
+    fn record(&mut self, ttft_s: f64, tbt_s: f64, e2e_s: f64) {
+        self.records.push((self.t, ttft_s, tbt_s, e2e_s));
+    }
+}
+
+/// The engine's per-run state. `reps` stays a separate `&mut [Replica]`
+/// argument on every method so replica mutation composes with the indexed
+/// caches held here (queue, status snapshots, next-event memo) — every
+/// replica mutation funnels through [`Engine::touched`].
+struct Engine<'a> {
+    suite: &'a ReplaySuite,
+    arrivals: &'a [Arrival],
+    router: &'a mut dyn FleetRouter,
+    max_batch: usize,
+    ledger: &'a mut EnergyLedger,
+    tracker: &'a mut SloTracker,
+    lifecycle: &'a mut Lifecycle,
+    /// `StepSelector::Indexed`: event queue + dirty-status caching +
+    /// gap parallelism. Off, every structure below is bypassed in favor of
+    /// full rescans (the reference semantics).
+    indexed: bool,
+    queue: EventQueue,
+    /// Router/autoscaler-facing status snapshots, recomputed lazily.
+    statuses: Vec<ReplicaStatus>,
+    /// Which snapshot entries are stale (replica mutated since computed).
+    status_dirty: Vec<bool>,
+    /// Memoized earliest lifecycle event (valid while `!ev_dirty`).
+    cached_ev: Option<(f64, LifecycleEvent)>,
+    ev_dirty: bool,
+}
+
+impl Engine<'_> {
+    /// Note that replica `i` mutated: its status snapshot is stale and its
+    /// event-queue entry must be (re)scheduled or cancelled. This is the
+    /// single choke point keeping the indexed caches coherent.
+    fn touched(&mut self, reps: &[Replica], i: usize) {
+        self.status_dirty[i] = true;
+        if self.indexed {
+            if reps[i].can_step() {
+                self.queue.schedule(i, reps[i].now_s);
+            } else {
+                self.queue.cancel(i);
+            }
+        }
+    }
+
+    /// Bring `statuses` current. Indexed runs recompute only dirty
+    /// entries; the reference path rebuilds everything, exactly like the
+    /// pre-queue engine did. Either way the values are identical —
+    /// [`Replica::status`] is a pure function of replica state.
+    fn refresh_statuses(&mut self, reps: &[Replica]) {
+        if !self.indexed || self.statuses.len() != reps.len() {
+            self.statuses.clear();
+            self.statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
+            self.status_dirty.iter_mut().for_each(|d| *d = false);
+            return;
+        }
+        for i in 0..reps.len() {
+            if self.status_dirty[i] {
+                self.statuses[i] = reps[i].status(i);
+                self.status_dirty[i] = false;
+            }
+        }
+    }
+
+    /// Earliest pending lifecycle event, memoized between mutations on the
+    /// indexed path (the reference path rescans every iteration).
+    fn next_event(&mut self, reps: &[Replica]) -> Option<(f64, LifecycleEvent)> {
+        if !self.indexed {
+            return next_lifecycle_event_scan(reps, self.lifecycle);
+        }
+        if self.ev_dirty {
+            self.cached_ev = next_lifecycle_event_scan(reps, self.lifecycle);
+            self.ev_dirty = false;
+        }
+        self.cached_ev
+    }
+
+    /// Route one request against the fleet's status snapshots, enqueueing
+    /// it on the chosen replica (which may not start on it before
+    /// `not_before_s` — the requeue path's causality floor).
+    fn route_one(
+        &mut self,
+        reps: &mut [Replica],
+        req: usize,
+        arrival: Arrival,
+        not_before_s: f64,
+    ) -> usize {
+        self.refresh_statuses(reps);
+        let choice =
+            self.router
+                .route(&arrival, self.suite.features.get(arrival.query_idx), &self.statuses);
+        assert!(
+            choice < reps.len() && reps[choice].state.routable(),
+            "router {} picked replica {choice}, which is not a live replica",
+            self.router.label()
+        );
+        reps[choice].enqueue_at(req, arrival, not_before_s);
+        self.touched(reps, choice);
+        choice
+    }
+
+    /// Apply one lifecycle event at its scheduled time.
+    fn apply_event(&mut self, reps: &mut [Replica], t_ev: f64, ev: LifecycleEvent) {
+        self.ev_dirty = true;
+        match ev {
+            LifecycleEvent::WarmDone(i) => {
+                reps[i].finish_warmup(t_ev);
+                self.lifecycle.log_live_delta(t_ev, 1);
+                if let Some(fm) = self.lifecycle.failures.as_mut() {
+                    fm.arm(i, t_ev);
+                }
+                self.touched(reps, i);
+                // Requests stranded by a crash while nothing was live route
+                // now, oldest (lowest request index) first.
+                while let Some(p) = self.lifecycle.pending.pop_front() {
+                    self.route_one(reps, p.req, p.arrival, p.not_before_s.max(t_ev));
+                }
+            }
+            LifecycleEvent::Recover(i) => {
+                self.lifecycle
+                    .failures
+                    .as_mut()
+                    .expect("recovery without a failure model")
+                    .recovered(i);
+                // Recovery is a fresh cold start: boot energy + warm-up
+                // again. (Defensive: skip if something else already revived
+                // it — the autoscaler never warms an under-repair replica,
+                // so in practice the state here is always `Cold`.)
+                if reps[i].state == ReplicaState::Cold {
+                    self.lifecycle.stats.recoveries += 1;
+                    reps[i].start_warming(t_ev, &self.lifecycle.cold_start);
+                    self.touched(reps, i);
+                }
+            }
+            LifecycleEvent::Fail(i) => {
+                self.lifecycle
+                    .failures
+                    .as_mut()
+                    .expect("crash without a failure model")
+                    .crash(i, t_ev);
+                self.lifecycle.stats.failures += 1;
+                self.lifecycle.log_live_delta(t_ev, -1);
+                let lost = reps[i].crash(t_ev);
+                self.lifecycle.stats.requeued += lost.len();
+                self.touched(reps, i);
+                let any_live = reps.iter().any(|r| r.state.routable());
+                for (req, arrival) in lost {
+                    if any_live {
+                        // Through the router, original arrival timestamp,
+                        // but no replica may start on it before the crash
+                        // instant.
+                        self.route_one(reps, req, arrival, t_ev);
+                    } else {
+                        self.lifecycle.pending.push_back(PendingRequeue {
+                            req,
+                            arrival,
+                            not_before_s: t_ev,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consult the autoscaler at an arrival instant and apply its decision.
+    fn apply_autoscale(&mut self, reps: &mut [Replica], t_s: f64, slo_pressure: f64) {
+        self.refresh_statuses(reps);
+        let action = self.lifecycle.autoscaler.decide(t_s, &self.statuses, slo_pressure);
+        match action {
+            ScaleAction::Hold => {}
+            ScaleAction::Up(n) => {
+                for _ in 0..n {
+                    // Rescue a draining replica first: it is warm, holds
+                    // its KV cache, and costs neither boot energy nor
+                    // delay.
+                    let rescue = reps.iter().position(|r| r.state == ReplicaState::Draining);
+                    // A crashed machine cannot be warmed until its repair
+                    // completes — only healthy cold replicas are
+                    // candidates.
+                    let cold = reps
+                        .iter()
+                        .enumerate()
+                        .find(|&(i, r)| {
+                            r.state == ReplicaState::Cold
+                                && !self
+                                    .lifecycle
+                                    .failures
+                                    .as_ref()
+                                    .is_some_and(|fm| fm.under_repair(i))
+                        })
+                        .map(|(i, _)| i);
+                    if let Some(i) = rescue {
+                        reps[i].state = ReplicaState::Live;
+                        self.lifecycle.log_live_delta(t_s, 1);
+                        if let Some(fm) = self.lifecycle.failures.as_mut() {
+                            fm.arm(i, t_s);
+                        }
+                        self.lifecycle.stats.scale_ups += 1;
+                        self.ev_dirty = true;
+                        self.touched(reps, i);
+                    } else if let Some(i) = cold {
+                        reps[i].start_warming(t_s, &self.lifecycle.cold_start);
+                        self.lifecycle.stats.scale_ups += 1;
+                        self.ev_dirty = true;
+                        self.touched(reps, i);
+                    } else {
+                        break; // nothing healthy left to bring up
+                    }
+                }
+            }
+            ScaleAction::Down(n) => {
+                for _ in 0..n {
+                    let live: Vec<usize> = reps
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.state.routable())
+                        .map(|(i, _)| i)
+                        .collect();
+                    // Engine floor regardless of autoscaler: never drain
+                    // the last live replica out from under the router.
+                    if live.len() <= 1 {
+                        break;
+                    }
+                    let i = live
+                        .into_iter()
+                        .min_by_key(|&i| (reps[i].queue_depth() + reps[i].active_seqs(), i))
+                        .expect("live replicas exist");
+                    reps[i].begin_drain(t_s);
+                    self.lifecycle.log_live_delta(t_s, -1);
+                    if let Some(fm) = self.lifecycle.failures.as_mut() {
+                        fm.disarm(i);
+                    }
+                    self.lifecycle.stats.scale_downs += 1;
+                    self.ev_dirty = true;
+                    self.touched(reps, i);
+                }
+            }
+        }
+    }
+
+    /// Step every steppable replica to the edge of the current gap on
+    /// worker threads, then replay the deferred ledger charges and tracker
+    /// records in exact sequential order. Returns whether the gap was
+    /// taken (false = not worth the fan-out; caller does one normal step).
+    ///
+    /// Bit-identity with sequential stepping holds because within
+    /// `[t_step, t_hi)` no arrival, routing, or lifecycle event can
+    /// interleave: each replica's step sequence depends only on its own
+    /// state, the request sets replicas charge are disjoint, and the
+    /// replay orders (replica index for the ledger, `(pre-step time,
+    /// replica index)` for the tracker) reproduce the sequential
+    /// interleaving exactly.
+    fn parallel_gap(&mut self, reps: &mut [Replica], t_step: f64, t_arr: f64) -> Result<bool> {
+        let t_ev = if self.lifecycle.is_inert() {
+            f64::INFINITY
+        } else {
+            self.next_event(reps).map(|(t, _)| t).unwrap_or(f64::INFINITY)
+        };
+        // Strict upper bound: the sequential loop executes a step iff the
+        // replica's pre-step clock is strictly below both the next arrival
+        // and the next lifecycle event.
+        let t_hi = t_arr.min(t_ev);
+        if t_hi - t_step < PAR_MIN_GAP_S {
+            return Ok(false);
+        }
+        let mut steppable = 0usize;
+        let mut backlog = 0usize;
+        for r in reps.iter() {
+            if r.can_step() && r.now_s < t_hi {
+                steppable += 1;
+                backlog += r.queue_depth() + r.active_seqs();
+            }
+        }
+        if steppable < PAR_MIN_REPS || backlog < PAR_MIN_BACKLOG {
+            return Ok(false);
+        }
+
+        let (suite, max_batch) = (self.suite, self.max_batch);
+        let results = par_map_mut(reps, |_, rep| {
+            let mut out = GapResult {
+                stepped: false,
+                charges: ChargeLog::default(),
+                records: Vec::new(),
+                err: None,
+            };
+            let mut sink = RecordLog { t: 0.0, records: Vec::new() };
+            while rep.can_step() && rep.now_s < t_hi {
+                sink.t = rep.now_s;
+                if let Err(e) = rep.step(suite, max_batch, &mut out.charges, &mut sink) {
+                    out.err = Some((sink.t, e.to_string()));
+                    break;
+                }
+                out.stepped = true;
+            }
+            if out.stepped && rep.state == ReplicaState::Draining && !rep.runnable() {
+                rep.power_off_drained();
+            }
+            out.records = sink.records;
+            out
+        });
+
+        // Surface the error the sequential loop would have hit first:
+        // earliest pre-step time, lowest replica index on ties (ascending
+        // iteration + strictly-less replacement).
+        let mut first_err: Option<(f64, String)> = None;
+        for r in &results {
+            if let Some((t, msg)) = &r.err {
+                let replace = match &first_err {
+                    None => true,
+                    Some((tf, _)) => t.total_cmp(tf) == Ordering::Less,
+                };
+                if replace {
+                    first_err = Some((*t, msg.clone()));
+                }
+            }
+        }
+        if let Some((_, msg)) = first_err {
+            bail!("{msg}");
+        }
+
+        let mut records: Vec<(f64, usize, f64, f64, f64)> = Vec::new();
+        for (i, r) in results.iter().enumerate() {
+            // Replica charge sets are disjoint within the gap, so replaying
+            // in replica order reproduces each request's sequential
+            // floating-point accumulation order.
+            r.charges.replay(self.ledger);
+            for &(t, ttft, tbt, e2e) in &r.records {
+                records.push((t, i, ttft, tbt, e2e));
+            }
+            if r.stepped {
+                self.touched(reps, i);
+            }
+        }
+        // The sequential loop always steps the globally earliest (clock,
+        // index) replica, so its tracker feed is exactly this order.
+        records.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        for (_, _, ttft, tbt, e2e) in records {
+            self.tracker.record(ttft, tbt, e2e);
+        }
+        Ok(true)
+    }
+
+    /// The event loop proper (see [`drive`] for the contract).
+    fn run(&mut self, reps: &mut [Replica]) -> Result<Vec<usize>> {
+        let mut routed = vec![usize::MAX; self.arrivals.len()];
+        let mut next = 0usize;
+
+        loop {
+            // Earliest steppable replica clock (work that would start
+            // next): O(log fleet) off the queue, or the reference fold.
+            let t_step = if self.indexed {
+                self.queue.peek().map_or(f64::INFINITY, |(t, _)| t)
+            } else {
+                reps.iter()
+                    .filter(|r| r.can_step())
+                    .map(|r| r.now_s)
+                    .fold(f64::INFINITY, f64::min)
+            };
+            let t_arr =
+                if next < self.arrivals.len() { self.arrivals[next].t_s } else { f64::INFINITY };
+
+            // Run complete: all arrivals routed, nothing requeued, no work
+            // left. Lifecycle events scheduled beyond this point never
+            // fire — the simulation ends with the last request, so a quiet
+            // fleet is not crashed/recovered forever after.
+            if !t_arr.is_finite() && !t_step.is_finite() && self.lifecycle.pending.is_empty() {
+                break;
+            }
+
+            if !self.lifecycle.is_inert() {
+                if let Some((t_ev, ev)) = self.next_event(reps) {
+                    if t_ev <= t_arr.min(t_step) {
+                        self.apply_event(reps, t_ev, ev);
+                        continue;
+                    }
+                }
+            }
+
+            if next < self.arrivals.len() && t_arr <= t_step {
+                let a = self.arrivals[next];
+                if !self.lifecycle.is_inert() {
+                    let pressure = self.tracker.pressure();
+                    self.apply_autoscale(reps, a.t_s, pressure);
+                }
+                if !reps.iter().any(|r| r.state.routable()) {
+                    // No live capacity for this arrival. If capacity is on
+                    // its way (warming or under repair), fast-forward to
+                    // that event and retry; otherwise the fleet is dead
+                    // mid-run — a typed error, not a deadlock. (This is
+                    // the liveness validation that used to be a
+                    // constructor assert, now enforced by the state
+                    // machine at the moment it matters.)
+                    match self.next_event(reps) {
+                        Some((t_ev, ev)) => {
+                            self.apply_event(reps, t_ev, ev);
+                            continue;
+                        }
+                        None => bail!(
+                            "fleet has no live replica and none warming or recovering at \
+                             t={:.3}s (arrival {}/{})",
+                            a.t_s,
+                            next,
+                            self.arrivals.len()
+                        ),
+                    }
+                }
+                routed[next] = self.route_one(reps, next, a, a.t_s);
+                next += 1;
+            } else if t_step.is_finite() {
+                if self.indexed && self.parallel_gap(reps, t_step, t_arr)? {
+                    continue;
+                }
+                // Step the earliest steppable replica (lowest index on
+                // ties; total_cmp so a corrupted NaN clock loudly picks a
+                // stable order instead of panicking mid-run).
+                let i = if self.indexed {
+                    self.queue.peek().map(|(_, i)| i).expect("finite t_step came off the queue")
+                } else {
+                    reps.iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.can_step())
+                        .min_by(|(_, a), (_, b)| a.now_s.total_cmp(&b.now_s))
+                        .map(|(i, _)| i)
+                        .unwrap()
+                };
+                reps[i].step(self.suite, self.max_batch, &mut *self.ledger, &mut *self.tracker)?;
+                if reps[i].state == ReplicaState::Draining && !reps[i].runnable() {
+                    reps[i].power_off_drained();
+                }
+                self.touched(reps, i);
+            } else {
+                // Only reachable with requeued requests in hand and no
+                // live, warming, or recovering replica to ever take them.
+                ensure!(
+                    self.lifecycle.pending.is_empty(),
+                    "requeued requests stranded: fleet has no live, warming, or recovering replica"
+                );
+                unreachable!("event loop stalled with no work and no pending requests");
+            }
+        }
+        Ok(routed)
+    }
 }
 
 /// Earliest pending lifecycle event: warm-up completions (read off replica
 /// states) merged with the failure model's crash/repair schedule.
-fn next_lifecycle_event(
+fn next_lifecycle_event_scan(
     reps: &[Replica],
     lifecycle: &Lifecycle,
 ) -> Option<(f64, LifecycleEvent)> {
@@ -385,299 +1062,9 @@ fn next_lifecycle_event(
     best
 }
 
-/// Apply one lifecycle event at its scheduled time.
-fn apply_lifecycle_event(
-    reps: &mut [Replica],
-    suite: &ReplaySuite,
-    router: &mut dyn FleetRouter,
-    statuses: &mut Vec<ReplicaStatus>,
-    lifecycle: &mut Lifecycle,
-    t_ev: f64,
-    ev: LifecycleEvent,
-) {
-    match ev {
-        LifecycleEvent::WarmDone(i) => {
-            reps[i].finish_warmup(t_ev);
-            lifecycle.log_live_delta(t_ev, 1);
-            if let Some(fm) = lifecycle.failures.as_mut() {
-                fm.arm(i, t_ev);
-            }
-            // Requests stranded by a crash while nothing was live route
-            // now, oldest (lowest request index) first.
-            while let Some(p) = lifecycle.pending.pop_front() {
-                route_one(
-                    reps,
-                    suite,
-                    router,
-                    statuses,
-                    true,
-                    p.req,
-                    p.arrival,
-                    p.not_before_s.max(t_ev),
-                );
-            }
-        }
-        LifecycleEvent::Recover(i) => {
-            lifecycle
-                .failures
-                .as_mut()
-                .expect("recovery without a failure model")
-                .recovered(i);
-            // Recovery is a fresh cold start: boot energy + warm-up again.
-            // (Defensive: skip if something else already revived it — the
-            // autoscaler never warms an under-repair replica, so in
-            // practice the state here is always `Cold`.)
-            if reps[i].state == ReplicaState::Cold {
-                lifecycle.stats.recoveries += 1;
-                reps[i].start_warming(t_ev, &lifecycle.cold_start);
-            }
-        }
-        LifecycleEvent::Fail(i) => {
-            lifecycle
-                .failures
-                .as_mut()
-                .expect("crash without a failure model")
-                .crash(i, t_ev);
-            lifecycle.stats.failures += 1;
-            lifecycle.log_live_delta(t_ev, -1);
-            let lost = reps[i].crash(t_ev);
-            lifecycle.stats.requeued += lost.len();
-            let any_live = reps.iter().any(|r| r.state.routable());
-            for (req, arrival) in lost {
-                if any_live {
-                    // Through the router, original arrival timestamp, but
-                    // no replica may start on it before the crash instant.
-                    route_one(reps, suite, router, statuses, true, req, arrival, t_ev);
-                } else {
-                    lifecycle.pending.push_back(PendingRequeue {
-                        req,
-                        arrival,
-                        not_before_s: t_ev,
-                    });
-                }
-            }
-        }
-    }
-}
-
-/// Consult the autoscaler at an arrival instant and apply its decision.
-/// Rebuilds `statuses` as the decision input; returns whether any replica
-/// was mutated (when not, the snapshot is still current for routing).
-fn apply_autoscale(
-    reps: &mut [Replica],
-    statuses: &mut Vec<ReplicaStatus>,
-    lifecycle: &mut Lifecycle,
-    t_s: f64,
-    slo_pressure: f64,
-) -> bool {
-    statuses.clear();
-    statuses.extend(reps.iter().enumerate().map(|(i, r)| r.status(i)));
-    let mut mutated = false;
-    match lifecycle.autoscaler.decide(t_s, statuses, slo_pressure) {
-        ScaleAction::Hold => {}
-        ScaleAction::Up(n) => {
-            for _ in 0..n {
-                // Rescue a draining replica first: it is warm, holds its
-                // KV cache, and costs neither boot energy nor delay.
-                let rescue = reps.iter().position(|r| r.state == ReplicaState::Draining);
-                // A crashed machine cannot be warmed until its repair
-                // completes — only healthy cold replicas are candidates.
-                let cold = reps
-                    .iter()
-                    .enumerate()
-                    .find(|&(i, r)| {
-                        r.state == ReplicaState::Cold
-                            && !lifecycle
-                                .failures
-                                .as_ref()
-                                .is_some_and(|fm| fm.under_repair(i))
-                    })
-                    .map(|(i, _)| i);
-                if let Some(i) = rescue {
-                    reps[i].state = ReplicaState::Live;
-                    lifecycle.log_live_delta(t_s, 1);
-                    if let Some(fm) = lifecycle.failures.as_mut() {
-                        fm.arm(i, t_s);
-                    }
-                    lifecycle.stats.scale_ups += 1;
-                    mutated = true;
-                } else if let Some(i) = cold {
-                    reps[i].start_warming(t_s, &lifecycle.cold_start);
-                    lifecycle.stats.scale_ups += 1;
-                    mutated = true;
-                } else {
-                    break; // nothing healthy left to bring up
-                }
-            }
-        }
-        ScaleAction::Down(n) => {
-            for _ in 0..n {
-                let live: Vec<usize> = reps
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, r)| r.state.routable())
-                    .map(|(i, _)| i)
-                    .collect();
-                // Engine floor regardless of autoscaler: never drain the
-                // last live replica out from under the router.
-                if live.len() <= 1 {
-                    break;
-                }
-                let i = live
-                    .into_iter()
-                    .min_by_key(|&i| (reps[i].queue_depth() + reps[i].active_seqs(), i))
-                    .expect("live replicas exist");
-                reps[i].begin_drain(t_s);
-                lifecycle.log_live_delta(t_s, -1);
-                if let Some(fm) = lifecycle.failures.as_mut() {
-                    fm.disarm(i);
-                }
-                lifecycle.stats.scale_downs += 1;
-                mutated = true;
-            }
-        }
-    }
-    mutated
-}
-
-/// The shared continuous-batching event loop: advance `reps` through one
-/// arrival stream. Each arrival is routed at its own timestamp against
-/// live replica state, before any replica step that would start at or
-/// after it; otherwise the earliest steppable replica executes one unit of
-/// work under its own governor. Lifecycle events (warm-ups, crashes,
-/// repairs) interleave in time order while work remains; once the last
-/// request drains the run ends. This is the single loop behind both
-/// [`FleetSim::run`] and the one-replica [`crate::serve::ServeSim`]
-/// facade — there is deliberately no second copy anywhere. Under an inert
-/// lifecycle ([`Lifecycle::inert`]) the loop is bit-identical to the
-/// fixed-fleet loop it grew from (pinned by `rust/tests/unification.rs`).
-///
-/// Returns which replica each arrival was first routed to.
-#[allow(clippy::too_many_arguments)]
-pub fn drive(
-    reps: &mut [Replica],
-    suite: &ReplaySuite,
-    arrivals: &[Arrival],
-    router: &mut dyn FleetRouter,
-    max_batch: usize,
-    ledger: &mut EnergyLedger,
-    tracker: &mut SloTracker,
-    lifecycle: &mut Lifecycle,
-) -> Result<Vec<usize>> {
-    let mut routed = vec![usize::MAX; arrivals.len()];
-    let mut statuses = Vec::with_capacity(reps.len());
-    let mut next = 0usize;
-
-    // Arm the failure clocks of initially-live replicas.
-    if let Some(fm) = lifecycle.failures.as_mut() {
-        for (i, r) in reps.iter().enumerate() {
-            if r.state.routable() {
-                fm.arm(i, 0.0);
-            }
-        }
-    }
-
-    loop {
-        // Earliest steppable replica clock (work that would start next).
-        let t_step = reps
-            .iter()
-            .filter(|r| r.can_step())
-            .map(|r| r.now_s)
-            .fold(f64::INFINITY, f64::min);
-        let t_arr = if next < arrivals.len() { arrivals[next].t_s } else { f64::INFINITY };
-
-        // Run complete: all arrivals routed, nothing requeued, no work
-        // left. Lifecycle events scheduled beyond this point never fire —
-        // the simulation ends with the last request, so a quiet fleet is
-        // not crashed/recovered forever after.
-        if !t_arr.is_finite() && !t_step.is_finite() && lifecycle.pending.is_empty() {
-            break;
-        }
-
-        if !lifecycle.is_inert() {
-            if let Some((t_ev, ev)) = next_lifecycle_event(reps, lifecycle) {
-                if t_ev <= t_arr.min(t_step) {
-                    apply_lifecycle_event(reps, suite, router, &mut statuses, lifecycle, t_ev, ev);
-                    continue;
-                }
-            }
-        }
-
-        if next < arrivals.len() && t_arr <= t_step {
-            let a = arrivals[next];
-            // When the autoscaler ran and held, the status snapshot it
-            // read is still current — routing can reuse it instead of
-            // recomputing every replica's telemetry readout.
-            let mut statuses_current = false;
-            if !lifecycle.is_inert() {
-                let pressure = tracker.pressure();
-                statuses_current =
-                    !apply_autoscale(reps, &mut statuses, lifecycle, a.t_s, pressure);
-            }
-            if !reps.iter().any(|r| r.state.routable()) {
-                // No live capacity for this arrival. If capacity is on its
-                // way (warming or under repair), fast-forward to that
-                // event and retry; otherwise the fleet is dead mid-run —
-                // a typed error, not a deadlock. (This is the liveness
-                // validation that used to be a constructor assert, now
-                // enforced by the state machine at the moment it matters.)
-                match next_lifecycle_event(reps, lifecycle) {
-                    Some((t_ev, ev)) => {
-                        apply_lifecycle_event(
-                            reps,
-                            suite,
-                            router,
-                            &mut statuses,
-                            lifecycle,
-                            t_ev,
-                            ev,
-                        );
-                        continue;
-                    }
-                    None => bail!(
-                        "fleet has no live replica and none warming or recovering at \
-                         t={:.3}s (arrival {}/{})",
-                        a.t_s,
-                        next,
-                        arrivals.len()
-                    ),
-                }
-            }
-            routed[next] =
-                route_one(reps, suite, router, &mut statuses, !statuses_current, next, a, a.t_s);
-            next += 1;
-        } else if t_step.is_finite() {
-            // Step the earliest steppable replica (lowest index on ties;
-            // total_cmp so a corrupted NaN clock loudly picks a stable
-            // order instead of panicking mid-run).
-            let i = reps
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| r.can_step())
-                .min_by(|(_, a), (_, b)| a.now_s.total_cmp(&b.now_s))
-                .map(|(i, _)| i)
-                .unwrap();
-            reps[i].step(suite, max_batch, ledger, tracker)?;
-            if reps[i].state == ReplicaState::Draining && !reps[i].runnable() {
-                reps[i].power_off_drained();
-            }
-        } else {
-            // Only reachable with requeued requests in hand and no live,
-            // warming, or recovering replica to ever take them.
-            ensure!(
-                lifecycle.pending.is_empty(),
-                "requeued requests stranded: fleet has no live, warming, or recovering replica"
-            );
-            unreachable!("event loop stalled with no work and no pending requests");
-        }
-    }
-    Ok(routed)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::model::model_for_tier;
     use crate::fleet::router::{DifficultyTiered, EnergyAware, LeastLoaded, RoundRobin};
     use crate::serve::TrafficPattern;
 
@@ -690,8 +1077,16 @@ mod tests {
             .generate(s, n, 0xF1EE7)
     }
 
+    fn spec(tier: ModelTier) -> ReplicaSpec {
+        ReplicaSpec::tiered(tier, DvfsPolicy::Static(2842))
+    }
+
     fn tiered_cfg(policy: DvfsPolicy) -> FleetConfig {
-        FleetConfig::tiered(ModelTier::B1, 2, ModelTier::B8, 2, policy)
+        FleetConfig::builder()
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B1, policy))
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B8, policy))
+            .build()
+            .unwrap()
     }
 
     #[test]
@@ -741,6 +1136,166 @@ mod tests {
     }
 
     #[test]
+    fn indexed_and_linear_reference_agree_bit_for_bit() {
+        // The quickest end-to-end pin of the queue + caching + gap
+        // machinery (the exhaustive randomized version lives in
+        // rust/tests/proptest_invariants.rs): an elastic fleet with
+        // failures exercises schedule, cancel, and reschedule under churn.
+        let s = suite();
+        let arr = arrivals(&s, 64);
+        let gpu = GpuSpec::rtx_pro_6000();
+        let cfg = FleetConfig::builder()
+            .replica(spec(ModelTier::B3))
+            .replicas(2, ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B3) })
+            .reactive(ReactiveConfig { cooldown_s: 1.0, max_live: 3, ..ReactiveConfig::default() })
+            .failures(FailureConfig { mtbf_s: 15.0, mttr_s: 5.0, seed: 0xABCD })
+            .build()
+            .unwrap();
+        let sim = FleetSim::new(gpu, cfg);
+        let a = sim
+            .run_with_selector(&s, &arr, &mut LeastLoaded, StepSelector::Indexed)
+            .unwrap();
+        let b = sim
+            .run_with_selector(&s, &arr, &mut LeastLoaded, StepSelector::LinearReference)
+            .unwrap();
+        assert_eq!(a.joules, b.joules);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.served_by, b.served_by);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.idle_j, b.idle_j);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.slo.e2e_p99(), b.slo.e2e_p99());
+        assert_eq!(a.lifecycle, b.lifecycle);
+    }
+
+    #[test]
+    fn parallel_gap_stepping_is_bit_identical_to_sequential() {
+        // A simultaneous slam on many replicas with no further arrivals:
+        // the gap to infinity is wide, the backlog deep — this run *must*
+        // take the parallel path, and still match the reference exactly.
+        let s = suite();
+        let arr: Vec<Arrival> =
+            (0..200).map(|i| Arrival { t_s: 0.0, query_idx: i % s.len() }).collect();
+        let gpu = GpuSpec::rtx_pro_6000();
+        let cfg = FleetConfig::builder().replicas(6, spec(ModelTier::B3)).build().unwrap();
+        let sim = FleetSim::new(gpu, cfg);
+        let par = sim
+            .run_with_selector(&s, &arr, &mut LeastLoaded, StepSelector::Indexed)
+            .unwrap();
+        let seq = sim
+            .run_with_selector(&s, &arr, &mut LeastLoaded, StepSelector::LinearReference)
+            .unwrap();
+        assert_eq!(par.served, arr.len());
+        assert_eq!(par.joules, seq.joules);
+        assert_eq!(par.energy_j, seq.energy_j);
+        assert_eq!(par.makespan_s, seq.makespan_s);
+        assert_eq!(par.slo.e2e_p99(), seq.slo.e2e_p99());
+        assert_eq!(par.slo.ttft_p99(), seq.slo.ttft_p99());
+    }
+
+    #[test]
+    fn builder_validates_at_build() {
+        assert!(FleetConfig::builder()
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("at least one replica"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .max_batch(0)
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("max_batch"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .window_s(0.0)
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("window"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .reactive(ReactiveConfig {
+                low_backlog: 5.0,
+                high_backlog: 1.0,
+                ..ReactiveConfig::default()
+            })
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("backlog hysteresis"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .reactive(ReactiveConfig { min_live: 3, max_live: 2, ..ReactiveConfig::default() })
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("max_live"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .cold_start(ColdStart { energy_j: -1.0, warmup_s: 5.0 })
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("cold-start"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .failures(FailureConfig { mtbf_s: 0.0, mttr_s: 5.0, seed: 1 })
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("MTBF"));
+        // Infinite MTTR (permanent failures) is a legal modeling choice.
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .failures(FailureConfig { mtbf_s: 10.0, mttr_s: f64::INFINITY, seed: 1 })
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_match_their_builder_equivalents() {
+        // The wrappers stay one release for downstream callers; they must
+        // produce runs bit-identical to the builder spelling (including
+        // elastic()'s max_live cap at the provisioned count, which feeds
+        // the autoscaler's cooldown trajectory).
+        let s = suite();
+        let arr = arrivals(&s, 24);
+        let gpu = GpuSpec::rtx_pro_6000();
+
+        let old_t = FleetConfig::tiered(ModelTier::B1, 1, ModelTier::B8, 1, DvfsPolicy::Static(2842));
+        let new_t = FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .replica(spec(ModelTier::B8))
+            .build()
+            .unwrap();
+        let scale = ReactiveConfig { cooldown_s: 2.0, ..ReactiveConfig::default() };
+        let old_e = FleetConfig::elastic(
+            crate::config::model::model_for_tier(ModelTier::B3),
+            3,
+            1,
+            DvfsPolicy::Static(2842),
+            scale,
+        );
+        let new_e = FleetConfig::builder()
+            .replica(spec(ModelTier::B3))
+            .replicas(2, ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B3) })
+            .reactive(ReactiveConfig { max_live: 3, ..scale })
+            .build()
+            .unwrap();
+        for (old, new) in [(old_t, new_t), (old_e, new_e)] {
+            let a = FleetSim::new(gpu.clone(), old).run(&s, &arr, &mut LeastLoaded).unwrap();
+            let b = FleetSim::new(gpu.clone(), new).run(&s, &arr, &mut LeastLoaded).unwrap();
+            assert_eq!(a.joules, b.joules);
+            assert_eq!(a.routed, b.routed);
+            assert_eq!(a.makespan_s, b.makespan_s);
+            assert_eq!(a.lifecycle, b.lifecycle);
+        }
+    }
+
+    #[test]
     fn difficulty_router_sends_hard_queries_to_the_large_tier() {
         let s = suite();
         let arr = arrivals(&s, 48);
@@ -764,8 +1319,7 @@ mod tests {
         let s = suite();
         let arr = arrivals(&s, 24);
         let gpu = GpuSpec::rtx_pro_6000();
-        let mut cfg =
-            FleetConfig::homogeneous(model_for_tier(ModelTier::B1), 3, DvfsPolicy::Static(2842));
+        let mut cfg = FleetConfig::builder().replicas(3, spec(ModelTier::B1)).build().unwrap();
         cfg.replicas[1].state = ReplicaState::Cold;
         let sim = FleetSim::new(gpu, cfg);
         let o = sim.run(&s, &arr, &mut RoundRobin::default()).unwrap();
@@ -781,11 +1335,10 @@ mod tests {
         let s = suite();
         let arr = arrivals(&s, 4);
         let gpu = GpuSpec::rtx_pro_6000();
-        let mut cfg =
-            FleetConfig::homogeneous(model_for_tier(ModelTier::B1), 2, DvfsPolicy::Static(2842));
-        for r in cfg.replicas.iter_mut() {
-            r.state = ReplicaState::Cold;
-        }
+        let cfg = FleetConfig::builder()
+            .replicas(2, ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B1) })
+            .build()
+            .unwrap();
         let err = FleetSim::new(gpu, cfg)
             .run(&s, &arr, &mut RoundRobin::default())
             .unwrap_err();
@@ -803,10 +1356,11 @@ mod tests {
         let s = suite();
         let arr = TrafficPattern::Poisson { rps: 1.0 }.generate(&s, 400, 0xDEAD);
         let gpu = GpuSpec::rtx_pro_6000();
-        let mut cfg =
-            FleetConfig::homogeneous(model_for_tier(ModelTier::B3), 1, DvfsPolicy::Static(2842));
-        cfg.failures =
-            Some(FailureConfig { mtbf_s: 20.0, mttr_s: f64::INFINITY, seed: 0xF00D });
+        let cfg = FleetConfig::builder()
+            .replica(spec(ModelTier::B3))
+            .failures(FailureConfig { mtbf_s: 20.0, mttr_s: f64::INFINITY, seed: 0xF00D })
+            .build()
+            .unwrap();
         let err = FleetSim::new(gpu, cfg)
             .run(&s, &arr, &mut RoundRobin::default())
             .unwrap_err();
@@ -825,11 +1379,7 @@ mod tests {
             (0..32).map(|i| Arrival { t_s: 0.0, query_idx: i % s.len() }).collect();
         let gpu = GpuSpec::rtx_pro_6000();
         let run = |n: usize| {
-            let cfg = FleetConfig::homogeneous(
-                model_for_tier(ModelTier::B3),
-                n,
-                DvfsPolicy::Static(2842),
-            );
+            let cfg = FleetConfig::builder().replicas(n, spec(ModelTier::B3)).build().unwrap();
             FleetSim::new(gpu.clone(), cfg)
                 .run(&s, &arr, &mut LeastLoaded)
                 .unwrap()
@@ -849,7 +1399,12 @@ mod tests {
         let s = suite();
         let arr = arrivals(&s, 64);
         let gpu = GpuSpec::rtx_pro_6000();
-        let cfg = |p| FleetConfig::homogeneous(model_for_tier(ModelTier::B8), 2, p);
+        let cfg = |p| {
+            FleetConfig::builder()
+                .replicas(2, ReplicaSpec::tiered(ModelTier::B8, p))
+                .build()
+                .unwrap()
+        };
         let stat = FleetSim::new(gpu.clone(), cfg(DvfsPolicy::baseline(&gpu)))
             .run(&s, &arr, &mut LeastLoaded)
             .unwrap();
@@ -876,13 +1431,12 @@ mod tests {
             arr.push(Arrival { t_s: 60.0 + 10.0 * i as f64, query_idx: i % s.len() });
         }
         let gpu = GpuSpec::rtx_pro_6000();
-        let cfg = FleetConfig::elastic(
-            model_for_tier(ModelTier::B3),
-            4,
-            1,
-            DvfsPolicy::Static(2842),
-            ReactiveConfig { cooldown_s: 2.0, ..ReactiveConfig::default() },
-        );
+        let cfg = FleetConfig::builder()
+            .replica(spec(ModelTier::B3))
+            .replicas(3, ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B3) })
+            .reactive(ReactiveConfig { cooldown_s: 2.0, max_live: 4, ..ReactiveConfig::default() })
+            .build()
+            .unwrap();
         let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
         assert_eq!(o.served, arr.len());
         assert!(o.lifecycle.scale_ups >= 1, "never scaled up: {:?}", o.lifecycle);
@@ -905,15 +1459,12 @@ mod tests {
         let s = suite();
         let arr = TrafficPattern::Poisson { rps: 2.0 }.generate(&s, 12, 0xC01D);
         let gpu = GpuSpec::rtx_pro_6000();
-        let mut cfg = FleetConfig::elastic(
-            model_for_tier(ModelTier::B3),
-            2,
-            1,
-            DvfsPolicy::Static(2842),
-            ReactiveConfig::default(),
-        );
         // Everything cold at t = 0: the autoscaler must bootstrap.
-        cfg.replicas[0].state = ReplicaState::Cold;
+        let cfg = FleetConfig::builder()
+            .replicas(2, ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B3) })
+            .reactive(ReactiveConfig { max_live: 2, ..ReactiveConfig::default() })
+            .build()
+            .unwrap();
         let warmup = cfg.cold_start.warmup_s;
         let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
         assert_eq!(o.served, arr.len());
@@ -932,9 +1483,11 @@ mod tests {
         let s = suite();
         let arr = TrafficPattern::Poisson { rps: 3.0 }.generate(&s, 96, 0xFA11);
         let gpu = GpuSpec::rtx_pro_6000();
-        let mut cfg =
-            FleetConfig::homogeneous(model_for_tier(ModelTier::B3), 3, DvfsPolicy::Static(2842));
-        cfg.failures = Some(FailureConfig { mtbf_s: 12.0, mttr_s: 6.0, seed: 0xBAD });
+        let cfg = FleetConfig::builder()
+            .replicas(3, spec(ModelTier::B3))
+            .failures(FailureConfig { mtbf_s: 12.0, mttr_s: 6.0, seed: 0xBAD })
+            .build()
+            .unwrap();
         let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
         assert_eq!(o.served, arr.len(), "every request survives the crashes");
         assert_eq!(o.slo.completed(), arr.len());
@@ -966,14 +1519,18 @@ mod tests {
             .map(|i| Arrival { t_s: 0.1 * i as f64, query_idx: gen_idx[i % gen_idx.len()] })
             .collect();
         let gpu = GpuSpec::rtx_pro_6000();
-        let mut cfg = FleetConfig::elastic(
-            model_for_tier(ModelTier::B3),
-            2,
-            1,
-            DvfsPolicy::Static(2842),
-            ReactiveConfig { cooldown_s: 0.5, high_backlog: 2.0, ..ReactiveConfig::default() },
-        );
-        cfg.failures = Some(FailureConfig { mtbf_s: 1.5, mttr_s: 4.0, seed: 0x5EED });
+        let cfg = FleetConfig::builder()
+            .replica(spec(ModelTier::B3))
+            .replica(ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B3) })
+            .reactive(ReactiveConfig {
+                cooldown_s: 0.5,
+                high_backlog: 2.0,
+                max_live: 2,
+                ..ReactiveConfig::default()
+            })
+            .failures(FailureConfig { mtbf_s: 1.5, mttr_s: 4.0, seed: 0x5EED })
+            .build()
+            .unwrap();
         let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
         assert_eq!(o.served, arr.len());
         assert!(o.lifecycle.failures > 0, "the t≈1.22s crash must land mid-run");

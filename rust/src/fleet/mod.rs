@@ -11,6 +11,8 @@
 //!   (round-robin, least-loaded, semantic-difficulty tiering, and
 //!   energy-per-token-aware selection);
 //! - [`engine`]: the discrete-event fleet simulator binding them together;
+//! - [`queue`]: the indexed event queue over replica clocks the engine's
+//!   hot path steps from (version-stamped lazy invalidation, O(log fleet));
 //! - [`attribution`]: per-request energy attribution — each replica's
 //!   measured joules split across co-batched requests by phase (prefill by
 //!   tokens processed, decode by tokens generated, idle amortized), exact
@@ -37,16 +39,21 @@
 pub mod attribution;
 pub mod engine;
 pub mod lifecycle;
+pub mod queue;
 pub mod replica;
 pub mod router;
 
-pub use attribution::{EnergyLedger, PhaseEnergy};
-pub use engine::{drive, FleetConfig, FleetOutcome, FleetSim, ReplicaOutcome};
+pub use attribution::{ChargeLog, EnergyLedger, EnergySink, PhaseEnergy};
+pub use engine::{
+    drive, drive_with, EngineCtx, FleetConfig, FleetConfigBuilder, FleetOutcome, FleetSim,
+    ReplicaOutcome, StepSelector,
+};
 pub use lifecycle::{
     AutoscalePolicy, Autoscaler, ColdStart, FailureConfig, FailureModel, Lifecycle,
     LifecycleStats, ReactiveAutoscaler, ReactiveConfig, ReplicaState, ScaleAction,
     StaticAutoscaler,
 };
+pub use queue::EventQueue;
 pub use replica::{Replica, ReplicaSpec};
 pub use router::{
     DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,

@@ -1,0 +1,177 @@
+//! Indexed event queue over replica clocks.
+//!
+//! The continuous-batching loop needs, at every iteration, the earliest
+//! steppable replica: `argmin_i (now_s, i)` over replicas with work. A
+//! linear rescan is O(fleet) per step — the term that dominated
+//! million-request sweeps. [`EventQueue`] replaces it with a binary heap
+//! keyed on each replica's next event time, popped in `(time, index)`
+//! order so ties resolve exactly like the linear scan (lowest index wins).
+//!
+//! # Invalidation rule
+//!
+//! Replica clocks do not only move forward through the heap: lifecycle
+//! churn (crash, drain, warm-up, power-off) can make a scheduled replica
+//! unsteppable, or reschedule it to a different time, while its old entry
+//! is still buried in the heap. Entries are therefore never removed
+//! eagerly. Instead each replica carries a monotonically increasing
+//! **version counter**, stamped into every entry at push time:
+//!
+//! > A heap entry is valid if and only if its stamped version equals the
+//! > replica's current version. Both [`schedule`](EventQueue::schedule)
+//! > and [`cancel`](EventQueue::cancel) bump the version, so at most one
+//! > entry per replica — the most recently scheduled one — is ever valid,
+//! > and every earlier entry is stale by construction.
+//!
+//! Stale entries are discarded lazily when they surface at the top during
+//! [`peek`](EventQueue::peek) / [`pop`](EventQueue::pop). Each push
+//! enqueues exactly one entry and each discarded entry was pushed exactly
+//! once, so the amortized cost per schedule stays O(log fleet) regardless
+//! of churn.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled wake-up: replica `idx` becomes steppable at time `t`.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    t: f64,
+    idx: usize,
+    ver: u64,
+}
+
+// BinaryHeap is a max-heap; reverse the comparison so the pop order is
+// ascending (t, idx) — the exact order of the reference linear scan.
+impl Ord for Entry {
+    fn cmp(&self, other: &Entry) -> Ordering {
+        other.t.total_cmp(&self.t).then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Entry) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Entry) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+/// Min-queue of `(next event time, replica index)` with lazy,
+/// version-stamped invalidation (see the module docs for the rule).
+#[derive(Debug, Clone, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    /// Current version per replica; heap entries stamped with an older
+    /// version are stale.
+    ver: Vec<u64>,
+}
+
+impl EventQueue {
+    /// An empty queue for a fleet of `n` replicas.
+    pub fn new(n: usize) -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(n.max(1) * 2), ver: vec![0; n] }
+    }
+
+    /// Schedule (or reschedule) replica `idx` to wake at time `t`,
+    /// superseding any earlier schedule for the same replica.
+    pub fn schedule(&mut self, idx: usize, t: f64) {
+        self.ver[idx] += 1;
+        self.heap.push(Entry { t, idx, ver: self.ver[idx] });
+    }
+
+    /// Invalidate any outstanding schedule for replica `idx`.
+    pub fn cancel(&mut self, idx: usize) {
+        self.ver[idx] += 1;
+    }
+
+    /// Earliest valid `(time, replica)`, discarding stale entries.
+    pub fn peek(&mut self) -> Option<(f64, usize)> {
+        while let Some(e) = self.heap.peek() {
+            if self.ver[e.idx] == e.ver {
+                return Some((e.t, e.idx));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Pop the earliest valid `(time, replica)`.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        let head = self.peek();
+        if head.is_some() {
+            self.heap.pop();
+        }
+        head
+    }
+
+    /// True when no valid entry remains.
+    pub fn is_empty(&mut self) -> bool {
+        self.peek().is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_index_order() {
+        let mut q = EventQueue::new(4);
+        q.schedule(2, 5.0);
+        q.schedule(0, 7.0);
+        q.schedule(3, 5.0);
+        q.schedule(1, 4.0);
+        assert_eq!(q.pop(), Some((4.0, 1)));
+        // Tie at t=5.0: the lower index must win, matching the linear
+        // scan's first-minimum rule.
+        assert_eq!(q.pop(), Some((5.0, 2)));
+        assert_eq!(q.pop(), Some((5.0, 3)));
+        assert_eq!(q.pop(), Some((7.0, 0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn reschedule_supersedes_older_entry() {
+        let mut q = EventQueue::new(2);
+        q.schedule(0, 1.0);
+        q.schedule(0, 9.0); // the 1.0 entry is now stale
+        q.schedule(1, 3.0);
+        assert_eq!(q.pop(), Some((3.0, 1)));
+        assert_eq!(q.pop(), Some((9.0, 0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancel_invalidates_without_removal() {
+        let mut q = EventQueue::new(2);
+        q.schedule(0, 1.0);
+        q.schedule(1, 2.0);
+        q.cancel(0);
+        assert_eq!(q.peek(), Some((2.0, 1)));
+        q.cancel(1);
+        assert!(q.is_empty());
+        // Cancelling an unscheduled replica is a harmless no-op.
+        q.cancel(0);
+        q.schedule(0, 4.0);
+        assert_eq!(q.pop(), Some((4.0, 0)));
+    }
+
+    #[test]
+    fn churn_keeps_only_latest_schedule_valid() {
+        let mut q = EventQueue::new(3);
+        for round in 0..100u32 {
+            let t = f64::from(round);
+            q.schedule(round as usize % 3, t);
+        }
+        // Latest schedules: replica 0 @ 99, replica 1 @ 97, replica 2 @ 98.
+        assert_eq!(q.pop(), Some((97.0, 1)));
+        assert_eq!(q.pop(), Some((98.0, 2)));
+        assert_eq!(q.pop(), Some((99.0, 0)));
+        assert!(q.is_empty());
+    }
+}

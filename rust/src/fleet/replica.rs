@@ -27,12 +27,12 @@ use crate::engine::KvCacheManager;
 use crate::gpu::{GpuSim, TelemetryWindow};
 use crate::perf::{decode_step_cost, prefill_cost};
 use crate::serve::governor::{governor_for, FreqGovernor, GovernorSignal};
-use crate::serve::slo::{Slo, SloTracker};
+use crate::serve::slo::{RecordSink, Slo, SloTracker};
 use crate::serve::traffic::Arrival;
 use crate::text::tokenizer::token_count;
 use crate::workload::ReplaySuite;
 
-use super::attribution::{EnergyLedger, PhaseEnergy};
+use super::attribution::{EnergyLedger, EnergySink, PhaseEnergy};
 use super::lifecycle::{ColdStart, ReplicaState};
 use super::router::ReplicaStatus;
 
@@ -120,6 +120,9 @@ pub struct Replica {
     cold_j_per_token: f64,
     /// Scratch buffer of in-flight request ids (attribution hot path).
     req_scratch: Vec<usize>,
+    /// Scratch buffer of sequences finishing this decode step (decode hot
+    /// path — reused so a million decode steps allocate nothing).
+    finish_scratch: Vec<(usize, f64, f64, usize)>,
 }
 
 impl Replica {
@@ -172,6 +175,7 @@ impl Replica {
             j_per_token_ewma: 0.0,
             cold_j_per_token,
             req_scratch: Vec::new(),
+            finish_scratch: Vec::new(),
             spec,
         }
     }
@@ -350,7 +354,7 @@ impl Replica {
 
     /// Apply a set-point change, charging the switch latency at idle power
     /// to the requests of the step that follows.
-    fn switch_to(&mut self, f: FreqMHz, beneficiaries: &[usize], ledger: &mut EnergyLedger) {
+    fn switch_to(&mut self, f: FreqMHz, beneficiaries: &[usize], ledger: &mut dyn EnergySink) {
         let dt = self.gpu.set_freq(f);
         if dt > 0.0 {
             let e = dt * self.gpu.spec.p_idle_w;
@@ -369,7 +373,7 @@ impl Replica {
         arrival_s: f64,
         first_token_s: f64,
         tokens: usize,
-        fleet: &mut SloTracker,
+        fleet: &mut dyn RecordSink,
     ) {
         let ttft = first_token_s - arrival_s;
         let e2e = self.now_s - arrival_s;
@@ -389,8 +393,8 @@ impl Replica {
         &mut self,
         suite: &ReplaySuite,
         max_batch: usize,
-        ledger: &mut EnergyLedger,
-        fleet: &mut SloTracker,
+        ledger: &mut dyn EnergySink,
+        fleet: &mut dyn RecordSink,
     ) -> Result<()> {
         debug_assert!(self.runnable(), "step() on an idle replica");
         if !self.queue.is_empty() && self.active.len() < max_batch {
@@ -424,8 +428,8 @@ impl Replica {
         head: Queued,
         input: usize,
         suite: &ReplaySuite,
-        ledger: &mut EnergyLedger,
-        fleet: &mut SloTracker,
+        ledger: &mut dyn EnergySink,
+        fleet: &mut dyn RecordSink,
     ) -> Result<()> {
         let q = &suite.queries[head.arrival.query_idx];
         let sig = self.signal();
@@ -460,7 +464,7 @@ impl Replica {
     }
 
     /// One decode step for the whole running batch.
-    fn decode_step(&mut self, ledger: &mut EnergyLedger, fleet: &mut SloTracker) {
+    fn decode_step(&mut self, ledger: &mut dyn EnergySink, fleet: &mut dyn RecordSink) {
         debug_assert!(!self.active.is_empty(), "decode with an empty batch");
         self.req_scratch.clear();
         self.req_scratch.extend(self.active.iter().map(|s| s.req));
@@ -489,7 +493,8 @@ impl Replica {
         };
         self.tokens_out += self.active.len() as u64;
 
-        let mut finished: Vec<(usize, f64, f64, usize)> = Vec::new();
+        let mut finished = std::mem::take(&mut self.finish_scratch);
+        finished.clear();
         self.active.retain_mut(|s| {
             s.remaining -= 1;
             s.tokens += 1;
@@ -501,9 +506,10 @@ impl Replica {
                 true
             }
         });
-        for (req, arrival_s, first_token_s, tokens) in finished {
+        for &(req, arrival_s, first_token_s, tokens) in &finished {
             self.complete(req, arrival_s, first_token_s, tokens, fleet);
         }
+        self.finish_scratch = finished;
     }
 
     /// Amortize this replica's idle draw and cold-start energy across the

@@ -10,6 +10,9 @@
 //! ewatt autoscale      [...]             # elastic fleet: static-N vs autoscaled (+failures)
 //! ewatt serve [--tier t3] [--batch 4] [--n 16] [--max-new 32]
 //!             [--prefill-mhz 2842] [--decode-mhz 180]   # real PJRT path
+//! ewatt bench [--replicas 16] [--arrivals 1000000] [--iters 1] [--check]
+//!             [--min-speedup 3.0] [--json BENCH_engine.json]
+//!                                          # engine hot-path perf harness
 //! ewatt info                              # testbed + model inventory
 //! ```
 
@@ -115,6 +118,23 @@ fn run() -> Result<()> {
             emit(&reports, &args)
         }
         Some("serve") => serve(&args),
+        Some("bench") => {
+            use ewatt::experiments::engine_bench::{self, BenchOptions};
+            let d = BenchOptions::default();
+            let opts = BenchOptions {
+                replicas: args.get_usize("replicas", d.replicas),
+                arrivals: args.get_usize("arrivals", d.arrivals),
+                seed: args.get_u64("seed", d.seed),
+                iters: args.get_usize("iters", d.iters),
+                check: args.has_flag("check"),
+                min_speedup: match args.get("min-speedup") {
+                    Some(s) => s.parse().context("parsing --min-speedup")?,
+                    None => d.min_speedup,
+                },
+                path: args.get("json").map(Into::into).unwrap_or(d.path),
+            };
+            engine_bench::run(&opts)
+        }
         Some("info") => info(),
         other => {
             if let Some(cmd) = other {
@@ -122,7 +142,7 @@ fn run() -> Result<()> {
             }
             eprintln!(
                 "usage: ewatt <table N | figure N | all | sweep | slo | fleet | autoscale | \
-                 ablation [name] | serve | info> \
+                 ablation [name] | serve | bench | info> \
                  [--paper] [--seed N] [--queries N] [--out DIR]"
             );
             bail!("no subcommand")

@@ -32,7 +32,11 @@ pub struct GovernorSignal {
 /// A frequency source consulted at every phase boundary of the serving
 /// loop. Stateful implementations (the hysteresis governor) adapt; the
 /// [`OpenLoop`] adapter wraps any static [`DvfsPolicy`].
-pub trait FreqGovernor {
+///
+/// `Send` because the fleet engine steps independent replicas on worker
+/// threads between routing points; a governor is only ever *called* from
+/// the thread currently driving its replica.
+pub trait FreqGovernor: Send {
     /// Pick the SM set point for the next phase step.
     fn decide(&mut self, now_s: f64, phase: Phase, signal: &GovernorSignal, gpu: &GpuSpec)
         -> FreqMHz;

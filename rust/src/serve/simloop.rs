@@ -20,7 +20,7 @@ use anyhow::Result;
 use crate::config::{GpuSpec, ModelSpec};
 use crate::coordinator::dvfs_policy::DvfsPolicy;
 use crate::fleet::attribution::{EnergyLedger, PhaseEnergy};
-use crate::fleet::engine::drive;
+use crate::fleet::engine::{drive, EngineCtx};
 use crate::fleet::lifecycle::{Lifecycle, ReplicaState};
 use crate::fleet::replica::{Replica, ReplicaSpec};
 use crate::fleet::router::RoundRobin;
@@ -164,17 +164,21 @@ impl ServeSim {
             [Replica::with_governor(&self.gpu, spec, gov, self.cfg.slo, self.cfg.window_s)];
         let mut ledger = EnergyLedger::new(arrivals.len());
         let mut tracker = SloTracker::new(self.cfg.slo);
+        let mut router = RoundRobin::default();
         // One always-live replica, no autoscaling, no failures: the inert
         // lifecycle keeps this facade bit-identical to the fixed loop.
+        let mut lifecycle = Lifecycle::inert();
         drive(
             &mut reps,
-            suite,
-            arrivals,
-            &mut RoundRobin::default(),
-            self.cfg.max_batch,
-            &mut ledger,
-            &mut tracker,
-            &mut Lifecycle::inert(),
+            EngineCtx {
+                suite,
+                arrivals,
+                router: &mut router,
+                max_batch: self.cfg.max_batch,
+                ledger: &mut ledger,
+                tracker: &mut tracker,
+                lifecycle: &mut lifecycle,
+            },
         )?;
         let [mut rep] = reps;
         let leftover = rep.finalize(&mut ledger);

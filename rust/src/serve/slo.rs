@@ -50,6 +50,16 @@ struct Completion {
     violated: bool,
 }
 
+/// Anything that can absorb per-request completion latencies.
+///
+/// [`SloTracker`] is the canonical sink; the fleet engine's parallel gap
+/// stepping substitutes a thread-local buffer that replays into the real
+/// tracker in deterministic order afterwards.
+pub trait RecordSink {
+    /// Record one completed request's latencies.
+    fn record(&mut self, ttft_s: f64, tbt_s: f64, e2e_s: f64);
+}
+
 /// Streaming SLO attainment tracker.
 #[derive(Debug, Clone)]
 pub struct SloTracker {
@@ -159,6 +169,12 @@ impl SloTracker {
         let recent = self.recent_violation_rate();
         let fast = if recent > 0.0 { 1.0 + recent } else { 0.0 };
         slow.max(fast)
+    }
+}
+
+impl RecordSink for SloTracker {
+    fn record(&mut self, ttft_s: f64, tbt_s: f64, e2e_s: f64) {
+        SloTracker::record(self, ttft_s, tbt_s, e2e_s);
     }
 }
 

@@ -36,6 +36,48 @@ where
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
 }
 
+/// Parallel map over *mutable* items, preserving input order.
+///
+/// Each worker thread owns a disjoint chunk of `items` via `chunks_mut`, so
+/// `f` gets exclusive `&mut` access to its item plus the item's global
+/// index. Unlike [`par_map`] there is no internal small-`n` cutoff beyond
+/// the trivial cases — callers gate on their own cost model (the fleet
+/// engine only fans out when the steppable backlog is worth a thread).
+pub fn par_map_mut<T, U, F>(items: &mut [T], f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if workers <= 1 || n < 2 {
+        return items.iter_mut().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (c, (slot_chunk, item_chunk)) in
+            out.chunks_mut(chunk).zip(items.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            let base = c * chunk;
+            s.spawn(move || {
+                for (j, (slot, item)) in slot_chunk.iter_mut().zip(item_chunk).enumerate() {
+                    *slot = Some(f(base + j, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,5 +103,24 @@ mod tests {
         let xs: Vec<usize> = (0..257).collect();
         let _ = par_map(&xs, |_| count.fetch_add(1, Ordering::SeqCst));
         assert_eq!(count.load(Ordering::SeqCst), 257);
+    }
+
+    #[test]
+    fn mut_variant_mutates_in_place_with_global_indices() {
+        let mut xs: Vec<usize> = vec![0; 1000];
+        let doubled = par_map_mut(&mut xs, |i, x| {
+            *x = i;
+            i * 2
+        });
+        assert_eq!(xs, (0..1000).collect::<Vec<_>>());
+        assert_eq!(doubled, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mut_variant_empty_and_single() {
+        let mut e: Vec<u32> = vec![];
+        assert!(par_map_mut(&mut e, |_, &mut x| x).is_empty());
+        let mut one = vec![5u32];
+        assert_eq!(par_map_mut(&mut one, |_, x| *x + 1), vec![6]);
     }
 }

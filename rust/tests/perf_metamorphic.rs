@@ -1,0 +1,109 @@
+//! Metamorphic wall-clock bounds on the engine hot path.
+//!
+//! Absolute timings drift across machines, so the tracked trajectory
+//! (`BENCH_engine.json`, via `ewatt bench --check`) gates those. These
+//! tests instead pin *ratios* between two runs taken back-to-back in the
+//! same process on the same machine, which are stable enough to assert:
+//!
+//! - doubling the fleet (8 → 16 replicas, same 20k-arrival stream) may
+//!   cost at most **2.2×** the wall time — linear scaling plus 10% noise
+//!   slack; the indexed event queue makes per-event selection O(log n),
+//!   so the observed ratio should sit near 1;
+//! - the elastic lifecycle machinery (autoscaler consulted per arrival,
+//!   warmup/drain events, cold-start charging) may add at most **30%**
+//!   over the identical fleet run fixed-live.
+//!
+//! Each ratio is the median of 3 interleaved measurements; CI runs this
+//! target in release mode with `--test-threads=1` so sibling tests do not
+//! steal cycles mid-measurement. Rationale for the bounds is in the
+//! README's "Performance" section.
+
+use std::time::{Duration, Instant};
+
+use ewatt::config::{GpuSpec, ModelTier};
+use ewatt::coordinator::DvfsPolicy;
+use ewatt::fleet::{
+    FleetConfig, FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState,
+};
+use ewatt::serve::{Arrival, TrafficPattern};
+use ewatt::workload::ReplaySuite;
+
+const ARRIVALS: usize = 20_000;
+const ROUNDS: usize = 3;
+
+fn stream(suite: &ReplaySuite) -> Vec<Arrival> {
+    TrafficPattern::Poisson { rps: 48.0 }.generate(suite, ARRIVALS, 0x9E7A)
+}
+
+fn fixed(n: usize) -> FleetConfig {
+    let gpu = GpuSpec::rtx_pro_6000();
+    FleetConfig::builder()
+        .replicas(n, ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(gpu.f_max_mhz)))
+        .build()
+        .unwrap()
+}
+
+fn elastic(n: usize) -> FleetConfig {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let live = ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(gpu.f_max_mhz));
+    FleetConfig::builder()
+        .replica(live.clone())
+        .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+        .reactive(ReactiveConfig { max_live: n, ..ReactiveConfig::default() })
+        .build()
+        .unwrap()
+}
+
+fn wall(sim: &FleetSim, suite: &ReplaySuite, arrivals: &[Arrival]) -> Duration {
+    let t0 = Instant::now();
+    let o = sim.run(suite, arrivals, &mut LeastLoaded).unwrap();
+    assert_eq!(o.served, arrivals.len(), "measured run dropped requests");
+    t0.elapsed()
+}
+
+/// Median of [`ROUNDS`] interleaved numerator/denominator wall-time ratios.
+fn median_ratio(num: &FleetSim, den: &FleetSim, suite: &ReplaySuite, arrivals: &[Arrival]) -> f64 {
+    // Warm both paths once so first-touch allocation noise lands outside
+    // the measured rounds.
+    wall(num, suite, arrivals);
+    wall(den, suite, arrivals);
+    let mut ratios: Vec<f64> = (0..ROUNDS)
+        .map(|_| {
+            let a = wall(num, suite, arrivals).as_secs_f64();
+            let b = wall(den, suite, arrivals).as_secs_f64();
+            a / b
+        })
+        .collect();
+    ratios.sort_by(f64::total_cmp);
+    ratios[ROUNDS / 2]
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "timing bounds only hold in release builds")]
+fn doubling_the_fleet_at_most_doubles_wall_time_with_slack() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(11, 32);
+    let arrivals = stream(&suite);
+    let big = FleetSim::new(gpu.clone(), fixed(16));
+    let small = FleetSim::new(gpu, fixed(8));
+    let ratio = median_ratio(&big, &small, &suite, &arrivals);
+    assert!(
+        ratio <= 2.2,
+        "16 replicas cost {ratio:.2}x the 8-replica wall time (bound 2.2x)"
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "timing bounds only hold in release builds")]
+fn elastic_lifecycle_overhead_is_bounded() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = ReplaySuite::quick(11, 32);
+    let arrivals = stream(&suite);
+    let el = FleetSim::new(gpu.clone(), elastic(8));
+    let fx = FleetSim::new(gpu, fixed(8));
+    let ratio = median_ratio(&el, &fx, &suite, &arrivals);
+    assert!(
+        ratio <= 1.3,
+        "elastic run cost {ratio:.2}x the fixed-fleet wall time (bound 1.3x)"
+    );
+}

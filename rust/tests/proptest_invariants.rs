@@ -588,7 +588,7 @@ fn prop_lifecycle_churn_conserves_and_loses_nothing() {
     use ewatt::features::FeatureVector;
     use ewatt::fleet::{
         ColdStart, FailureConfig, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
-        ReactiveConfig, ReplicaStatus,
+        ReactiveConfig, ReplicaSpec, ReplicaState, ReplicaStatus,
     };
     use ewatt::serve::{Arrival, TrafficPattern};
 
@@ -619,25 +619,26 @@ fn prop_lifecycle_churn_conserves_and_loses_nothing() {
         let suite = ReplaySuite::quick(case, 8);
         let n = 2 + rng.gen_range(0, 3);
         let tier = *rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8]);
-        let mut cfg = FleetConfig::elastic(
-            model_for_tier(tier),
-            n,
-            1,
-            DvfsPolicy::governed(&gpu),
-            ReactiveConfig {
+        let live = ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu));
+        let cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+            .reactive(ReactiveConfig {
+                max_live: n,
                 cooldown_s: 1.0 + rng.gen_f64() * 10.0,
                 ..ReactiveConfig::default()
-            },
-        );
-        cfg.failures = Some(FailureConfig {
-            mtbf_s: 8.0 + rng.gen_f64() * 30.0,
-            mttr_s: 2.0 + rng.gen_f64() * 10.0,
-            seed: case.wrapping_mul(977),
-        });
-        cfg.cold_start = ColdStart {
-            energy_j: 500.0 + rng.gen_f64() * 4000.0,
-            warmup_s: 1.0 + rng.gen_f64() * 8.0,
-        };
+            })
+            .failures(FailureConfig {
+                mtbf_s: 8.0 + rng.gen_f64() * 30.0,
+                mttr_s: 2.0 + rng.gen_f64() * 10.0,
+                seed: case.wrapping_mul(977),
+            })
+            .cold_start(ColdStart {
+                energy_j: 500.0 + rng.gen_f64() * 4000.0,
+                warmup_s: 1.0 + rng.gen_f64() * 8.0,
+            })
+            .build()
+            .unwrap();
         let pattern = match rng.gen_range(0, 3) {
             0 => TrafficPattern::Poisson { rps: 1.0 + rng.gen_f64() * 3.0 },
             1 => TrafficPattern::Bursty { base_rps: 1.0, burst_rps: 6.0, mean_dwell_s: 2.0 },
@@ -692,6 +693,87 @@ fn prop_lifecycle_churn_conserves_and_loses_nothing() {
         assert_eq!(router.log, router2.log, "case {case}: nondeterministic routing");
         assert_eq!(o.lifecycle, o2.lifecycle, "case {case}: nondeterministic lifecycle");
         assert_eq!(o.served_by, o2.served_by, "case {case}");
+    }
+}
+
+/// Step-selector equivalence: the indexed event queue must reproduce the
+/// reference linear scan **bit-for-bit** across randomized elastic fleets
+/// (reactive autoscaling + seeded failures + random cold-start costs +
+/// random traffic). The indexed path is an oracle-checked reimplementation,
+/// not an approximation — any divergence in per-request joules, routing,
+/// lifecycle counters, or scalar aggregates is a bug in queue invalidation
+/// or the gap-parallel replay. Also pins arena-ledger conservation to 1e-6
+/// under both selectors.
+#[test]
+fn prop_indexed_step_selector_matches_linear_reference() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::fleet::{
+        ColdStart, FailureConfig, FleetConfig, FleetSim, LeastLoaded, ReactiveConfig,
+        ReplicaSpec, ReplicaState, StepSelector,
+    };
+    use ewatt::serve::TrafficPattern;
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..10u64 {
+        let mut rng = ewatt::rng(0x0DD5_EED ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let n = 2 + rng.gen_range(0, 3);
+        let tier = *rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8]);
+        let live = ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu));
+        let cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+            .reactive(ReactiveConfig {
+                max_live: n,
+                cooldown_s: 1.0 + rng.gen_f64() * 6.0,
+                ..ReactiveConfig::default()
+            })
+            .failures(FailureConfig {
+                mtbf_s: 8.0 + rng.gen_f64() * 30.0,
+                mttr_s: 2.0 + rng.gen_f64() * 10.0,
+                seed: case.wrapping_mul(6271),
+            })
+            .cold_start(ColdStart {
+                energy_j: 500.0 + rng.gen_f64() * 4000.0,
+                warmup_s: 1.0 + rng.gen_f64() * 8.0,
+            })
+            .build()
+            .unwrap();
+        let pattern = match rng.gen_range(0, 3) {
+            0 => TrafficPattern::Poisson { rps: 1.0 + rng.gen_f64() * 3.0 },
+            1 => TrafficPattern::Bursty { base_rps: 1.0, burst_rps: 6.0, mean_dwell_s: 2.0 },
+            _ => TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 20.0 },
+        };
+        let arrivals = pattern.generate(&suite, 20 + rng.gen_range(0, 40), case ^ 0xA5);
+        let sim = FleetSim::new(gpu.clone(), cfg);
+        let fast = sim
+            .run_with_selector(&suite, &arrivals, &mut LeastLoaded, StepSelector::Indexed)
+            .unwrap();
+        let slow = sim
+            .run_with_selector(&suite, &arrivals, &mut LeastLoaded, StepSelector::LinearReference)
+            .unwrap();
+
+        assert_eq!(fast.joules, slow.joules, "case {case}: per-request energy diverged");
+        assert_eq!(fast.routed, slow.routed, "case {case}: routing diverged");
+        assert_eq!(fast.served_by, slow.served_by, "case {case}: serving diverged");
+        assert_eq!(fast.lifecycle, slow.lifecycle, "case {case}: lifecycle diverged");
+        assert_eq!(fast.served, slow.served, "case {case}: served count diverged");
+        for (name, x, y) in [
+            ("energy_j", fast.energy_j, slow.energy_j),
+            ("idle_j", fast.idle_j, slow.idle_j),
+            ("coldstart_j", fast.coldstart_j, slow.coldstart_j),
+            ("makespan_s", fast.makespan_s, slow.makespan_s),
+            ("e2e_p99", fast.slo.e2e_p99(), slow.slo.e2e_p99()),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: {name} {x} vs {y}");
+        }
+
+        // Arena-ledger conservation holds under both selectors.
+        for (sel, o) in [("indexed", &fast), ("linear", &slow)] {
+            let attributed: f64 = o.joules.iter().sum();
+            let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+            assert!(rel < 1e-6, "case {case} [{sel}]: conservation off by {rel:e}");
+        }
     }
 }
 

@@ -23,12 +23,11 @@
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
-use ewatt::config::model::model_for_tier;
 use ewatt::config::{GpuSpec, ModelTier};
 use ewatt::coordinator::DvfsPolicy;
 use ewatt::fleet::{
     DifficultyTiered, EnergyAware, FailureConfig, FleetConfig, FleetOutcome, FleetRouter,
-    FleetSim, LeastLoaded, ReactiveConfig, RoundRobin,
+    FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState, RoundRobin,
 };
 use ewatt::serve::TrafficPattern;
 use ewatt::workload::ReplaySuite;
@@ -44,24 +43,37 @@ struct Scenario {
 }
 
 fn scenarios(gpu: &GpuSpec) -> Vec<Scenario> {
-    let b8 = || model_for_tier(ModelTier::B8);
     let gov = DvfsPolicy::governed(gpu);
     let stat = DvfsPolicy::Static(gpu.f_max_mhz);
+    let tiered = |n: usize, tier, p| {
+        FleetConfig::builder()
+            .replicas(n, ReplicaSpec::tiered(tier, p))
+            .build()
+            .unwrap()
+    };
+    let mixed = |p| {
+        FleetConfig::builder()
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B3, p))
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B14, p))
+            .build()
+            .unwrap()
+    };
     let elastic = |failures: Option<FailureConfig>| {
-        let mut cfg = FleetConfig::elastic(
-            b8(),
-            3,
-            1,
-            gov,
-            ReactiveConfig { min_live: 1, max_live: 3, ..ReactiveConfig::default() },
-        );
-        cfg.failures = failures;
-        cfg
+        let live = ReplicaSpec::tiered(ModelTier::B8, gov);
+        let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
+        let mut b = FleetConfig::builder()
+            .replica(live)
+            .replicas(2, cold)
+            .reactive(ReactiveConfig { min_live: 1, max_live: 3, ..ReactiveConfig::default() });
+        if let Some(f) = failures {
+            b = b.failures(f);
+        }
+        b.build().unwrap()
     };
     vec![
         Scenario {
             name: "poisson-1rep-static",
-            cfg: FleetConfig::homogeneous(b8(), 1, stat),
+            cfg: tiered(1, ModelTier::B8, stat),
             router: || Box::new(RoundRobin::default()),
             pattern: TrafficPattern::Poisson { rps: 1.5 },
             requests: 48,
@@ -69,7 +81,7 @@ fn scenarios(gpu: &GpuSpec) -> Vec<Scenario> {
         },
         Scenario {
             name: "poisson-1rep-governed",
-            cfg: FleetConfig::homogeneous(b8(), 1, gov),
+            cfg: tiered(1, ModelTier::B8, gov),
             router: || Box::new(RoundRobin::default()),
             pattern: TrafficPattern::Poisson { rps: 1.5 },
             requests: 48,
@@ -77,7 +89,7 @@ fn scenarios(gpu: &GpuSpec) -> Vec<Scenario> {
         },
         Scenario {
             name: "bursty-tiered-governed-difficulty",
-            cfg: FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, gov),
+            cfg: mixed(gov),
             router: || Box::new(DifficultyTiered::default()),
             pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
             requests: 72,
@@ -85,7 +97,7 @@ fn scenarios(gpu: &GpuSpec) -> Vec<Scenario> {
         },
         Scenario {
             name: "bursty-tiered-static-energy-aware",
-            cfg: FleetConfig::tiered(ModelTier::B3, 2, ModelTier::B14, 2, stat),
+            cfg: mixed(stat),
             router: || Box::new(EnergyAware::default()),
             pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
             requests: 72,
