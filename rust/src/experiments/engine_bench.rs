@@ -125,10 +125,16 @@ pub fn run(opts: &BenchOptions) -> Result<()> {
                 );
                 println!("regression gate : {cur_ms:.1} ms within {budget_ms:.1} ms budget");
             }
-            None => eprintln!(
-                "no blessed entry for this configuration in {} — blessing this run",
-                opts.path.display()
-            ),
+            None => {
+                // A fresh checkout ships `{"entries":[],"format":1}` — the
+                // first --check run must bless, not fail.
+                let why = if entries.is_empty() {
+                    "no baseline entries in"
+                } else {
+                    "no baseline entry matches this configuration in"
+                };
+                eprintln!("{why} {} — blessing this run as the baseline", opts.path.display());
+            }
         }
     }
     ensure!(
@@ -287,6 +293,25 @@ mod tests {
         assert!(run(&tiny(path.clone(), true)).is_err());
 
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn check_on_empty_committed_trajectory_blesses_cleanly() {
+        // The repo ships an empty trajectory; `--check` on it must bless
+        // this run as the baseline rather than fail on the missing entry.
+        let path =
+            std::env::temp_dir().join(format!("ewatt_bench_empty_{}.json", std::process::id()));
+        std::fs::write(&path, "{\"entries\":[],\"format\":1}\n").unwrap();
+        assert_eq!(load(&path).unwrap().len(), 0, "empty trajectory must load as zero entries");
+        run(&tiny(path.clone(), true)).unwrap();
+        assert_eq!(load(&path).unwrap().len(), 1, "the blessed run must be recorded");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn committed_trajectory_file_is_loadable() {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
+        load(&path).unwrap_or_else(|e| panic!("committed {} must parse: {e}", path.display()));
     }
 
     #[test]

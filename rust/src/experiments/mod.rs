@@ -13,7 +13,9 @@ pub mod fleet_tables;
 pub mod quality_tables;
 pub mod report;
 pub mod runner;
+pub mod scenarios;
 pub mod slo_tables;
+pub mod trace;
 pub mod workload_tables;
 
 pub use context::Context;

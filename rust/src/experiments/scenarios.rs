@@ -1,0 +1,209 @@
+//! The named scenario registry.
+//!
+//! Six seeded serving scenarios spanning the stack — traffic shapes
+//! (Poisson / bursty / diurnal) × fleets (one-replica, mixed-tier,
+//! elastic, failing) × policies (static / governed). They were born as
+//! fixtures of the golden-trace regression suite
+//! (`rust/tests/scenarios.rs`, which still pins them against
+//! `scenarios.snap`); they live in the library so `ewatt trace` can
+//! replay any of them by name with a [`TraceSink`] attached. The configs
+//! here are **pinned**: changing one invalidates the blessed snapshot and
+//! must be re-blessed deliberately.
+
+use anyhow::{Context as _, Result};
+
+use crate::config::{GpuSpec, ModelTier};
+use crate::coordinator::DvfsPolicy;
+use crate::fleet::{
+    DifficultyTiered, EnergyAware, FailureConfig, FleetConfig, FleetOutcome, FleetRouter,
+    FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState, RoundRobin,
+};
+use crate::obs::TraceSink;
+use crate::serve::traffic::Arrival;
+use crate::serve::TrafficPattern;
+use crate::workload::ReplaySuite;
+
+/// One pinned scenario: name, fleet, router factory, traffic, request
+/// count, arrival seed.
+pub struct Scenario {
+    pub name: &'static str,
+    pub cfg: FleetConfig,
+    pub router: fn() -> Box<dyn FleetRouter>,
+    pub pattern: TrafficPattern,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The workload every scenario replays (seed and size are part of the
+    /// pinned fixture).
+    pub fn suite() -> ReplaySuite {
+        ReplaySuite::quick(17, 24)
+    }
+
+    /// The scenario's seeded arrival stream.
+    pub fn arrivals(&self, suite: &ReplaySuite) -> Vec<Arrival> {
+        self.pattern.generate(suite, self.requests, self.seed)
+    }
+
+    /// Replay the scenario (untraced).
+    pub fn run(&self, gpu: &GpuSpec, suite: &ReplaySuite) -> Result<FleetOutcome> {
+        let arrivals = self.arrivals(suite);
+        let mut router = (self.router)();
+        FleetSim::new(gpu.clone(), self.cfg.clone())
+            .run(suite, &arrivals, router.as_mut())
+            .with_context(|| format!("scenario {}", self.name))
+    }
+
+    /// Replay the scenario with a [`TraceSink`] attached. Physics is
+    /// bit-identical to [`Scenario::run`].
+    pub fn run_traced(
+        &self,
+        gpu: &GpuSpec,
+        suite: &ReplaySuite,
+        sink: &mut dyn TraceSink,
+    ) -> Result<FleetOutcome> {
+        let arrivals = self.arrivals(suite);
+        let mut router = (self.router)();
+        FleetSim::new(gpu.clone(), self.cfg.clone())
+            .run_traced(suite, &arrivals, router.as_mut(), sink)
+            .with_context(|| format!("scenario {}", self.name))
+    }
+
+    /// Canonical text of everything that determines this scenario's
+    /// outcome — the input to the manifest's config digest. Two runs with
+    /// equal canonical text are replays of the same experiment.
+    pub fn canonical(&self) -> String {
+        format!(
+            "scenario={}\ncfg={:?}\nrouter={}\npattern={:?}\nrequests={}\nseed={:#x}\n\
+             suite=ReplaySuite::quick(17,24)\n",
+            self.name,
+            self.cfg,
+            (self.router)().label(),
+            self.pattern,
+            self.requests,
+            self.seed,
+        )
+    }
+}
+
+/// Every pinned scenario, in snapshot order.
+pub fn all(gpu: &GpuSpec) -> Vec<Scenario> {
+    let gov = DvfsPolicy::governed(gpu);
+    let stat = DvfsPolicy::Static(gpu.f_max_mhz);
+    let tiered = |n: usize, tier, p| {
+        FleetConfig::builder().replicas(n, ReplicaSpec::tiered(tier, p)).build().unwrap()
+    };
+    let mixed = |p| {
+        FleetConfig::builder()
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B3, p))
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B14, p))
+            .build()
+            .unwrap()
+    };
+    let elastic = |failures: Option<FailureConfig>| {
+        let live = ReplicaSpec::tiered(ModelTier::B8, gov);
+        let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
+        let mut b = FleetConfig::builder()
+            .replica(live)
+            .replicas(2, cold)
+            .reactive(ReactiveConfig { min_live: 1, max_live: 3, ..ReactiveConfig::default() });
+        if let Some(f) = failures {
+            b = b.failures(f);
+        }
+        b.build().unwrap()
+    };
+    vec![
+        Scenario {
+            name: "poisson-1rep-static",
+            cfg: tiered(1, ModelTier::B8, stat),
+            router: || Box::new(RoundRobin::default()),
+            pattern: TrafficPattern::Poisson { rps: 1.5 },
+            requests: 48,
+            seed: 0x5CE1,
+        },
+        Scenario {
+            name: "poisson-1rep-governed",
+            cfg: tiered(1, ModelTier::B8, gov),
+            router: || Box::new(RoundRobin::default()),
+            pattern: TrafficPattern::Poisson { rps: 1.5 },
+            requests: 48,
+            seed: 0x5CE1,
+        },
+        Scenario {
+            name: "bursty-tiered-governed-difficulty",
+            cfg: mixed(gov),
+            router: || Box::new(DifficultyTiered::default()),
+            pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
+            requests: 72,
+            seed: 0x5CE2,
+        },
+        Scenario {
+            name: "bursty-tiered-static-energy-aware",
+            cfg: mixed(stat),
+            router: || Box::new(EnergyAware::default()),
+            pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
+            requests: 72,
+            seed: 0x5CE2,
+        },
+        Scenario {
+            name: "diurnal-elastic-autoscaled",
+            cfg: elastic(None),
+            router: || Box::new(LeastLoaded),
+            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
+            requests: 160,
+            seed: 0x5CE3,
+        },
+        Scenario {
+            name: "diurnal-elastic-failures",
+            cfg: elastic(Some(FailureConfig { mtbf_s: 60.0, mttr_s: 15.0, seed: 0xFA11 })),
+            router: || Box::new(LeastLoaded),
+            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
+            requests: 160,
+            seed: 0x5CE3,
+        },
+    ]
+}
+
+/// Look one scenario up by name; the error lists what exists.
+pub fn by_name(gpu: &GpuSpec, name: &str) -> Result<Scenario> {
+    let names: Vec<&str> = all(gpu).iter().map(|s| s.name).collect();
+    all(gpu)
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown scenario {name:?} — available: {}", names.join(", ")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let scenarios = all(&gpu);
+        assert_eq!(scenarios.len(), 6);
+        for (i, a) in scenarios.iter().enumerate() {
+            for b in &scenarios[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+            assert_eq!(by_name(&gpu, a.name).unwrap().name, a.name);
+        }
+        let err = by_name(&gpu, "nope").unwrap_err().to_string();
+        assert!(err.contains("poisson-1rep-static"), "error must list scenarios: {err}");
+    }
+
+    #[test]
+    fn canonical_text_distinguishes_scenarios_and_is_stable() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let scenarios = all(&gpu);
+        let texts: Vec<String> = scenarios.iter().map(Scenario::canonical).collect();
+        for (i, a) in texts.iter().enumerate() {
+            assert_eq!(a, &all(&gpu)[i].canonical(), "canonical text must be deterministic");
+            for b in &texts[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        assert!(texts[0].contains("seed=0x5ce1"));
+    }
+}

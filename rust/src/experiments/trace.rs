@@ -1,0 +1,304 @@
+//! `ewatt trace` — replay a named scenario with tracing attached and
+//! leave auditable evidence behind.
+//!
+//! One invocation runs the scenario from
+//! [`crate::experiments::scenarios`] with a [`Recorder`] sink, then:
+//!
+//! 1. writes `traces.jsonl` (schema-versioned header + one span per
+//!    line, byte-deterministic under the scenario's fixed seed),
+//! 2. re-reads and validates the file it just wrote,
+//! 3. writes `manifest.json` with the config digest and an energy rollup
+//!    recomputed from the trace and cross-checked against the
+//!    [`crate::fleet::EnergyLedger`] totals to ≤ 1e-6,
+//! 4. renders a per-request waterfall, the top-K energy hogs, and the
+//!    metrics-registry dump to stdout.
+//!
+//! The rendering is derived *from the trace file's span stream*, not
+//! from engine internals — what you read is what the artifact proves.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context as _, Result};
+
+use crate::config::GpuSpec;
+use crate::experiments::scenarios::{self, Scenario};
+use crate::fleet::FleetOutcome;
+use crate::obs::{
+    fnv1a_64, trace_header, validate_trace_jsonl, write_trace_jsonl, MetricsRegistry, Recorder,
+    RunManifest, Span, SpanEvent,
+};
+use crate::util::cli::Args;
+use crate::util::json::JsonValue;
+
+/// Waterfall bar width, characters.
+const BAR_COLS: usize = 48;
+
+/// Everything one `ewatt trace` invocation produced.
+pub struct TraceRun {
+    pub outcome: FleetOutcome,
+    pub spans: Vec<Span>,
+    pub trace_path: PathBuf,
+    pub manifest_path: PathBuf,
+    /// Worst relative error of the manifest's energy rollup cross-check.
+    pub max_rel_err: f64,
+    /// The human-readable report (waterfall + hogs + metrics).
+    pub rendered: String,
+}
+
+/// CLI entry point: `ewatt trace <scenario> [--out DIR] [--top K]
+/// [--limit N]`.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let Some(name) = args.positional.first() else {
+        let names: Vec<&str> = scenarios::all(&gpu).iter().map(|s| s.name).collect();
+        bail!(
+            "usage: ewatt trace <scenario> [--out DIR] [--top K] [--limit N]\n\
+             scenarios: {}",
+            names.join(", ")
+        );
+    };
+    let out_dir = match args.get("out") {
+        Some(dir) => PathBuf::from(dir),
+        None => PathBuf::from("target/trace").join(name),
+    };
+    let top = args.get_usize("top", 10);
+    let limit = args.get_usize("limit", 24);
+    let run = execute(&gpu, name, &out_dir, top, limit)?;
+    println!("{}", run.rendered);
+    println!("trace:    {}", run.trace_path.display());
+    println!("manifest: {}", run.manifest_path.display());
+    Ok(())
+}
+
+/// Run one traced replay and write both artifacts into `out_dir`.
+pub fn execute(
+    gpu: &GpuSpec,
+    name: &str,
+    out_dir: &Path,
+    top: usize,
+    limit: usize,
+) -> Result<TraceRun> {
+    let sc = scenarios::by_name(gpu, name)?;
+    let suite = Scenario::suite();
+    let mut rec = Recorder::default();
+    let outcome = sc.run_traced(gpu, &suite, &mut rec)?;
+
+    let canonical = sc.canonical();
+    let digest = format!("{:#018x}", fnv1a_64(canonical.as_bytes()));
+    let header = trace_header(&format!("trace/{}", sc.name), sc.seed, &digest);
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let trace_path = out_dir.join("traces.jsonl");
+    write_trace_jsonl(&trace_path, &header, &rec.spans)?;
+
+    // Validate the artifact we just wrote, not the in-memory stream: the
+    // file is the evidence.
+    let body = std::fs::read_to_string(&trace_path)
+        .with_context(|| format!("reading back {}", trace_path.display()))?;
+    let parsed = validate_trace_jsonl(&body)
+        .with_context(|| format!("{} failed validation", trace_path.display()))?;
+    ensure!(
+        parsed == rec.spans.len(),
+        "trace file carries {parsed} spans, run emitted {}",
+        rec.spans.len()
+    );
+
+    let mut manifest = RunManifest::new(&format!("trace {}", sc.name), sc.seed);
+    manifest.set("scenario", JsonValue::String(sc.name.to_string()));
+    manifest.set_config_digest(&canonical);
+    manifest.set_outcome(&outcome);
+    let max_rel_err = manifest.set_energy_rollup(&outcome, &rec.spans)?;
+    let mut tf = BTreeMap::new();
+    tf.insert("file".to_string(), JsonValue::String("traces.jsonl".to_string()));
+    tf.insert("spans".to_string(), JsonValue::Number(rec.spans.len() as f64));
+    manifest.set("trace", JsonValue::Object(tf));
+    let manifest_path = manifest.write(out_dir, "manifest.json")?;
+
+    let rendered = render(&sc, &outcome, &rec.spans, top, limit, max_rel_err);
+    Ok(TraceRun { outcome, spans: rec.spans, trace_path, manifest_path, max_rel_err, rendered })
+}
+
+/// The full human-readable report, derived from the span stream alone.
+fn render(
+    sc: &Scenario,
+    outcome: &FleetOutcome,
+    spans: &[Span],
+    top: usize,
+    limit: usize,
+    max_rel_err: f64,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "scenario {}: served {} / makespan {:.2} s / {:.0} J total ({:.2} J/req) / \
+         {} spans / rollup err {max_rel_err:.1e}\n\n",
+        sc.name,
+        outcome.served,
+        outcome.makespan_s,
+        outcome.total_j(),
+        outcome.total_j() / (outcome.served.max(1) as f64),
+        spans.len(),
+    ));
+    out.push_str(&render_waterfall(outcome, spans, limit));
+    out.push('\n');
+    out.push_str(&render_hogs(outcome, spans, top));
+    out.push('\n');
+    let mut reg = MetricsRegistry::new();
+    for s in spans {
+        reg.observe(s);
+    }
+    out.push_str(&reg.render());
+    out
+}
+
+/// Per-request waterfall: `·` while queued/waiting, `█` while on a
+/// replica, one row per request in arrival order.
+fn render_waterfall(outcome: &FleetOutcome, spans: &[Span], limit: usize) -> String {
+    let n = outcome.joules.len();
+    let mut queued = vec![f64::NAN; n];
+    let mut admitted = vec![f64::NAN; n];
+    let mut served = vec![f64::NAN; n];
+    let mut tokens = vec![0usize; n];
+    for s in spans {
+        match &s.event {
+            SpanEvent::Queued { req, .. } => queued[*req] = s.t_s,
+            SpanEvent::Admitted { req, .. } => {
+                // Keep the *first* admission: crash-requeued requests are
+                // shown from their original wait onward.
+                if admitted[*req].is_nan() {
+                    admitted[*req] = s.t_s;
+                }
+            }
+            SpanEvent::Served { req, tokens: tok, .. } => {
+                served[*req] = s.t_s;
+                tokens[*req] = *tok;
+            }
+            _ => {}
+        }
+    }
+    let span_s = outcome.makespan_s.max(1e-9);
+    let col = |t: f64| (((t / span_s) * BAR_COLS as f64) as usize).min(BAR_COLS - 1);
+    let rows = n.min(limit);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "waterfall (first {rows} of {n} requests, {BAR_COLS} cols = makespan):\n"
+    ));
+    for req in 0..rows {
+        let (q, a, s) = (queued[req], admitted[req].max(queued[req]), served[req]);
+        let mut bar = vec![' '; BAR_COLS];
+        if q.is_finite() && s.is_finite() {
+            for c in bar.iter_mut().take(col(a)).skip(col(q)) {
+                *c = '·';
+            }
+            for c in bar.iter_mut().take(col(s) + 1).skip(col(a)) {
+                *c = '█';
+            }
+        }
+        out.push_str(&format!(
+            "  req {req:4} rep {} |{}| q {q:7.2}s  s {s:7.2}s  {:3} tok  {:8.2} J\n",
+            outcome.served_by[req],
+            bar.into_iter().collect::<String>(),
+            tokens[req],
+            outcome.joules[req],
+        ));
+    }
+    if n > rows {
+        out.push_str(&format!("  … {} more requests (raise --limit to show them)\n", n - rows));
+    }
+    out
+}
+
+/// Top-K requests by attributed total energy, from the
+/// `request_summary` spans.
+fn render_hogs(outcome: &FleetOutcome, spans: &[Span], top: usize) -> String {
+    let mut hogs: Vec<(usize, usize, &crate::fleet::attribution::PhaseEnergy)> = spans
+        .iter()
+        .filter_map(|s| match &s.event {
+            SpanEvent::RequestSummary { req, replica, energy } => Some((*req, *replica, energy)),
+            _ => None,
+        })
+        .collect();
+    hogs.sort_by(|a, b| b.2.total_j().total_cmp(&a.2.total_j()).then(a.0.cmp(&b.0)));
+    let k = hogs.len().min(top);
+    let mut out = String::new();
+    out.push_str(&format!("top {k} energy hogs (of {} requests):\n", hogs.len()));
+    out.push_str("   req  rep  prefill_j   decode_j  overhead_j    total_j  share\n");
+    let fleet_j = outcome.total_j().max(1e-12);
+    for &(req, rep, e) in hogs.iter().take(k) {
+        let overhead = e.switch_j + e.idle_j + e.coldstart_j;
+        out.push_str(&format!(
+            "  {req:4}  {rep:3}  {:9.2}  {:9.2}  {:10.2}  {:9.2}  {:4.1}%\n",
+            e.prefill_j,
+            e.decode_j,
+            overhead,
+            e.total_j(),
+            100.0 * e.total_j() / fleet_j,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ewatt-trace-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn execute_writes_validated_artifacts_and_renders() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let dir = tmp_dir("exec");
+        let run = execute(&gpu, "poisson-1rep-static", &dir, 5, 8).unwrap();
+        assert!(run.max_rel_err <= 1e-6);
+        assert_eq!(run.outcome.served, 48);
+        assert!(!run.spans.is_empty());
+        // Both artifacts exist and the manifest names the trace file.
+        let manifest = std::fs::read_to_string(&run.manifest_path).unwrap();
+        let m = JsonValue::parse(&manifest).unwrap();
+        assert_eq!(m.get("scenario").and_then(JsonValue::as_str), Some("poisson-1rep-static"));
+        assert_eq!(
+            m.get("trace").and_then(|t| t.get("file")).and_then(JsonValue::as_str),
+            Some("traces.jsonl")
+        );
+        assert_eq!(
+            m.get("outcome").and_then(|o| o.get("served")).and_then(JsonValue::as_usize),
+            Some(48)
+        );
+        // The report shows the truncation notice (limit 8 < 48 requests)
+        // and the hog table.
+        assert!(run.rendered.contains("… 40 more requests"));
+        assert!(run.rendered.contains("top 5 energy hogs"));
+        assert!(run.rendered.contains("counters:"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_seed_reruns_are_byte_identical() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let (d1, d2) = (tmp_dir("rep1"), tmp_dir("rep2"));
+        let a = execute(&gpu, "poisson-1rep-governed", &d1, 3, 4).unwrap();
+        let b = execute(&gpu, "poisson-1rep-governed", &d2, 3, 4).unwrap();
+        let t1 = std::fs::read(&a.trace_path).unwrap();
+        let t2 = std::fs::read(&b.trace_path).unwrap();
+        assert_eq!(t1, t2, "traces.jsonl must be byte-identical across same-seed runs");
+        let m1 = std::fs::read(&a.manifest_path).unwrap();
+        let m2 = std::fs::read(&b.manifest_path).unwrap();
+        assert_eq!(m1, m2, "manifests must be byte-identical across same-seed runs");
+        assert_eq!(a.rendered, b.rendered);
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn unknown_scenario_lists_the_registry() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let err = execute(&gpu, "no-such-scenario", &tmp_dir("bad"), 1, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("diurnal-elastic-failures"), "{err}");
+    }
+}

@@ -34,6 +34,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::{GpuSpec, ModelSpec, ModelTier};
 use crate::coordinator::dvfs_policy::DvfsPolicy;
+use crate::obs::span::{SpanEvent, Trace, TraceSink};
 use crate::serve::slo::{RecordSink, Slo, SloTracker};
 use crate::serve::traffic::Arrival;
 use crate::stats::exact_quantile;
@@ -365,7 +366,7 @@ impl FleetSim {
         arrivals: &[Arrival],
         router: &mut dyn FleetRouter,
     ) -> Result<FleetOutcome> {
-        self.run_with_selector(suite, arrivals, router, StepSelector::Indexed)
+        self.run_inner(suite, arrivals, router, StepSelector::Indexed, None)
     }
 
     /// [`Self::run`] with an explicit step-selection strategy. The
@@ -378,6 +379,33 @@ impl FleetSim {
         arrivals: &[Arrival],
         router: &mut dyn FleetRouter,
         selector: StepSelector,
+    ) -> Result<FleetOutcome> {
+        self.run_inner(suite, arrivals, router, selector, None)
+    }
+
+    /// [`Self::run`] with a [`TraceSink`] attached: every request-lifecycle
+    /// and engine event streams into `sink` as it happens, and one
+    /// `request_summary` span per request (its exact attributed
+    /// [`PhaseEnergy`] bill) is emitted at the makespan. The physics is
+    /// bit-identical to the untraced run — a sink only observes (pinned by
+    /// `rust/tests/obs_trace.rs`).
+    pub fn run_traced(
+        &self,
+        suite: &ReplaySuite,
+        arrivals: &[Arrival],
+        router: &mut dyn FleetRouter,
+        sink: &mut dyn TraceSink,
+    ) -> Result<FleetOutcome> {
+        self.run_inner(suite, arrivals, router, StepSelector::Indexed, Some(sink))
+    }
+
+    fn run_inner(
+        &self,
+        suite: &ReplaySuite,
+        arrivals: &[Arrival],
+        router: &mut dyn FleetRouter,
+        selector: StepSelector,
+        mut trace: Option<&mut dyn TraceSink>,
     ) -> Result<FleetOutcome> {
         let mut reps: Vec<Replica> = self
             .cfg
@@ -405,6 +433,7 @@ impl FleetSim {
                 ledger: &mut ledger,
                 tracker: &mut fleet_tracker,
                 lifecycle: &mut lifecycle,
+                trace: trace.as_mut().map(|s| &mut **s),
             },
             selector,
         )?;
@@ -474,6 +503,23 @@ impl FleetSim {
             out.breakdown.total_j(),
             out.total_j()
         );
+        // Final bills: one request_summary span per request, carrying its
+        // exact ledger account (amortized idle/cold-start shares included
+        // — they only exist after the finalize loop above, which is why
+        // these spans are stamped at the makespan rather than at serve
+        // time).
+        if let Some(sink) = trace {
+            for req in 0..arrivals.len() {
+                sink.emit(
+                    out.makespan_s,
+                    SpanEvent::RequestSummary {
+                        req,
+                        replica: out.served_by[req],
+                        energy: ledger.request(req),
+                    },
+                );
+            }
+        }
         Ok(out)
     }
 }
@@ -492,6 +538,10 @@ pub struct EngineCtx<'a> {
     pub ledger: &'a mut EnergyLedger,
     pub tracker: &'a mut SloTracker,
     pub lifecycle: &'a mut Lifecycle,
+    /// Optional span sink. `None` (the default on every pre-existing entry
+    /// point) keeps each emit site a single predicted branch; a sink only
+    /// observes, never feeds back into the physics.
+    pub trace: Option<&'a mut dyn TraceSink>,
 }
 
 /// How [`drive_with`] locates the earliest steppable replica.
@@ -537,7 +587,7 @@ pub fn drive_with(
     ctx: EngineCtx<'_>,
     selector: StepSelector,
 ) -> Result<Vec<usize>> {
-    let EngineCtx { suite, arrivals, router, max_batch, ledger, tracker, lifecycle } = ctx;
+    let EngineCtx { suite, arrivals, router, max_batch, ledger, tracker, lifecycle, trace } = ctx;
 
     // Arm the failure clocks of initially-live replicas.
     if let Some(fm) = lifecycle.failures.as_mut() {
@@ -557,6 +607,7 @@ pub fn drive_with(
         ledger,
         tracker,
         lifecycle,
+        trace: Trace::new(trace),
         indexed: selector == StepSelector::Indexed,
         queue: EventQueue::new(n),
         statuses: Vec::with_capacity(n),
@@ -619,6 +670,8 @@ struct Engine<'a> {
     ledger: &'a mut EnergyLedger,
     tracker: &'a mut SloTracker,
     lifecycle: &'a mut Lifecycle,
+    /// Span emission handle (disabled = one branch per emit site).
+    trace: Trace<'a>,
     /// `StepSelector::Indexed`: event queue + dirty-status caching +
     /// gap parallelism. Off, every structure below is bypassed in favor of
     /// full rescans (the reference semantics).
@@ -701,6 +754,8 @@ impl Engine<'_> {
         );
         reps[choice].enqueue_at(req, arrival, not_before_s);
         self.touched(reps, choice);
+        self.trace
+            .emit(arrival.t_s.max(not_before_s), || SpanEvent::Routed { req, replica: choice });
         choice
     }
 
@@ -715,6 +770,7 @@ impl Engine<'_> {
                     fm.arm(i, t_ev);
                 }
                 self.touched(reps, i);
+                self.trace.emit(t_ev, || SpanEvent::WarmDone { replica: i });
                 // Requests stranded by a crash while nothing was live route
                 // now, oldest (lowest request index) first.
                 while let Some(p) = self.lifecycle.pending.pop_front() {
@@ -735,6 +791,7 @@ impl Engine<'_> {
                     self.lifecycle.stats.recoveries += 1;
                     reps[i].start_warming(t_ev, &self.lifecycle.cold_start);
                     self.touched(reps, i);
+                    self.trace.emit(t_ev, || SpanEvent::Recovered { replica: i });
                 }
             }
             LifecycleEvent::Fail(i) => {
@@ -748,8 +805,13 @@ impl Engine<'_> {
                 let lost = reps[i].crash(t_ev);
                 self.lifecycle.stats.requeued += lost.len();
                 self.touched(reps, i);
+                self.trace.emit(t_ev, || SpanEvent::Failed { replica: i, lost: lost.len() });
                 let any_live = reps.iter().any(|r| r.state.routable());
                 for (req, arrival) in lost {
+                    // A requeue opens a new serving attempt: its timestamp
+                    // is the only point a request's span stream may rewind
+                    // to (the straddling step's events carry later times).
+                    self.trace.emit(t_ev, || SpanEvent::Requeued { req, replica: i });
                     if any_live {
                         // Through the router, original arrival timestamp,
                         // but no replica may start on it before the crash
@@ -803,11 +865,15 @@ impl Engine<'_> {
                         self.lifecycle.stats.scale_ups += 1;
                         self.ev_dirty = true;
                         self.touched(reps, i);
+                        self.trace
+                            .emit(t_s, || SpanEvent::ScaleUp { replica: i, cold_start: false });
                     } else if let Some(i) = cold {
                         reps[i].start_warming(t_s, &self.lifecycle.cold_start);
                         self.lifecycle.stats.scale_ups += 1;
                         self.ev_dirty = true;
                         self.touched(reps, i);
+                        self.trace
+                            .emit(t_s, || SpanEvent::ScaleUp { replica: i, cold_start: true });
                     } else {
                         break; // nothing healthy left to bring up
                     }
@@ -838,6 +904,7 @@ impl Engine<'_> {
                     self.lifecycle.stats.scale_downs += 1;
                     self.ev_dirty = true;
                     self.touched(reps, i);
+                    self.trace.emit(t_s, || SpanEvent::ScaleDown { replica: i });
                 }
             }
         }
@@ -856,6 +923,14 @@ impl Engine<'_> {
     /// replica index)` for the tracker) reproduce the sequential
     /// interleaving exactly.
     fn parallel_gap(&mut self, reps: &mut [Replica], t_step: f64, t_arr: f64) -> Result<bool> {
+        // Tracing forces sequential stepping: gap workers would have to
+        // merge their span streams, and replaying them is not worth the
+        // machinery — the physics of the two paths is already pinned
+        // bit-identical, so a traced run reproduces exactly the untraced
+        // numbers, just without the fan-out.
+        if self.trace.enabled() {
+            return Ok(false);
+        }
         let t_ev = if self.lifecycle.is_inert() {
             f64::INFINITY
         } else {
@@ -891,7 +966,9 @@ impl Engine<'_> {
             let mut sink = RecordLog { t: 0.0, records: Vec::new() };
             while rep.can_step() && rep.now_s < t_hi {
                 sink.t = rep.now_s;
-                if let Err(e) = rep.step(suite, max_batch, &mut out.charges, &mut sink) {
+                if let Err(e) =
+                    rep.step(suite, max_batch, &mut out.charges, &mut sink, &mut Trace::off())
+                {
                     out.err = Some((sink.t, e.to_string()));
                     break;
                 }
@@ -983,6 +1060,7 @@ impl Engine<'_> {
 
             if next < self.arrivals.len() && t_arr <= t_step {
                 let a = self.arrivals[next];
+                self.trace.emit(a.t_s, || SpanEvent::Queued { req: next, query_idx: a.query_idx });
                 if !self.lifecycle.is_inert() {
                     let pressure = self.tracker.pressure();
                     self.apply_autoscale(reps, a.t_s, pressure);
@@ -1028,7 +1106,14 @@ impl Engine<'_> {
                         .map(|(i, _)| i)
                         .unwrap()
                 };
-                reps[i].step(self.suite, self.max_batch, &mut *self.ledger, &mut *self.tracker)?;
+                self.trace.replica = i;
+                reps[i].step(
+                    self.suite,
+                    self.max_batch,
+                    &mut *self.ledger,
+                    &mut *self.tracker,
+                    &mut self.trace,
+                )?;
                 if reps[i].state == ReplicaState::Draining && !reps[i].runnable() {
                     reps[i].power_off_drained();
                 }

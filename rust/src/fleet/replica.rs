@@ -25,6 +25,7 @@ use crate::config::{FreqMHz, GpuSpec, ModelSpec, ModelTier};
 use crate::coordinator::dvfs_policy::{DvfsPolicy, Phase};
 use crate::engine::KvCacheManager;
 use crate::gpu::{GpuSim, TelemetryWindow};
+use crate::obs::span::{SpanEvent, Trace};
 use crate::perf::{decode_step_cost, prefill_cost};
 use crate::serve::governor::{governor_for, FreqGovernor, GovernorSignal};
 use crate::serve::slo::{RecordSink, Slo, SloTracker};
@@ -354,7 +355,13 @@ impl Replica {
 
     /// Apply a set-point change, charging the switch latency at idle power
     /// to the requests of the step that follows.
-    fn switch_to(&mut self, f: FreqMHz, beneficiaries: &[usize], ledger: &mut dyn EnergySink) {
+    fn switch_to(
+        &mut self,
+        f: FreqMHz,
+        beneficiaries: &[usize],
+        ledger: &mut dyn EnergySink,
+        trace: &mut Trace<'_>,
+    ) {
         let dt = self.gpu.set_freq(f);
         if dt > 0.0 {
             let e = dt * self.gpu.spec.p_idle_w;
@@ -364,6 +371,13 @@ impl Replica {
             self.switch_j += e;
             self.freq_switches += 1;
             ledger.charge_switch(beneficiaries, e);
+            let rep = trace.replica;
+            trace.emit(self.now_s, || SpanEvent::FreqSwitch {
+                replica: rep,
+                to_mhz: f,
+                joules: e,
+                beneficiaries: beneficiaries.to_vec(),
+            });
         }
     }
 
@@ -374,6 +388,7 @@ impl Replica {
         first_token_s: f64,
         tokens: usize,
         fleet: &mut dyn RecordSink,
+        trace: &mut Trace<'_>,
     ) {
         let ttft = first_token_s - arrival_s;
         let e2e = self.now_s - arrival_s;
@@ -384,6 +399,15 @@ impl Replica {
         self.served += 1;
         self.served_reqs.push(req);
         self.last_finish_s = self.now_s;
+        let rep = trace.replica;
+        trace.emit(self.now_s, || SpanEvent::Served {
+            req,
+            replica: rep,
+            ttft_s: ttft,
+            tbt_s: tbt,
+            e2e_s: e2e,
+            tokens,
+        });
     }
 
     /// Execute one unit of work: admit one queued request (its prefill
@@ -395,6 +419,7 @@ impl Replica {
         max_batch: usize,
         ledger: &mut dyn EnergySink,
         fleet: &mut dyn RecordSink,
+        trace: &mut Trace<'_>,
     ) -> Result<()> {
         debug_assert!(self.runnable(), "step() on an idle replica");
         if !self.queue.is_empty() && self.active.len() < max_batch {
@@ -404,7 +429,7 @@ impl Replica {
             // Reserve the full sequence (prompt + output budget) up front.
             if self.kv.admit(head.req as u64, input + q.output_tokens).is_ok() {
                 self.queue.pop_front();
-                return self.admit(head, input, suite, ledger, fleet);
+                return self.admit(head, input, suite, ledger, fleet, trace);
             }
             if self.active.is_empty() {
                 bail!(
@@ -418,7 +443,7 @@ impl Replica {
             }
             // KV full: fall through and decode until sequences release it.
         }
-        self.decode_step(ledger, fleet);
+        self.decode_step(ledger, fleet, trace);
         Ok(())
     }
 
@@ -430,25 +455,42 @@ impl Replica {
         suite: &ReplaySuite,
         ledger: &mut dyn EnergySink,
         fleet: &mut dyn RecordSink,
+        trace: &mut Trace<'_>,
     ) -> Result<()> {
         let q = &suite.queries[head.arrival.query_idx];
+        let rep = trace.replica;
+        trace.emit(self.now_s, || SpanEvent::Admitted { req: head.req, replica: rep });
         let sig = self.signal();
         let f = self.gov.decide(self.now_s, Phase::Prefill, &sig, &self.gpu.spec);
-        self.switch_to(f, &[head.req], ledger);
+        self.switch_to(f, &[head.req], ledger, trace);
+        trace.emit(self.now_s, || SpanEvent::PrefillStart {
+            req: head.req,
+            replica: rep,
+            freq_mhz: f,
+        });
         // Classification scores every answer option with its own forward
         // pass (log-likelihood mode); generation prefills once.
         let passes = if q.output_tokens == 0 { q.dataset.n_options() } else { 1 };
+        let mut prefill_j = 0.0;
         for _ in 0..passes {
             let r = self.gpu.execute(&prefill_cost(&self.spec.model, 1, input));
             self.now_s += r.latency_s;
             self.busy_s += r.latency_s;
             self.energy_j += r.energy_j;
+            prefill_j += r.energy_j;
             self.window.record(self.now_s, r.latency_s, r.energy_j);
             ledger.charge_prefill(head.req, r.energy_j);
         }
+        trace.emit(self.now_s, || SpanEvent::PrefillEnd {
+            req: head.req,
+            replica: rep,
+            freq_mhz: f,
+            passes,
+            joules: prefill_j,
+        });
         if q.output_tokens == 0 {
             // No decode phase: the request completes at prefill end.
-            self.complete(head.req, head.arrival.t_s, self.now_s, 0, fleet);
+            self.complete(head.req, head.arrival.t_s, self.now_s, 0, fleet, trace);
         } else {
             self.active.push(ActiveSeq {
                 req: head.req,
@@ -464,7 +506,12 @@ impl Replica {
     }
 
     /// One decode step for the whole running batch.
-    fn decode_step(&mut self, ledger: &mut dyn EnergySink, fleet: &mut dyn RecordSink) {
+    fn decode_step(
+        &mut self,
+        ledger: &mut dyn EnergySink,
+        fleet: &mut dyn RecordSink,
+        trace: &mut Trace<'_>,
+    ) {
         debug_assert!(!self.active.is_empty(), "decode with an empty batch");
         self.req_scratch.clear();
         self.req_scratch.extend(self.active.iter().map(|s| s.req));
@@ -473,7 +520,7 @@ impl Replica {
         // The scratch slice cannot stay borrowed across `&mut self` calls;
         // take it out and put it back (no allocation either way).
         let scratch = std::mem::take(&mut self.req_scratch);
-        self.switch_to(f, &scratch, ledger);
+        self.switch_to(f, &scratch, ledger, trace);
         let ctx = self.active.iter().map(|s| s.ctx).max().unwrap();
         let r = self.gpu.execute(&decode_step_cost(&self.spec.model, self.active.len(), ctx));
         self.now_s += r.latency_s;
@@ -483,6 +530,13 @@ impl Replica {
         self.decode_freq_dt += f as f64 * r.latency_s;
         self.decode_dt += r.latency_s;
         ledger.charge_decode(&scratch, r.energy_j);
+        let rep = trace.replica;
+        trace.emit(self.now_s, || SpanEvent::DecodeStep {
+            replica: rep,
+            freq_mhz: f,
+            batch: scratch.clone(),
+            joules: r.energy_j,
+        });
         self.req_scratch = scratch;
 
         let j_tok = r.energy_j / self.active.len() as f64;
@@ -507,7 +561,7 @@ impl Replica {
             }
         });
         for &(req, arrival_s, first_token_s, tokens) in &finished {
-            self.complete(req, arrival_s, first_token_s, tokens, fleet);
+            self.complete(req, arrival_s, first_token_s, tokens, fleet, trace);
         }
         self.finish_scratch = finished;
     }
@@ -561,7 +615,7 @@ mod tests {
         rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
         assert!(rep.runnable());
         while rep.runnable() {
-            rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+            rep.step(&suite, 4, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
         }
         rep.finalize(&mut ledger);
         assert_eq!(rep.served, 1);
@@ -582,7 +636,7 @@ mod tests {
         let mut ledger = EnergyLedger::new(1);
         let mut fleet = SloTracker::new(Slo::interactive());
         rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
-        rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+        rep.step(&suite, 4, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
         assert!(!rep.runnable());
         assert_eq!(rep.served, 1);
         assert_eq!(rep.tokens_out, 0);
@@ -601,7 +655,7 @@ mod tests {
         let expect_idle = 1.5 * rep.gpu.spec.p_idle_w;
         assert!((rep.idle_j - expect_idle).abs() < 1e-9);
         while rep.runnable() {
-            rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+            rep.step(&suite, 4, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
         }
         rep.finalize(&mut ledger);
         assert!((ledger.request(0).idle_j - expect_idle).abs() < 1e-9);
@@ -618,7 +672,7 @@ mod tests {
         rep.enqueue(2, Arrival { t_s: 0.75, query_idx: gen_idx[2] });
         // Admit two into the batch, leave one queued, decode a little.
         for _ in 0..5 {
-            rep.step(&suite, 2, &mut ledger, &mut fleet).unwrap();
+            rep.step(&suite, 2, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
         }
         assert!(rep.active_seqs() > 0 && rep.queue_depth() > 0);
         let spent = rep.energy_j;
@@ -660,7 +714,7 @@ mod tests {
         assert_eq!(rep.state, ReplicaState::Draining);
         assert!(rep.can_step(), "draining replica must finish its work");
         while rep.can_step() {
-            rep.step(&suite, 4, &mut ledger, &mut fleet).unwrap();
+            rep.step(&suite, 4, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
         }
         rep.power_off_drained();
         assert_eq!(rep.state, ReplicaState::Cold);

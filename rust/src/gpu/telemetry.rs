@@ -178,6 +178,23 @@ mod window_tests {
     }
 
     #[test]
+    fn sample_exactly_at_the_horizon_boundary_is_retained() {
+        // Eviction is strict (`t_end_s < cutoff`): a sample whose end time
+        // lands *exactly* horizon seconds before the newest sample is still
+        // inside the window. One ulp past the horizon evicts it.
+        let mut w = TelemetryWindow::new(1.0);
+        w.record(1.0, 0.1, 5.0);
+        w.record(2.0, 0.1, 7.0); // cutoff = 1.0 == first sample's t_end
+        assert_eq!(w.len(), 2, "boundary sample must survive");
+        assert!((w.energy_j() - 12.0).abs() < 1e-12);
+
+        let just_past = f64::from_bits(2.0f64.to_bits() + 1);
+        w.record(just_past, 0.1, 3.0); // cutoff now one ulp past 1.0
+        assert_eq!(w.len(), 2, "one ulp past the horizon must evict");
+        assert!((w.energy_j() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn busy_fraction_clamps_and_tracks_load() {
         let mut w = TelemetryWindow::new(1.0);
         assert_eq!(w.busy_fraction(), 0.0);

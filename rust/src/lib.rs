@@ -19,6 +19,8 @@
 //! - fleet serving: [`fleet`] (heterogeneous governed replica fleets with
 //!   difficulty- and energy-aware routing, and per-request energy
 //!   attribution — Section VII's routing × DVFS co-design run closed-loop)
+//! - observability: [`obs`] (deterministic request-span tracing, metrics
+//!   registry, and auditable `traces.jsonl` + manifest exporters)
 
 pub mod config;
 pub mod coordinator;
@@ -27,6 +29,7 @@ pub mod experiments;
 pub mod features;
 pub mod fleet;
 pub mod gpu;
+pub mod obs;
 pub mod perf;
 pub mod quality;
 pub mod runtime;

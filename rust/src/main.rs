@@ -13,8 +13,17 @@
 //! ewatt bench [--replicas 16] [--arrivals 1000000] [--iters 1] [--check]
 //!             [--min-speedup 3.0] [--json BENCH_engine.json]
 //!                                          # engine hot-path perf harness
+//! ewatt trace <scenario> [--out DIR] [--top K] [--limit N]
+//!                                          # traced scenario replay -> traces.jsonl + manifest
 //! ewatt info                              # testbed + model inventory
+//! ewatt help                              # full subcommand list
 //! ```
+//!
+//! Every report-producing subcommand run with `--out DIR` also writes a
+//! `manifest.json` there (seed, config digest, report inventory) so a
+//! results directory is self-describing.
+
+use std::path::Path;
 
 use anyhow::{bail, Context as _, Result};
 
@@ -22,8 +31,39 @@ use ewatt::config::model::paper_models;
 use ewatt::config::GpuSpec;
 use ewatt::coordinator::{DvfsPolicy, ServeConfig, Server};
 use ewatt::experiments::{run_all, run_figure, run_table, Context, Report};
-use ewatt::util::cli::Args;
+use ewatt::obs::RunManifest;
+use ewatt::util::cli::{usage, Args, CommandSpec};
 use ewatt::workload::ReplaySuite;
+
+/// Every subcommand, with the one-line description `ewatt help` (and any
+/// unknown subcommand) prints.
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec { name: "table", args: "<1..18>", help: "regenerate one paper table" },
+    CommandSpec { name: "figure", args: "<2..7>", help: "regenerate one paper figure" },
+    CommandSpec { name: "all", args: "", help: "every table and figure" },
+    CommandSpec { name: "sweep", args: "", help: "raw DVFS sweep cells as CSV" },
+    CommandSpec { name: "slo", args: "", help: "SLO-aware serving comparison" },
+    CommandSpec { name: "fleet", args: "", help: "heterogeneous governed fleet comparison" },
+    CommandSpec {
+        name: "autoscale",
+        args: "",
+        help: "elastic fleet: static-N vs autoscaled (+failures)",
+    },
+    CommandSpec { name: "ablation", args: "[name]", help: "component ablations (default: all)" },
+    CommandSpec { name: "serve", args: "", help: "serve a replay slice on the real PJRT tiny-LM" },
+    CommandSpec { name: "bench", args: "[--check]", help: "engine hot-path perf harness" },
+    CommandSpec {
+        name: "trace",
+        args: "<scenario>",
+        help: "traced scenario replay: traces.jsonl + manifest + waterfall",
+    },
+    CommandSpec { name: "info", args: "", help: "testbed + model inventory" },
+    CommandSpec { name: "help", args: "", help: "show this list" },
+];
+
+fn usage_text() -> String {
+    usage("ewatt", "--paper --seed N --queries N --out DIR", COMMANDS)
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -51,7 +91,33 @@ fn emit(reports: &[Report], args: &Args) -> Result<()> {
             eprintln!("wrote {}", p.display());
         }
     }
+    if let Some(dir) = args.get("out") {
+        let seed = args.get_u64("seed", 0xE1A5);
+        let mut m = RunManifest::new(&invocation(args), seed);
+        m.set_config_digest(&format!(
+            "command={}\npaper={}\nseed={seed:#x}\nqueries={}\n",
+            invocation(args),
+            args.has_flag("paper"),
+            args.get_usize("queries", 200),
+        ));
+        let inventory: Vec<(String, usize)> =
+            reports.iter().map(|r| (r.id.clone(), r.rows.len())).collect();
+        m.set_reports(&inventory);
+        let p = m.write(Path::new(dir), "manifest.json")?;
+        eprintln!("wrote {}", p.display());
+    }
     Ok(())
+}
+
+/// The subcommand plus its positionals, e.g. `table 11` — the manifest's
+/// `command` field.
+fn invocation(args: &Args) -> String {
+    let mut s = args.subcommand.clone().unwrap_or_default();
+    for p in &args.positional {
+        s.push(' ');
+        s.push_str(p);
+    }
+    s
 }
 
 fn run() -> Result<()> {
@@ -135,16 +201,17 @@ fn run() -> Result<()> {
             };
             engine_bench::run(&opts)
         }
+        Some("trace") => ewatt::experiments::trace::run_cli(&args),
         Some("info") => info(),
+        Some("help") => {
+            println!("{}", usage_text());
+            Ok(())
+        }
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
-            eprintln!(
-                "usage: ewatt <table N | figure N | all | sweep | slo | fleet | autoscale | \
-                 ablation [name] | serve | bench | info> \
-                 [--paper] [--seed N] [--queries N] [--out DIR]"
-            );
+            eprintln!("{}", usage_text());
             bail!("no subcommand")
         }
     }

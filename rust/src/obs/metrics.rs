@@ -1,0 +1,410 @@
+//! Static-key metrics registry fed by the span stream.
+//!
+//! Keys are enums, storage is fixed arrays — recording a counter is a
+//! bounds-check-free array index, and the whole registry lives in one
+//! allocation. Histograms reuse the P² streaming quantile estimators from
+//! [`crate::stats::descriptive`], so latency and energy distributions are
+//! available without retaining per-sample data.
+//!
+//! The registry is itself a [`TraceSink`]: attach it to a traced run to
+//! aggregate live, or replay a recorded span stream through
+//! [`MetricsRegistry::observe`] after the fact — both paths produce
+//! identical numbers because every metric is derived from spans alone.
+
+use crate::obs::span::{Span, SpanEvent, TraceSink};
+use crate::stats::descriptive::StreamingQuantiles;
+
+/// Monotone event counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    Queued,
+    Routed,
+    Requeued,
+    Admissions,
+    PrefillPasses,
+    DecodeSteps,
+    TokensOut,
+    Served,
+    FreqSwitches,
+    ScaleUps,
+    ColdStarts,
+    ScaleDowns,
+    WarmDones,
+    Failures,
+    Recoveries,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 15] = [
+        Counter::Queued,
+        Counter::Routed,
+        Counter::Requeued,
+        Counter::Admissions,
+        Counter::PrefillPasses,
+        Counter::DecodeSteps,
+        Counter::TokensOut,
+        Counter::Served,
+        Counter::FreqSwitches,
+        Counter::ScaleUps,
+        Counter::ColdStarts,
+        Counter::ScaleDowns,
+        Counter::WarmDones,
+        Counter::Failures,
+        Counter::Recoveries,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Counter::Queued => "queued",
+            Counter::Routed => "routed",
+            Counter::Requeued => "requeued",
+            Counter::Admissions => "admissions",
+            Counter::PrefillPasses => "prefill_passes",
+            Counter::DecodeSteps => "decode_steps",
+            Counter::TokensOut => "tokens_out",
+            Counter::Served => "served",
+            Counter::FreqSwitches => "freq_switches",
+            Counter::ScaleUps => "scale_ups",
+            Counter::ColdStarts => "cold_starts",
+            Counter::ScaleDowns => "scale_downs",
+            Counter::WarmDones => "warm_dones",
+            Counter::Failures => "failures",
+            Counter::Recoveries => "recoveries",
+        }
+    }
+}
+
+/// Last-write / running-delta values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Largest simulated timestamp observed so far.
+    SimTimeS,
+    /// Net autoscaler delta: scale-ups minus scale-downs.
+    LiveReplicaDelta,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 2] = [Gauge::SimTimeS, Gauge::LiveReplicaDelta];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Gauge::SimTimeS => "sim_time_s",
+            Gauge::LiveReplicaDelta => "live_replica_delta",
+        }
+    }
+}
+
+/// P²-backed streaming histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    TtftS,
+    TbtS,
+    E2eS,
+    PrefillJ,
+    DecodeStepJ,
+    ReqTotalJ,
+}
+
+impl Hist {
+    pub const ALL: [Hist; 6] =
+        [Hist::TtftS, Hist::TbtS, Hist::E2eS, Hist::PrefillJ, Hist::DecodeStepJ, Hist::ReqTotalJ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Hist::TtftS => "ttft_s",
+            Hist::TbtS => "tbt_s",
+            Hist::E2eS => "e2e_s",
+            Hist::PrefillJ => "prefill_j",
+            Hist::DecodeStepJ => "decode_step_j",
+            Hist::ReqTotalJ => "req_total_j",
+        }
+    }
+}
+
+/// Count/sum/min/max plus P² p50/p95/p99 over a stream of samples.
+#[derive(Debug)]
+pub struct HistP2 {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    quantiles: StreamingQuantiles,
+}
+
+impl Default for HistP2 {
+    fn default() -> HistP2 {
+        HistP2 {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            quantiles: StreamingQuantiles::new(),
+        }
+    }
+}
+
+impl HistP2 {
+    pub fn observe(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.quantiles.observe(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantiles.p50()
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantiles.p95()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantiles.p99()
+    }
+}
+
+/// Fixed-layout registry: every key is an enum discriminant, every store
+/// a direct array index.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: [u64; Counter::ALL.len()],
+    gauges: [f64; Gauge::ALL.len()],
+    hists: [HistP2; Hist::ALL.len()],
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: Counter) {
+        self.counters[c as usize] += 1;
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, n: u64) {
+        self.counters[c as usize] += n;
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    #[inline]
+    pub fn set_gauge(&mut self, g: Gauge, v: f64) {
+        self.gauges[g as usize] = v;
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+
+    #[inline]
+    pub fn record(&mut self, h: Hist, x: f64) {
+        self.hists[h as usize].observe(x);
+    }
+
+    pub fn hist(&self, h: Hist) -> &HistP2 {
+        &self.hists[h as usize]
+    }
+
+    /// Fold one span into the registry. [`TraceSink::emit`] delegates
+    /// here, so live aggregation and post-hoc replay agree exactly.
+    pub fn observe(&mut self, span: &Span) {
+        let t = self.gauge(Gauge::SimTimeS).max(span.t_s);
+        self.set_gauge(Gauge::SimTimeS, t);
+        match &span.event {
+            SpanEvent::Queued { .. } => self.inc(Counter::Queued),
+            SpanEvent::Routed { .. } => self.inc(Counter::Routed),
+            SpanEvent::Requeued { .. } => self.inc(Counter::Requeued),
+            SpanEvent::Admitted { .. } => self.inc(Counter::Admissions),
+            SpanEvent::PrefillStart { .. } => {}
+            SpanEvent::PrefillEnd { passes, joules, .. } => {
+                self.add(Counter::PrefillPasses, *passes as u64);
+                self.record(Hist::PrefillJ, *joules);
+            }
+            SpanEvent::DecodeStep { joules, .. } => {
+                self.inc(Counter::DecodeSteps);
+                self.record(Hist::DecodeStepJ, *joules);
+            }
+            SpanEvent::Served { ttft_s, tbt_s, e2e_s, tokens, .. } => {
+                self.inc(Counter::Served);
+                self.add(Counter::TokensOut, *tokens as u64);
+                self.record(Hist::TtftS, *ttft_s);
+                self.record(Hist::TbtS, *tbt_s);
+                self.record(Hist::E2eS, *e2e_s);
+            }
+            SpanEvent::FreqSwitch { .. } => self.inc(Counter::FreqSwitches),
+            SpanEvent::ScaleUp { cold_start, .. } => {
+                self.inc(Counter::ScaleUps);
+                if *cold_start {
+                    self.inc(Counter::ColdStarts);
+                }
+                let d = self.gauge(Gauge::LiveReplicaDelta) + 1.0;
+                self.set_gauge(Gauge::LiveReplicaDelta, d);
+            }
+            SpanEvent::ScaleDown { .. } => {
+                self.inc(Counter::ScaleDowns);
+                let d = self.gauge(Gauge::LiveReplicaDelta) - 1.0;
+                self.set_gauge(Gauge::LiveReplicaDelta, d);
+            }
+            SpanEvent::WarmDone { .. } => self.inc(Counter::WarmDones),
+            SpanEvent::Failed { .. } => self.inc(Counter::Failures),
+            SpanEvent::Recovered { .. } => self.inc(Counter::Recoveries),
+            SpanEvent::RequestSummary { energy, .. } => {
+                self.record(Hist::ReqTotalJ, energy.total_j());
+            }
+        }
+    }
+
+    /// Plain-text dump: counters, gauges, then histogram summaries, in
+    /// declaration order (deterministic).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("counters:\n");
+        for c in Counter::ALL {
+            out.push_str(&format!("  {:16} {}\n", c.label(), self.counter(c)));
+        }
+        out.push_str("gauges:\n");
+        for g in Gauge::ALL {
+            out.push_str(&format!("  {:16} {:.3}\n", g.label(), self.gauge(g)));
+        }
+        out.push_str("histograms (count / mean / p50 / p95 / p99 / max):\n");
+        for h in Hist::ALL {
+            let hist = self.hist(h);
+            if hist.count() == 0 {
+                out.push_str(&format!("  {:16} (empty)\n", h.label()));
+            } else {
+                out.push_str(&format!(
+                    "  {:16} {} / {:.4} / {:.4} / {:.4} / {:.4} / {:.4}\n",
+                    h.label(),
+                    hist.count(),
+                    hist.mean(),
+                    hist.p50(),
+                    hist.p95(),
+                    hist.p99(),
+                    hist.max(),
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl TraceSink for MetricsRegistry {
+    fn emit(&mut self, t_s: f64, event: SpanEvent) {
+        self.observe(&Span { t_s, event });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::attribution::PhaseEnergy;
+
+    #[test]
+    fn counters_and_gauges_track_events() {
+        let mut m = MetricsRegistry::new();
+        m.emit(1.0, SpanEvent::Queued { req: 0, query_idx: 0 });
+        m.emit(1.0, SpanEvent::Routed { req: 0, replica: 1 });
+        m.emit(2.0, SpanEvent::ScaleUp { replica: 2, cold_start: true });
+        m.emit(3.0, SpanEvent::ScaleUp { replica: 1, cold_start: false });
+        m.emit(4.0, SpanEvent::ScaleDown { replica: 2 });
+        assert_eq!(m.counter(Counter::Queued), 1);
+        assert_eq!(m.counter(Counter::Routed), 1);
+        assert_eq!(m.counter(Counter::ScaleUps), 2);
+        assert_eq!(m.counter(Counter::ColdStarts), 1);
+        assert_eq!(m.counter(Counter::ScaleDowns), 1);
+        assert_eq!(m.gauge(Gauge::LiveReplicaDelta), 1.0);
+        assert_eq!(m.gauge(Gauge::SimTimeS), 4.0);
+    }
+
+    #[test]
+    fn histograms_aggregate_served_and_energy() {
+        let mut m = MetricsRegistry::new();
+        for i in 0..100usize {
+            m.emit(
+                i as f64,
+                SpanEvent::Served {
+                    req: i,
+                    replica: 0,
+                    ttft_s: 0.1 + i as f64 * 1e-3,
+                    tbt_s: 0.01,
+                    e2e_s: 1.0,
+                    tokens: 8,
+                },
+            );
+            m.emit(
+                i as f64,
+                SpanEvent::RequestSummary {
+                    req: i,
+                    replica: 0,
+                    energy: PhaseEnergy { prefill_j: 1.0, ..Default::default() },
+                },
+            );
+        }
+        assert_eq!(m.counter(Counter::Served), 100);
+        assert_eq!(m.counter(Counter::TokensOut), 800);
+        let ttft = m.hist(Hist::TtftS);
+        assert_eq!(ttft.count(), 100);
+        assert!(ttft.min() >= 0.1 && ttft.max() <= 0.2);
+        assert!(ttft.p50() > 0.1 && ttft.p50() < 0.2);
+        assert!((m.hist(Hist::ReqTotalJ).mean() - 1.0).abs() < 1e-12);
+        let text = m.render();
+        assert!(text.contains("served"));
+        assert!(text.contains("ttft_s"));
+        assert!(text.contains("(empty)"), "decode hist should be empty: {text}");
+    }
+
+    #[test]
+    fn replay_of_recorded_spans_matches_live_aggregation() {
+        let spans = vec![
+            Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 0 } },
+            Span {
+                t_s: 0.5,
+                event: SpanEvent::DecodeStep {
+                    replica: 0,
+                    freq_mhz: 180,
+                    batch: vec![0],
+                    joules: 2.0,
+                },
+            },
+        ];
+        let mut live = MetricsRegistry::new();
+        for s in &spans {
+            live.emit(s.t_s, s.event.clone());
+        }
+        let mut replay = MetricsRegistry::new();
+        for s in &spans {
+            replay.observe(s);
+        }
+        assert_eq!(live.render(), replay.render());
+    }
+}

@@ -1,0 +1,21 @@
+//! Deterministic observability: request-span tracing, a static-key
+//! metrics registry, and auditable exporters (`traces.jsonl` + run
+//! manifests).
+//!
+//! The engine threads one optional [`TraceSink`] through a run
+//! ([`crate::fleet::EngineCtx::trace`]); everything else here is derived
+//! from the resulting span stream. All timestamps are simulated time, so
+//! fixed-seed traces are byte-reproducible — and with no sink attached
+//! the whole layer costs one predicted branch per emit site (pinned by
+//! the scenario snapshot and `ewatt bench --check`).
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use export::{
+    fnv1a_64, span_to_json, trace_header, trace_jsonl, validate_trace_jsonl, write_trace_jsonl,
+    RunManifest, MANIFEST_SCHEMA_VERSION, TRACE_SCHEMA_VERSION,
+};
+pub use metrics::{Counter, Gauge, Hist, HistP2, MetricsRegistry};
+pub use span::{NullSink, Recorder, Span, SpanEvent, Trace, TraceSink};

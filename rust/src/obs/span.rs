@@ -1,0 +1,242 @@
+//! Typed request-lifecycle and engine span events.
+//!
+//! Every observable moment of a fleet run — a request queueing, routing,
+//! admitting, prefilling, decoding, completing; a governor switching
+//! frequency; the autoscaler warming or draining a replica; a crash and
+//! its requeues — is one [`SpanEvent`] stamped with **simulated** time
+//! (never wall clock), so a traced run under a fixed seed reproduces its
+//! event stream byte-for-byte.
+//!
+//! The engine emits through a [`Trace`] handle holding an optional
+//! [`TraceSink`]. With no sink attached (the default on every existing
+//! entry point) each emit site is a single branch: the event constructor
+//! is a closure that never runs, so tracing costs nothing when disabled —
+//! the scenario snapshot and `ewatt bench --check` pin both the physics
+//! and the perf budget of that path.
+//!
+//! Timestamp contract (asserted by `rust/tests/proptest_invariants.rs`):
+//! per request, event timestamps are monotone non-decreasing within one
+//! serving attempt. A crash-requeue ([`SpanEvent::Requeued`]) starts a new
+//! attempt and may rewind the clock to the crash instant — a step that
+//! straddled the crash completes (and is charged) before the crash is
+//! processed, exactly as [`crate::fleet::Replica::crash`] documents — but
+//! every event of the new attempt is at or after the requeue timestamp.
+
+use crate::fleet::attribution::PhaseEnergy;
+
+/// One observable moment of a run: request lifecycle milestones plus
+/// engine-level governor/autoscaler/failure transitions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpanEvent {
+    /// A request entered the system (original arrival, never a requeue).
+    Queued { req: usize, query_idx: usize },
+    /// The router bound a request to a live replica.
+    Routed { req: usize, replica: usize },
+    /// A crash dropped an in-flight request; it re-enters routing with its
+    /// original arrival timestamp (`replica` is the replica that died).
+    Requeued { req: usize, replica: usize },
+    /// A replica popped the request off its admission queue.
+    Admitted { req: usize, replica: usize },
+    /// Prefill began at the governor's chosen set point.
+    PrefillStart { req: usize, replica: usize, freq_mhz: u32 },
+    /// Prefill finished: `passes` forward passes (one per answer option
+    /// for classification), `joules` their total measured energy.
+    PrefillEnd { req: usize, replica: usize, freq_mhz: u32, passes: usize, joules: f64 },
+    /// One batched decode step; `joules` splits equally across `batch`.
+    DecodeStep { replica: usize, freq_mhz: u32, batch: Vec<usize>, joules: f64 },
+    /// The request completed on `replica`.
+    Served { req: usize, replica: usize, ttft_s: f64, tbt_s: f64, e2e_s: f64, tokens: usize },
+    /// A DVFS transition: `joules` is the switch-latency energy, charged
+    /// to `beneficiaries` (the requests of the step that follows).
+    FreqSwitch { replica: usize, to_mhz: u32, joules: f64, beneficiaries: Vec<usize> },
+    /// The autoscaler brought capacity up: a drain rescue (`cold_start ==
+    /// false`, immediately live) or a cold start (warm-up scheduled).
+    ScaleUp { replica: usize, cold_start: bool },
+    /// The autoscaler began draining a replica.
+    ScaleDown { replica: usize },
+    /// A warm-up completed (`Warming → Live`).
+    WarmDone { replica: usize },
+    /// A replica crashed, dropping `lost` in-flight requests.
+    Failed { replica: usize, lost: usize },
+    /// A repair completed; the replica begins a fresh cold start.
+    Recovered { replica: usize },
+    /// Finalize-time bill: the request's exact attributed energy from the
+    /// [`crate::fleet::EnergyLedger`], including amortized idle and
+    /// cold-start shares. Emitted once per request at the run's makespan.
+    RequestSummary { req: usize, replica: usize, energy: PhaseEnergy },
+}
+
+impl SpanEvent {
+    /// Stable snake_case discriminant used by the `traces.jsonl` schema.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SpanEvent::Queued { .. } => "queued",
+            SpanEvent::Routed { .. } => "routed",
+            SpanEvent::Requeued { .. } => "requeued",
+            SpanEvent::Admitted { .. } => "admitted",
+            SpanEvent::PrefillStart { .. } => "prefill_start",
+            SpanEvent::PrefillEnd { .. } => "prefill_end",
+            SpanEvent::DecodeStep { .. } => "decode_step",
+            SpanEvent::Served { .. } => "served",
+            SpanEvent::FreqSwitch { .. } => "freq_switch",
+            SpanEvent::ScaleUp { .. } => "scale_up",
+            SpanEvent::ScaleDown { .. } => "scale_down",
+            SpanEvent::WarmDone { .. } => "warm_done",
+            SpanEvent::Failed { .. } => "failed",
+            SpanEvent::Recovered { .. } => "recovered",
+            SpanEvent::RequestSummary { .. } => "request_summary",
+        }
+    }
+
+    /// The request this event belongs to, if it is request-scoped.
+    /// `DecodeStep` spans a whole batch and reports `None`; use
+    /// [`SpanEvent::batch`] for its members.
+    pub fn req(&self) -> Option<usize> {
+        match *self {
+            SpanEvent::Queued { req, .. }
+            | SpanEvent::Routed { req, .. }
+            | SpanEvent::Requeued { req, .. }
+            | SpanEvent::Admitted { req, .. }
+            | SpanEvent::PrefillStart { req, .. }
+            | SpanEvent::PrefillEnd { req, .. }
+            | SpanEvent::Served { req, .. }
+            | SpanEvent::RequestSummary { req, .. } => Some(req),
+            _ => None,
+        }
+    }
+
+    /// The co-batched requests of a decode step (empty otherwise).
+    pub fn batch(&self) -> &[usize] {
+        match self {
+            SpanEvent::DecodeStep { batch, .. } => batch,
+            _ => &[],
+        }
+    }
+}
+
+/// One emitted event with its simulated timestamp, seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub t_s: f64,
+    pub event: SpanEvent,
+}
+
+/// Anything that can absorb the engine's span stream.
+///
+/// Implementations must be order-preserving observers: a sink never feeds
+/// back into the physics, so a traced run is bit-identical to an untraced
+/// one (pinned by `rust/tests/obs_trace.rs`).
+pub trait TraceSink {
+    fn emit(&mut self, t_s: f64, event: SpanEvent);
+}
+
+/// The zero-cost default: drops everything. Stands in for "tracing
+/// disabled" wherever an API requires a sink *value*; the engine itself
+/// prefers `Trace::off()`, which skips even the virtual call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn emit(&mut self, _t_s: f64, _event: SpanEvent) {}
+}
+
+/// Collects the full span stream in memory (exporters and tests).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub spans: Vec<Span>,
+}
+
+impl TraceSink for Recorder {
+    fn emit(&mut self, t_s: f64, event: SpanEvent) {
+        self.spans.push(Span { t_s, event });
+    }
+}
+
+/// The borrowed handle the engine threads through a run. `sink == None`
+/// makes every [`Trace::emit`] a single branch — the event closure (and
+/// any allocation inside it) never runs.
+pub struct Trace<'a> {
+    sink: Option<&'a mut dyn TraceSink>,
+    /// Index of the replica currently stepping — set by the engine before
+    /// each step so replica-internal emit sites can name themselves.
+    pub replica: usize,
+}
+
+impl<'a> Trace<'a> {
+    pub fn new(sink: Option<&'a mut dyn TraceSink>) -> Trace<'a> {
+        Trace { sink, replica: 0 }
+    }
+
+    /// A disabled handle (worker threads, single-replica test drivers).
+    pub fn off() -> Trace<'static> {
+        Trace { sink: None, replica: 0 }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit one event at simulated time `t_s`. The constructor closure is
+    /// only invoked when a sink is attached.
+    #[inline]
+    pub fn emit(&mut self, t_s: f64, event: impl FnOnce() -> SpanEvent) {
+        if let Some(sink) = self.sink.as_deref_mut() {
+            sink.emit(t_s, event());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_never_runs_the_constructor() {
+        let mut trace = Trace::off();
+        assert!(!trace.enabled());
+        trace.emit(0.0, || unreachable!("constructor must not run without a sink"));
+    }
+
+    #[test]
+    fn recorder_keeps_emission_order_and_timestamps() {
+        let mut rec = Recorder::default();
+        {
+            let mut trace = Trace::new(Some(&mut rec));
+            assert!(trace.enabled());
+            trace.emit(0.5, || SpanEvent::Queued { req: 0, query_idx: 3 });
+            trace.replica = 2;
+            let rep = trace.replica;
+            trace.emit(0.75, || SpanEvent::Admitted { req: 0, replica: rep });
+        }
+        assert_eq!(rec.spans.len(), 2);
+        assert_eq!(rec.spans[0].t_s, 0.5);
+        assert_eq!(rec.spans[0].event.kind(), "queued");
+        assert_eq!(rec.spans[1].event, SpanEvent::Admitted { req: 0, replica: 2 });
+    }
+
+    #[test]
+    fn req_and_batch_accessors() {
+        let served = SpanEvent::Served {
+            req: 7,
+            replica: 1,
+            ttft_s: 0.1,
+            tbt_s: 0.01,
+            e2e_s: 0.5,
+            tokens: 40,
+        };
+        assert_eq!(served.req(), Some(7));
+        assert!(served.batch().is_empty());
+        let step =
+            SpanEvent::DecodeStep { replica: 0, freq_mhz: 180, batch: vec![1, 2], joules: 3.0 };
+        assert_eq!(step.req(), None);
+        assert_eq!(step.batch(), &[1, 2]);
+        assert_eq!(step.kind(), "decode_step");
+    }
+
+    #[test]
+    fn null_sink_is_a_no_op() {
+        let mut sink = NullSink;
+        sink.emit(1.0, SpanEvent::WarmDone { replica: 0 });
+    }
+}

@@ -178,6 +178,7 @@ impl ServeSim {
                 ledger: &mut ledger,
                 tracker: &mut tracker,
                 lifecycle: &mut lifecycle,
+                trace: None,
             },
         )?;
         let [mut rep] = reps;

@@ -65,6 +65,36 @@ impl Args {
     }
 }
 
+/// One subcommand line for [`usage`]: name, argument sketch, one-line
+/// description.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub args: &'static str,
+    pub help: &'static str,
+}
+
+/// Render the full usage block: every subcommand on its own aligned line
+/// with its one-line description, so an unknown subcommand tells the user
+/// everything the binary can do.
+pub fn usage(program: &str, common: &str, commands: &[CommandSpec]) -> String {
+    let head = |c: &CommandSpec| {
+        if c.args.is_empty() {
+            c.name.to_string()
+        } else {
+            format!("{} {}", c.name, c.args)
+        }
+    };
+    let width = commands.iter().map(|c| head(c).len()).max().unwrap_or(0);
+    let mut out = format!("usage: {program} <command> [options]\n\ncommands:\n");
+    for c in commands {
+        out.push_str(&format!("  {:width$}  {}\n", head(c), c.help));
+    }
+    if !common.is_empty() {
+        out.push_str(&format!("\ncommon options: {common}\n"));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +131,23 @@ mod tests {
     #[should_panic(expected = "expects a number")]
     fn bad_number_panics() {
         parse("x --n abc").get_usize("n", 0);
+    }
+
+    #[test]
+    fn usage_lists_every_command_with_aligned_help() {
+        let commands = [
+            CommandSpec { name: "run", args: "<name>", help: "run one thing" },
+            CommandSpec { name: "longer-command", args: "", help: "do more" },
+        ];
+        let text = usage("tool", "--seed N", &commands);
+        assert!(text.starts_with("usage: tool <command>"));
+        assert!(text.contains("run <name>"));
+        assert!(text.contains("longer-command"));
+        assert!(text.contains("common options: --seed N"));
+        // Descriptions line up: both help strings start in the same column.
+        let col = |needle: &str| {
+            text.lines().find(|l| l.contains(needle)).unwrap().find(needle).unwrap()
+        };
+        assert_eq!(col("run one thing"), col("do more"));
     }
 }

@@ -1,0 +1,126 @@
+//! Integration pins for the observability layer.
+//!
+//! Three contracts, each checked against the real scenario registry:
+//!
+//! 1. **Tracing is an observer** — a traced run is bit-identical to an
+//!    untraced run of the same scenario (attaching a sink must never
+//!    perturb the physics).
+//! 2. **Traces are deterministic evidence** — two same-seed traced runs
+//!    emit identical span streams, and the rendered `traces.jsonl` is
+//!    byte-identical and self-validating.
+//! 3. **Manifests audit the ledger** — the per-phase/per-replica rollup
+//!    recomputed from `request_summary` spans matches the
+//!    `EnergyLedger` totals to ≤ 1e-6, and the metrics registry replayed
+//!    over the stream agrees with the outcome's counters exactly.
+
+use ewatt::config::GpuSpec;
+use ewatt::experiments::scenarios::{all as scenarios, Scenario};
+use ewatt::obs::{
+    trace_header, trace_jsonl, validate_trace_jsonl, Counter, Gauge, MetricsRegistry, Recorder,
+    RunManifest,
+};
+
+#[test]
+fn traced_runs_are_bit_identical_to_untraced() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = Scenario::suite();
+    for sc in scenarios(&gpu) {
+        let plain = sc.run(&gpu, &suite).unwrap();
+        let mut rec = Recorder::default();
+        let traced = sc.run_traced(&gpu, &suite, &mut rec).unwrap();
+        assert_eq!(plain.joules, traced.joules, "{}: tracing changed attribution", sc.name);
+        assert_eq!(plain.routed, traced.routed, "{}: tracing changed routing", sc.name);
+        assert_eq!(plain.served_by, traced.served_by, "{}", sc.name);
+        assert_eq!(
+            plain.energy_j.to_bits(),
+            traced.energy_j.to_bits(),
+            "{}: tracing changed active energy",
+            sc.name
+        );
+        assert_eq!(plain.makespan_s.to_bits(), traced.makespan_s.to_bits(), "{}", sc.name);
+        assert_eq!(plain.freq_switches, traced.freq_switches, "{}", sc.name);
+        assert!(!rec.spans.is_empty(), "{}: traced run emitted nothing", sc.name);
+    }
+}
+
+#[test]
+fn same_seed_traces_are_identical_and_jsonl_is_byte_deterministic() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = Scenario::suite();
+    for name in ["poisson-1rep-governed", "diurnal-elastic-autoscaled", "diurnal-elastic-failures"]
+    {
+        let sc = scenarios(&gpu).into_iter().find(|s| s.name == name).unwrap();
+        let mut a = Recorder::default();
+        let mut b = Recorder::default();
+        sc.run_traced(&gpu, &suite, &mut a).unwrap();
+        sc.run_traced(&gpu, &suite, &mut b).unwrap();
+        assert_eq!(a.spans, b.spans, "{name}: span streams diverged under a fixed seed");
+
+        let header = trace_header(name, sc.seed, "0x0");
+        let body = trace_jsonl(&header, &a.spans);
+        assert_eq!(body, trace_jsonl(&header, &b.spans), "{name}: jsonl not byte-identical");
+        let parsed = validate_trace_jsonl(&body).unwrap();
+        assert_eq!(parsed, a.spans.len(), "{name}: span count survived the round trip");
+    }
+
+    // The failure scenario must exercise the full event vocabulary.
+    let sc = scenarios(&gpu).into_iter().find(|s| s.name == "diurnal-elastic-failures").unwrap();
+    let mut rec = Recorder::default();
+    sc.run_traced(&gpu, &suite, &mut rec).unwrap();
+    for kind in
+        ["queued", "routed", "admitted", "served", "scale_up", "failed", "requeued", "recovered"]
+    {
+        assert!(
+            rec.spans.iter().any(|s| s.event.kind() == kind),
+            "failure scenario never emitted a {kind:?} span"
+        );
+    }
+}
+
+#[test]
+fn manifest_rollup_and_metrics_agree_with_the_outcome() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = Scenario::suite();
+    for sc in scenarios(&gpu) {
+        let mut rec = Recorder::default();
+        let outcome = sc.run_traced(&gpu, &suite, &mut rec).unwrap();
+
+        let mut manifest = RunManifest::new(&format!("trace {}", sc.name), sc.seed);
+        manifest.set_config_digest(&sc.canonical());
+        manifest.set_outcome(&outcome);
+        let max_rel = manifest.set_energy_rollup(&outcome, &rec.spans).unwrap();
+        assert!(max_rel <= 1e-6, "{}: rollup off by {max_rel:e}", sc.name);
+        assert!(manifest.get("energy_rollup").is_some());
+
+        let mut reg = MetricsRegistry::new();
+        for s in &rec.spans {
+            reg.observe(s);
+        }
+        let stats = &outcome.lifecycle;
+        assert_eq!(reg.counter(Counter::Queued), sc.requests as u64, "{}", sc.name);
+        assert_eq!(reg.counter(Counter::Served), outcome.served as u64, "{}", sc.name);
+        assert_eq!(reg.counter(Counter::Requeued), stats.requeued as u64, "{}", sc.name);
+        assert_eq!(reg.counter(Counter::Failures), stats.failures as u64, "{}", sc.name);
+        assert_eq!(reg.counter(Counter::Recoveries), stats.recoveries as u64, "{}", sc.name);
+        assert_eq!(reg.counter(Counter::ScaleUps), stats.scale_ups as u64, "{}", sc.name);
+        assert_eq!(reg.counter(Counter::ScaleDowns), stats.scale_downs as u64, "{}", sc.name);
+        assert_eq!(
+            reg.counter(Counter::FreqSwitches),
+            outcome.freq_switches as u64,
+            "{}",
+            sc.name
+        );
+        // Every request is admitted at least once, plus once more per requeue
+        // that reached a replica again.
+        assert!(reg.counter(Counter::Admissions) >= sc.requests as u64, "{}", sc.name);
+        // RequestSummary spans are stamped at the makespan, so the registry's
+        // sim-time gauge lands exactly there.
+        assert_eq!(
+            reg.gauge(Gauge::SimTimeS).to_bits(),
+            outcome.makespan_s.to_bits(),
+            "{}",
+            sc.name
+        );
+        assert_eq!(reg.hist(ewatt::obs::Hist::ReqTotalJ).count(), sc.requests as u64);
+    }
+}

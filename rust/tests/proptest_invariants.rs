@@ -777,6 +777,113 @@ fn prop_indexed_step_selector_matches_linear_reference() {
     }
 }
 
+/// Traced runs: across randomized elastic fleets (autoscaling + seeded
+/// failures), (a) the `request_summary` spans carry exactly the ledger's
+/// per-request bill and sum to the fleet total within 1e-6; (b) the active
+/// energy reconstructed from `prefill_end` + `decode_step` + `freq_switch`
+/// span joules equals the metered active energy within 1e-6; and (c) span
+/// timestamps are monotone non-decreasing per request within a serving
+/// attempt — only a crash `requeued` span may rewind the clock, and it
+/// resets the floor for the attempt that follows.
+#[test]
+fn prop_trace_spans_conserve_and_are_monotone() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::fleet::{ColdStart, FailureConfig, FleetConfig, FleetSim, LeastLoaded};
+    use ewatt::fleet::{ReactiveConfig, ReplicaSpec, ReplicaState};
+    use ewatt::obs::{Recorder, SpanEvent};
+    use ewatt::serve::TrafficPattern;
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..8u64 {
+        let mut rng = ewatt::rng(0x0B5E_2 ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let n = 2 + rng.gen_range(0, 3);
+        let tier = *rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8]);
+        let live = ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu));
+        let cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+            .reactive(ReactiveConfig {
+                max_live: n,
+                cooldown_s: 1.0 + rng.gen_f64() * 6.0,
+                ..ReactiveConfig::default()
+            })
+            .failures(FailureConfig {
+                mtbf_s: 8.0 + rng.gen_f64() * 30.0,
+                mttr_s: 2.0 + rng.gen_f64() * 10.0,
+                seed: case.wrapping_mul(3557),
+            })
+            .cold_start(ColdStart {
+                energy_j: 500.0 + rng.gen_f64() * 4000.0,
+                warmup_s: 1.0 + rng.gen_f64() * 8.0,
+            })
+            .build()
+            .unwrap();
+        let pattern = match rng.gen_range(0, 3) {
+            0 => TrafficPattern::Poisson { rps: 1.0 + rng.gen_f64() * 3.0 },
+            1 => TrafficPattern::Bursty { base_rps: 1.0, burst_rps: 6.0, mean_dwell_s: 2.0 },
+            _ => TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 20.0 },
+        };
+        let arrivals = pattern.generate(&suite, 20 + rng.gen_range(0, 40), case ^ 0x7A);
+        let sim = FleetSim::new(gpu.clone(), cfg);
+        let mut rec = Recorder::default();
+        let o = sim.run_traced(&suite, &arrivals, &mut LeastLoaded, &mut rec).unwrap();
+
+        // (a) one request_summary per request, each exactly the ledger bill.
+        let mut summed = 0.0;
+        let mut summaries = 0usize;
+        for s in &rec.spans {
+            if let SpanEvent::RequestSummary { req, energy, .. } = &s.event {
+                summaries += 1;
+                let rel = (energy.total_j() - o.joules[*req]).abs()
+                    / o.joules[*req].abs().max(1e-12);
+                assert!(rel <= 1e-6, "case {case} req {req}: span bill off by {rel:e}");
+                summed += energy.total_j();
+            }
+        }
+        assert_eq!(summaries, arrivals.len(), "case {case}: summary count");
+        let rel = (summed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel <= 1e-6, "case {case}: summary sum off by {rel:e}");
+
+        // (b) active energy reconstructed from span joules.
+        let mut active = 0.0;
+        for s in &rec.spans {
+            match &s.event {
+                SpanEvent::PrefillEnd { joules, .. }
+                | SpanEvent::DecodeStep { joules, .. }
+                | SpanEvent::FreqSwitch { joules, .. } => active += *joules,
+                _ => {}
+            }
+        }
+        let rel = (active - o.energy_j).abs() / o.energy_j.max(1e-12);
+        assert!(rel <= 1e-6, "case {case}: active reconstruction off by {rel:e}");
+
+        // (c) attempt-aware monotonicity per request.
+        let mut floor = vec![f64::NEG_INFINITY; arrivals.len()];
+        for s in &rec.spans {
+            if let SpanEvent::Requeued { req, .. } = &s.event {
+                // The only sanctioned rewind: a crash opens a new attempt.
+                floor[*req] = s.t_s;
+                continue;
+            }
+            let touched: Vec<usize> = match s.event.req() {
+                Some(r) => vec![r],
+                None => s.event.batch().to_vec(),
+            };
+            for r in touched {
+                assert!(
+                    s.t_s >= floor[r],
+                    "case {case} req {r}: {} at {} rewinds past {} without a requeue",
+                    s.event.kind(),
+                    s.t_s,
+                    floor[r]
+                );
+                floor[r] = s.t_s;
+            }
+        }
+    }
+}
+
 /// Streaming P² quantiles: every estimate is bracketed by the extremes of
 /// the observed stream (marker heights are clamped between their
 /// neighbors, so interior markers can never escape [min, max]).

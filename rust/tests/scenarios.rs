@@ -19,115 +19,21 @@
 //!
 //! CI runs this suite twice in sequence and diffs the outputs, so within
 //! one job the first run blesses and the second must reproduce it exactly.
+//!
+//! The scenario definitions themselves live in
+//! `ewatt::experiments::scenarios` (shared with `ewatt trace`); this file
+//! only pins their outcomes.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
-use ewatt::config::{GpuSpec, ModelTier};
-use ewatt::coordinator::DvfsPolicy;
-use ewatt::fleet::{
-    DifficultyTiered, EnergyAware, FailureConfig, FleetConfig, FleetOutcome, FleetRouter,
-    FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState, RoundRobin,
-};
-use ewatt::serve::TrafficPattern;
+use ewatt::config::GpuSpec;
+use ewatt::experiments::scenarios::{all as scenarios, Scenario};
+use ewatt::fleet::FleetOutcome;
 use ewatt::workload::ReplaySuite;
 
-/// One pinned scenario: name, fleet, router factory, traffic, request count.
-struct Scenario {
-    name: &'static str,
-    cfg: FleetConfig,
-    router: fn() -> Box<dyn FleetRouter>,
-    pattern: TrafficPattern,
-    requests: usize,
-    seed: u64,
-}
-
-fn scenarios(gpu: &GpuSpec) -> Vec<Scenario> {
-    let gov = DvfsPolicy::governed(gpu);
-    let stat = DvfsPolicy::Static(gpu.f_max_mhz);
-    let tiered = |n: usize, tier, p| {
-        FleetConfig::builder()
-            .replicas(n, ReplicaSpec::tiered(tier, p))
-            .build()
-            .unwrap()
-    };
-    let mixed = |p| {
-        FleetConfig::builder()
-            .replicas(2, ReplicaSpec::tiered(ModelTier::B3, p))
-            .replicas(2, ReplicaSpec::tiered(ModelTier::B14, p))
-            .build()
-            .unwrap()
-    };
-    let elastic = |failures: Option<FailureConfig>| {
-        let live = ReplicaSpec::tiered(ModelTier::B8, gov);
-        let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
-        let mut b = FleetConfig::builder()
-            .replica(live)
-            .replicas(2, cold)
-            .reactive(ReactiveConfig { min_live: 1, max_live: 3, ..ReactiveConfig::default() });
-        if let Some(f) = failures {
-            b = b.failures(f);
-        }
-        b.build().unwrap()
-    };
-    vec![
-        Scenario {
-            name: "poisson-1rep-static",
-            cfg: tiered(1, ModelTier::B8, stat),
-            router: || Box::new(RoundRobin::default()),
-            pattern: TrafficPattern::Poisson { rps: 1.5 },
-            requests: 48,
-            seed: 0x5CE1,
-        },
-        Scenario {
-            name: "poisson-1rep-governed",
-            cfg: tiered(1, ModelTier::B8, gov),
-            router: || Box::new(RoundRobin::default()),
-            pattern: TrafficPattern::Poisson { rps: 1.5 },
-            requests: 48,
-            seed: 0x5CE1,
-        },
-        Scenario {
-            name: "bursty-tiered-governed-difficulty",
-            cfg: mixed(gov),
-            router: || Box::new(DifficultyTiered::default()),
-            pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
-            requests: 72,
-            seed: 0x5CE2,
-        },
-        Scenario {
-            name: "bursty-tiered-static-energy-aware",
-            cfg: mixed(stat),
-            router: || Box::new(EnergyAware::default()),
-            pattern: TrafficPattern::Bursty { base_rps: 2.0, burst_rps: 8.0, mean_dwell_s: 3.0 },
-            requests: 72,
-            seed: 0x5CE2,
-        },
-        Scenario {
-            name: "diurnal-elastic-autoscaled",
-            cfg: elastic(None),
-            router: || Box::new(LeastLoaded),
-            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
-            requests: 160,
-            seed: 0x5CE3,
-        },
-        Scenario {
-            name: "diurnal-elastic-failures",
-            cfg: elastic(Some(FailureConfig { mtbf_s: 60.0, mttr_s: 15.0, seed: 0xFA11 })),
-            router: || Box::new(LeastLoaded),
-            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
-            requests: 160,
-            seed: 0x5CE3,
-        },
-    ]
-}
-
 fn run_scenario(gpu: &GpuSpec, suite: &ReplaySuite, sc: &Scenario) -> FleetOutcome {
-    let arrivals = sc.pattern.generate(suite, sc.requests, sc.seed);
-    let mut router = (sc.router)();
-    FleetSim::new(gpu.clone(), sc.cfg.clone())
-        .run(suite, &arrivals, router.as_mut())
-        .unwrap_or_else(|e| panic!("{}: {e}", sc.name))
+    sc.run(gpu, suite).unwrap_or_else(|e| panic!("{}: {e}", sc.name))
 }
 
 /// The pinned observables of one run, one text line per scenario.
@@ -192,7 +98,7 @@ fn lines_match(stored: &str, fresh: &str) -> std::result::Result<(), String> {
 #[test]
 fn golden_scenarios_are_deterministic_and_match_snapshots() {
     let gpu = GpuSpec::rtx_pro_6000();
-    let suite = ReplaySuite::quick(17, 24);
+    let suite = Scenario::suite();
     let mut lines = Vec::new();
     for sc in scenarios(&gpu) {
         // Hard determinism pin: two in-process runs must agree bit-for-bit
@@ -254,7 +160,7 @@ fn golden_scenarios_are_deterministic_and_match_snapshots() {
 #[test]
 fn scenario_relationships_hold() {
     let gpu = GpuSpec::rtx_pro_6000();
-    let suite = ReplaySuite::quick(17, 24);
+    let suite = Scenario::suite();
     let all = scenarios(&gpu);
     let by_name = |n: &str| all.iter().find(|s| s.name == n).unwrap();
 
