@@ -18,7 +18,7 @@ use crate::fleet::{
     DifficultyTiered, EnergyAware, FailureConfig, FleetConfig, FleetOutcome, FleetRouter,
     FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState, RoundRobin,
 };
-use crate::obs::TraceSink;
+use crate::obs::{TimelineSampler, TraceSink};
 use crate::serve::traffic::Arrival;
 use crate::serve::TrafficPattern;
 use crate::workload::ReplaySuite;
@@ -67,6 +67,23 @@ impl Scenario {
         let mut router = (self.router)();
         FleetSim::new(gpu.clone(), self.cfg.clone())
             .run_traced(suite, &arrivals, router.as_mut(), sink)
+            .with_context(|| format!("scenario {}", self.name))
+    }
+
+    /// Replay the scenario with both a [`TraceSink`] and a heartbeat
+    /// [`TimelineSampler`] attached. Physics is bit-identical to
+    /// [`Scenario::run`] (pinned by `rust/tests/obs_trace.rs`).
+    pub fn run_observed(
+        &self,
+        gpu: &GpuSpec,
+        suite: &ReplaySuite,
+        sink: &mut dyn TraceSink,
+        timeline: &mut TimelineSampler,
+    ) -> Result<FleetOutcome> {
+        let arrivals = self.arrivals(suite);
+        let mut router = (self.router)();
+        FleetSim::new(gpu.clone(), self.cfg.clone())
+            .run_observed(suite, &arrivals, router.as_mut(), sink, timeline)
             .with_context(|| format!("scenario {}", self.name))
     }
 

@@ -35,6 +35,7 @@ use anyhow::{bail, ensure, Result};
 use crate::config::{GpuSpec, ModelSpec, ModelTier};
 use crate::coordinator::dvfs_policy::DvfsPolicy;
 use crate::obs::span::{SpanEvent, Trace, TraceSink};
+use crate::obs::timeline::TimelineSampler;
 use crate::serve::slo::{RecordSink, Slo, SloTracker};
 use crate::serve::traffic::Arrival;
 use crate::stats::exact_quantile;
@@ -366,7 +367,7 @@ impl FleetSim {
         arrivals: &[Arrival],
         router: &mut dyn FleetRouter,
     ) -> Result<FleetOutcome> {
-        self.run_inner(suite, arrivals, router, StepSelector::Indexed, None)
+        self.run_inner(suite, arrivals, router, StepSelector::Indexed, None, None)
     }
 
     /// [`Self::run`] with an explicit step-selection strategy. The
@@ -380,7 +381,7 @@ impl FleetSim {
         router: &mut dyn FleetRouter,
         selector: StepSelector,
     ) -> Result<FleetOutcome> {
-        self.run_inner(suite, arrivals, router, selector, None)
+        self.run_inner(suite, arrivals, router, selector, None, None)
     }
 
     /// [`Self::run`] with a [`TraceSink`] attached: every request-lifecycle
@@ -396,7 +397,23 @@ impl FleetSim {
         router: &mut dyn FleetRouter,
         sink: &mut dyn TraceSink,
     ) -> Result<FleetOutcome> {
-        self.run_inner(suite, arrivals, router, StepSelector::Indexed, Some(sink))
+        self.run_inner(suite, arrivals, router, StepSelector::Indexed, Some(sink), None)
+    }
+
+    /// [`Self::run_traced`] with a heartbeat [`TimelineSampler`] attached
+    /// as well: the engine emits one gauge row per cadence boundary into
+    /// `timeline` (flushed through the makespan before this returns).
+    /// Like tracing, the sampler only observes — the physics stays
+    /// bit-identical to [`Self::run`] (pinned by `rust/tests/obs_trace.rs`).
+    pub fn run_observed(
+        &self,
+        suite: &ReplaySuite,
+        arrivals: &[Arrival],
+        router: &mut dyn FleetRouter,
+        sink: &mut dyn TraceSink,
+        timeline: &mut TimelineSampler,
+    ) -> Result<FleetOutcome> {
+        self.run_inner(suite, arrivals, router, StepSelector::Indexed, Some(sink), Some(timeline))
     }
 
     fn run_inner(
@@ -406,6 +423,7 @@ impl FleetSim {
         router: &mut dyn FleetRouter,
         selector: StepSelector,
         mut trace: Option<&mut dyn TraceSink>,
+        mut timeline: Option<&mut TimelineSampler>,
     ) -> Result<FleetOutcome> {
         let mut reps: Vec<Replica> = self
             .cfg
@@ -434,9 +452,18 @@ impl FleetSim {
                 tracker: &mut fleet_tracker,
                 lifecycle: &mut lifecycle,
                 trace: trace.as_mut().map(|s| &mut **s),
+                timeline: timeline.as_deref_mut(),
             },
             selector,
         )?;
+
+        // Flush the heartbeat through the makespan before finalize mutates
+        // the replicas (the last rows must show end-of-run serving state,
+        // not post-finalize bookkeeping).
+        if let Some(tl) = timeline.as_deref_mut() {
+            let makespan = reps.iter().map(|r| r.last_finish_s).fold(0.0f64, f64::max);
+            tl.finish(makespan, &reps);
+        }
 
         let mut out = FleetOutcome {
             served: 0,
@@ -542,6 +569,11 @@ pub struct EngineCtx<'a> {
     /// point) keeps each emit site a single predicted branch; a sink only
     /// observes, never feeds back into the physics.
     pub trace: Option<&'a mut dyn TraceSink>,
+    /// Optional fixed-cadence heartbeat sampler. `None` (the default)
+    /// costs one branch per loop iteration; attached, the engine emits
+    /// one gauge row per cadence boundary. Like `trace`, a sampler only
+    /// observes — it never feeds back into the physics.
+    pub timeline: Option<&'a mut TimelineSampler>,
 }
 
 /// How [`drive_with`] locates the earliest steppable replica.
@@ -587,7 +619,17 @@ pub fn drive_with(
     ctx: EngineCtx<'_>,
     selector: StepSelector,
 ) -> Result<Vec<usize>> {
-    let EngineCtx { suite, arrivals, router, max_batch, ledger, tracker, lifecycle, trace } = ctx;
+    let EngineCtx {
+        suite,
+        arrivals,
+        router,
+        max_batch,
+        ledger,
+        tracker,
+        lifecycle,
+        trace,
+        timeline,
+    } = ctx;
 
     // Arm the failure clocks of initially-live replicas.
     if let Some(fm) = lifecycle.failures.as_mut() {
@@ -608,6 +650,7 @@ pub fn drive_with(
         tracker,
         lifecycle,
         trace: Trace::new(trace),
+        timeline,
         indexed: selector == StepSelector::Indexed,
         queue: EventQueue::new(n),
         statuses: Vec::with_capacity(n),
@@ -672,6 +715,9 @@ struct Engine<'a> {
     lifecycle: &'a mut Lifecycle,
     /// Span emission handle (disabled = one branch per emit site).
     trace: Trace<'a>,
+    /// Heartbeat sampler ticked at the top of the event loop (disabled =
+    /// one branch per iteration).
+    timeline: Option<&'a mut TimelineSampler>,
     /// `StepSelector::Indexed`: event queue + dirty-status caching +
     /// gap parallelism. Off, every structure below is bypassed in favor of
     /// full rescans (the reference semantics).
@@ -927,8 +973,10 @@ impl Engine<'_> {
         // merge their span streams, and replaying them is not worth the
         // machinery — the physics of the two paths is already pinned
         // bit-identical, so a traced run reproduces exactly the untraced
-        // numbers, just without the fan-out.
-        if self.trace.enabled() {
+        // numbers, just without the fan-out. A heartbeat sampler likewise:
+        // boundaries inside the gap must observe the fleet between
+        // sequential steps, which the fan-out skips past.
+        if self.trace.enabled() || self.timeline.is_some() {
             return Ok(false);
         }
         let t_ev = if self.lifecycle.is_inert() {
@@ -1047,6 +1095,26 @@ impl Engine<'_> {
             // fleet is not crashed/recovered forever after.
             if !t_arr.is_finite() && !t_step.is_finite() && self.lifecycle.pending.is_empty() {
                 break;
+            }
+
+            // Heartbeat: before dispatching anything at `t_next`, emit
+            // every pending cadence boundary strictly below it. A sample
+            // at boundary `b` therefore reflects the fleet after all
+            // events at times `<= b` (events exactly at `b` dispatch
+            // before `b` is flushed by the first strictly-later `t_next`;
+            // the run's tail is flushed by `finish` in `run_inner`).
+            if self.timeline.is_some() {
+                let t_ev = if self.lifecycle.is_inert() {
+                    f64::INFINITY
+                } else {
+                    self.next_event(reps).map_or(f64::INFINITY, |(t, _)| t)
+                };
+                let t_next = t_step.min(t_arr).min(t_ev);
+                if t_next.is_finite() {
+                    if let Some(tl) = self.timeline.as_deref_mut() {
+                        tl.advance_to(t_next, reps);
+                    }
+                }
             }
 
             if !self.lifecycle.is_inert() {

@@ -227,6 +227,22 @@ impl Replica {
         }
     }
 
+    /// Current SM set point, MHz (the governed decode frequency).
+    pub fn freq_mhz(&self) -> crate::config::FreqMHz {
+        self.gpu.freq()
+    }
+
+    /// Fraction of KV-cache capacity currently committed to admitted
+    /// sequences, in `[0, 1]`.
+    pub fn kv_used_frac(&self) -> f64 {
+        self.kv.used_bytes() as f64 / self.kv.capacity_bytes().max(1) as f64
+    }
+
+    /// Mean power over the replica's telemetry window, watts.
+    pub fn window_power_w(&self) -> f64 {
+        self.window.mean_power_w()
+    }
+
     /// Router-facing snapshot.
     pub fn status(&self, idx: usize) -> ReplicaStatus {
         ReplicaStatus {

@@ -13,8 +13,11 @@
 //! ewatt bench [--replicas 16] [--arrivals 1000000] [--iters 1] [--check]
 //!             [--min-speedup 3.0] [--json BENCH_engine.json]
 //!                                          # engine hot-path perf harness
-//! ewatt trace <scenario> [--out DIR] [--top K] [--limit N]
-//!                                          # traced scenario replay -> traces.jsonl + manifest
+//! ewatt trace <scenario> [--out DIR] [--top K] [--limit N] [--cadence S]
+//!                                          # traced scenario replay -> traces.jsonl +
+//!                                          # timeline.jsonl + manifest (+ alert replay)
+//! ewatt diff <run_a> <run_b> [--out DIR] [--min-decode-share X]
+//!                                          # compare two trace runs -> delta table + diff.json
 //! ewatt info                              # testbed + model inventory
 //! ewatt help                              # full subcommand list
 //! ```
@@ -55,7 +58,12 @@ const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "trace",
         args: "<scenario>",
-        help: "traced scenario replay: traces.jsonl + manifest + waterfall",
+        help: "traced scenario replay: traces.jsonl + timeline.jsonl + manifest + waterfall",
+    },
+    CommandSpec {
+        name: "diff",
+        args: "<run_a> <run_b>",
+        help: "compare two trace runs: energy/latency deltas + diff.json",
     },
     CommandSpec { name: "info", args: "", help: "testbed + model inventory" },
     CommandSpec { name: "help", args: "", help: "show this list" },
@@ -202,6 +210,7 @@ fn run() -> Result<()> {
             engine_bench::run(&opts)
         }
         Some("trace") => ewatt::experiments::trace::run_cli(&args),
+        Some("diff") => ewatt::obs::diff::run_cli(&args),
         Some("info") => info(),
         Some("help") => {
             println!("{}", usage_text());

@@ -1,0 +1,492 @@
+//! SLO burn-rate and fleet-health alerting over the observability stream.
+//!
+//! A rule engine that replays a run's evidence — the span stream from
+//! [`crate::obs::Recorder`] plus the heartbeat rows from
+//! [`crate::obs::TimelineSampler`] — and reports where operator-visible
+//! thresholds were crossed. Four rules:
+//!
+//! - [`AlertRule::SloBurnRate`] — over a sliding window of completions,
+//!   the fraction of requests violating the SLO, divided by the error
+//!   budget, exceeded the burn-rate threshold (the multi-window burn-rate
+//!   alerting idiom from SRE practice, applied to simulated time).
+//! - [`AlertRule::FreqFlapping`] — a replica's governor reversed
+//!   direction (up→down→up…) too many times inside a window sized from
+//!   the hysteresis dwell, i.e. the high/low-water band is too narrow for
+//!   the workload and the governor is paying switch energy for nothing.
+//! - [`AlertRule::QueueGrowth`] — the fleet-wide admission queue grew
+//!   monotonically across consecutive heartbeats to a non-trivial depth:
+//!   offered load is outrunning capacity faster than scaling reacts.
+//! - [`AlertRule::ConservationDrift`] — the finalize-time per-request
+//!   energy bills ([`SpanEvent::RequestSummary`]) no longer sum to the
+//!   ledger's total: an accounting bug, never a workload property. This
+//!   rule firing on a clean run is a test failure
+//!   (`rust/tests/obs_trace.rs` pins it to zero).
+//!
+//! Evaluation is a pure function of its inputs — no clocks, no RNG — so
+//! the firing list is deterministic and byte-stable in the manifest.
+//! Rules fire on the *rising edge*: a condition that stays bad for a
+//! thousand samples yields one firing when it becomes bad, not a
+//! thousand, until it clears and trips again.
+
+use crate::obs::export::{num, obj, text, uint, RunManifest};
+use crate::obs::span::{Span, SpanEvent};
+use crate::obs::timeline::TimelineRow;
+use crate::serve::governor::GovernorConfig;
+use crate::serve::slo::Slo;
+use crate::util::json::JsonValue;
+
+/// Which rule fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AlertRule {
+    SloBurnRate,
+    FreqFlapping,
+    QueueGrowth,
+    ConservationDrift,
+}
+
+impl AlertRule {
+    /// Stable snake_case discriminant used by the manifest schema.
+    pub fn label(self) -> &'static str {
+        match self {
+            AlertRule::SloBurnRate => "slo_burn_rate",
+            AlertRule::FreqFlapping => "freq_flapping",
+            AlertRule::QueueGrowth => "queue_growth",
+            AlertRule::ConservationDrift => "conservation_drift",
+        }
+    }
+}
+
+/// One rising-edge firing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertFiring {
+    pub rule: AlertRule,
+    /// Simulated time the condition became true, seconds.
+    pub t_s: f64,
+    /// The replica at fault, for per-replica rules.
+    pub replica: Option<usize>,
+    /// The measured value that crossed the threshold (burn rate,
+    /// reversal count, queue depth, relative drift).
+    pub value: f64,
+    pub message: String,
+}
+
+/// Thresholds for [`evaluate`]. The defaults are tuned so the clean
+/// golden scenarios fire nothing (pinned by `rust/tests/obs_trace.rs`);
+/// [`AlertConfig::for_governor`] derives the flap window from the
+/// governor's actual dwell so the rule tracks the hysteresis band it
+/// polices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertConfig {
+    /// Sliding window for the burn-rate rule, seconds.
+    pub burn_window_s: f64,
+    /// Fire when `violation_rate / error_budget` exceeds this.
+    pub burn_threshold: f64,
+    /// Tolerated SLO-violation fraction (e.g. 0.01 = 99% target).
+    pub error_budget: f64,
+    /// Minimum violations in-window before the burn rule may fire —
+    /// keeps one unlucky request in a thin window from paging.
+    pub burn_min_violations: usize,
+    /// Sliding window for counting governor direction reversals, seconds.
+    pub flap_window_s: f64,
+    /// Reversals in-window that count as flapping.
+    pub flap_reversals: usize,
+    /// Consecutive heartbeats of strict fleet-queue growth to fire.
+    pub queue_window: usize,
+    /// The grown-to depth must also reach this for the rule to matter.
+    pub queue_min_depth: usize,
+    /// Relative error between Σ request bills and the ledger total.
+    pub conservation_tol: f64,
+}
+
+impl Default for AlertConfig {
+    fn default() -> AlertConfig {
+        AlertConfig {
+            burn_window_s: 30.0,
+            burn_threshold: 2.0,
+            error_budget: 0.01,
+            burn_min_violations: 3,
+            // 20 dwell periods at the default governor dwell (0.25 s).
+            flap_window_s: 5.0,
+            flap_reversals: 4,
+            queue_window: 6,
+            queue_min_depth: 8,
+            conservation_tol: 1e-6,
+        }
+    }
+}
+
+impl AlertConfig {
+    /// Size the flapping window from the governor the run actually used:
+    /// 20 dwell periods, so "reversals per window" measures how often the
+    /// governor changed its mind relative to how often it was *allowed* to.
+    pub fn for_governor(gov: &GovernorConfig) -> AlertConfig {
+        AlertConfig { flap_window_s: 20.0 * gov.dwell_s, ..AlertConfig::default() }
+    }
+}
+
+/// Replay the evidence and return every rising-edge firing, sorted by
+/// `(t_s, rule, replica)`. Pure and deterministic: same inputs, same
+/// firings, byte-for-byte.
+pub fn evaluate(
+    spans: &[Span],
+    rows: &[TimelineRow],
+    slo: &Slo,
+    ledger_total_j: f64,
+    cfg: &AlertConfig,
+) -> Vec<AlertFiring> {
+    let mut firings = Vec::new();
+    burn_rate(spans, slo, cfg, &mut firings);
+    freq_flapping(spans, cfg, &mut firings);
+    queue_growth(rows, cfg, &mut firings);
+    conservation(spans, ledger_total_j, cfg, &mut firings);
+    firings.sort_by(|a, b| {
+        a.t_s
+            .total_cmp(&b.t_s)
+            .then_with(|| a.rule.cmp(&b.rule))
+            .then_with(|| a.replica.cmp(&b.replica))
+    });
+    firings
+}
+
+/// Sliding-window SLO burn rate over completions. Each `served` span is
+/// a sample; it violates when TTFT or end-to-end latency exceeds its SLO
+/// bound. At each completion we look back `burn_window_s` and fire
+/// (rising edge) when the in-window violation rate burns budget faster
+/// than `burn_threshold`×.
+fn burn_rate(spans: &[Span], slo: &Slo, cfg: &AlertConfig, out: &mut Vec<AlertFiring>) {
+    // (t_s, violated) per completion, in emission (= time) order.
+    let served: Vec<(f64, bool)> = spans
+        .iter()
+        .filter_map(|s| match s.event {
+            SpanEvent::Served { ttft_s, e2e_s, .. } => {
+                Some((s.t_s, ttft_s > slo.ttft_p95_s || e2e_s > slo.e2e_p99_s))
+            }
+            _ => None,
+        })
+        .collect();
+    let mut lo = 0usize;
+    let mut in_window_violations = 0usize;
+    let mut firing = false;
+    for hi in 0..served.len() {
+        in_window_violations += usize::from(served[hi].1);
+        while served[lo].0 < served[hi].0 - cfg.burn_window_s {
+            in_window_violations -= usize::from(served[lo].1);
+            lo += 1;
+        }
+        let total = hi - lo + 1;
+        let burn = in_window_violations as f64 / total as f64 / cfg.error_budget;
+        let bad = burn > cfg.burn_threshold && in_window_violations >= cfg.burn_min_violations;
+        if bad && !firing {
+            out.push(AlertFiring {
+                rule: AlertRule::SloBurnRate,
+                t_s: served[hi].0,
+                replica: None,
+                value: burn,
+                message: format!(
+                    "burn rate {burn:.1}x: {in_window_violations}/{total} requests violated \
+                     the SLO in the last {:.0}s (budget {:.2}%)",
+                    cfg.burn_window_s,
+                    cfg.error_budget * 100.0
+                ),
+            });
+        }
+        firing = bad;
+    }
+}
+
+/// Count governor direction reversals per replica inside a sliding
+/// window. A reversal is an up-switch following a down-switch or vice
+/// versa; same-direction steps (a governor walking multiple bins) are
+/// not reversals.
+fn freq_flapping(spans: &[Span], cfg: &AlertConfig, out: &mut Vec<AlertFiring>) {
+    // Reversal instants per replica: the time of a switch whose direction
+    // opposed the previous switch's.
+    let mut reversals: Vec<(usize, Vec<f64>)> = Vec::new();
+    // (replica, current set point, direction of the last switch).
+    let mut last: Vec<(usize, u32, Option<i8>)> = Vec::new();
+    for s in spans {
+        if let SpanEvent::FreqSwitch { replica, to_mhz, .. } = s.event {
+            match last.iter_mut().find(|(r, _, _)| *r == replica) {
+                Some((_, mhz, dir)) => {
+                    let d: i8 = if to_mhz > *mhz { 1 } else { -1 };
+                    if dir.is_some_and(|prev| prev != d) {
+                        match reversals.iter_mut().find(|(r, _)| *r == replica) {
+                            Some((_, v)) => v.push(s.t_s),
+                            None => reversals.push((replica, vec![s.t_s])),
+                        }
+                    }
+                    *mhz = to_mhz;
+                    *dir = Some(d);
+                }
+                // First observed switch has no direction history.
+                None => last.push((replica, to_mhz, None)),
+            }
+        }
+    }
+    reversals.sort_by_key(|(r, _)| *r);
+    for (replica, times) in reversals {
+        let mut lo = 0usize;
+        let mut firing = false;
+        for hi in 0..times.len() {
+            while times[lo] < times[hi] - cfg.flap_window_s {
+                lo += 1;
+            }
+            let n = hi - lo + 1;
+            let bad = n >= cfg.flap_reversals;
+            if bad && !firing {
+                out.push(AlertFiring {
+                    rule: AlertRule::FreqFlapping,
+                    t_s: times[hi],
+                    replica: Some(replica),
+                    value: n as f64,
+                    message: format!(
+                        "replica {replica}: {n} governor direction reversals in \
+                         {:.2}s — hysteresis band too narrow for this workload",
+                        cfg.flap_window_s
+                    ),
+                });
+            }
+            firing = bad;
+        }
+    }
+}
+
+/// Fleet-wide queue depth growing strictly across `queue_window`
+/// consecutive heartbeats, ending at a depth worth paging about.
+fn queue_growth(rows: &[TimelineRow], cfg: &AlertConfig, out: &mut Vec<AlertFiring>) {
+    let mut run = 1usize; // length of the current strict-growth streak
+    let mut firing = false;
+    for i in 1..rows.len() {
+        if rows[i].queue_depth > rows[i - 1].queue_depth {
+            run += 1;
+        } else {
+            run = 1;
+        }
+        let bad = run >= cfg.queue_window && rows[i].queue_depth >= cfg.queue_min_depth;
+        if bad && !firing {
+            out.push(AlertFiring {
+                rule: AlertRule::QueueGrowth,
+                t_s: rows[i].t_s,
+                replica: None,
+                value: rows[i].queue_depth as f64,
+                message: format!(
+                    "fleet queue grew for {run} consecutive heartbeats to depth {} — \
+                     offered load is outrunning capacity",
+                    rows[i].queue_depth
+                ),
+            });
+        }
+        firing = bad;
+    }
+}
+
+/// Σ finalize-time request bills must equal the ledger total. Drift is a
+/// bookkeeping bug in the simulator, so the rule fires at the makespan
+/// (the summaries' shared timestamp) with the relative error as value.
+fn conservation(
+    spans: &[Span],
+    ledger_total_j: f64,
+    cfg: &AlertConfig,
+    out: &mut Vec<AlertFiring>,
+) {
+    let mut billed = 0.0f64;
+    let mut t_last = 0.0f64;
+    let mut any = false;
+    for s in spans {
+        if let SpanEvent::RequestSummary { ref energy, .. } = s.event {
+            billed += energy.total_j();
+            t_last = s.t_s;
+            any = true;
+        }
+    }
+    if !any {
+        return;
+    }
+    let rel = (billed - ledger_total_j).abs() / ledger_total_j.max(f64::MIN_POSITIVE);
+    if rel > cfg.conservation_tol {
+        out.push(AlertFiring {
+            rule: AlertRule::ConservationDrift,
+            t_s: t_last,
+            replica: None,
+            value: rel,
+            message: format!(
+                "request bills sum to {billed:.6} J but the ledger holds \
+                 {ledger_total_j:.6} J (rel err {rel:.3e}) — energy accounting bug"
+            ),
+        });
+    }
+}
+
+fn firing_json(f: &AlertFiring) -> JsonValue {
+    let mut fields = vec![
+        ("rule", text(f.rule.label())),
+        ("t_s", num(f.t_s)),
+        ("value", num(f.value)),
+        ("message", text(&f.message)),
+    ];
+    if let Some(r) = f.replica {
+        fields.push(("replica", uint(r)));
+    }
+    obj(fields)
+}
+
+impl RunManifest {
+    /// Record the alert evaluation in the manifest: a count plus the full
+    /// firing list, so a clean run auditable as `"alerts":{"count":0,...}`
+    /// and a dirty one carries its evidence.
+    pub fn set_alerts(&mut self, firings: &[AlertFiring]) {
+        self.set(
+            "alerts",
+            obj(vec![
+                ("count", uint(firings.len())),
+                ("firings", JsonValue::Array(firings.iter().map(firing_json).collect())),
+            ]),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeline::TimelineRow;
+
+    fn served(t_s: f64, e2e_s: f64) -> Span {
+        Span {
+            t_s,
+            event: SpanEvent::Served {
+                req: 0,
+                replica: 0,
+                ttft_s: 0.01,
+                tbt_s: 0.005,
+                e2e_s,
+                tokens: 8,
+            },
+        }
+    }
+
+    fn switch(t_s: f64, to_mhz: u32) -> Span {
+        Span {
+            t_s,
+            event: SpanEvent::FreqSwitch { replica: 0, to_mhz, joules: 0.1, beneficiaries: vec![] },
+        }
+    }
+
+    fn queue_row(t_s: f64, depth: usize) -> TimelineRow {
+        TimelineRow {
+            t_s,
+            live: 1,
+            queue_depth: depth,
+            active_seqs: 0,
+            served: 0,
+            power_w: 0.0,
+            replicas: vec![],
+        }
+    }
+
+    fn slo() -> Slo {
+        Slo { ttft_p95_s: 1.0, tbt_p95_s: 0.1, e2e_p99_s: 2.0 }
+    }
+
+    #[test]
+    fn clean_stream_fires_nothing() {
+        let spans: Vec<Span> = (0..40).map(|i| served(i as f64, 0.5)).collect();
+        let rows: Vec<TimelineRow> = (0..20).map(|i| queue_row(i as f64 * 0.5, 1)).collect();
+        let f = evaluate(&spans, &rows, &slo(), 0.0, &AlertConfig::default());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn burn_rate_fires_once_per_rising_edge() {
+        // 10 good completions, then a sustained run of violations: one
+        // firing at the edge, not one per bad request.
+        let mut spans: Vec<Span> = (0..10).map(|i| served(i as f64, 0.5)).collect();
+        spans.extend((10..20).map(|i| served(i as f64, 5.0)));
+        let f = evaluate(&spans, &[], &slo(), 0.0, &AlertConfig::default());
+        let burns: Vec<_> = f.iter().filter(|f| f.rule == AlertRule::SloBurnRate).collect();
+        assert_eq!(burns.len(), 1, "{f:?}");
+        // Third violation (min_violations) lands at t=12.
+        assert_eq!(burns[0].t_s, 12.0);
+        assert!(burns[0].value > 2.0);
+        // A fourth identical evaluation is byte-deterministic.
+        assert_eq!(f, evaluate(&spans, &[], &slo(), 0.0, &AlertConfig::default()));
+    }
+
+    #[test]
+    fn flapping_counts_reversals_not_switches() {
+        // A governor walking steadily down never reverses: silent.
+        let down: Vec<Span> =
+            (0..10).map(|i| switch(i as f64 * 0.3, 2000 - 100 * i as u32)).collect();
+        let f = evaluate(&down, &[], &slo(), 0.0, &AlertConfig::default());
+        assert!(f.iter().all(|f| f.rule != AlertRule::FreqFlapping), "{f:?}");
+        // Oscillating inside the window trips the rule, attributed to the
+        // replica.
+        let flap: Vec<Span> = (0..10)
+            .map(|i| switch(i as f64 * 0.3, if i % 2 == 0 { 2000 } else { 1500 }))
+            .collect();
+        let f = evaluate(&flap, &[], &slo(), 0.0, &AlertConfig::default());
+        let flaps: Vec<_> = f.iter().filter(|f| f.rule == AlertRule::FreqFlapping).collect();
+        assert_eq!(flaps.len(), 1, "{f:?}");
+        assert_eq!(flaps[0].replica, Some(0));
+        assert!(flaps[0].value >= 4.0);
+    }
+
+    #[test]
+    fn queue_growth_needs_sustained_strict_growth() {
+        // Sawtooth never sustains: silent.
+        let saw: Vec<TimelineRow> =
+            (0..30).map(|i| queue_row(i as f64 * 0.5, if i % 2 == 0 { 2 } else { 9 })).collect();
+        let f = evaluate(&[], &saw, &slo(), 0.0, &AlertConfig::default());
+        assert!(f.is_empty(), "{f:?}");
+        // Monotone growth to a real depth fires once.
+        let grow: Vec<TimelineRow> = (0..12).map(|i| queue_row(i as f64 * 0.5, i + 1)).collect();
+        let f = evaluate(&[], &grow, &slo(), 0.0, &AlertConfig::default());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, AlertRule::QueueGrowth);
+        assert!(f[0].value >= 8.0);
+    }
+
+    #[test]
+    fn conservation_drift_detects_a_tampered_ledger() {
+        use crate::fleet::attribution::PhaseEnergy;
+        let bill = PhaseEnergy {
+            prefill_j: 1.0,
+            decode_j: 2.0,
+            switch_j: 0.0,
+            idle_j: 0.5,
+            coldstart_j: 0.0,
+        };
+        let spans = vec![Span {
+            t_s: 10.0,
+            event: SpanEvent::RequestSummary { req: 0, replica: 0, energy: bill },
+        }];
+        // Matching ledger: silent.
+        let f = evaluate(&spans, &[], &slo(), 3.5, &AlertConfig::default());
+        assert!(f.is_empty(), "{f:?}");
+        // Tampered ledger: fires with the relative error as evidence.
+        let f = evaluate(&spans, &[], &slo(), 3.6, &AlertConfig::default());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, AlertRule::ConservationDrift);
+        assert!(f[0].value > 1e-3);
+        assert_eq!(f[0].t_s, 10.0);
+    }
+
+    #[test]
+    fn manifest_records_firings_deterministically() {
+        let mut m = RunManifest::new("unit", 0x5CE1);
+        m.set_alerts(&[AlertFiring {
+            rule: AlertRule::QueueGrowth,
+            t_s: 3.0,
+            replica: None,
+            value: 9.0,
+            message: "queue".into(),
+        }]);
+        let j = m.to_json();
+        let alerts = j.get("alerts").unwrap();
+        assert_eq!(alerts.get("count").unwrap().as_usize(), Some(1));
+        let fir = &alerts.get("firings").unwrap().as_array().unwrap()[0];
+        assert_eq!(fir.get("rule").unwrap().as_str(), Some("queue_growth"));
+        // Empty evaluation renders the auditable zero.
+        m.set_alerts(&[]);
+        assert_eq!(m.to_json().get("alerts").unwrap().get("count").unwrap().as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,584 @@
+//! `ewatt diff`: attribute the energy/latency delta between two runs.
+//!
+//! The paper's central claims are *comparative* — governed DVFS vs a
+//! static pin, one replica vs a fleet, one workload mix vs another. The
+//! evidence layer already makes each run auditable (`traces.jsonl` +
+//! `manifest.json`); this module makes a *pair* of runs auditable: it
+//! loads both artifact directories, recomputes per-phase and per-replica
+//! energy from the finalize-time request bills, and attributes the
+//! ΔJ/req and Δlatency between them across phases
+//! (prefill/decode/switch/idle/coldstart), replicas, and decode
+//! frequency regimes.
+//!
+//! Everything is recomputed from the spans — the manifest is used for
+//! identity (seed, config digest) and cross-checks only — so `ewatt
+//! diff` catches a manifest that disagrees with its own trace. Diffing a
+//! run against itself yields exact `0.0` deltas (same floats subtracted),
+//! which CI uses as a smoke test, and `--min-decode-share` turns the
+//! attribution into an assertion: the governed-vs-static comparison must
+//! attribute at least that fraction of the energy delta to the decode
+//! phase, or the command fails.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context as _, Result};
+
+use crate::obs::export::{num, obj, text, uint, validate_trace_jsonl};
+use crate::stats::exact_quantile;
+use crate::util::cli::Args;
+use crate::util::json::JsonValue;
+
+/// Version of the `diff.json` field layout.
+pub const DIFF_SCHEMA_VERSION: u64 = 1;
+
+/// Per-phase J/req totals (numerators are sums over `request_summary`
+/// bills; the caller divides by request count).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTotals {
+    pub prefill_j: f64,
+    pub decode_j: f64,
+    pub switch_j: f64,
+    pub idle_j: f64,
+    pub coldstart_j: f64,
+}
+
+impl PhaseTotals {
+    pub fn total_j(&self) -> f64 {
+        self.prefill_j + self.decode_j + self.switch_j + self.idle_j + self.coldstart_j
+    }
+
+    /// `(label, value)` in the fixed phase order every table uses.
+    fn named(&self) -> [(&'static str, f64); 5] {
+        [
+            ("prefill", self.prefill_j),
+            ("decode", self.decode_j),
+            ("switch", self.switch_j),
+            ("idle", self.idle_j),
+            ("coldstart", self.coldstart_j),
+        ]
+    }
+}
+
+/// Everything `diff` needs from one run directory, recomputed from the
+/// validated trace.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub dir: PathBuf,
+    /// Header identity: run label, hex seed, config digest.
+    pub run: String,
+    pub seed: String,
+    pub config_digest: String,
+    /// Requests billed at finalize (== requests in the run).
+    pub requests: usize,
+    /// Completions observed as `served` spans.
+    pub served: usize,
+    pub makespan_s: f64,
+    pub freq_switches: usize,
+    /// Σ per-request bills by phase (the ledger total, reattributed).
+    pub phase: PhaseTotals,
+    /// Σ billed joules per replica.
+    pub per_replica: BTreeMap<usize, f64>,
+    /// Measured decode energy by SM frequency: `mhz → (steps, joules)`.
+    pub decode_by_freq: BTreeMap<u32, (usize, f64)>,
+    /// Completion latencies for exact quantiles.
+    pub ttft_s: Vec<f64>,
+    pub e2e_s: Vec<f64>,
+    /// Alert firings recorded in the manifest (0 when absent).
+    pub alerts: usize,
+}
+
+impl RunSummary {
+    pub fn j_per_req(&self) -> f64 {
+        self.phase.total_j() / self.requests.max(1) as f64
+    }
+
+    pub fn ttft_p95_s(&self) -> f64 {
+        exact_quantile(&self.ttft_s, 0.95)
+    }
+
+    pub fn e2e_p99_s(&self) -> f64 {
+        exact_quantile(&self.e2e_s, 0.99)
+    }
+}
+
+/// Load and summarize one run directory (`traces.jsonl` + `manifest.json`,
+/// as written by `ewatt trace`). The trace is re-validated line-by-line;
+/// a directory holding a tampered or foreign file is an error, not a
+/// garbage table.
+pub fn load_run(dir: &Path) -> Result<RunSummary> {
+    let trace_path = dir.join("traces.jsonl");
+    let body = std::fs::read_to_string(&trace_path)
+        .with_context(|| format!("reading {}", trace_path.display()))?;
+    validate_trace_jsonl(&body)
+        .with_context(|| format!("validating {}", trace_path.display()))?;
+
+    let manifest_path = dir.join("manifest.json");
+    let manifest_text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let manifest = JsonValue::parse(manifest_text.trim_end())
+        .map_err(|e| anyhow::anyhow!("{}: {e}", manifest_path.display()))?;
+
+    let mut lines = body.lines();
+    let header = JsonValue::parse(lines.next().context("empty trace")?)
+        .map_err(|e| anyhow::anyhow!("trace header: {e}"))?;
+    let header_str = |key: &str| {
+        header.get(key).and_then(JsonValue::as_str).unwrap_or("?").to_string()
+    };
+
+    let mut out = RunSummary {
+        dir: dir.to_path_buf(),
+        run: header_str("run"),
+        seed: header_str("seed"),
+        config_digest: manifest
+            .get("config")
+            .and_then(|c| c.get("digest"))
+            .and_then(JsonValue::as_str)
+            .unwrap_or("?")
+            .to_string(),
+        requests: 0,
+        served: 0,
+        makespan_s: 0.0,
+        freq_switches: 0,
+        phase: PhaseTotals::default(),
+        per_replica: BTreeMap::new(),
+        decode_by_freq: BTreeMap::new(),
+        ttft_s: Vec::new(),
+        e2e_s: Vec::new(),
+        alerts: manifest
+            .get("alerts")
+            .and_then(|a| a.get("count"))
+            .and_then(JsonValue::as_usize)
+            .unwrap_or(0),
+    };
+
+    let f = |v: &JsonValue, key: &str| v.get(key).and_then(JsonValue::as_f64).unwrap_or(0.0);
+    for line in lines {
+        // Already validated above: parse cannot fail here.
+        let v = JsonValue::parse(line).map_err(|e| anyhow::anyhow!("span line: {e}"))?;
+        let t_s = f(&v, "t_s");
+        out.makespan_s = out.makespan_s.max(t_s);
+        match v.get("kind").and_then(JsonValue::as_str).unwrap_or("") {
+            "served" => {
+                out.served += 1;
+                out.ttft_s.push(f(&v, "ttft_s"));
+                out.e2e_s.push(f(&v, "e2e_s"));
+            }
+            "decode_step" => {
+                let mhz = f(&v, "freq_mhz") as u32;
+                let slot = out.decode_by_freq.entry(mhz).or_insert((0, 0.0));
+                slot.0 += 1;
+                slot.1 += f(&v, "joules");
+            }
+            "freq_switch" => out.freq_switches += 1,
+            "request_summary" => {
+                out.requests += 1;
+                let e = v.get("energy").context("request_summary without energy")?;
+                out.phase.prefill_j += f(e, "prefill_j");
+                out.phase.decode_j += f(e, "decode_j");
+                out.phase.switch_j += f(e, "switch_j");
+                out.phase.idle_j += f(e, "idle_j");
+                out.phase.coldstart_j += f(e, "coldstart_j");
+                let rep = f(&v, "replica") as usize;
+                *out.per_replica.entry(rep).or_insert(0.0) += f(e, "total_j");
+            }
+            _ => {}
+        }
+    }
+    ensure!(out.requests > 0, "{}: trace has no request_summary spans", dir.display());
+
+    // Cross-check the recomputation against the manifest's own rollup.
+    let rollup = manifest.get("energy_rollup").and_then(|r| r.get("ledger_total_j"));
+    if let Some(ledger) = rollup.and_then(JsonValue::as_f64) {
+        let rel = (out.phase.total_j() - ledger).abs() / ledger.max(f64::MIN_POSITIVE);
+        ensure!(
+            rel <= 1e-6,
+            "{}: trace bills sum to {} J but manifest ledger holds {} J",
+            dir.display(),
+            out.phase.total_j(),
+            ledger
+        );
+    }
+    Ok(out)
+}
+
+/// One phase's row of the delta table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseDelta {
+    pub phase: &'static str,
+    /// J/req in run A and run B.
+    pub a_j_per_req: f64,
+    pub b_j_per_req: f64,
+    /// `b - a` (negative = B saves energy).
+    pub delta: f64,
+    /// `|delta| / Σ|delta|` across phases — where the change lives.
+    pub share: f64,
+}
+
+/// The full comparison of two runs.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub a: RunSummary,
+    pub b: RunSummary,
+    pub phases: Vec<PhaseDelta>,
+    /// Shorthand for the decode row's attribution share.
+    pub decode_share: f64,
+    /// Σ|Δphase J/req| — zero for a self-diff.
+    pub total_abs_delta: f64,
+}
+
+/// Compare two summaries. Pure arithmetic: identical inputs give exact
+/// `0.0` deltas, not `±ε`.
+pub fn diff(a: RunSummary, b: RunSummary) -> DiffReport {
+    let (na, nb) = (a.requests.max(1) as f64, b.requests.max(1) as f64);
+    let rows: Vec<(&'static str, f64, f64)> = a
+        .phase
+        .named()
+        .iter()
+        .zip(b.phase.named().iter())
+        .map(|(&(name, av), &(_, bv))| (name, av / na, bv / nb))
+        .collect();
+    let total_abs_delta: f64 = rows.iter().map(|(_, av, bv)| (bv - av).abs()).sum();
+    let phases: Vec<PhaseDelta> = rows
+        .into_iter()
+        .map(|(phase, a_j, b_j)| PhaseDelta {
+            phase,
+            a_j_per_req: a_j,
+            b_j_per_req: b_j,
+            delta: b_j - a_j,
+            share: if total_abs_delta > 0.0 { (b_j - a_j).abs() / total_abs_delta } else { 0.0 },
+        })
+        .collect();
+    let decode_share = phases.iter().find(|p| p.phase == "decode").map_or(0.0, |p| p.share);
+    DiffReport { a, b, phases, decode_share, total_abs_delta }
+}
+
+impl DiffReport {
+    /// The headline number: Δ J/req, `B - A`.
+    pub fn d_j_per_req(&self) -> f64 {
+        self.b.j_per_req() - self.a.j_per_req()
+    }
+
+    /// Render the ASCII delta table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "run A: {} ({}, seed {}, digest {})",
+            self.a.dir.display(), self.a.run, self.a.seed, self.a.config_digest);
+        let _ = writeln!(out, "run B: {} ({}, seed {}, digest {})",
+            self.b.dir.display(), self.b.run, self.b.seed, self.b.config_digest);
+        out.push('\n');
+        let _ =
+            writeln!(out, "{:18} {:>14} {:>14} {:>14} {:>8}", "metric", "A", "B", "B - A", "share");
+        let row = |out: &mut String, label: &str, a: f64, b: f64| {
+            let _ = writeln!(out, "{label:18} {a:>14.4} {b:>14.4} {:>14.4}", b - a);
+        };
+        row(&mut out, "served", self.a.served as f64, self.b.served as f64);
+        row(&mut out, "J/req total", self.a.j_per_req(), self.b.j_per_req());
+        for p in &self.phases {
+            let _ = writeln!(
+                out,
+                "  {:16} {:>14.4} {:>14.4} {:>14.4} {:>7.1}%",
+                p.phase,
+                p.a_j_per_req,
+                p.b_j_per_req,
+                p.delta,
+                p.share * 100.0
+            );
+        }
+        row(&mut out, "ttft p95 (s)", self.a.ttft_p95_s(), self.b.ttft_p95_s());
+        row(&mut out, "e2e p99 (s)", self.a.e2e_p99_s(), self.b.e2e_p99_s());
+        row(&mut out, "makespan (s)", self.a.makespan_s, self.b.makespan_s);
+        row(&mut out, "freq switches", self.a.freq_switches as f64, self.b.freq_switches as f64);
+        row(&mut out, "alerts", self.a.alerts as f64, self.b.alerts as f64);
+
+        out.push('\n');
+        if self.total_abs_delta > 0.0 {
+            let attribution: Vec<String> = self
+                .phases
+                .iter()
+                .filter(|p| p.share > 0.0)
+                .map(|p| format!("{} {:.1}%", p.phase, p.share * 100.0))
+                .collect();
+            let _ = writeln!(out, "ΔJ/req attribution: {}", attribution.join(" · "));
+        } else {
+            let _ = writeln!(out, "ΔJ/req attribution: runs are energy-identical");
+        }
+
+        let mhzs: Vec<u32> = {
+            let mut m: Vec<u32> = self
+                .a
+                .decode_by_freq
+                .keys()
+                .chain(self.b.decode_by_freq.keys())
+                .copied()
+                .collect();
+            m.sort_unstable();
+            m.dedup();
+            m
+        };
+        if !mhzs.is_empty() {
+            out.push('\n');
+            let _ = writeln!(out, "decode energy by frequency regime:");
+            let _ = writeln!(
+                out,
+                "  {:>6} {:>10} {:>14} {:>10} {:>14}",
+                "MHz", "A steps", "A (J)", "B steps", "B (J)"
+            );
+            for mhz in mhzs {
+                let (an, aj) = self.a.decode_by_freq.get(&mhz).copied().unwrap_or((0, 0.0));
+                let (bn, bj) = self.b.decode_by_freq.get(&mhz).copied().unwrap_or((0, 0.0));
+                let _ = writeln!(out, "  {mhz:>6} {an:>10} {aj:>14.2} {bn:>10} {bj:>14.2}");
+            }
+        }
+
+        let reps: Vec<usize> = {
+            let mut r: Vec<usize> =
+                self.a.per_replica.keys().chain(self.b.per_replica.keys()).copied().collect();
+            r.sort_unstable();
+            r.dedup();
+            r
+        };
+        out.push('\n');
+        let _ = writeln!(out, "per-replica billed energy (J):");
+        for rep in reps {
+            let aj = self.a.per_replica.get(&rep).copied().unwrap_or(0.0);
+            let bj = self.b.per_replica.get(&rep).copied().unwrap_or(0.0);
+            let _ = writeln!(out, "  replica {rep}: A {aj:.2}  B {bj:.2}  Δ {:.2}", bj - aj);
+        }
+        out
+    }
+
+    /// The machine-readable `diff.json` document.
+    pub fn to_json(&self) -> JsonValue {
+        let run_id = |r: &RunSummary| {
+            obj(vec![
+                ("dir", text(&r.dir.display().to_string())),
+                ("run", text(&r.run)),
+                ("seed", text(&r.seed)),
+                ("config_digest", text(&r.config_digest)),
+                ("requests", uint(r.requests)),
+                ("served", uint(r.served)),
+                ("j_per_req", num(r.j_per_req())),
+                ("ttft_p95_s", num(r.ttft_p95_s())),
+                ("e2e_p99_s", num(r.e2e_p99_s())),
+                ("makespan_s", num(r.makespan_s)),
+                ("freq_switches", uint(r.freq_switches)),
+                ("alerts", uint(r.alerts)),
+            ])
+        };
+        let freq_rows: Vec<JsonValue> = {
+            let mut mhzs: Vec<u32> = self
+                .a
+                .decode_by_freq
+                .keys()
+                .chain(self.b.decode_by_freq.keys())
+                .copied()
+                .collect();
+            mhzs.sort_unstable();
+            mhzs.dedup();
+            mhzs.into_iter()
+                .map(|mhz| {
+                    let (an, aj) = self.a.decode_by_freq.get(&mhz).copied().unwrap_or((0, 0.0));
+                    let (bn, bj) = self.b.decode_by_freq.get(&mhz).copied().unwrap_or((0, 0.0));
+                    obj(vec![
+                        ("mhz", uint(mhz as usize)),
+                        ("a_steps", uint(an)),
+                        ("a_j", num(aj)),
+                        ("b_steps", uint(bn)),
+                        ("b_j", num(bj)),
+                    ])
+                })
+                .collect()
+        };
+        let replica_rows: Vec<JsonValue> = {
+            let mut reps: Vec<usize> =
+                self.a.per_replica.keys().chain(self.b.per_replica.keys()).copied().collect();
+            reps.sort_unstable();
+            reps.dedup();
+            reps.into_iter()
+                .map(|rep| {
+                    let aj = self.a.per_replica.get(&rep).copied().unwrap_or(0.0);
+                    let bj = self.b.per_replica.get(&rep).copied().unwrap_or(0.0);
+                    obj(vec![
+                        ("replica", uint(rep)),
+                        ("a_j", num(aj)),
+                        ("b_j", num(bj)),
+                        ("delta_j", num(bj - aj)),
+                    ])
+                })
+                .collect()
+        };
+        obj(vec![
+            ("schema", text("ewatt.diff")),
+            ("version", uint(DIFF_SCHEMA_VERSION as usize)),
+            ("a", run_id(&self.a)),
+            ("b", run_id(&self.b)),
+            (
+                "delta",
+                obj(vec![
+                    ("j_per_req", num(self.d_j_per_req())),
+                    ("ttft_p95_s", num(self.b.ttft_p95_s() - self.a.ttft_p95_s())),
+                    ("e2e_p99_s", num(self.b.e2e_p99_s() - self.a.e2e_p99_s())),
+                    ("makespan_s", num(self.b.makespan_s - self.a.makespan_s)),
+                    ("served", num(self.b.served as f64 - self.a.served as f64)),
+                ]),
+            ),
+            (
+                "attribution",
+                obj(vec![
+                    ("decode_share", num(self.decode_share)),
+                    ("total_abs_delta_j_per_req", num(self.total_abs_delta)),
+                    (
+                        "phases",
+                        JsonValue::Array(
+                            self.phases
+                                .iter()
+                                .map(|p| {
+                                    obj(vec![
+                                        ("phase", text(p.phase)),
+                                        ("a_j_per_req", num(p.a_j_per_req)),
+                                        ("b_j_per_req", num(p.b_j_per_req)),
+                                        ("delta_j_per_req", num(p.delta)),
+                                        ("share", num(p.share)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("freq_regimes", JsonValue::Array(freq_rows)),
+            ("replicas", JsonValue::Array(replica_rows)),
+        ])
+    }
+}
+
+/// `ewatt diff <run_a> <run_b> [--out DIR] [--min-decode-share X]`.
+///
+/// Loads two artifact directories written by `ewatt trace`, prints the
+/// delta table, and writes `diff.json` under `--out` (default
+/// `target/diff`). With `--min-decode-share`, fails unless at least that
+/// fraction of the ΔJ/req attributes to the decode phase (a self-diff
+/// with zero delta passes trivially — there is nothing to attribute).
+pub fn run_cli(args: &Args) -> Result<()> {
+    let [run_a, run_b] = args.positional.as_slice() else {
+        bail!("usage: ewatt diff <run_a> <run_b> [--out DIR] [--min-decode-share X]");
+    };
+    let report = execute(Path::new(run_a), Path::new(run_b))?;
+    print!("{}", report.render());
+
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("target/diff"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let out_path = out_dir.join("diff.json");
+    std::fs::write(&out_path, format!("{}\n", report.to_json()))
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    println!("\nwrote {}", out_path.display());
+
+    let min_share = args.get_f64("min-decode-share", -1.0);
+    if min_share >= 0.0 && report.total_abs_delta > 0.0 {
+        ensure!(
+            report.decode_share >= min_share,
+            "decode phase carries {:.1}% of the ΔJ/req (required ≥ {:.1}%)",
+            report.decode_share * 100.0,
+            min_share * 100.0
+        );
+        println!(
+            "decode share {:.1}% ≥ required {:.1}%",
+            report.decode_share * 100.0,
+            min_share * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Load both runs and diff them (the testable core of [`run_cli`]).
+pub fn execute(dir_a: &Path, dir_b: &Path) -> Result<DiffReport> {
+    let a = load_run(dir_a)?;
+    let b = load_run(dir_b)?;
+    Ok(diff(a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(tag: &str, decode_j: f64, idle_j: f64) -> RunSummary {
+        RunSummary {
+            dir: PathBuf::from(format!("target/fake-{tag}")),
+            run: format!("trace/{tag}"),
+            seed: "0x5ce1".into(),
+            config_digest: "0xabc".into(),
+            requests: 10,
+            served: 10,
+            makespan_s: 30.0,
+            freq_switches: 4,
+            phase: PhaseTotals {
+                prefill_j: 5.0,
+                decode_j,
+                switch_j: 0.5,
+                idle_j,
+                coldstart_j: 0.0,
+            },
+            per_replica: [(0usize, 5.0 + decode_j + 0.5 + idle_j)].into_iter().collect(),
+            decode_by_freq: [(2842u32, (100usize, decode_j))].into_iter().collect(),
+            ttft_s: (0..10).map(|i| 0.05 + i as f64 * 0.01).collect(),
+            e2e_s: (0..10).map(|i| 0.5 + i as f64 * 0.05).collect(),
+            alerts: 0,
+        }
+    }
+
+    #[test]
+    fn self_diff_is_exactly_zero() {
+        let r = diff(summary("a", 40.0, 2.0), summary("a", 40.0, 2.0));
+        assert_eq!(r.d_j_per_req(), 0.0);
+        assert_eq!(r.total_abs_delta, 0.0);
+        for p in &r.phases {
+            assert_eq!(p.delta, 0.0, "{}", p.phase);
+            assert_eq!(p.share, 0.0, "{}", p.phase);
+        }
+        let j = r.to_json();
+        assert_eq!(j.get("delta").unwrap().get("j_per_req").unwrap().as_f64(), Some(0.0));
+        assert!(r.render().contains("energy-identical"));
+    }
+
+    #[test]
+    fn decode_saving_attributes_to_decode() {
+        // B saves 15 J/run of decode and pays 1 J more idle: the decode
+        // share dominates.
+        let r = diff(summary("static", 40.0, 2.0), summary("governed", 25.0, 3.0));
+        assert!(r.d_j_per_req() < 0.0, "B must be cheaper: {}", r.d_j_per_req());
+        assert!(r.decode_share > 0.9, "decode share {}", r.decode_share);
+        let shares: f64 = r.phases.iter().map(|p| p.share).sum();
+        assert!((shares - 1.0).abs() < 1e-12, "shares sum to {shares}");
+        let table = r.render();
+        assert!(table.contains("decode"), "{table}");
+        assert!(table.contains("ΔJ/req attribution"), "{table}");
+    }
+
+    #[test]
+    fn json_document_is_versioned_and_deterministic() {
+        let r = diff(summary("a", 40.0, 2.0), summary("b", 25.0, 3.0));
+        let j = r.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("ewatt.diff"));
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(j.to_string(), r.to_json().to_string());
+        // Round-trips through the parser.
+        assert!(JsonValue::parse(&j.to_string()).is_ok());
+        let share = j
+            .get("attribution")
+            .unwrap()
+            .get("decode_share")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(share > 0.9);
+    }
+
+    #[test]
+    fn load_run_rejects_missing_or_invalid_dirs() {
+        let err = load_run(Path::new("target/does-not-exist")).unwrap_err().to_string();
+        assert!(err.contains("traces.jsonl"), "{err}");
+    }
+}

@@ -46,27 +46,27 @@ pub fn fnv1a_64(bytes: &[u8]) -> u64 {
     h
 }
 
-fn obj(pairs: Vec<(&str, JsonValue)>) -> JsonValue {
+pub(crate) fn obj(pairs: Vec<(&str, JsonValue)>) -> JsonValue {
     JsonValue::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
-fn num(x: f64) -> JsonValue {
+pub(crate) fn num(x: f64) -> JsonValue {
     JsonValue::Number(x)
 }
 
-fn uint(x: usize) -> JsonValue {
+pub(crate) fn uint(x: usize) -> JsonValue {
     JsonValue::Number(x as f64)
 }
 
-fn text(x: &str) -> JsonValue {
+pub(crate) fn text(x: &str) -> JsonValue {
     JsonValue::String(x.to_string())
 }
 
-fn uints(xs: &[usize]) -> JsonValue {
+pub(crate) fn uints(xs: &[usize]) -> JsonValue {
     JsonValue::Array(xs.iter().map(|&x| uint(x)).collect())
 }
 
-fn phase_energy_json(e: &PhaseEnergy) -> JsonValue {
+pub(crate) fn phase_energy_json(e: &PhaseEnergy) -> JsonValue {
     obj(vec![
         ("prefill_j", num(e.prefill_j)),
         ("decode_j", num(e.decode_j)),
@@ -175,22 +175,59 @@ pub fn write_trace_jsonl(path: &Path, header: &JsonValue, spans: &[Span]) -> Res
         .with_context(|| format!("writing trace to {}", path.display()))
 }
 
-/// Validate a `traces.jsonl` body: the header must carry the expected
-/// schema/version, and every span line must parse as an object with a
-/// numeric `t_s` and a string `kind`. Returns the span-line count.
-pub fn validate_trace_jsonl(body: &str) -> Result<usize> {
-    let mut lines = body.lines();
-    let header = lines.next().context("empty trace file")?;
+/// Split a JSONL body into its lines, enforcing the canonical byte form:
+/// LF terminators only (a `\r` anywhere is a CRLF-converted file, not the
+/// artifact the run wrote) and no trailing whitespace on any line —
+/// byte-determinism is the whole point of these files, so near-miss
+/// encodings are rejected loudly instead of parsed leniently.
+pub(crate) fn strict_jsonl_lines(body: &str) -> Result<Vec<&str>> {
+    let mut lines: Vec<&str> = body.split('\n').collect();
+    // A terminating newline leaves one empty tail element; its absence is
+    // tolerated (the writers always terminate, but validation is for
+    // foreign files too).
+    if lines.last() == Some(&"") {
+        lines.pop();
+    }
+    for (i, line) in lines.iter().enumerate() {
+        ensure!(
+            !line.contains('\r'),
+            "line {}: carriage return (CRLF line ending?) — jsonl artifacts are LF-terminated",
+            i + 1
+        );
+        ensure!(
+            *line == line.trim_end(),
+            "line {}: trailing whitespace breaks byte-determinism",
+            i + 1
+        );
+    }
+    Ok(lines)
+}
+
+/// Check a JSONL header object for the expected schema name and version.
+pub(crate) fn check_jsonl_header(header: &str, schema: &str, version: u64) -> Result<()> {
     let h = JsonValue::parse(header).map_err(|e| anyhow::anyhow!("bad header: {e}"))?;
     ensure!(
-        h.get("schema").and_then(JsonValue::as_str) == Some("ewatt.trace"),
-        "header is not an ewatt.trace object: {header}"
+        h.get("schema").and_then(JsonValue::as_str) == Some(schema),
+        "header is not an {schema} object: {header}"
     );
-    let version = h.get("version").and_then(JsonValue::as_f64);
+    let got = h.get("version").and_then(JsonValue::as_f64);
     ensure!(
-        version == Some(TRACE_SCHEMA_VERSION as f64),
-        "unsupported trace schema version {version:?} (expected {TRACE_SCHEMA_VERSION})"
+        got == Some(version as f64),
+        "unsupported {schema} schema version {got:?} (expected {version})"
     );
+    Ok(())
+}
+
+/// Validate a `traces.jsonl` body: canonical line form
+/// ([`strict_jsonl_lines`]), a header carrying the expected
+/// schema/version, and every span line parsing as an object with a
+/// finite numeric `t_s` and a string `kind`. Returns the span-line count
+/// (0 for a header-only file).
+pub fn validate_trace_jsonl(body: &str) -> Result<usize> {
+    let lines = strict_jsonl_lines(body)?;
+    let mut lines = lines.into_iter();
+    let header = lines.next().context("empty trace file")?;
+    check_jsonl_header(header, "ewatt.trace", TRACE_SCHEMA_VERSION)?;
     let mut n = 0usize;
     for (i, line) in lines.enumerate() {
         let v = JsonValue::parse(line)
@@ -447,6 +484,47 @@ mod tests {
         assert!(validate_trace_jsonl(&format!("{ok_header}\nnot json\n")).is_err());
         assert!(validate_trace_jsonl(&format!("{ok_header}\n{{\"kind\":\"queued\"}}\n")).is_err());
         assert_eq!(validate_trace_jsonl(&format!("{ok_header}\n")).unwrap(), 0);
+    }
+
+    #[test]
+    fn validation_rejects_crlf_and_trailing_whitespace() {
+        let header = trace_header("x", 1, "0x0").to_string();
+        let span =
+            span_to_json(&Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 0 } })
+                .to_string();
+
+        // CRLF anywhere — header or span line — is a descriptive error.
+        let crlf_header = format!("{header}\r\n{span}\n");
+        let err = validate_trace_jsonl(&crlf_header).unwrap_err().to_string();
+        assert!(err.contains("carriage return"), "unhelpful CRLF error: {err}");
+        let crlf_span = format!("{header}\n{span}\r\n");
+        let err = validate_trace_jsonl(&crlf_span).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "error must locate the line: {err}");
+
+        // Trailing whitespace on an otherwise-valid line is rejected too:
+        // the parser would accept it, but the byte form is not canonical.
+        let padded = format!("{header}\n{span}  \n");
+        let err = validate_trace_jsonl(&padded).unwrap_err().to_string();
+        assert!(err.contains("trailing whitespace"), "{err}");
+
+        // A header-only file is a valid empty trace, before and after the
+        // hardening.
+        assert_eq!(validate_trace_jsonl(&format!("{header}\n")).unwrap(), 0);
+        // The canonical form still validates.
+        assert_eq!(validate_trace_jsonl(&format!("{header}\n{span}\n")).unwrap(), 1);
+    }
+
+    #[test]
+    fn non_finite_manifest_fields_serialize_as_null() {
+        // Policy pin: a zero-served run's NaN joules_per_request must
+        // produce a *parseable* manifest with an explicit null, never a
+        // bare `NaN` token (which no JSON parser accepts).
+        let mut m = RunManifest::new("trace empty", 0x0);
+        m.set("joules_per_request", num(f64::NAN));
+        let text = m.to_json().to_string();
+        let parsed = JsonValue::parse(&text).expect("manifest with NaN field must stay valid JSON");
+        assert_eq!(parsed.get("joules_per_request"), Some(&JsonValue::Null));
+        assert!(!text.contains("NaN"), "{text}");
     }
 
     #[test]

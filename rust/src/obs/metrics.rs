@@ -168,24 +168,46 @@ impl HistP2 {
         }
     }
 
+    /// `NaN` before the first sample — never the `+∞` accumulator seed.
     pub fn min(&self) -> f64 {
-        self.min
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
     }
 
+    /// `NaN` before the first sample — never the `-∞` accumulator seed.
     pub fn max(&self) -> f64 {
-        self.max
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
     }
 
     pub fn p50(&self) -> f64 {
-        self.quantiles.p50()
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.quantiles.p50()
+        }
     }
 
     pub fn p95(&self) -> f64 {
-        self.quantiles.p95()
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.quantiles.p95()
+        }
     }
 
     pub fn p99(&self) -> f64 {
-        self.quantiles.p99()
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.quantiles.p99()
+        }
     }
 }
 
@@ -300,7 +322,9 @@ impl MetricsRegistry {
         for h in Hist::ALL {
             let hist = self.hist(h);
             if hist.count() == 0 {
-                out.push_str(&format!("  {:16} (empty)\n", h.label()));
+                // No samples: every statistic is undefined, shown as `-`
+                // (the accessors return NaN, never a sentinel).
+                out.push_str(&format!("  {:16} 0 / - / - / - / - / -\n", h.label()));
             } else {
                 out.push_str(&format!(
                     "  {:16} {} / {:.4} / {:.4} / {:.4} / {:.4} / {:.4}\n",
@@ -380,7 +404,34 @@ mod tests {
         let text = m.render();
         assert!(text.contains("served"));
         assert!(text.contains("ttft_s"));
-        assert!(text.contains("(empty)"), "decode hist should be empty: {text}");
+        assert!(
+            text.contains("decode_step_j    0 / - / - / - / - / -"),
+            "decode hist should render as dashes: {text}"
+        );
+    }
+
+    #[test]
+    fn empty_histograms_return_nan_not_sentinels() {
+        let h = HistP2::default();
+        assert_eq!(h.count(), 0);
+        for stat in [h.min(), h.max(), h.mean(), h.p50(), h.p95(), h.p99()] {
+            assert!(stat.is_nan(), "empty hist leaked a sentinel: {stat}");
+        }
+        // One sample collapses every statistic onto it.
+        let mut h = HistP2::default();
+        h.observe(2.5);
+        for stat in [h.min(), h.max(), h.mean(), h.p50(), h.p95(), h.p99()] {
+            assert_eq!(stat, 2.5);
+        }
+        // An empty registry renders a dash row for every histogram.
+        let text = MetricsRegistry::new().render();
+        for hist in Hist::ALL {
+            assert!(
+                text.contains(&format!("{:16} 0 / - / - / - / - / -", hist.label())),
+                "{}: {text}",
+                hist.label()
+            );
+        }
     }
 
     #[test]

@@ -1,21 +1,38 @@
-//! Deterministic observability: request-span tracing, a static-key
-//! metrics registry, and auditable exporters (`traces.jsonl` + run
-//! manifests).
+//! Deterministic observability: request-span tracing, heartbeat
+//! telemetry, a static-key metrics registry, SLO/health alerting, run
+//! comparison, and auditable exporters (`traces.jsonl`, `timeline.jsonl`,
+//! run manifests, `diff.json`).
 //!
 //! The engine threads one optional [`TraceSink`] through a run
-//! ([`crate::fleet::EngineCtx::trace`]); everything else here is derived
-//! from the resulting span stream. All timestamps are simulated time, so
-//! fixed-seed traces are byte-reproducible — and with no sink attached
-//! the whole layer costs one predicted branch per emit site (pinned by
-//! the scenario snapshot and `ewatt bench --check`).
+//! ([`crate::fleet::EngineCtx::trace`]) and, independently, one optional
+//! [`TimelineSampler`] ([`crate::fleet::EngineCtx::timeline`]); everything
+//! else here is derived from the resulting span stream and heartbeat
+//! rows. All timestamps are simulated time, so fixed-seed artifacts are
+//! byte-reproducible — and with neither observer attached the whole layer
+//! costs one predicted branch per emit site (pinned by the scenario
+//! snapshot and `ewatt bench --check`).
+//!
+//! Layer map: [`span`] defines the event stream, [`timeline`] the
+//! fixed-cadence gauge stream, [`metrics`] the in-memory aggregates,
+//! [`export`] the on-disk evidence, [`alerts`] the rule engine replaying
+//! that evidence, and [`diff`] the two-run comparison (`ewatt diff`).
 
+pub mod alerts;
+pub mod diff;
 pub mod export;
 pub mod metrics;
 pub mod span;
+pub mod timeline;
 
+pub use alerts::{evaluate as evaluate_alerts, AlertConfig, AlertFiring, AlertRule};
+pub use diff::{DiffReport, RunSummary, DIFF_SCHEMA_VERSION};
 pub use export::{
     fnv1a_64, span_to_json, trace_header, trace_jsonl, validate_trace_jsonl, write_trace_jsonl,
     RunManifest, MANIFEST_SCHEMA_VERSION, TRACE_SCHEMA_VERSION,
 };
 pub use metrics::{Counter, Gauge, Hist, HistP2, MetricsRegistry};
 pub use span::{NullSink, Recorder, Span, SpanEvent, Trace, TraceSink};
+pub use timeline::{
+    timeline_header, timeline_jsonl, validate_timeline_jsonl, write_timeline_jsonl, TimelineRow,
+    TimelineSampler, DEFAULT_CADENCE_S, TIMELINE_SCHEMA_VERSION,
+};

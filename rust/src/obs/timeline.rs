@@ -1,0 +1,342 @@
+//! Fixed-cadence heartbeat telemetry: `timeline.jsonl`.
+//!
+//! The span stream (`traces.jsonl`) is *event*-shaped — it says what
+//! happened, but reading "what did the fleet look like at t=40s?" out of
+//! it means replaying every event up to 40s. The timeline is the
+//! complementary *state*-shaped artifact: a [`TimelineSampler`] attached
+//! to the engine ([`crate::fleet::EngineCtx::timeline`]) emits one row
+//! per heartbeat boundary (`k · cadence_s`), each carrying per-replica
+//! gauges — lifecycle state, frequency set point, telemetry-window power,
+//! queue depth, batch occupancy, KV usage — plus the fleet aggregates.
+//!
+//! Sampling semantics: the engine processes events in nondecreasing time
+//! order; immediately before executing an event at time `t` it emits
+//! every pending boundary `b < t`, sampling the fleet *as the engine sees
+//! it at that instant* (all events before `t` applied). After the run,
+//! [`TimelineSampler::finish`] flushes the remaining boundaries up to and
+//! including the makespan. The sampler only reads — attaching one leaves
+//! the physics bit-identical (pinned alongside tracing by
+//! `rust/tests/obs_trace.rs`), and like tracing it disables gap-parallel
+//! stepping so every boundary is observed between sequential steps.
+//!
+//! The artifact mirrors `traces.jsonl`: a schema-versioned header line,
+//! one compact sorted-key JSON object per row, byte-deterministic under a
+//! fixed seed, and self-validating via [`validate_timeline_jsonl`].
+
+use std::path::Path;
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::fleet::Replica;
+use crate::obs::export::{check_jsonl_header, num, obj, strict_jsonl_lines, text, uint};
+use crate::util::json::JsonValue;
+
+/// Version of the `timeline.jsonl` line schema. Bump on any breaking
+/// change to row field names or the header shape.
+pub const TIMELINE_SCHEMA_VERSION: u64 = 1;
+
+/// Default heartbeat cadence, simulated seconds.
+pub const DEFAULT_CADENCE_S: f64 = 0.5;
+
+/// One replica's gauges at a heartbeat boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaSample {
+    pub replica: usize,
+    /// Lifecycle state label (`live`, `draining`, `cold`, `warming`).
+    pub state: &'static str,
+    /// Current SM set point, MHz.
+    pub freq_mhz: u32,
+    /// Mean power over the replica's telemetry window, watts.
+    pub power_w: f64,
+    /// Requests waiting in the admission queue.
+    pub queue_depth: usize,
+    /// Sequences currently decoding (batch occupancy).
+    pub active_seqs: usize,
+    /// Fraction of KV-cache capacity in use, `[0, 1]`.
+    pub kv_frac: f64,
+    /// Requests completed so far.
+    pub served: usize,
+}
+
+/// One heartbeat row: fleet aggregates plus every replica's gauges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineRow {
+    /// Boundary time, seconds (`k · cadence_s`).
+    pub t_s: f64,
+    /// Replicas in a routable (`Live`) state.
+    pub live: usize,
+    /// Total queued requests across the fleet.
+    pub queue_depth: usize,
+    /// Total decoding sequences across the fleet.
+    pub active_seqs: usize,
+    /// Total requests completed so far.
+    pub served: usize,
+    /// Sum of per-replica telemetry-window mean power, watts.
+    pub power_w: f64,
+    pub replicas: Vec<ReplicaSample>,
+}
+
+/// The heartbeat sampler the engine drives. Purely an observer: it holds
+/// no reference into the engine and is handed `&[Replica]` at each tick.
+#[derive(Debug)]
+pub struct TimelineSampler {
+    cadence_s: f64,
+    /// Index of the next unemitted boundary (`time = next_k · cadence_s`).
+    next_k: u64,
+    pub rows: Vec<TimelineRow>,
+}
+
+impl TimelineSampler {
+    pub fn new(cadence_s: f64) -> TimelineSampler {
+        assert!(
+            cadence_s.is_finite() && cadence_s > 0.0,
+            "heartbeat cadence must be a positive finite duration, got {cadence_s}"
+        );
+        TimelineSampler { cadence_s, next_k: 0, rows: Vec::new() }
+    }
+
+    pub fn cadence_s(&self) -> f64 {
+        self.cadence_s
+    }
+
+    /// Boundary time of index `k`. Multiplication (not accumulation)
+    /// keeps boundary `k` bit-identical regardless of tick history.
+    fn boundary(&self, k: u64) -> f64 {
+        k as f64 * self.cadence_s
+    }
+
+    /// Emit every pending boundary strictly before `t_next` — called by
+    /// the engine immediately before it processes an event at `t_next`.
+    pub fn advance_to(&mut self, t_next: f64, reps: &[Replica]) {
+        while self.boundary(self.next_k) < t_next {
+            let b = self.boundary(self.next_k);
+            self.sample(b, reps);
+            self.next_k += 1;
+        }
+    }
+
+    /// Flush the remaining boundaries through the makespan (inclusive),
+    /// so the timeline always covers the whole run even when the final
+    /// events land between boundaries.
+    pub fn finish(&mut self, makespan_s: f64, reps: &[Replica]) {
+        while self.boundary(self.next_k) <= makespan_s {
+            let b = self.boundary(self.next_k);
+            self.sample(b, reps);
+            self.next_k += 1;
+        }
+    }
+
+    fn sample(&mut self, t_s: f64, reps: &[Replica]) {
+        let mut row = TimelineRow {
+            t_s,
+            live: 0,
+            queue_depth: 0,
+            active_seqs: 0,
+            served: 0,
+            power_w: 0.0,
+            replicas: Vec::with_capacity(reps.len()),
+        };
+        for (i, r) in reps.iter().enumerate() {
+            let s = ReplicaSample {
+                replica: i,
+                state: r.state.label(),
+                freq_mhz: r.freq_mhz(),
+                power_w: r.window_power_w(),
+                queue_depth: r.queue_depth(),
+                active_seqs: r.active_seqs(),
+                kv_frac: r.kv_used_frac(),
+                served: r.served,
+            };
+            row.live += usize::from(r.state.routable());
+            row.queue_depth += s.queue_depth;
+            row.active_seqs += s.active_seqs;
+            row.served += s.served;
+            row.power_w += s.power_w;
+            row.replicas.push(s);
+        }
+        self.rows.push(row);
+    }
+}
+
+/// The first `timeline.jsonl` line: schema identity plus run identity.
+pub fn timeline_header(run: &str, seed: u64, cadence_s: f64) -> JsonValue {
+    obj(vec![
+        ("schema", text("ewatt.timeline")),
+        ("version", uint(TIMELINE_SCHEMA_VERSION as usize)),
+        ("run", text(run)),
+        ("seed", text(&format!("{seed:#x}"))),
+        ("cadence_s", num(cadence_s)),
+    ])
+}
+
+fn replica_sample_json(s: &ReplicaSample) -> JsonValue {
+    obj(vec![
+        ("replica", uint(s.replica)),
+        ("state", text(s.state)),
+        ("freq_mhz", uint(s.freq_mhz as usize)),
+        ("power_w", num(s.power_w)),
+        ("queue_depth", uint(s.queue_depth)),
+        ("active_seqs", uint(s.active_seqs)),
+        ("kv_frac", num(s.kv_frac)),
+        ("served", uint(s.served)),
+    ])
+}
+
+/// One row as a flat JSON object: `t_s`, the fleet aggregates, then the
+/// per-replica gauge array.
+pub fn timeline_row_json(row: &TimelineRow) -> JsonValue {
+    obj(vec![
+        ("t_s", num(row.t_s)),
+        (
+            "fleet",
+            obj(vec![
+                ("live", uint(row.live)),
+                ("queue_depth", uint(row.queue_depth)),
+                ("active_seqs", uint(row.active_seqs)),
+                ("served", uint(row.served)),
+                ("power_w", num(row.power_w)),
+            ]),
+        ),
+        ("replicas", JsonValue::Array(row.replicas.iter().map(replica_sample_json).collect())),
+    ])
+}
+
+/// Render a full timeline file: header line, then one line per row,
+/// `\n`-terminated. Deterministic to the byte.
+pub fn timeline_jsonl(header: &JsonValue, rows: &[TimelineRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for row in rows {
+        out.push_str(&timeline_row_json(row).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a timeline file and hand back nothing (the caller knows the
+/// path); errors carry the path.
+pub fn write_timeline_jsonl(path: &Path, header: &JsonValue, rows: &[TimelineRow]) -> Result<()> {
+    std::fs::write(path, timeline_jsonl(header, rows))
+        .with_context(|| format!("writing timeline to {}", path.display()))
+}
+
+/// Validate a `timeline.jsonl` body: canonical line form, the expected
+/// schema/version header, and every row parsing as an object with a
+/// finite nondecreasing `t_s`, a `fleet` aggregate object, and a
+/// `replicas` array. Returns the row count (0 for a header-only file).
+pub fn validate_timeline_jsonl(body: &str) -> Result<usize> {
+    let lines = strict_jsonl_lines(body)?;
+    let mut lines = lines.into_iter();
+    let header = lines.next().context("empty timeline file")?;
+    check_jsonl_header(header, "ewatt.timeline", TIMELINE_SCHEMA_VERSION)?;
+    let mut n = 0usize;
+    let mut prev_t = f64::NEG_INFINITY;
+    for (i, line) in lines.enumerate() {
+        let v = JsonValue::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {}: parse error: {e}", i + 2))?;
+        let t = v.get("t_s").and_then(JsonValue::as_f64);
+        ensure!(t.is_some_and(f64::is_finite), "line {}: missing finite t_s", i + 2);
+        let t = t.unwrap();
+        ensure!(t > prev_t, "line {}: non-increasing t_s {t} after {prev_t}", i + 2);
+        prev_t = t;
+        ensure!(
+            v.get("fleet").and_then(|f| f.get("live")).and_then(JsonValue::as_f64).is_some(),
+            "line {}: missing fleet aggregates",
+            i + 2
+        );
+        ensure!(
+            v.get("replicas").and_then(JsonValue::as_array).is_some(),
+            "line {}: missing replicas array",
+            i + 2
+        );
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(t_s: f64) -> TimelineRow {
+        TimelineRow {
+            t_s,
+            live: 1,
+            queue_depth: 2,
+            active_seqs: 3,
+            served: 4,
+            power_w: 123.5,
+            replicas: vec![ReplicaSample {
+                replica: 0,
+                state: "live",
+                freq_mhz: 2842,
+                power_w: 123.5,
+                queue_depth: 2,
+                active_seqs: 3,
+                kv_frac: 0.25,
+                served: 4,
+            }],
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_and_validates() {
+        let header = timeline_header("unit", 0x5CE1, 0.5);
+        let rows = vec![row(0.0), row(0.5), row(1.0)];
+        let body = timeline_jsonl(&header, &rows);
+        assert_eq!(validate_timeline_jsonl(&body).unwrap(), rows.len());
+        // Byte determinism: rendering twice is identical.
+        assert_eq!(body, timeline_jsonl(&header, &rows));
+        // Header carries schema + cadence; rows carry the gauge fields.
+        let first = body.lines().next().unwrap();
+        assert!(first.contains("\"ewatt.timeline\""), "{first}");
+        assert!(first.contains("\"cadence_s\":0.5"), "{first}");
+        let parsed = JsonValue::parse(body.lines().nth(1).unwrap()).unwrap();
+        let rep = &parsed.get("replicas").unwrap().as_array().unwrap()[0];
+        assert_eq!(rep.get("state").unwrap().as_str(), Some("live"));
+        assert_eq!(rep.get("freq_mhz").unwrap().as_usize(), Some(2842));
+        assert_eq!(parsed.get("fleet").unwrap().get("live").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_timelines() {
+        assert!(validate_timeline_jsonl("").is_err());
+        assert!(validate_timeline_jsonl("{\"schema\":\"ewatt.trace\",\"version\":1}\n").is_err());
+        let header = timeline_header("x", 1, 0.5).to_string();
+        // Header-only is a valid empty timeline.
+        assert_eq!(validate_timeline_jsonl(&format!("{header}\n")).unwrap(), 0);
+        // Rows must carry fleet aggregates and a replicas array.
+        let bad = format!("{header}\n{{\"t_s\":0}}\n");
+        assert!(validate_timeline_jsonl(&bad).is_err());
+        // Time must strictly increase.
+        let r = timeline_row_json(&row(1.0)).to_string();
+        let stuck = format!("{header}\n{r}\n{r}\n");
+        let err = validate_timeline_jsonl(&stuck).unwrap_err().to_string();
+        assert!(err.contains("non-increasing"), "{err}");
+        // The strict line form applies here like traces.
+        assert!(validate_timeline_jsonl(&format!("{header}\r\n")).is_err());
+    }
+
+    #[test]
+    fn sampler_emits_boundaries_exactly_once() {
+        // No replicas needed to check the boundary arithmetic.
+        let mut tl = TimelineSampler::new(0.5);
+        tl.advance_to(0.2, &[]); // boundary 0.0 only
+        assert_eq!(tl.rows.len(), 1);
+        tl.advance_to(0.2, &[]); // idempotent at the same time
+        assert_eq!(tl.rows.len(), 1);
+        tl.advance_to(1.0, &[]); // 0.5 (1.0 is not strictly before 1.0)
+        assert_eq!(tl.rows.len(), 2);
+        tl.finish(2.0, &[]); // 1.0, 1.5, 2.0 inclusive
+        assert_eq!(tl.rows.len(), 5);
+        let ts: Vec<f64> = tl.rows.iter().map(|r| r.t_s).collect();
+        assert_eq!(ts, vec![0.0, 0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn zero_cadence_is_rejected() {
+        TimelineSampler::new(0.0);
+    }
+}

@@ -179,6 +179,7 @@ impl ServeSim {
                 tracker: &mut tracker,
                 lifecycle: &mut lifecycle,
                 trace: None,
+                timeline: None,
             },
         )?;
         let [mut rep] = reps;

@@ -60,6 +60,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -118,6 +124,14 @@ mod tests {
     fn equals_form() {
         let a = parse("run --n=10");
         assert_eq!(a.get_usize("n", 0), 10);
+    }
+
+    #[test]
+    fn float_options() {
+        let a = parse("trace x --cadence 0.25 --min-decode-share=0.8");
+        assert_eq!(a.get_f64("cadence", 0.5), 0.25);
+        assert_eq!(a.get_f64("min-decode-share", -1.0), 0.8);
+        assert_eq!(a.get_f64("absent", 1.5), 1.5);
     }
 
     #[test]

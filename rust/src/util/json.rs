@@ -79,7 +79,14 @@ impl JsonValue {
             JsonValue::Null => out.push_str("null"),
             JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             JsonValue::Number(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // Policy: JSON has no NaN/Infinity tokens. Non-finite
+                // values (e.g. the documented NaN `joules_per_request` of
+                // a zero-served run) serialize as `null` — a parseable
+                // "no value" — instead of emitting `NaN`/`inf`, which no
+                // JSON reader (including this module's parser) accepts.
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -329,6 +336,18 @@ mod tests {
         let v = JsonValue::parse(src).unwrap();
         let re = JsonValue::parse(&v.to_string()).unwrap();
         assert_eq!(v, re);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(JsonValue::Number(bad).to_string(), "null");
+        }
+        // A container holding one stays parseable end to end.
+        let v = JsonValue::Array(vec![JsonValue::Number(1.0), JsonValue::Number(f64::NAN)]);
+        let text = v.to_string();
+        assert_eq!(text, "[1,null]");
+        assert!(JsonValue::parse(&text).is_ok());
     }
 
     #[test]

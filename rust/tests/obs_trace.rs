@@ -1,6 +1,6 @@
 //! Integration pins for the observability layer.
 //!
-//! Three contracts, each checked against the real scenario registry:
+//! Six contracts, each checked against the real scenario registry:
 //!
 //! 1. **Tracing is an observer** — a traced run is bit-identical to an
 //!    untraced run of the same scenario (attaching a sink must never
@@ -12,12 +12,22 @@
 //!    recomputed from `request_summary` spans matches the
 //!    `EnergyLedger` totals to ≤ 1e-6, and the metrics registry replayed
 //!    over the stream agrees with the outcome's counters exactly.
+//! 4. **Heartbeats are an observer too** — an observed run (trace sink
+//!    AND timeline sampler attached) stays bit-identical to the plain
+//!    run, and the sampler lands exactly `⌊makespan/cadence⌋ + 1` rows.
+//! 5. **Timelines are deterministic evidence** — two same-seed observed
+//!    runs render byte-identical, self-validating `timeline.jsonl`.
+//! 6. **Alerts replay deterministically** — re-evaluating the same
+//!    evidence yields identical firings, the conservation rule never
+//!    fires on a clean ledger, and a seeded tamper sweep shows it always
+//!    fires on a cooked one.
 
 use ewatt::config::GpuSpec;
 use ewatt::experiments::scenarios::{all as scenarios, Scenario};
 use ewatt::obs::{
-    trace_header, trace_jsonl, validate_trace_jsonl, Counter, Gauge, MetricsRegistry, Recorder,
-    RunManifest,
+    evaluate_alerts, timeline_header, timeline_jsonl, trace_header, trace_jsonl,
+    validate_timeline_jsonl, validate_trace_jsonl, AlertConfig, AlertRule, Counter, Gauge,
+    MetricsRegistry, Recorder, RunManifest, TimelineSampler,
 };
 
 #[test]
@@ -122,5 +132,105 @@ fn manifest_rollup_and_metrics_agree_with_the_outcome() {
             sc.name
         );
         assert_eq!(reg.hist(ewatt::obs::Hist::ReqTotalJ).count(), sc.requests as u64);
+    }
+}
+
+#[test]
+fn observed_runs_are_bit_identical_to_untraced() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = Scenario::suite();
+    for sc in scenarios(&gpu) {
+        let plain = sc.run(&gpu, &suite).unwrap();
+        let mut rec = Recorder::default();
+        let mut tl = TimelineSampler::new(0.5);
+        let observed = sc.run_observed(&gpu, &suite, &mut rec, &mut tl).unwrap();
+        assert_eq!(plain.joules, observed.joules, "{}: heartbeat changed attribution", sc.name);
+        assert_eq!(plain.routed, observed.routed, "{}: heartbeat changed routing", sc.name);
+        assert_eq!(plain.served_by, observed.served_by, "{}", sc.name);
+        assert_eq!(
+            plain.energy_j.to_bits(),
+            observed.energy_j.to_bits(),
+            "{}: heartbeat changed active energy",
+            sc.name
+        );
+        assert_eq!(plain.makespan_s.to_bits(), observed.makespan_s.to_bits(), "{}", sc.name);
+        assert_eq!(plain.freq_switches, observed.freq_switches, "{}", sc.name);
+        // Cadence 0.5 is a power of two, so the boundary arithmetic is
+        // exact and the row count is a closed form of the makespan.
+        let want = (observed.makespan_s / 0.5) as usize + 1;
+        assert_eq!(tl.rows.len(), want, "{}: wrong heartbeat row count", sc.name);
+        for w in tl.rows.windows(2) {
+            assert!(w[0].t_s < w[1].t_s, "{}: non-increasing heartbeat times", sc.name);
+        }
+        let served_final = tl.rows.last().unwrap().served;
+        assert_eq!(served_final, observed.served, "{}: final heartbeat missed serves", sc.name);
+    }
+}
+
+#[test]
+fn timeline_jsonl_is_byte_deterministic_and_validates() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = Scenario::suite();
+    for name in ["poisson-1rep-governed", "diurnal-elastic-failures"] {
+        let sc = scenarios(&gpu).into_iter().find(|s| s.name == name).unwrap();
+        let run = |cadence: f64| {
+            let mut rec = Recorder::default();
+            let mut tl = TimelineSampler::new(cadence);
+            sc.run_observed(&gpu, &suite, &mut rec, &mut tl).unwrap();
+            let header = timeline_header(name, sc.seed, cadence);
+            timeline_jsonl(&header, &tl.rows)
+        };
+        let a = run(0.5);
+        let b = run(0.5);
+        assert_eq!(a, b, "{name}: timeline.jsonl not byte-identical across reruns");
+        let rows = validate_timeline_jsonl(&a).unwrap();
+        assert!(rows > 0, "{name}: validated timeline has no rows");
+        // A finer cadence is a strict superset of boundaries: more rows,
+        // same physics (already pinned above), still self-validating.
+        let fine = run(0.25);
+        assert!(validate_timeline_jsonl(&fine).unwrap() > rows, "{name}: finer cadence not finer");
+    }
+}
+
+#[test]
+fn alert_replay_is_deterministic_and_conservation_is_sound() {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let suite = Scenario::suite();
+    let cfg = AlertConfig::default();
+    for sc in scenarios(&gpu) {
+        let mut rec = Recorder::default();
+        let mut tl = TimelineSampler::new(0.5);
+        let outcome = sc.run_observed(&gpu, &suite, &mut rec, &mut tl).unwrap();
+        let ledger = outcome.total_j();
+
+        let first = evaluate_alerts(&rec.spans, &tl.rows, &sc.cfg.slo, ledger, &cfg);
+        let second = evaluate_alerts(&rec.spans, &tl.rows, &sc.cfg.slo, ledger, &cfg);
+        assert_eq!(first, second, "{}: alert replay is not deterministic", sc.name);
+        assert!(
+            !first.iter().any(|f| f.rule == AlertRule::ConservationDrift),
+            "{}: conservation drift fired on a clean ledger: {first:?}",
+            sc.name
+        );
+
+        // Positive control: a cooked ledger total must always be caught.
+        const CASES: u64 = 64;
+        for case in 0..CASES {
+            let mut rng = ewatt::rng(0xA1E7_0000 | case);
+            // Drift between 10× the tolerance and 1%, both signs.
+            let eps = rng.gen_range_f64(1e-5, 1e-2) * if case % 2 == 0 { 1.0 } else { -1.0 };
+            let cooked = ledger * (1.0 + eps);
+            let fired = evaluate_alerts(&rec.spans, &tl.rows, &sc.cfg.slo, cooked, &cfg);
+            let drift: Vec<_> =
+                fired.iter().filter(|f| f.rule == AlertRule::ConservationDrift).collect();
+            assert_eq!(
+                drift.len(),
+                1,
+                "{} case {case}: tampered ledger (eps {eps:e}) not flagged exactly once",
+                sc.name
+            );
+            assert!(drift[0].value > cfg.conservation_tol, "{} case {case}", sc.name);
+            let again = evaluate_alerts(&rec.spans, &tl.rows, &sc.cfg.slo, cooked, &cfg);
+            assert_eq!(fired, again, "{} case {case}: tampered replay diverged", sc.name);
+        }
     }
 }
