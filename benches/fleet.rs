@@ -51,7 +51,7 @@ fn main() {
         results.push(bench(&label, 5, 200, move || {
             let mut acc = 0usize;
             for i in 0..10_000usize {
-                let a = ewatt::serve::Arrival { t_s: i as f64 * 1e-3, query_idx: 0 };
+                let a = ewatt::serve::Arrival::at(i as f64 * 1e-3, 0);
                 acc += router.route(&a, Some(&feats), &r);
             }
             acc

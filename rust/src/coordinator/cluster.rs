@@ -92,8 +92,7 @@ impl Cluster {
             ..FleetConfig::default()
         };
         let fleet = FleetSim::new(self.gpu.clone(), cfg);
-        let arrivals: Vec<Arrival> =
-            indices.iter().map(|&i| Arrival { t_s: 0.0, query_idx: i }).collect();
+        let arrivals: Vec<Arrival> = indices.iter().map(|&i| Arrival::at(0.0, i)).collect();
         let out = fleet.run(suite, &arrivals, &mut LeastLoaded)?;
         Ok(ClusterMetrics {
             replica_busy_s: out.replicas.iter().map(|r| r.busy_s).collect(),

@@ -16,6 +16,7 @@ pub mod runner;
 pub mod scenarios;
 pub mod slo_tables;
 pub mod trace;
+pub mod workload_lab;
 pub mod workload_tables;
 
 pub use context::Context;

@@ -1,8 +1,9 @@
 //! The named scenario registry.
 //!
-//! Six seeded serving scenarios spanning the stack — traffic shapes
-//! (Poisson / bursty / diurnal) × fleets (one-replica, mixed-tier,
-//! elastic, failing) × policies (static / governed). They were born as
+//! Seven seeded serving scenarios spanning the stack — traffic shapes
+//! (Poisson / bursty / diurnal / mixed-class) × fleets (one-replica,
+//! mixed-tier, elastic, failing) × policies (static / governed /
+//! class-aware). They were born as
 //! fixtures of the golden-trace regression suite
 //! (`rust/tests/scenarios.rs`, which still pins them against
 //! `scenarios.snap`); they live in the library so `ewatt trace` can
@@ -15,11 +16,12 @@ use anyhow::{Context as _, Result};
 use crate::config::{GpuSpec, ModelTier};
 use crate::coordinator::DvfsPolicy;
 use crate::fleet::{
-    DifficultyTiered, EnergyAware, FailureConfig, FleetConfig, FleetOutcome, FleetRouter,
-    FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState, RoundRobin,
+    ClassAware, ClassPolicy, DifficultyTiered, EnergyAware, FailureConfig, FleetConfig,
+    FleetOutcome, FleetRouter, FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState,
+    RoundRobin,
 };
 use crate::obs::{TimelineSampler, TraceSink};
-use crate::serve::traffic::Arrival;
+use crate::serve::traffic::{Arrival, ClassMix};
 use crate::serve::TrafficPattern;
 use crate::workload::ReplaySuite;
 
@@ -179,6 +181,18 @@ pub fn all(gpu: &GpuSpec) -> Vec<Scenario> {
             requests: 160,
             seed: 0x5CE3,
         },
+        Scenario {
+            name: "mixed-class-aware",
+            cfg: FleetConfig::builder()
+                .replicas(2, ReplicaSpec::tiered(ModelTier::B8, gov))
+                .classes(ClassPolicy::default())
+                .build()
+                .unwrap(),
+            router: || Box::new(ClassAware::default()),
+            pattern: TrafficPattern::MixedClasses { mix: ClassMix::default() },
+            requests: 48,
+            seed: 0x5CE4,
+        },
     ]
 }
 
@@ -199,7 +213,7 @@ mod tests {
     fn registry_names_are_unique_and_resolvable() {
         let gpu = GpuSpec::rtx_pro_6000();
         let scenarios = all(&gpu);
-        assert_eq!(scenarios.len(), 6);
+        assert_eq!(scenarios.len(), 7);
         for (i, a) in scenarios.iter().enumerate() {
             for b in &scenarios[i + 1..] {
                 assert_ne!(a.name, b.name);

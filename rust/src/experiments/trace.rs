@@ -144,14 +144,15 @@ pub fn execute(
 
     // Replay the evidence through the alert rules. The clean golden
     // scenarios fire nothing (pinned by rust/tests/obs_trace.rs); a dirty
-    // run carries its firings in the manifest.
-    let alerts = evaluate_alerts(
-        &rec.spans,
-        &sampler.rows,
-        &sc.cfg.slo,
-        outcome.total_j(),
-        &AlertConfig::default(),
-    );
+    // run carries its firings in the manifest. A class-aware scenario is
+    // judged against its own per-class SLOs — its Background completions
+    // are slow by design, not burn.
+    let alert_cfg = AlertConfig {
+        class_slos: sc.cfg.classes.as_ref().map(|c| c.slos),
+        ..AlertConfig::default()
+    };
+    let alerts =
+        evaluate_alerts(&rec.spans, &sampler.rows, &sc.cfg.slo, outcome.total_j(), &alert_cfg);
 
     let mut manifest = RunManifest::new(&format!("trace {}", sc.name), sc.seed);
     manifest.set("scenario", JsonValue::String(sc.name.to_string()));
@@ -278,7 +279,9 @@ fn render_hogs(outcome: &FleetOutcome, spans: &[Span], top: usize) -> String {
     let mut hogs: Vec<(usize, usize, &crate::fleet::attribution::PhaseEnergy)> = spans
         .iter()
         .filter_map(|s| match &s.event {
-            SpanEvent::RequestSummary { req, replica, energy } => Some((*req, *replica, energy)),
+            SpanEvent::RequestSummary { req, replica, energy, .. } => {
+                Some((*req, *replica, energy))
+            }
             _ => None,
         })
         .collect();

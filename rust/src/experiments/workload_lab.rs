@@ -1,0 +1,337 @@
+//! `ewatt lab` — the mixed-workload headline table.
+//!
+//! One synthetic mixed-class trace (the [`ClassMix`] generator: per-class
+//! corpus mixes, heavy-tailed log-normal output lengths, correlated
+//! cross-class bursts) is served twice through the *same* governed fleet:
+//!
+//! - **class-blind**: no [`ClassPolicy`] attached — FIFO admission,
+//!   least-loaded routing, every completion measured against the single
+//!   interactive SLO. Latency-tolerant distress during bursts pins the
+//!   governor high for everyone.
+//! - **class-aware**: [`ClassPolicy`] attached — strict-priority admission
+//!   with starvation aging, class-reserved KV headroom, class-aware
+//!   routing, and a class-weighted pressure signal, so only *interactive*
+//!   distress lifts the frequency.
+//!
+//! The table attributes J/req and tail latency per class, and
+//! [`LabReport::check`] asserts the headline: class-aware governance
+//! strictly lowers Batch and Background J/req while Interactive p95 TTFT
+//! and p99 e2e stay within the interactive budgets, with per-class energy
+//! summing back to the fleet ledger to ≤ 1e-6. With `--out`, the arrival
+//! stream is serialized to `prompts.jsonl` (LF-only, byte-deterministic)
+//! so the exact trace travels with the result.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::config::{GpuSpec, ModelTier};
+use crate::coordinator::DvfsPolicy;
+use crate::fleet::{
+    ClassAware, ClassPolicy, FleetConfig, FleetOutcome, FleetRouter, FleetSim, LeastLoaded,
+    ReplicaSpec,
+};
+use crate::obs::export::{num, obj, text, uint};
+use crate::obs::{Recorder, Span, SpanEvent};
+use crate::serve::slo::ClassSlos;
+use crate::serve::traffic::{Arrival, ClassMix, TrafficClass};
+use crate::stats::exact_quantile;
+use crate::util::cli::Args;
+use crate::workload::ReplaySuite;
+
+/// Default request count (two bursty dwell cycles at the default mix).
+pub const DEFAULT_REQUESTS: usize = 96;
+/// Default arrival seed.
+pub const DEFAULT_SEED: u64 = 0x1AB0;
+
+/// One class's measured row under one governance mode.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassStats {
+    pub requests: usize,
+    /// Σ attributed joules over the class's requests (exact bills).
+    pub total_j: f64,
+    pub ttft_p95_s: f64,
+    pub e2e_p99_s: f64,
+}
+
+impl ClassStats {
+    pub fn j_per_req(&self) -> f64 {
+        self.total_j / self.requests.max(1) as f64
+    }
+}
+
+/// One serving run of the lab trace, reduced to per-class evidence.
+#[derive(Debug)]
+pub struct LabRun {
+    pub outcome: FleetOutcome,
+    /// Per-class rows in [`TrafficClass::ALL`] order.
+    pub by_class: [ClassStats; 3],
+    /// Relative error of Σ per-class joules vs the fleet ledger total.
+    pub conservation_rel_err: f64,
+}
+
+/// The full two-run comparison `ewatt lab` prints and asserts.
+#[derive(Debug)]
+pub struct LabReport {
+    pub blind: LabRun,
+    pub aware: LabRun,
+    /// The budgets the class-aware run is judged against.
+    pub slos: ClassSlos,
+    pub arrivals: Vec<Arrival>,
+    pub seed: u64,
+}
+
+/// Reduce one traced run to per-class J/req and exact tail latencies.
+/// Energy comes from the finalize-time bills ([`FleetOutcome::joules`]),
+/// grouped by each arrival's class; latency comes from the `served` spans.
+fn summarize(arrivals: &[Arrival], outcome: FleetOutcome, spans: &[Span]) -> LabRun {
+    let zero = ClassStats { requests: 0, total_j: 0.0, ttft_p95_s: f64::NAN, e2e_p99_s: f64::NAN };
+    let mut by_class = [zero; 3];
+    for (req, a) in arrivals.iter().enumerate() {
+        let s = &mut by_class[a.class.slot()];
+        s.requests += 1;
+        s.total_j += outcome.joules[req];
+    }
+    let mut ttft: [Vec<f64>; 3] = Default::default();
+    let mut e2e: [Vec<f64>; 3] = Default::default();
+    for s in spans {
+        if let SpanEvent::Served { class, ttft_s, e2e_s, .. } = s.event {
+            ttft[class.slot()].push(ttft_s);
+            e2e[class.slot()].push(e2e_s);
+        }
+    }
+    for (i, s) in by_class.iter_mut().enumerate() {
+        s.ttft_p95_s = exact_quantile(&ttft[i], 0.95);
+        s.e2e_p99_s = exact_quantile(&e2e[i], 0.99);
+    }
+    let class_sum: f64 = by_class.iter().map(|s| s.total_j).sum();
+    let total = outcome.total_j();
+    let conservation_rel_err = (class_sum - total).abs() / total.max(f64::MIN_POSITIVE);
+    LabRun { outcome, by_class, conservation_rel_err }
+}
+
+/// Serve the lab trace once. `classes == None` is the class-blind
+/// baseline (least-loaded routing, FIFO admission); `Some` attaches the
+/// policy and the class-aware router.
+fn run_one(
+    gpu: &GpuSpec,
+    suite: &ReplaySuite,
+    arrivals: &[Arrival],
+    classes: Option<ClassPolicy>,
+) -> Result<LabRun> {
+    let gov = DvfsPolicy::governed(gpu);
+    let mut router: Box<dyn FleetRouter> = match &classes {
+        Some(_) => Box::new(ClassAware::default()),
+        None => Box::new(LeastLoaded),
+    };
+    let mut builder = FleetConfig::builder().replicas(2, ReplicaSpec::tiered(ModelTier::B8, gov));
+    if let Some(policy) = classes {
+        builder = builder.classes(policy);
+    }
+    let cfg = builder.build()?;
+    let mut rec = Recorder::default();
+    let outcome = FleetSim::new(gpu.clone(), cfg)
+        .run_traced(suite, arrivals, router.as_mut(), &mut rec)
+        .context("workload lab run")?;
+    Ok(summarize(arrivals, outcome, &rec.spans))
+}
+
+/// The workload every lab invocation replays (same fixture as the golden
+/// scenarios, so lab results and scenario traces are comparable).
+pub fn lab_suite() -> ReplaySuite {
+    ReplaySuite::quick(17, 24)
+}
+
+/// Run the two-sided comparison on one mixed-class trace.
+pub fn execute(gpu: &GpuSpec, requests: usize, seed: u64) -> Result<LabReport> {
+    let suite = lab_suite();
+    let arrivals = ClassMix::default().generate(&suite, requests, seed);
+    let policy = ClassPolicy::default();
+    let slos = policy.slos;
+    let blind = run_one(gpu, &suite, &arrivals, None)?;
+    let aware = run_one(gpu, &suite, &arrivals, Some(policy))?;
+    Ok(LabReport { blind, aware, slos, arrivals, seed })
+}
+
+impl LabReport {
+    /// The headline bar, as a hard assertion: class-aware admission +
+    /// governance must strictly lower Batch and Background J/req vs the
+    /// class-blind governed baseline while Interactive stays within its
+    /// own budgets, and both runs' class partitions must conserve energy.
+    pub fn check(&self) -> Result<()> {
+        for (label, run) in [("class-blind", &self.blind), ("class-aware", &self.aware)] {
+            ensure!(
+                run.conservation_rel_err <= 1e-6,
+                "{label}: per-class bills sum off the ledger by {:.3e}",
+                run.conservation_rel_err
+            );
+            for c in TrafficClass::ALL {
+                ensure!(
+                    run.by_class[c.slot()].requests > 0,
+                    "{label}: trace carries no {} requests",
+                    c.label()
+                );
+            }
+        }
+        for c in [TrafficClass::Batch, TrafficClass::Background] {
+            let (b, a) = (&self.blind.by_class[c.slot()], &self.aware.by_class[c.slot()]);
+            ensure!(
+                a.j_per_req() < b.j_per_req(),
+                "class-aware must lower {} J/req: blind {:.2}, aware {:.2}",
+                c.label(),
+                b.j_per_req(),
+                a.j_per_req()
+            );
+        }
+        let i = &self.aware.by_class[TrafficClass::Interactive.slot()];
+        let budget = self.slos.interactive;
+        ensure!(
+            i.ttft_p95_s <= budget.ttft_p95_s,
+            "interactive p95 TTFT {:.3} s blew the {:.3} s budget",
+            i.ttft_p95_s,
+            budget.ttft_p95_s
+        );
+        ensure!(
+            i.e2e_p99_s <= budget.e2e_p99_s,
+            "interactive p99 e2e {:.3} s blew the {:.3} s budget",
+            i.e2e_p99_s,
+            budget.e2e_p99_s
+        );
+        Ok(())
+    }
+
+    /// Render the per-class comparison table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "workload lab: {} mixed-class requests (seed {:#x}), same governed fleet twice",
+            self.arrivals.len(),
+            self.seed
+        );
+        let _ = writeln!(
+            out,
+            "{:12} {:>4} {:>14} {:>14} {:>8} {:>18} {:>18}",
+            "class", "n", "blind J/req", "aware J/req", "ΔJ/req", "aware ttft p95", "aware e2e p99"
+        );
+        for c in TrafficClass::ALL {
+            let b = &self.blind.by_class[c.slot()];
+            let a = &self.aware.by_class[c.slot()];
+            let slo = self.slos.for_class(c);
+            let _ = writeln!(
+                out,
+                "{:12} {:>4} {:>14.2} {:>14.2} {:>8.2} {:>10.3}s ≤{:5.1} {:>10.3}s ≤{:5.1}",
+                c.label(),
+                a.requests,
+                b.j_per_req(),
+                a.j_per_req(),
+                a.j_per_req() - b.j_per_req(),
+                a.ttft_p95_s,
+                slo.ttft_p95_s,
+                a.e2e_p99_s,
+                slo.e2e_p99_s
+            );
+        }
+        let (bj, aj) = (self.blind.outcome.total_j(), self.aware.outcome.total_j());
+        let _ = writeln!(
+            out,
+            "fleet: blind {:.0} J / {:.2} s makespan — aware {:.0} J / {:.2} s makespan",
+            bj,
+            self.blind.outcome.makespan_s,
+            aj,
+            self.aware.outcome.makespan_s
+        );
+        let _ = writeln!(
+            out,
+            "per-class conservation vs ledger: blind {:.1e}, aware {:.1e}",
+            self.blind.conservation_rel_err, self.aware.conservation_rel_err
+        );
+        out
+    }
+}
+
+/// The lab trace as `prompts.jsonl`: one LF-terminated line per request
+/// (`t_s`, `class`, `query_idx`, `dataset`, `output_tokens`), in arrival
+/// order. Byte-deterministic under a fixed seed.
+pub fn prompts_jsonl(suite: &ReplaySuite, arrivals: &[Arrival]) -> String {
+    let mut out = String::new();
+    for a in arrivals {
+        let q = &suite.queries[a.query_idx];
+        let line = obj(vec![
+            ("t_s", num(a.t_s)),
+            ("class", text(a.class.label())),
+            ("query_idx", uint(a.query_idx)),
+            ("dataset", text(q.dataset.label())),
+            ("output_tokens", uint(q.output_tokens)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// `ewatt lab [--requests N] [--seed S] [--out DIR]`: print the table,
+/// optionally write `prompts.jsonl`, then enforce [`LabReport::check`].
+pub fn run_cli(args: &Args) -> Result<()> {
+    let gpu = GpuSpec::rtx_pro_6000();
+    let requests = args.get_usize("requests", DEFAULT_REQUESTS);
+    let seed = args.get_u64("seed", DEFAULT_SEED);
+    let report = execute(&gpu, requests, seed)?;
+    print!("{}", report.render());
+    if let Some(dir) = args.get("out") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join("prompts.jsonl");
+        write_prompts(&path, &report)?;
+        println!("wrote {}", path.display());
+    }
+    report.check()?;
+    println!("lab bar holds: class-aware beats class-blind on Batch/Background J/req");
+    Ok(())
+}
+
+fn write_prompts(path: &Path, report: &LabReport) -> Result<()> {
+    let body = prompts_jsonl(&lab_suite(), &report.arrivals);
+    std::fs::write(path, body).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_aware_governance_beats_class_blind_on_the_mixed_trace() {
+        // The PR's headline, pinned at the default lab configuration.
+        let gpu = GpuSpec::rtx_pro_6000();
+        let report = execute(&gpu, DEFAULT_REQUESTS, DEFAULT_SEED).unwrap();
+        report.check().unwrap();
+        // Both runs served the full trace.
+        assert_eq!(report.blind.outcome.served, DEFAULT_REQUESTS);
+        assert_eq!(report.aware.outcome.served, DEFAULT_REQUESTS);
+        // The table renders every class row.
+        let table = report.render();
+        for c in TrafficClass::ALL {
+            assert!(table.contains(c.label()), "{table}");
+        }
+    }
+
+    #[test]
+    fn prompts_jsonl_is_deterministic_lf_only_and_complete() {
+        let suite = lab_suite();
+        let arrivals = ClassMix::default().generate(&suite, 40, DEFAULT_SEED);
+        let a = prompts_jsonl(&suite, &arrivals);
+        let b = prompts_jsonl(&suite, &arrivals);
+        assert_eq!(a, b);
+        assert!(!a.contains('\r'), "prompts.jsonl must be LF-only");
+        assert_eq!(a.lines().count(), 40);
+        // Every line round-trips as JSON carrying the class tag.
+        for (line, arr) in a.lines().zip(&arrivals) {
+            let v = crate::util::json::JsonValue::parse(line).unwrap();
+            assert_eq!(
+                v.get("class").and_then(crate::util::json::JsonValue::as_str),
+                Some(arr.class.label())
+            );
+        }
+    }
+}

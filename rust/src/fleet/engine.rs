@@ -32,8 +32,7 @@ use std::cmp::Ordering;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{GpuSpec, ModelSpec, ModelTier};
-use crate::coordinator::dvfs_policy::DvfsPolicy;
+use crate::config::{GpuSpec, ModelTier};
 use crate::obs::span::{SpanEvent, Trace, TraceSink};
 use crate::obs::timeline::TimelineSampler;
 use crate::serve::slo::{RecordSink, Slo, SloTracker};
@@ -48,7 +47,7 @@ use super::lifecycle::{
     LifecycleStats, PendingRequeue, ReactiveConfig, ReplicaState, ScaleAction,
 };
 use super::queue::EventQueue;
-use super::replica::{Replica, ReplicaSpec};
+use super::replica::{ClassPolicy, Replica, ReplicaSpec};
 use super::router::{FleetRouter, ReplicaStatus};
 
 /// Fleet composition and serving parameters.
@@ -66,6 +65,10 @@ pub struct FleetConfig {
     pub failures: Option<FailureConfig>,
     /// Energy + delay of bringing a `Cold` replica `Live`.
     pub cold_start: ColdStart,
+    /// Per-class admission + SLO policy (`None` = class-blind: FIFO
+    /// admission, every request measured against [`FleetConfig::slo`] —
+    /// bit-identical to the pre-class engine).
+    pub classes: Option<ClassPolicy>,
 }
 
 impl FleetConfig {
@@ -76,56 +79,6 @@ impl FleetConfig {
     /// panicking mid-run.
     pub fn builder() -> FleetConfigBuilder {
         FleetConfigBuilder { cfg: FleetConfig::default() }
-    }
-
-    /// `n` identical replicas of `model` under one policy.
-    #[deprecated(note = "use FleetConfig::builder().replicas(n, spec).build()")]
-    pub fn homogeneous(model: ModelSpec, n: usize, policy: DvfsPolicy) -> FleetConfig {
-        assert!(n >= 1);
-        FleetConfig::builder()
-            .replicas(n, ReplicaSpec { model, policy, state: ReplicaState::Live })
-            .build()
-            .expect("homogeneous fleet is always valid")
-    }
-
-    /// A two-tier fleet: `n_small` small-tier plus `n_large` large-tier
-    /// replicas, all under one policy (the Section VII deployment shape).
-    #[deprecated(note = "use FleetConfig::builder() with two replicas() calls")]
-    pub fn tiered(
-        small: ModelTier,
-        n_small: usize,
-        large: ModelTier,
-        n_large: usize,
-        policy: DvfsPolicy,
-    ) -> FleetConfig {
-        assert!(n_small + n_large >= 1);
-        FleetConfig::builder()
-            .replicas(n_small, ReplicaSpec::tiered(small, policy))
-            .replicas(n_large, ReplicaSpec::tiered(large, policy))
-            .build()
-            .expect("tiered fleet is always valid")
-    }
-
-    /// An elastic fleet: `n` provisioned replicas of which `initial_live`
-    /// start `Live` and the rest `Cold`, scaled by a reactive autoscaler
-    /// capped at the provisioned count.
-    #[deprecated(note = "use FleetConfig::builder() with replicas() + reactive()")]
-    pub fn elastic(
-        model: ModelSpec,
-        n: usize,
-        initial_live: usize,
-        policy: DvfsPolicy,
-        scale: ReactiveConfig,
-    ) -> FleetConfig {
-        assert!(n >= 1 && (1..=n).contains(&initial_live));
-        let live = ReplicaSpec { model, policy, state: ReplicaState::Live };
-        let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
-        FleetConfig::builder()
-            .replicas(initial_live, live)
-            .replicas(n - initial_live, cold)
-            .reactive(ReactiveConfig { max_live: n.min(scale.max_live), ..scale })
-            .build()
-            .expect("elastic fleet with a provisioned-count cap is always valid")
     }
 }
 
@@ -139,6 +92,7 @@ impl Default for FleetConfig {
             autoscale: AutoscalePolicy::Static,
             failures: None,
             cold_start: ColdStart::default(),
+            classes: None,
         }
     }
 }
@@ -204,6 +158,15 @@ impl FleetConfigBuilder {
         self
     }
 
+    /// Attach a per-class admission + SLO policy. Replicas then admit by
+    /// strict class priority (with starvation aging), gate lower classes
+    /// on KV headroom, and report a class-weighted pressure signal to
+    /// their governors.
+    pub fn classes(mut self, policy: ClassPolicy) -> Self {
+        self.cfg.classes = Some(policy);
+        self
+    }
+
     /// Validate every invariant and hand back the config.
     pub fn build(self) -> Result<FleetConfig> {
         let cfg = self.cfg;
@@ -243,6 +206,19 @@ impl FleetConfigBuilder {
         if let Some(f) = &cfg.failures {
             ensure!(f.mtbf_s > 0.0, "MTBF must be positive");
             ensure!(f.mttr_s > 0.0, "MTTR must be positive");
+        }
+        if let Some(c) = &cfg.classes {
+            ensure!(
+                c.aging_s.is_finite() && c.aging_s > 0.0,
+                "starvation aging horizon must be positive and finite, got {} s",
+                c.aging_s
+            );
+            for (label, cap) in [("batch", c.batch_kv_cap), ("background", c.background_kv_cap)] {
+                ensure!(
+                    cap > 0.0 && cap <= 1.0,
+                    "{label} KV admission cap must be in (0, 1], got {cap}"
+                );
+            }
         }
         Ok(cfg)
     }
@@ -431,6 +407,9 @@ impl FleetSim {
             .iter()
             .map(|spec| Replica::new(&self.gpu, spec.clone(), self.cfg.slo, self.cfg.window_s))
             .collect();
+        for rep in reps.iter_mut() {
+            rep.set_class_policy(self.cfg.classes.as_ref());
+        }
         let initial_live = reps.iter().filter(|r| r.state.routable()).count();
         let mut ledger = EnergyLedger::new(arrivals.len());
         let mut fleet_tracker = SloTracker::new(self.cfg.slo);
@@ -542,6 +521,7 @@ impl FleetSim {
                     SpanEvent::RequestSummary {
                         req,
                         replica: out.served_by[req],
+                        class: arrivals[req].class,
                         energy: ledger.request(req),
                     },
                 );
@@ -1128,7 +1108,11 @@ impl Engine<'_> {
 
             if next < self.arrivals.len() && t_arr <= t_step {
                 let a = self.arrivals[next];
-                self.trace.emit(a.t_s, || SpanEvent::Queued { req: next, query_idx: a.query_idx });
+                self.trace.emit(a.t_s, || SpanEvent::Queued {
+                    req: next,
+                    query_idx: a.query_idx,
+                    class: a.class,
+                });
                 if !self.lifecycle.is_inert() {
                     let pressure = self.tracker.pressure();
                     self.apply_autoscale(reps, a.t_s, pressure);
@@ -1218,6 +1202,7 @@ fn next_lifecycle_event_scan(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::dvfs_policy::DvfsPolicy;
     use crate::fleet::router::{DifficultyTiered, EnergyAware, LeastLoaded, RoundRobin};
     use crate::serve::TrafficPattern;
 
@@ -1328,7 +1313,7 @@ mod tests {
         // take the parallel path, and still match the reference exactly.
         let s = suite();
         let arr: Vec<Arrival> =
-            (0..200).map(|i| Arrival { t_s: 0.0, query_idx: i % s.len() }).collect();
+            (0..200).map(|i| Arrival::at(0.0, i % s.len())).collect();
         let gpu = GpuSpec::rtx_pro_6000();
         let cfg = FleetConfig::builder().replicas(6, spec(ModelTier::B3)).build().unwrap();
         let sim = FleetSim::new(gpu, cfg);
@@ -1405,46 +1390,83 @@ mod tests {
             .failures(FailureConfig { mtbf_s: 10.0, mttr_s: f64::INFINITY, seed: 1 })
             .build()
             .is_ok());
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .classes(ClassPolicy { aging_s: 0.0, ..ClassPolicy::default() })
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("aging"));
+        assert!(FleetConfig::builder()
+            .replica(spec(ModelTier::B1))
+            .classes(ClassPolicy { batch_kv_cap: 0.0, ..ClassPolicy::default() })
+            .build()
+            .unwrap_err()
+            .to_string()
+            .contains("KV admission cap"));
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_constructors_match_their_builder_equivalents() {
-        // The wrappers stay one release for downstream callers; they must
-        // produce runs bit-identical to the builder spelling (including
-        // elastic()'s max_live cap at the provisioned count, which feeds
-        // the autoscaler's cooldown trajectory).
+    fn class_policy_serves_every_class_and_conserves_energy() {
         let s = suite();
-        let arr = arrivals(&s, 24);
+        let arr = crate::serve::traffic::ClassMix::default().generate(&s, 48, 0xC1A5);
         let gpu = GpuSpec::rtx_pro_6000();
-
-        let old_t = FleetConfig::tiered(ModelTier::B1, 1, ModelTier::B8, 1, DvfsPolicy::Static(2842));
-        let new_t = FleetConfig::builder()
-            .replica(spec(ModelTier::B1))
-            .replica(spec(ModelTier::B8))
+        let cfg = FleetConfig::builder()
+            .replicas(2, ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::governed(&gpu)))
+            .classes(ClassPolicy::default())
             .build()
             .unwrap();
+        let o = FleetSim::new(gpu, cfg).run(&s, &arr, &mut LeastLoaded).unwrap();
+        assert_eq!(o.served, arr.len());
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j();
+        assert!(rel < 1e-6, "conservation off by {rel:e}");
+        // Per-class attribution partitions the fleet bill exactly.
+        let mut by_class = [0.0f64; 3];
+        for (a, j) in arr.iter().zip(&o.joules) {
+            by_class[a.class.slot()] += j;
+        }
+        assert!(by_class.iter().all(|&j| j > 0.0), "every class drew energy: {by_class:?}");
+        let sum: f64 = by_class.iter().sum();
+        assert!((sum - o.total_j()).abs() <= 1e-6 * o.total_j());
+    }
+
+    #[test]
+    fn builder_spells_every_retired_constructor_shape() {
+        // The old `homogeneous`/`tiered`/`elastic` wrappers are gone; the
+        // builder must still construct each of those fleet shapes exactly
+        // (replica count/tier/state and the elastic max_live cap at the
+        // provisioned count, which feeds the autoscaler's cooldown
+        // trajectory).
+        let homog = FleetConfig::builder().replicas(3, spec(ModelTier::B1)).build().unwrap();
+        assert_eq!(homog.replicas.len(), 3);
+        assert!(homog.replicas.iter().all(|r| r.model.tier == ModelTier::B1));
+        assert!(homog.replicas.iter().all(|r| r.state == ReplicaState::Live));
+
+        let tiered = FleetConfig::builder()
+            .replicas(1, spec(ModelTier::B1))
+            .replicas(2, spec(ModelTier::B8))
+            .build()
+            .unwrap();
+        let tiers: Vec<ModelTier> = tiered.replicas.iter().map(|r| r.model.tier).collect();
+        assert_eq!(tiers, vec![ModelTier::B1, ModelTier::B8, ModelTier::B8]);
+
         let scale = ReactiveConfig { cooldown_s: 2.0, ..ReactiveConfig::default() };
-        let old_e = FleetConfig::elastic(
-            crate::config::model::model_for_tier(ModelTier::B3),
-            3,
-            1,
-            DvfsPolicy::Static(2842),
-            scale,
-        );
-        let new_e = FleetConfig::builder()
+        let elastic = FleetConfig::builder()
             .replica(spec(ModelTier::B3))
             .replicas(2, ReplicaSpec { state: ReplicaState::Cold, ..spec(ModelTier::B3) })
             .reactive(ReactiveConfig { max_live: 3, ..scale })
             .build()
             .unwrap();
-        for (old, new) in [(old_t, new_t), (old_e, new_e)] {
-            let a = FleetSim::new(gpu.clone(), old).run(&s, &arr, &mut LeastLoaded).unwrap();
-            let b = FleetSim::new(gpu.clone(), new).run(&s, &arr, &mut LeastLoaded).unwrap();
-            assert_eq!(a.joules, b.joules);
-            assert_eq!(a.routed, b.routed);
-            assert_eq!(a.makespan_s, b.makespan_s);
-            assert_eq!(a.lifecycle, b.lifecycle);
+        assert_eq!(elastic.replicas.len(), 3);
+        let live = elastic.replicas.iter().filter(|r| r.state == ReplicaState::Live).count();
+        assert_eq!(live, 1, "one live seed replica, the rest provisioned cold");
+        match &elastic.autoscale {
+            AutoscalePolicy::Reactive(r) => {
+                assert_eq!(r.max_live, 3, "capped at the provisioned count");
+                assert_eq!(r.cooldown_s, 2.0);
+            }
+            other => panic!("expected a reactive autoscaler, got {other:?}"),
         }
     }
 
@@ -1529,7 +1551,7 @@ mod tests {
         let s = suite();
         // A slam of simultaneous arrivals: parallelism must help makespan.
         let arr: Vec<Arrival> =
-            (0..32).map(|i| Arrival { t_s: 0.0, query_idx: i % s.len() }).collect();
+            (0..32).map(|i| Arrival::at(0.0, i % s.len())).collect();
         let gpu = GpuSpec::rtx_pro_6000();
         let run = |n: usize| {
             let cfg = FleetConfig::builder().replicas(n, spec(ModelTier::B3)).build().unwrap();
@@ -1579,9 +1601,9 @@ mod tests {
         // A hard burst followed by a long quiet tail: the reactive scaler
         // must warm capacity for the burst and drain it afterwards.
         let mut arr: Vec<Arrival> =
-            (0..40).map(|i| Arrival { t_s: 0.05 * i as f64, query_idx: i % s.len() }).collect();
+            (0..40).map(|i| Arrival::at(0.05 * i as f64, i % s.len())).collect();
         for i in 0..16 {
-            arr.push(Arrival { t_s: 60.0 + 10.0 * i as f64, query_idx: i % s.len() });
+            arr.push(Arrival::at(60.0 + 10.0 * i as f64, i % s.len()));
         }
         let gpu = GpuSpec::rtx_pro_6000();
         let cfg = FleetConfig::builder()
@@ -1669,7 +1691,7 @@ mod tests {
         let gen_idx: Vec<usize> =
             (0..s.len()).filter(|&i| s.queries[i].output_tokens > 0).collect();
         let arr: Vec<Arrival> = (0..12)
-            .map(|i| Arrival { t_s: 0.1 * i as f64, query_idx: gen_idx[i % gen_idx.len()] })
+            .map(|i| Arrival::at(0.1 * i as f64, gen_idx[i % gen_idx.len()]))
             .collect();
         let gpu = GpuSpec::rtx_pro_6000();
         let cfg = FleetConfig::builder()

@@ -8,8 +8,8 @@
 //!   governor, KV cache, admission queue, and telemetry window — advanced
 //!   event-by-event so N replicas interleave on one simulated clock;
 //! - [`router`]: pluggable arrival routing over live replica state
-//!   (round-robin, least-loaded, semantic-difficulty tiering, and
-//!   energy-per-token-aware selection);
+//!   (round-robin, least-loaded, semantic-difficulty tiering,
+//!   energy-per-token-aware, and traffic-class-aware selection);
 //! - [`engine`]: the discrete-event fleet simulator binding them together;
 //! - [`queue`]: the indexed event queue over replica clocks the engine's
 //!   hot path steps from (version-stamped lazy invalidation, O(log fleet));
@@ -54,7 +54,7 @@ pub use lifecycle::{
     StaticAutoscaler,
 };
 pub use queue::EventQueue;
-pub use replica::{Replica, ReplicaSpec};
+pub use replica::{ClassPolicy, Replica, ReplicaSpec};
 pub use router::{
-    DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,
+    ClassAware, DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,
 };

@@ -28,8 +28,8 @@ use crate::gpu::{GpuSim, TelemetryWindow};
 use crate::obs::span::{SpanEvent, Trace};
 use crate::perf::{decode_step_cost, prefill_cost};
 use crate::serve::governor::{governor_for, FreqGovernor, GovernorSignal};
-use crate::serve::slo::{RecordSink, Slo, SloTracker};
-use crate::serve::traffic::Arrival;
+use crate::serve::slo::{ClassSloTracker, ClassSlos, RecordSink, Slo, SloTracker};
+use crate::serve::traffic::{Arrival, TrafficClass};
 use crate::text::tokenizer::token_count;
 use crate::workload::ReplaySuite;
 
@@ -57,6 +57,49 @@ impl ReplicaSpec {
     }
 }
 
+/// Per-class serving policy: the objectives each class is measured against
+/// and how admission treats the classes. Attaching one to a replica (via
+/// [`Replica::set_class_policy`]) switches it from FIFO admission and a
+/// single-SLO pressure signal to strict-priority admission with starvation
+/// aging, class-reserved KV headroom, and class-weighted pressure. With no
+/// policy attached behavior is bit-identical to the single-class engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassPolicy {
+    /// Per-class latency objectives.
+    pub slos: ClassSlos,
+    /// Queue age (seconds) past which a batch/background request is
+    /// promoted above Interactive — the starvation-aging guarantee.
+    pub aging_s: f64,
+    /// KV occupancy in `(0, 1]` above which Batch admissions pause
+    /// (headroom held in reserve for interactive traffic).
+    pub batch_kv_cap: f64,
+    /// KV occupancy in `(0, 1]` above which Background admissions pause.
+    pub background_kv_cap: f64,
+}
+
+impl Default for ClassPolicy {
+    fn default() -> ClassPolicy {
+        ClassPolicy {
+            slos: ClassSlos::default(),
+            aging_s: 30.0,
+            batch_kv_cap: 0.85,
+            background_kv_cap: 0.70,
+        }
+    }
+}
+
+impl ClassPolicy {
+    /// The KV occupancy ceiling a class may admit under (Interactive is
+    /// never capped — the reserve exists *for* it).
+    pub fn kv_cap(&self, class: TrafficClass) -> f64 {
+        match class {
+            TrafficClass::Interactive => 1.0,
+            TrafficClass::Batch => self.batch_kv_cap,
+            TrafficClass::Background => self.background_kv_cap,
+        }
+    }
+}
+
 /// One queued request (arrival plus its fleet-wide request index).
 #[derive(Debug, Clone, Copy)]
 struct Queued {
@@ -69,6 +112,7 @@ struct ActiveSeq {
     req: usize,
     /// Corpus query (kept so a crash can requeue the original arrival).
     query_idx: usize,
+    class: TrafficClass,
     arrival_s: f64,
     first_token_s: f64,
     tokens: usize,
@@ -123,7 +167,12 @@ pub struct Replica {
     req_scratch: Vec<usize>,
     /// Scratch buffer of sequences finishing this decode step (decode hot
     /// path — reused so a million decode steps allocate nothing).
-    finish_scratch: Vec<(usize, f64, f64, usize)>,
+    finish_scratch: Vec<(usize, f64, f64, usize, TrafficClass)>,
+    /// Class-aware admission/queueing policy; `None` preserves the
+    /// single-class FIFO behavior bit-for-bit.
+    class_policy: Option<ClassPolicy>,
+    /// Per-class SLO trackers, present iff a class policy is attached.
+    class_trackers: Option<ClassSloTracker>,
 }
 
 impl Replica {
@@ -177,8 +226,31 @@ impl Replica {
             cold_j_per_token,
             req_scratch: Vec::new(),
             finish_scratch: Vec::new(),
+            class_policy: None,
+            class_trackers: None,
             spec,
         }
+    }
+
+    /// Attach (or detach) the class-aware admission policy. Resets the
+    /// per-class trackers; call before serving traffic.
+    pub fn set_class_policy(&mut self, policy: Option<&ClassPolicy>) {
+        self.class_trackers = policy.map(|p| ClassSloTracker::new(p.slos));
+        self.class_policy = policy.cloned();
+    }
+
+    /// Per-class SLO trackers, when a class policy is attached.
+    pub fn class_trackers(&self) -> Option<&ClassSloTracker> {
+        self.class_trackers.as_ref()
+    }
+
+    /// Queued requests per class, in [`TrafficClass::ALL`] order.
+    pub fn queued_by_class(&self) -> [usize; 3] {
+        let mut out = [0usize; 3];
+        for q in &self.queue {
+            out[q.arrival.class.slot()] += 1;
+        }
+        out
     }
 
     /// Whether this replica has work to execute.
@@ -346,7 +418,7 @@ impl Replica {
         let mut lost: Vec<(usize, Arrival)> =
             self.queue.drain(..).map(|q| (q.req, q.arrival)).collect();
         lost.extend(self.active.drain(..).map(|s| {
-            (s.req, Arrival { t_s: s.arrival_s, query_idx: s.query_idx })
+            (s.req, Arrival { t_s: s.arrival_s, query_idx: s.query_idx, class: s.class })
         }));
         for &(req, _) in &lost {
             self.kv.release(req as u64);
@@ -360,8 +432,15 @@ impl Replica {
         if !self.wants_signal {
             return GovernorSignal::default();
         }
+        // Class-aware replicas feed the governor the class-weighted
+        // pressure: each class measured against its *own* budget, so
+        // latency-tolerant distress no longer lifts the frequency.
+        let pressure = match &self.class_trackers {
+            Some(ct) => ct.pressure(),
+            None => self.tracker.pressure(),
+        };
         GovernorSignal {
-            pressure: self.tracker.pressure(),
+            pressure,
             queue_depth: self.queue.len(),
             active_seqs: self.active.len(),
             completed: self.tracker.completed(),
@@ -397,12 +476,14 @@ impl Replica {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn complete(
         &mut self,
         req: usize,
         arrival_s: f64,
         first_token_s: f64,
         tokens: usize,
+        class: TrafficClass,
         fleet: &mut dyn RecordSink,
         trace: &mut Trace<'_>,
     ) {
@@ -410,6 +491,9 @@ impl Replica {
         let e2e = self.now_s - arrival_s;
         let tbt = if tokens > 0 { (self.now_s - first_token_s) / tokens as f64 } else { 0.0 };
         self.tracker.record(ttft, tbt, e2e);
+        if let Some(ct) = &mut self.class_trackers {
+            ct.record(class, ttft, tbt, e2e);
+        }
         fleet.record(ttft, tbt, e2e);
         self.kv.release(req as u64);
         self.served += 1;
@@ -419,6 +503,7 @@ impl Replica {
         trace.emit(self.now_s, || SpanEvent::Served {
             req,
             replica: rep,
+            class,
             ttft_s: ttft,
             tbt_s: tbt,
             e2e_s: e2e,
@@ -439,28 +524,74 @@ impl Replica {
     ) -> Result<()> {
         debug_assert!(self.runnable(), "step() on an idle replica");
         if !self.queue.is_empty() && self.active.len() < max_batch {
-            let head = *self.queue.front().unwrap();
-            let q = &suite.queries[head.arrival.query_idx];
-            let input = token_count(&q.text).max(1);
-            // Reserve the full sequence (prompt + output budget) up front.
-            if self.kv.admit(head.req as u64, input + q.output_tokens).is_ok() {
-                self.queue.pop_front();
-                return self.admit(head, input, suite, ledger, fleet, trace);
+            // Class-blind replicas admit strictly FIFO; class-aware ones
+            // pick the best queued candidate by class priority.
+            let pos = match &self.class_policy {
+                None => Some(0),
+                Some(pol) => self.pick_queued(pol),
+            };
+            if let Some(pos) = pos {
+                let head = self.queue[pos];
+                let q = &suite.queries[head.arrival.query_idx];
+                let input = token_count(&q.text).max(1);
+                // Reserve the full sequence (prompt + output budget) up
+                // front.
+                if self.kv.admit(head.req as u64, input + q.output_tokens).is_ok() {
+                    self.queue.remove(pos);
+                    return self.admit(head, input, suite, ledger, fleet, trace);
+                }
+                if self.active.is_empty() {
+                    bail!(
+                        "request {} ({} prompt + {} output tokens) cannot fit the \
+                         empty KV cache of a {} replica",
+                        head.req,
+                        input,
+                        q.output_tokens,
+                        self.spec.model.name
+                    );
+                }
+                // KV full: fall through and decode until sequences release
+                // it.
             }
-            if self.active.is_empty() {
-                bail!(
-                    "request {} ({} prompt + {} output tokens) cannot fit the \
-                     empty KV cache of a {} replica",
-                    head.req,
-                    input,
-                    q.output_tokens,
-                    self.spec.model.name
-                );
-            }
-            // KV full: fall through and decode until sequences release it.
+            // No admissible candidate (class KV caps): decode instead.
         }
         self.decode_step(ledger, fleet, trace);
         Ok(())
+    }
+
+    /// The class-aware admission choice: the queued request with the
+    /// highest effective priority (strict class priority, FIFO within a
+    /// class; a batch/background request older than `aging_s` is promoted
+    /// above everything — the starvation guarantee). Classes whose KV cap
+    /// is already exceeded are skipped, *unless* the batch is empty —
+    /// an idle replica must make progress on whatever it holds.
+    fn pick_queued(&self, pol: &ClassPolicy) -> Option<usize> {
+        let kv_frac = self.kv_used_frac();
+        let ignore_caps = self.active.is_empty();
+        let aged = TrafficClass::Interactive.priority() + 1;
+        let mut best: Option<(usize, usize)> = None;
+        for (pos, queued) in self.queue.iter().enumerate() {
+            let class = queued.arrival.class;
+            if !ignore_caps && kv_frac >= pol.kv_cap(class) {
+                continue;
+            }
+            let waited = self.now_s - queued.arrival.t_s;
+            let eff = if class != TrafficClass::Interactive && waited > pol.aging_s {
+                aged
+            } else {
+                class.priority()
+            };
+            // Strict > keeps the earliest index per priority level (FIFO
+            // within a class).
+            let better = match best {
+                None => true,
+                Some((bp, _)) => eff > bp,
+            };
+            if better {
+                best = Some((eff, pos));
+            }
+        }
+        best.map(|(_, pos)| pos)
     }
 
     /// Prefill (and, for classification, score) one admitted request.
@@ -506,11 +637,13 @@ impl Replica {
         });
         if q.output_tokens == 0 {
             // No decode phase: the request completes at prefill end.
-            self.complete(head.req, head.arrival.t_s, self.now_s, 0, fleet, trace);
+            let t0 = self.now_s;
+            self.complete(head.req, head.arrival.t_s, t0, 0, head.arrival.class, fleet, trace);
         } else {
             self.active.push(ActiveSeq {
                 req: head.req,
                 query_idx: head.arrival.query_idx,
+                class: head.arrival.class,
                 arrival_s: head.arrival.t_s,
                 first_token_s: self.now_s,
                 tokens: 0,
@@ -570,14 +703,14 @@ impl Replica {
             s.tokens += 1;
             s.ctx += 1;
             if s.remaining == 0 {
-                finished.push((s.req, s.arrival_s, s.first_token_s, s.tokens));
+                finished.push((s.req, s.arrival_s, s.first_token_s, s.tokens, s.class));
                 false
             } else {
                 true
             }
         });
-        for &(req, arrival_s, first_token_s, tokens) in &finished {
-            self.complete(req, arrival_s, first_token_s, tokens, fleet, trace);
+        for &(req, arrival_s, first_token_s, tokens, class) in &finished {
+            self.complete(req, arrival_s, first_token_s, tokens, class, fleet, trace);
         }
         self.finish_scratch = finished;
     }
@@ -628,7 +761,7 @@ mod tests {
         let idx = suite.dataset_indices(Dataset::NarrativeQa)[0];
         let mut ledger = EnergyLedger::new(1);
         let mut fleet = SloTracker::new(Slo::interactive());
-        rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
+        rep.enqueue(0, Arrival::at(0.0, idx));
         assert!(rep.runnable());
         while rep.runnable() {
             rep.step(&suite, 4, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
@@ -651,7 +784,7 @@ mod tests {
         let idx = suite.dataset_indices(Dataset::BoolQ)[0];
         let mut ledger = EnergyLedger::new(1);
         let mut fleet = SloTracker::new(Slo::interactive());
-        rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
+        rep.enqueue(0, Arrival::at(0.0, idx));
         rep.step(&suite, 4, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
         assert!(!rep.runnable());
         assert_eq!(rep.served, 1);
@@ -667,7 +800,7 @@ mod tests {
         let idx = suite.dataset_indices(Dataset::TruthfulQa)[0];
         let mut ledger = EnergyLedger::new(1);
         let mut fleet = SloTracker::new(Slo::interactive());
-        rep.enqueue(0, Arrival { t_s: 1.5, query_idx: idx });
+        rep.enqueue(0, Arrival::at(1.5, idx));
         let expect_idle = 1.5 * rep.gpu.spec.p_idle_w;
         assert!((rep.idle_j - expect_idle).abs() < 1e-9);
         while rep.runnable() {
@@ -683,9 +816,9 @@ mod tests {
         let gen_idx = suite.dataset_indices(Dataset::NarrativeQa);
         let mut ledger = EnergyLedger::new(3);
         let mut fleet = SloTracker::new(Slo::interactive());
-        rep.enqueue(0, Arrival { t_s: 0.25, query_idx: gen_idx[0] });
-        rep.enqueue(1, Arrival { t_s: 0.50, query_idx: gen_idx[1] });
-        rep.enqueue(2, Arrival { t_s: 0.75, query_idx: gen_idx[2] });
+        rep.enqueue(0, Arrival::at(0.25, gen_idx[0]));
+        rep.enqueue(1, Arrival::at(0.50, gen_idx[1]));
+        rep.enqueue(2, Arrival::at(0.75, gen_idx[2]));
         // Admit two into the batch, leave one queued, decode a little.
         for _ in 0..5 {
             rep.step(&suite, 2, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
@@ -725,7 +858,7 @@ mod tests {
         let idx = suite.dataset_indices(Dataset::TruthfulQa)[0];
         let mut ledger = EnergyLedger::new(1);
         let mut fleet = SloTracker::new(Slo::interactive());
-        rep.enqueue(0, Arrival { t_s: 0.0, query_idx: idx });
+        rep.enqueue(0, Arrival::at(0.0, idx));
         assert!(!rep.begin_drain(0.0));
         assert_eq!(rep.state, ReplicaState::Draining);
         assert!(rep.can_step(), "draining replica must finish its work");
@@ -762,6 +895,124 @@ mod tests {
         let leftover = rep.finalize(&mut ledger);
         assert_eq!(leftover.coldstart_j, ColdStart::default().energy_j);
         assert_eq!(ledger.totals().coldstart_j, 0.0, "nothing charged locally");
+    }
+
+    fn classed(t_s: f64, query_idx: usize, class: TrafficClass) -> Arrival {
+        Arrival { t_s, query_idx, class }
+    }
+
+    #[test]
+    fn class_policy_admits_by_strict_priority() {
+        let (suite, mut rep) = setup();
+        rep.set_class_policy(Some(&ClassPolicy::default()));
+        let cls = suite.dataset_indices(Dataset::BoolQ);
+        let mut ledger = EnergyLedger::new(3);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        // Enqueued lowest-priority first; admission must invert the order.
+        rep.enqueue(0, classed(0.0, cls[0], TrafficClass::Background));
+        rep.enqueue(1, classed(0.0, cls[1], TrafficClass::Batch));
+        rep.enqueue(2, classed(0.0, cls[2], TrafficClass::Interactive));
+        assert_eq!(rep.queued_by_class(), [1, 1, 1]);
+        while rep.runnable() {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        // Classification queries complete at admission, so the serve order
+        // is the admission order.
+        assert_eq!(rep.served_reqs(), &[2, 1, 0]);
+    }
+
+    #[test]
+    fn no_class_policy_keeps_fifo_admission() {
+        let (suite, mut rep) = setup();
+        let cls = suite.dataset_indices(Dataset::BoolQ);
+        let mut ledger = EnergyLedger::new(3);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, classed(0.0, cls[0], TrafficClass::Background));
+        rep.enqueue(1, classed(0.0, cls[1], TrafficClass::Batch));
+        rep.enqueue(2, classed(0.0, cls[2], TrafficClass::Interactive));
+        while rep.runnable() {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        assert_eq!(rep.served_reqs(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn aging_promotes_starved_background_above_interactive() {
+        let (suite, mut rep) = setup();
+        rep.set_class_policy(Some(&ClassPolicy::default()));
+        let cls = suite.dataset_indices(Dataset::BoolQ);
+        let mut ledger = EnergyLedger::new(2);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, classed(0.0, cls[0], TrafficClass::Background));
+        rep.enqueue(1, classed(0.0, cls[1], TrafficClass::Interactive));
+        // Both waited past the aging threshold; the background request is
+        // promoted above Interactive (interactive never needs promotion).
+        rep.now_s = 50.0;
+        while rep.runnable() {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        assert_eq!(rep.served_reqs(), &[0, 1]);
+    }
+
+    #[test]
+    fn kv_cap_holds_background_until_the_batch_drains() {
+        let (suite, mut rep) = setup();
+        // A zero background cap: background may only admit into an empty
+        // batch (the progress guarantee), never alongside other work.
+        let pol =
+            ClassPolicy { background_kv_cap: 0.0, aging_s: 1e9, ..ClassPolicy::default() };
+        rep.set_class_policy(Some(&pol));
+        let gen_idx = suite.dataset_indices(Dataset::TruthfulQa);
+        let mut ledger = EnergyLedger::new(2);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, classed(0.0, gen_idx[0], TrafficClass::Background));
+        rep.enqueue(1, classed(0.0, gen_idx[1], TrafficClass::Interactive));
+        // First admission: interactive (higher priority), into the batch.
+        rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        assert_eq!(rep.active_seqs(), 1);
+        assert_eq!(rep.queued_by_class(), [0, 0, 1]);
+        // While the interactive sequence decodes, the capped background
+        // request must stay queued.
+        while rep.active_seqs() > 0 {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+            assert!(rep.active_seqs() <= 1, "background admitted alongside interactive");
+        }
+        assert_eq!(rep.served_reqs(), &[1]);
+        // Batch drained: the progress guarantee lets background in.
+        while rep.runnable() {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        assert_eq!(rep.served_reqs(), &[1, 0]);
+    }
+
+    #[test]
+    fn class_trackers_measure_each_class_against_its_own_budget() {
+        let (suite, mut rep) = setup();
+        rep.set_class_policy(Some(&ClassPolicy::default()));
+        let cls = suite.dataset_indices(Dataset::BoolQ);
+        let mut ledger = EnergyLedger::new(3);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, classed(0.0, cls[0], TrafficClass::Interactive));
+        rep.enqueue(1, classed(0.0, cls[1], TrafficClass::Background));
+        while rep.runnable() {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        let ct = rep.class_trackers().expect("policy attached");
+        assert_eq!(ct.tracker(TrafficClass::Interactive).completed(), 1);
+        assert_eq!(ct.tracker(TrafficClass::Background).completed(), 1);
+        assert_eq!(ct.tracker(TrafficClass::Batch).completed(), 0);
+        // The class-blind tracker still sees everything (fleet rollups).
+        assert_eq!(rep.tracker.completed(), 2);
+        // Crash-requeued arrivals keep their class.
+        rep.set_class_policy(Some(&ClassPolicy::default()));
+        rep.state = ReplicaState::Live;
+        let gen_idx = suite.dataset_indices(Dataset::NarrativeQa);
+        rep.enqueue(2, classed(1.0, gen_idx[0], TrafficClass::Batch));
+        rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        let lost = rep.crash(rep.now_s + 0.1);
+        assert_eq!(lost.len(), 1);
+        assert_eq!(lost[0].1.class, TrafficClass::Batch);
+        assert_eq!(lost[0].1.t_s, 1.0);
     }
 
     #[test]

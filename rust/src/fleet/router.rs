@@ -3,7 +3,7 @@
 //! Where [`crate::coordinator::router::Router`] picks a model *tier* for a
 //! query offline, a fleet router must pick a live *replica* online, reading
 //! each replica's instantaneous state (backlog, live joules-per-token, and
-//! the telemetry window's busy fraction and mean power). Four disciplines,
+//! the telemetry window's busy fraction and mean power). Five disciplines,
 //! in increasing awareness:
 //!
 //! - [`RoundRobin`]: cycle over live replicas (the baseline every
@@ -14,7 +14,11 @@
 //!   quality surrogate's feature difficulty (Section V-E4's rule recast as
 //!   a score); degrades to round-robin when features are unavailable;
 //! - [`EnergyAware`]: minimize predicted joules/token from each replica's
-//!   live telemetry, with a backlog penalty so cheap replicas don't drown.
+//!   live telemetry, with a backlog penalty so cheap replicas don't drown;
+//! - [`ClassAware`]: split by [`TrafficClass`] — Interactive arrivals take
+//!   the least-loaded replica (queueing delay), Batch/Background take the
+//!   [`EnergyAware`] score (joules/token), so deadline-tolerant work soaks
+//!   up efficient capacity without crowding the fast path.
 //!
 //! Invariants (asserted by `rust/tests/proptest_invariants.rs`): every
 //! request routes to exactly one live replica, and the difficulty router
@@ -24,7 +28,7 @@ use crate::config::ModelTier;
 use crate::coordinator::router::ENTITY_THRESHOLD;
 use crate::features::FeatureVector;
 use crate::quality::QualityModel;
-use crate::serve::traffic::Arrival;
+use crate::serve::traffic::{Arrival, TrafficClass};
 
 use super::lifecycle::ReplicaState;
 
@@ -246,6 +250,25 @@ impl Default for EnergyAware {
     }
 }
 
+/// The [`EnergyAware`] score minimized over live replicas: joules/token
+/// scaled by backlog and window saturation (a saturated telemetry window
+/// means no headroom — marginal work there queues behind a full pipeline).
+fn cheapest_scored(replicas: &[ReplicaStatus], load_penalty: f64) -> usize {
+    let mut best: Option<(usize, f64)> = None;
+    for r in replicas.iter().filter(|r| r.live()) {
+        let score =
+            r.j_per_token * (1.0 + load_penalty * r.backlog() as f64) * (1.0 + r.busy_fraction);
+        let better = match best {
+            None => true,
+            Some((_, s)) => score < s,
+        };
+        if better {
+            best = Some((r.idx, score));
+        }
+    }
+    best.expect("a live replica exists").0
+}
+
 impl FleetRouter for EnergyAware {
     fn route(
         &mut self,
@@ -254,26 +277,49 @@ impl FleetRouter for EnergyAware {
         replicas: &[ReplicaStatus],
     ) -> usize {
         assert_some_live(replicas);
-        let mut best: Option<(usize, f64)> = None;
-        for r in replicas.iter().filter(|r| r.live()) {
-            // A saturated telemetry window means no headroom: marginal
-            // work there queues behind a full pipeline.
-            let score = r.j_per_token
-                * (1.0 + self.load_penalty * r.backlog() as f64)
-                * (1.0 + r.busy_fraction);
-            let better = match best {
-                None => true,
-                Some((_, s)) => score < s,
-            };
-            if better {
-                best = Some((r.idx, score));
-            }
-        }
-        best.expect("a live replica exists").0
+        cheapest_scored(replicas, self.load_penalty)
     }
 
     fn label(&self) -> String {
         format!("energy-aware[penalty={:.2}]", self.load_penalty)
+    }
+}
+
+/// Class-aware routing: latency-critical [`TrafficClass::Interactive`]
+/// arrivals go to the least-loaded live replica (minimizing queueing
+/// delay), while Batch and Background arrivals chase the cheapest
+/// marginal joules/token under the [`EnergyAware`] score — deadline-
+/// tolerant work soaks up the efficient capacity without crowding the
+/// fast path.
+#[derive(Debug, Clone)]
+pub struct ClassAware {
+    /// Backlog penalty for the energy-scored (Batch/Background) classes.
+    pub load_penalty: f64,
+}
+
+impl Default for ClassAware {
+    fn default() -> Self {
+        ClassAware { load_penalty: 0.5 }
+    }
+}
+
+impl FleetRouter for ClassAware {
+    fn route(
+        &mut self,
+        arrival: &Arrival,
+        _features: Option<&FeatureVector>,
+        replicas: &[ReplicaStatus],
+    ) -> usize {
+        assert_some_live(replicas);
+        if arrival.class == TrafficClass::Interactive {
+            least_loaded_where(replicas, |_| true).expect("a live replica exists")
+        } else {
+            cheapest_scored(replicas, self.load_penalty)
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("class-aware[penalty={:.2}]", self.load_penalty)
     }
 }
 
@@ -296,7 +342,11 @@ mod tests {
     }
 
     fn arr() -> Arrival {
-        Arrival { t_s: 0.0, query_idx: 0 }
+        Arrival::at(0.0, 0)
+    }
+
+    fn classed(class: TrafficClass) -> Arrival {
+        Arrival { class, ..Arrival::at(0.0, 0) }
     }
 
     fn easy_features() -> FeatureVector {
@@ -409,6 +459,22 @@ mod tests {
         // Cheap replica deeply backlogged: 1.0·(1+0.5·12) = 7 > 4 → B14.
         let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 12, 1.0)];
         assert_eq!(ea.route(&arr(), None, &reps), 0);
+    }
+
+    #[test]
+    fn class_aware_splits_latency_and_energy_paths() {
+        let mut ca = ClassAware::default();
+        // Replica 0: expensive but empty; replica 1: cheap but backlogged.
+        let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 3, 1.0)];
+        // Interactive minimizes queueing delay → the empty replica.
+        assert_eq!(ca.route(&classed(TrafficClass::Interactive), None, &reps), 0);
+        // Batch/Background minimize the energy score:
+        // 1.0·(1+0.5·3)·1.5 = 3.75 < 4.0·1.0·1.5 = 6 → the cheap replica.
+        assert_eq!(ca.route(&classed(TrafficClass::Batch), None, &reps), 1);
+        assert_eq!(ca.route(&classed(TrafficClass::Background), None, &reps), 1);
+        // Deep backlog flips the energy path too: 1.0·(1+0.5·12)·1.5 > 6.
+        let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 12, 1.0)];
+        assert_eq!(ca.route(&classed(TrafficClass::Batch), None, &reps), 0);
     }
 
     #[test]

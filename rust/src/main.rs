@@ -8,6 +8,9 @@
 //! ewatt slo            [...]             # SLO-aware serving comparison
 //! ewatt fleet          [...]             # heterogeneous governed fleet comparison
 //! ewatt autoscale      [...]             # elastic fleet: static-N vs autoscaled (+failures)
+//! ewatt lab [--requests N] [--seed S] [--out DIR]
+//!                                          # mixed-class lab: class-aware vs class-blind
+//!                                          # governance (writes prompts.jsonl under --out)
 //! ewatt serve [--tier t3] [--batch 4] [--n 16] [--max-new 32]
 //!             [--prefill-mhz 2842] [--decode-mhz 180]   # real PJRT path
 //! ewatt bench [--replicas 16] [--arrivals 1000000] [--iters 1] [--check]
@@ -53,6 +56,11 @@ const COMMANDS: &[CommandSpec] = &[
         help: "elastic fleet: static-N vs autoscaled (+failures)",
     },
     CommandSpec { name: "ablation", args: "[name]", help: "component ablations (default: all)" },
+    CommandSpec {
+        name: "lab",
+        args: "[--out DIR]",
+        help: "mixed-class workload lab: class-aware vs class-blind governance",
+    },
     CommandSpec { name: "serve", args: "", help: "serve a replay slice on the real PJRT tiny-LM" },
     CommandSpec { name: "bench", args: "[--check]", help: "engine hot-path perf harness" },
     CommandSpec {
@@ -191,6 +199,7 @@ fn run() -> Result<()> {
             };
             emit(&reports, &args)
         }
+        Some("lab") => ewatt::experiments::workload_lab::run_cli(&args),
         Some("serve") => serve(&args),
         Some("bench") => {
             use ewatt::experiments::engine_bench::{self, BenchOptions};

@@ -32,7 +32,7 @@ use crate::obs::export::{num, obj, text, uint, RunManifest};
 use crate::obs::span::{Span, SpanEvent};
 use crate::obs::timeline::TimelineRow;
 use crate::serve::governor::GovernorConfig;
-use crate::serve::slo::Slo;
+use crate::serve::slo::{ClassSlos, Slo};
 use crate::util::json::JsonValue;
 
 /// Which rule fired.
@@ -96,6 +96,11 @@ pub struct AlertConfig {
     pub queue_min_depth: usize,
     /// Relative error between Σ request bills and the ledger total.
     pub conservation_tol: f64,
+    /// Per-class SLO budgets for the burn-rate rule. `None` (the default)
+    /// measures every completion against the single fleet SLO; `Some`
+    /// measures each completion against its own class's budget, so a slow
+    /// Background request stops burning the Interactive error budget.
+    pub class_slos: Option<ClassSlos>,
 }
 
 impl Default for AlertConfig {
@@ -111,6 +116,7 @@ impl Default for AlertConfig {
             queue_window: 6,
             queue_min_depth: 8,
             conservation_tol: 1e-6,
+            class_slos: None,
         }
     }
 }
@@ -158,8 +164,12 @@ fn burn_rate(spans: &[Span], slo: &Slo, cfg: &AlertConfig, out: &mut Vec<AlertFi
     let served: Vec<(f64, bool)> = spans
         .iter()
         .filter_map(|s| match s.event {
-            SpanEvent::Served { ttft_s, e2e_s, .. } => {
-                Some((s.t_s, ttft_s > slo.ttft_p95_s || e2e_s > slo.e2e_p99_s))
+            SpanEvent::Served { class, ttft_s, e2e_s, .. } => {
+                let budget = match &cfg.class_slos {
+                    Some(cs) => cs.for_class(class),
+                    None => *slo,
+                };
+                Some((s.t_s, ttft_s > budget.ttft_p95_s || e2e_s > budget.e2e_p99_s))
             }
             _ => None,
         })
@@ -349,13 +359,19 @@ impl RunManifest {
 mod tests {
     use super::*;
     use crate::obs::timeline::TimelineRow;
+    use crate::serve::traffic::TrafficClass;
 
     fn served(t_s: f64, e2e_s: f64) -> Span {
+        served_class(t_s, e2e_s, TrafficClass::Interactive)
+    }
+
+    fn served_class(t_s: f64, e2e_s: f64, class: TrafficClass) -> Span {
         Span {
             t_s,
             event: SpanEvent::Served {
                 req: 0,
                 replica: 0,
+                class,
                 ttft_s: 0.01,
                 tbt_s: 0.005,
                 e2e_s,
@@ -412,6 +428,26 @@ mod tests {
     }
 
     #[test]
+    fn class_slos_judge_each_completion_against_its_own_budget() {
+        // Background completions at 5s violate the 2s fleet SLO but sit
+        // far inside the background budget (180s e2e): with class budgets
+        // attached the burn rule stays silent, without them it fires.
+        let mut spans: Vec<Span> = (0..10).map(|i| served(i as f64, 0.5)).collect();
+        spans.extend((10..20).map(|i| served_class(i as f64, 5.0, TrafficClass::Background)));
+        let blind = evaluate(&spans, &[], &slo(), 0.0, &AlertConfig::default());
+        assert!(blind.iter().any(|f| f.rule == AlertRule::SloBurnRate), "{blind:?}");
+        let cfg = AlertConfig { class_slos: Some(ClassSlos::default()), ..AlertConfig::default() };
+        let aware = evaluate(&spans, &[], &slo(), 0.0, &cfg);
+        assert!(aware.is_empty(), "{aware:?}");
+        // An Interactive completion past its own 8s class budget still
+        // burns — the class tag routes it to the strict budget.
+        let mut bad = spans.clone();
+        bad.extend((20..30).map(|i| served(i as f64, 10.0)));
+        let f = evaluate(&bad, &[], &slo(), 0.0, &cfg);
+        assert!(f.iter().any(|f| f.rule == AlertRule::SloBurnRate), "{f:?}");
+    }
+
+    #[test]
     fn flapping_counts_reversals_not_switches() {
         // A governor walking steadily down never reverses: silent.
         let down: Vec<Span> =
@@ -457,7 +493,12 @@ mod tests {
         };
         let spans = vec![Span {
             t_s: 10.0,
-            event: SpanEvent::RequestSummary { req: 0, replica: 0, energy: bill },
+            event: SpanEvent::RequestSummary {
+                req: 0,
+                replica: 0,
+                class: TrafficClass::Interactive,
+                energy: bill,
+            },
         }];
         // Matching ledger: silent.
         let f = evaluate(&spans, &[], &slo(), 3.5, &AlertConfig::default());

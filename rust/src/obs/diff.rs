@@ -80,6 +80,10 @@ pub struct RunSummary {
     pub phase: PhaseTotals,
     /// Σ billed joules per replica.
     pub per_replica: BTreeMap<usize, f64>,
+    /// Billed energy per traffic class: `label → (requests, joules)`.
+    /// Traces written before the class tag existed bill as `interactive`,
+    /// matching the engine's historical single-class assumption.
+    pub per_class: BTreeMap<String, (usize, f64)>,
     /// Measured decode energy by SM frequency: `mhz → (steps, joules)`.
     pub decode_by_freq: BTreeMap<u32, (usize, f64)>,
     /// Completion latencies for exact quantiles.
@@ -143,6 +147,7 @@ pub fn load_run(dir: &Path) -> Result<RunSummary> {
         freq_switches: 0,
         phase: PhaseTotals::default(),
         per_replica: BTreeMap::new(),
+        per_class: BTreeMap::new(),
         decode_by_freq: BTreeMap::new(),
         ttft_s: Vec::new(),
         e2e_s: Vec::new(),
@@ -182,6 +187,10 @@ pub fn load_run(dir: &Path) -> Result<RunSummary> {
                 out.phase.coldstart_j += f(e, "coldstart_j");
                 let rep = f(&v, "replica") as usize;
                 *out.per_replica.entry(rep).or_insert(0.0) += f(e, "total_j");
+                let class = v.get("class").and_then(JsonValue::as_str).unwrap_or("interactive");
+                let slot = out.per_class.entry(class.to_string()).or_insert((0, 0.0));
+                slot.0 += 1;
+                slot.1 += f(e, "total_j");
             }
             _ => {}
         }
@@ -346,7 +355,34 @@ impl DiffReport {
             let bj = self.b.per_replica.get(&rep).copied().unwrap_or(0.0);
             let _ = writeln!(out, "  replica {rep}: A {aj:.2}  B {bj:.2}  Δ {:.2}", bj - aj);
         }
+
+        let classes = self.class_labels();
+        if !classes.is_empty() {
+            out.push('\n');
+            let _ = writeln!(out, "per-class billed energy (J/req):");
+            for class in classes {
+                let (an, aj) = self.a.per_class.get(&class).copied().unwrap_or((0, 0.0));
+                let (bn, bj) = self.b.per_class.get(&class).copied().unwrap_or((0, 0.0));
+                let a_per = aj / an.max(1) as f64;
+                let b_per = bj / bn.max(1) as f64;
+                let _ = writeln!(
+                    out,
+                    "  {class:12} A {a_per:>12.4} ({an:>4})  B {b_per:>12.4} ({bn:>4})  Δ {:.4}",
+                    b_per - a_per
+                );
+            }
+        }
         out
+    }
+
+    /// Union of class labels billed in either run, sorted for stable
+    /// table and JSON ordering.
+    fn class_labels(&self) -> Vec<String> {
+        let mut c: Vec<String> =
+            self.a.per_class.keys().chain(self.b.per_class.keys()).cloned().collect();
+        c.sort();
+        c.dedup();
+        c
     }
 
     /// The machine-readable `diff.json` document.
@@ -409,6 +445,21 @@ impl DiffReport {
                 })
                 .collect()
         };
+        let class_rows: Vec<JsonValue> = self
+            .class_labels()
+            .into_iter()
+            .map(|class| {
+                let (an, aj) = self.a.per_class.get(&class).copied().unwrap_or((0, 0.0));
+                let (bn, bj) = self.b.per_class.get(&class).copied().unwrap_or((0, 0.0));
+                obj(vec![
+                    ("class", text(&class)),
+                    ("a_requests", uint(an)),
+                    ("a_j", num(aj)),
+                    ("b_requests", uint(bn)),
+                    ("b_j", num(bj)),
+                ])
+            })
+            .collect();
         obj(vec![
             ("schema", text("ewatt.diff")),
             ("version", uint(DIFF_SCHEMA_VERSION as usize)),
@@ -450,6 +501,7 @@ impl DiffReport {
             ),
             ("freq_regimes", JsonValue::Array(freq_rows)),
             ("replicas", JsonValue::Array(replica_rows)),
+            ("classes", JsonValue::Array(class_rows)),
         ])
     }
 }
@@ -522,6 +574,12 @@ mod tests {
                 coldstart_j: 0.0,
             },
             per_replica: [(0usize, 5.0 + decode_j + 0.5 + idle_j)].into_iter().collect(),
+            per_class: [
+                ("batch".to_string(), (4usize, 2.0 + decode_j * 0.4)),
+                ("interactive".to_string(), (6usize, 3.5 + idle_j + decode_j * 0.6)),
+            ]
+            .into_iter()
+            .collect(),
             decode_by_freq: [(2842u32, (100usize, decode_j))].into_iter().collect(),
             ttft_s: (0..10).map(|i| 0.05 + i as f64 * 0.01).collect(),
             e2e_s: (0..10).map(|i| 0.5 + i as f64 * 0.05).collect(),
@@ -555,6 +613,13 @@ mod tests {
         let table = r.render();
         assert!(table.contains("decode"), "{table}");
         assert!(table.contains("ΔJ/req attribution"), "{table}");
+        assert!(table.contains("per-class billed energy"), "{table}");
+        // Class rows export in sorted label order with both runs' bills.
+        let classes = r.to_json().get("classes").unwrap().as_array().unwrap().to_vec();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("class").unwrap().as_str(), Some("batch"));
+        assert_eq!(classes[0].get("a_requests").unwrap().as_usize(), Some(4));
+        assert_eq!(classes[1].get("class").unwrap().as_str(), Some("interactive"));
     }
 
     #[test]

@@ -25,6 +25,7 @@ use anyhow::{ensure, Context as _, Result};
 use crate::fleet::attribution::PhaseEnergy;
 use crate::fleet::FleetOutcome;
 use crate::obs::span::{Span, SpanEvent};
+use crate::serve::traffic::TrafficClass;
 use crate::util::json::JsonValue;
 
 /// Version of the `traces.jsonl` line schema. Bump on any breaking change
@@ -81,9 +82,10 @@ pub(crate) fn phase_energy_json(e: &PhaseEnergy) -> JsonValue {
 pub fn span_to_json(span: &Span) -> JsonValue {
     let mut pairs = vec![("t_s", num(span.t_s)), ("kind", text(span.event.kind()))];
     match &span.event {
-        SpanEvent::Queued { req, query_idx } => {
+        SpanEvent::Queued { req, query_idx, class } => {
             pairs.push(("req", uint(*req)));
             pairs.push(("query_idx", uint(*query_idx)));
+            pairs.push(("class", text(class.label())));
         }
         SpanEvent::Routed { req, replica }
         | SpanEvent::Requeued { req, replica }
@@ -109,9 +111,10 @@ pub fn span_to_json(span: &Span) -> JsonValue {
             pairs.push(("batch", uints(batch)));
             pairs.push(("joules", num(*joules)));
         }
-        SpanEvent::Served { req, replica, ttft_s, tbt_s, e2e_s, tokens } => {
+        SpanEvent::Served { req, replica, class, ttft_s, tbt_s, e2e_s, tokens } => {
             pairs.push(("req", uint(*req)));
             pairs.push(("replica", uint(*replica)));
+            pairs.push(("class", text(class.label())));
             pairs.push(("ttft_s", num(*ttft_s)));
             pairs.push(("tbt_s", num(*tbt_s)));
             pairs.push(("e2e_s", num(*e2e_s)));
@@ -136,9 +139,10 @@ pub fn span_to_json(span: &Span) -> JsonValue {
             pairs.push(("replica", uint(*replica)));
             pairs.push(("lost", uint(*lost)));
         }
-        SpanEvent::RequestSummary { req, replica, energy } => {
+        SpanEvent::RequestSummary { req, replica, class, energy } => {
             pairs.push(("req", uint(*req)));
             pairs.push(("replica", uint(*replica)));
+            pairs.push(("class", text(class.label())));
             pairs.push(("energy", phase_energy_json(energy)));
         }
     }
@@ -316,13 +320,16 @@ impl RunManifest {
     pub fn set_energy_rollup(&mut self, outcome: &FleetOutcome, spans: &[Span]) -> Result<f64> {
         let mut per_phase = PhaseEnergy::default();
         let mut per_replica: BTreeMap<usize, (usize, f64)> = BTreeMap::new();
+        let mut per_class = [(0usize, 0.0f64); 3];
         let mut summaries = 0usize;
         for s in spans {
-            if let SpanEvent::RequestSummary { replica, energy, .. } = &s.event {
+            if let SpanEvent::RequestSummary { replica, class, energy, .. } = &s.event {
                 per_phase.add(energy);
                 let slot = per_replica.entry(*replica).or_insert((0, 0.0));
                 slot.0 += 1;
                 slot.1 += energy.total_j();
+                per_class[class.slot()].0 += 1;
+                per_class[class.slot()].1 += energy.total_j();
             }
         }
         for s in spans {
@@ -343,6 +350,7 @@ impl RunManifest {
             outcome.joules.len()
         );
         let scale = outcome.total_j().max(1e-12);
+        let class_sum: f64 = per_class.iter().map(|&(_, j)| j).sum();
         let max_rel = [
             (per_phase.prefill_j, outcome.breakdown.prefill_j),
             (per_phase.decode_j, outcome.breakdown.decode_j),
@@ -350,6 +358,9 @@ impl RunManifest {
             (per_phase.idle_j, outcome.breakdown.idle_j),
             (per_phase.coldstart_j, outcome.breakdown.coldstart_j),
             (per_phase.total_j(), outcome.total_j()),
+            // Per-class conservation: the class partition of the bill must
+            // sum back to the fleet ledger total.
+            (class_sum, outcome.total_j()),
         ]
         .iter()
         .map(|&(got, want)| (got - want).abs() / scale)
@@ -370,6 +381,22 @@ impl RunManifest {
                             .map(|(&rep, &(n, j))| {
                                 obj(vec![
                                     ("replica", uint(rep)),
+                                    ("requests", uint(n)),
+                                    ("total_j", num(j)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "per_class",
+                    JsonValue::Array(
+                        TrafficClass::ALL
+                            .iter()
+                            .map(|c| {
+                                let (n, j) = per_class[c.slot()];
+                                obj(vec![
+                                    ("class", text(c.label())),
                                     ("requests", uint(n)),
                                     ("total_j", num(j)),
                                 ])
@@ -439,8 +466,9 @@ mod tests {
 
     #[test]
     fn trace_jsonl_round_trips_and_validates() {
+        let class = TrafficClass::Interactive;
         let spans = vec![
-            Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 5 } },
+            Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 5, class } },
             Span { t_s: 0.25, event: SpanEvent::Routed { req: 0, replica: 1 } },
             Span {
                 t_s: 0.5,
@@ -456,6 +484,7 @@ mod tests {
                 event: SpanEvent::RequestSummary {
                     req: 0,
                     replica: 1,
+                    class: TrafficClass::Batch,
                     energy: PhaseEnergy { decode_j: 1.5, ..Default::default() },
                 },
             },
@@ -472,6 +501,11 @@ mod tests {
         let step = JsonValue::parse(body.lines().nth(3).unwrap()).unwrap();
         assert_eq!(step.get("kind").unwrap().as_str(), Some("decode_step"));
         assert_eq!(step.get("batch").unwrap().as_array().unwrap().len(), 2);
+        // Class tags ride along on queued and request_summary lines.
+        let queued = JsonValue::parse(body.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(queued.get("class").unwrap().as_str(), Some("interactive"));
+        let bill = JsonValue::parse(body.lines().nth(4).unwrap()).unwrap();
+        assert_eq!(bill.get("class").unwrap().as_str(), Some("batch"));
     }
 
     #[test]
@@ -489,9 +523,9 @@ mod tests {
     #[test]
     fn validation_rejects_crlf_and_trailing_whitespace() {
         let header = trace_header("x", 1, "0x0").to_string();
-        let span =
-            span_to_json(&Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 0 } })
-                .to_string();
+        let class = TrafficClass::Interactive;
+        let queued = Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 0, class } };
+        let span = span_to_json(&queued).to_string();
 
         // CRLF anywhere — header or span line — is a descriptive error.
         let crlf_header = format!("{header}\r\n{span}\n");

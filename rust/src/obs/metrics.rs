@@ -352,11 +352,12 @@ impl TraceSink for MetricsRegistry {
 mod tests {
     use super::*;
     use crate::fleet::attribution::PhaseEnergy;
+    use crate::serve::traffic::TrafficClass;
 
     #[test]
     fn counters_and_gauges_track_events() {
         let mut m = MetricsRegistry::new();
-        m.emit(1.0, SpanEvent::Queued { req: 0, query_idx: 0 });
+        m.emit(1.0, SpanEvent::Queued { req: 0, query_idx: 0, class: TrafficClass::Interactive });
         m.emit(1.0, SpanEvent::Routed { req: 0, replica: 1 });
         m.emit(2.0, SpanEvent::ScaleUp { replica: 2, cold_start: true });
         m.emit(3.0, SpanEvent::ScaleUp { replica: 1, cold_start: false });
@@ -379,6 +380,7 @@ mod tests {
                 SpanEvent::Served {
                     req: i,
                     replica: 0,
+                    class: TrafficClass::Interactive,
                     ttft_s: 0.1 + i as f64 * 1e-3,
                     tbt_s: 0.01,
                     e2e_s: 1.0,
@@ -390,6 +392,7 @@ mod tests {
                 SpanEvent::RequestSummary {
                     req: i,
                     replica: 0,
+                    class: TrafficClass::Interactive,
                     energy: PhaseEnergy { prefill_j: 1.0, ..Default::default() },
                 },
             );
@@ -436,8 +439,9 @@ mod tests {
 
     #[test]
     fn replay_of_recorded_spans_matches_live_aggregation() {
+        let class = TrafficClass::Interactive;
         let spans = vec![
-            Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 0 } },
+            Span { t_s: 0.0, event: SpanEvent::Queued { req: 0, query_idx: 0, class } },
             Span {
                 t_s: 0.5,
                 event: SpanEvent::DecodeStep {

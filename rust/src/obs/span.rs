@@ -23,13 +23,14 @@
 //! every event of the new attempt is at or after the requeue timestamp.
 
 use crate::fleet::attribution::PhaseEnergy;
+use crate::serve::traffic::TrafficClass;
 
 /// One observable moment of a run: request lifecycle milestones plus
 /// engine-level governor/autoscaler/failure transitions.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SpanEvent {
     /// A request entered the system (original arrival, never a requeue).
-    Queued { req: usize, query_idx: usize },
+    Queued { req: usize, query_idx: usize, class: TrafficClass },
     /// The router bound a request to a live replica.
     Routed { req: usize, replica: usize },
     /// A crash dropped an in-flight request; it re-enters routing with its
@@ -45,7 +46,15 @@ pub enum SpanEvent {
     /// One batched decode step; `joules` splits equally across `batch`.
     DecodeStep { replica: usize, freq_mhz: u32, batch: Vec<usize>, joules: f64 },
     /// The request completed on `replica`.
-    Served { req: usize, replica: usize, ttft_s: f64, tbt_s: f64, e2e_s: f64, tokens: usize },
+    Served {
+        req: usize,
+        replica: usize,
+        class: TrafficClass,
+        ttft_s: f64,
+        tbt_s: f64,
+        e2e_s: f64,
+        tokens: usize,
+    },
     /// A DVFS transition: `joules` is the switch-latency energy, charged
     /// to `beneficiaries` (the requests of the step that follows).
     FreqSwitch { replica: usize, to_mhz: u32, joules: f64, beneficiaries: Vec<usize> },
@@ -63,7 +72,7 @@ pub enum SpanEvent {
     /// Finalize-time bill: the request's exact attributed energy from the
     /// [`crate::fleet::EnergyLedger`], including amortized idle and
     /// cold-start shares. Emitted once per request at the run's makespan.
-    RequestSummary { req: usize, replica: usize, energy: PhaseEnergy },
+    RequestSummary { req: usize, replica: usize, class: TrafficClass, energy: PhaseEnergy },
 }
 
 impl SpanEvent {
@@ -101,6 +110,17 @@ impl SpanEvent {
             | SpanEvent::PrefillEnd { req, .. }
             | SpanEvent::Served { req, .. }
             | SpanEvent::RequestSummary { req, .. } => Some(req),
+            _ => None,
+        }
+    }
+
+    /// The traffic class of a class-tagged event (`Queued` / `Served` /
+    /// `RequestSummary`), `None` otherwise.
+    pub fn class(&self) -> Option<TrafficClass> {
+        match *self {
+            SpanEvent::Queued { class, .. }
+            | SpanEvent::Served { class, .. }
+            | SpanEvent::RequestSummary { class, .. } => Some(class),
             _ => None,
         }
     }
@@ -204,7 +224,11 @@ mod tests {
         {
             let mut trace = Trace::new(Some(&mut rec));
             assert!(trace.enabled());
-            trace.emit(0.5, || SpanEvent::Queued { req: 0, query_idx: 3 });
+            trace.emit(0.5, || SpanEvent::Queued {
+                req: 0,
+                query_idx: 3,
+                class: TrafficClass::Interactive,
+            });
             trace.replica = 2;
             let rep = trace.replica;
             trace.emit(0.75, || SpanEvent::Admitted { req: 0, replica: rep });
@@ -220,12 +244,14 @@ mod tests {
         let served = SpanEvent::Served {
             req: 7,
             replica: 1,
+            class: TrafficClass::Batch,
             ttft_s: 0.1,
             tbt_s: 0.01,
             e2e_s: 0.5,
             tokens: 40,
         };
         assert_eq!(served.req(), Some(7));
+        assert_eq!(served.class(), Some(TrafficClass::Batch));
         assert!(served.batch().is_empty());
         let step =
             SpanEvent::DecodeStep { replica: 0, freq_mhz: 180, batch: vec![1, 2], joules: 3.0 };

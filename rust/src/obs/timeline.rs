@@ -50,6 +50,9 @@ pub struct ReplicaSample {
     pub power_w: f64,
     /// Requests waiting in the admission queue.
     pub queue_depth: usize,
+    /// Queue split per traffic class, indexed by
+    /// [`crate::serve::TrafficClass::slot`]. Sums to `queue_depth`.
+    pub queued_by_class: [usize; 3],
     /// Sequences currently decoding (batch occupancy).
     pub active_seqs: usize,
     /// Fraction of KV-cache capacity in use, `[0, 1]`.
@@ -143,6 +146,7 @@ impl TimelineSampler {
                 freq_mhz: r.freq_mhz(),
                 power_w: r.window_power_w(),
                 queue_depth: r.queue_depth(),
+                queued_by_class: r.queued_by_class(),
                 active_seqs: r.active_seqs(),
                 kv_frac: r.kv_used_frac(),
                 served: r.served,
@@ -170,12 +174,14 @@ pub fn timeline_header(run: &str, seed: u64, cadence_s: f64) -> JsonValue {
 }
 
 fn replica_sample_json(s: &ReplicaSample) -> JsonValue {
+    let by_class = s.queued_by_class.iter().map(|&q| uint(q)).collect();
     obj(vec![
         ("replica", uint(s.replica)),
         ("state", text(s.state)),
         ("freq_mhz", uint(s.freq_mhz as usize)),
         ("power_w", num(s.power_w)),
         ("queue_depth", uint(s.queue_depth)),
+        ("queued_by_class", JsonValue::Array(by_class)),
         ("active_seqs", uint(s.active_seqs)),
         ("kv_frac", num(s.kv_frac)),
         ("served", uint(s.served)),
@@ -273,6 +279,7 @@ mod tests {
                 freq_mhz: 2842,
                 power_w: 123.5,
                 queue_depth: 2,
+                queued_by_class: [2, 0, 0],
                 active_seqs: 3,
                 kv_frac: 0.25,
                 served: 4,
@@ -296,6 +303,9 @@ mod tests {
         let rep = &parsed.get("replicas").unwrap().as_array().unwrap()[0];
         assert_eq!(rep.get("state").unwrap().as_str(), Some("live"));
         assert_eq!(rep.get("freq_mhz").unwrap().as_usize(), Some(2842));
+        let by_class = rep.get("queued_by_class").unwrap().as_array().unwrap();
+        assert_eq!(by_class.len(), 3);
+        assert_eq!(by_class[0].as_usize(), Some(2));
         assert_eq!(parsed.get("fleet").unwrap().get("live").unwrap().as_usize(), Some(1));
     }
 

@@ -27,5 +27,5 @@ pub use governor::{
     governor_for, FreqGovernor, GovernorConfig, GovernorSignal, HysteresisGovernor, OpenLoop,
 };
 pub use simloop::{ServeOutcome, ServeSim, ServeSimConfig};
-pub use slo::{RecordSink, Slo, SloTracker};
-pub use traffic::{Arrival, TrafficPattern};
+pub use slo::{ClassSloTracker, ClassSlos, RecordSink, Slo, SloTracker};
+pub use traffic::{Arrival, ClassLoad, ClassMix, TrafficClass, TrafficPattern};

@@ -364,7 +364,7 @@ mod tests {
         // the decode batch.
         let (suite, sim, _) = setup();
         let idx = suite.dataset_indices(Dataset::BoolQ)[0];
-        let arrivals = vec![Arrival { t_s: 0.0, query_idx: idx }];
+        let arrivals = vec![Arrival::at(0.0, idx)];
         let o = sim.run(&suite, &arrivals, &DvfsPolicy::Static(2842)).unwrap();
         assert_eq!(o.served, 1);
         assert_eq!(o.slo.completed(), 1);

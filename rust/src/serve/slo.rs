@@ -14,8 +14,10 @@ use std::collections::VecDeque;
 
 use crate::stats::{exact_quantile, StreamingQuantiles};
 
+use super::traffic::TrafficClass;
+
 /// Latency objectives for one serving class.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slo {
     /// p95 time-to-first-token target, seconds.
     pub ttft_p95_s: f64,
@@ -35,6 +37,41 @@ impl Slo {
     /// A relaxed batch/offline objective.
     pub fn relaxed() -> Slo {
         Slo { ttft_p95_s: 10.0, tbt_p95_s: 0.25, e2e_p99_s: 30.0 }
+    }
+
+    /// A best-effort background objective: latency bounded only loosely,
+    /// so the governor can park background-heavy load at the frequency
+    /// floor and starvation aging is the real protection.
+    pub fn background() -> Slo {
+        Slo { ttft_p95_s: 60.0, tbt_p95_s: 0.5, e2e_p99_s: 180.0 }
+    }
+}
+
+/// Per-class latency objectives: one [`Slo`] per [`TrafficClass`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassSlos {
+    pub interactive: Slo,
+    pub batch: Slo,
+    pub background: Slo,
+}
+
+impl Default for ClassSlos {
+    fn default() -> ClassSlos {
+        ClassSlos {
+            interactive: Slo::interactive(),
+            batch: Slo::relaxed(),
+            background: Slo::background(),
+        }
+    }
+}
+
+impl ClassSlos {
+    pub fn for_class(&self, c: TrafficClass) -> Slo {
+        match c {
+            TrafficClass::Interactive => self.interactive,
+            TrafficClass::Batch => self.batch,
+            TrafficClass::Background => self.background,
+        }
     }
 }
 
@@ -111,6 +148,10 @@ impl SloTracker {
         self.ttft.p95()
     }
 
+    pub fn ttft_p99(&self) -> f64 {
+        self.ttft.p99()
+    }
+
     pub fn tbt_p95(&self) -> f64 {
         self.tbt.p95()
     }
@@ -178,6 +219,58 @@ impl RecordSink for SloTracker {
     }
 }
 
+/// How much each class's pressure weighs in the combined control signal:
+/// interactive distress must dominate, background distress should barely
+/// lift frequency (its protection is admission aging, not DVFS).
+const CLASS_PRESSURE_WEIGHTS: [f64; 3] = [1.0, 0.6, 0.3];
+
+/// Per-class SLO tracking: one [`SloTracker`] per [`TrafficClass`], each
+/// measuring its class against its *own* objective, combined into a
+/// class-weighted pressure signal for the governor. This is what lets a
+/// background-heavy mix sink to the frequency floor: a class-blind tracker
+/// measures background completions against the interactive budget and
+/// pins the governor at the ceiling.
+#[derive(Debug, Clone)]
+pub struct ClassSloTracker {
+    trackers: [SloTracker; 3],
+}
+
+impl ClassSloTracker {
+    pub fn new(slos: ClassSlos) -> ClassSloTracker {
+        ClassSloTracker {
+            trackers: [
+                SloTracker::new(slos.interactive),
+                SloTracker::new(slos.batch),
+                SloTracker::new(slos.background),
+            ],
+        }
+    }
+
+    /// Record one completed request against its class's objective.
+    pub fn record(&mut self, class: TrafficClass, ttft_s: f64, tbt_s: f64, e2e_s: f64) {
+        self.trackers[class.slot()].record(ttft_s, tbt_s, e2e_s);
+    }
+
+    pub fn tracker(&self, class: TrafficClass) -> &SloTracker {
+        &self.trackers[class.slot()]
+    }
+
+    pub fn completed(&self) -> usize {
+        self.trackers.iter().map(|t| t.completed()).sum()
+    }
+
+    /// Class-weighted SLO pressure: the worst weighted per-class signal.
+    /// Interactive pressure passes through at full strength; batch and
+    /// background are attenuated so latency-tolerant distress asks for
+    /// admission priority, not megahertz.
+    pub fn pressure(&self) -> f64 {
+        TrafficClass::ALL
+            .iter()
+            .map(|&c| CLASS_PRESSURE_WEIGHTS[c.slot()] * self.tracker(c).pressure())
+            .fold(0.0, f64::max)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +326,64 @@ mod tests {
         }
         assert_eq!(t.recent_violation_rate(), 0.0);
         assert_eq!(t.completed(), 10 + 2 * RECENT_WINDOW);
+    }
+
+    #[test]
+    fn class_slos_default_loosens_down_the_priority_ladder() {
+        let c = ClassSlos::default();
+        assert_eq!(c.for_class(TrafficClass::Interactive), Slo::interactive());
+        assert_eq!(c.for_class(TrafficClass::Batch), Slo::relaxed());
+        assert_eq!(c.for_class(TrafficClass::Background), Slo::background());
+        assert!(c.interactive.ttft_p95_s < c.batch.ttft_p95_s);
+        assert!(c.batch.ttft_p95_s < c.background.ttft_p95_s);
+        assert!(c.interactive.e2e_p99_s < c.batch.e2e_p99_s);
+        assert!(c.batch.e2e_p99_s < c.background.e2e_p99_s);
+    }
+
+    #[test]
+    fn class_tracker_routes_records_to_the_right_class() {
+        let mut t = ClassSloTracker::new(ClassSlos::default());
+        t.record(TrafficClass::Interactive, 0.1, 0.01, 0.5);
+        t.record(TrafficClass::Background, 20.0, 0.2, 90.0);
+        t.record(TrafficClass::Background, 25.0, 0.2, 95.0);
+        assert_eq!(t.tracker(TrafficClass::Interactive).completed(), 1);
+        assert_eq!(t.tracker(TrafficClass::Batch).completed(), 0);
+        assert_eq!(t.tracker(TrafficClass::Background).completed(), 2);
+        assert_eq!(t.completed(), 3);
+    }
+
+    #[test]
+    fn class_weighted_pressure_discounts_background_distress() {
+        // The same latencies: violations for interactive, comfortably in
+        // budget for background. The class-aware signal must be calm when
+        // only background carries them, hot when interactive does.
+        let mut bg_heavy = ClassSloTracker::new(ClassSlos::default());
+        for _ in 0..40 {
+            bg_heavy.record(TrafficClass::Background, 9.0, 0.09, 12.0);
+        }
+        let mut int_heavy = ClassSloTracker::new(ClassSlos::default());
+        for _ in 0..40 {
+            int_heavy.record(TrafficClass::Interactive, 9.0, 0.09, 12.0);
+        }
+        assert!(bg_heavy.pressure() < 0.2, "bg pressure {}", bg_heavy.pressure());
+        assert!(int_heavy.pressure() > 1.0, "int pressure {}", int_heavy.pressure());
+        // Even a violating background stream is attenuated below the
+        // equivalent interactive distress.
+        let mut bg_violating = ClassSloTracker::new(ClassSlos::default());
+        for _ in 0..40 {
+            bg_violating.record(TrafficClass::Background, 100.0, 1.0, 300.0);
+        }
+        assert!(bg_violating.pressure() < int_heavy.pressure());
+        assert!(bg_violating.pressure() > 0.0);
+    }
+
+    #[test]
+    fn ttft_p99_is_monotone_with_p95() {
+        let mut t = SloTracker::new(Slo::interactive());
+        for i in 1..=200 {
+            t.record(i as f64 / 100.0, 0.01, 1.0);
+        }
+        assert!(t.ttft_p99() >= t.ttft_p95());
     }
 
     #[test]

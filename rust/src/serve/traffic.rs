@@ -9,8 +9,50 @@
 //! randomness from an explicit seed, so every serving experiment replays
 //! exactly.
 
-use crate::workload::ReplaySuite;
+use crate::workload::{Dataset, ReplaySuite};
 use crate::Rng;
+
+/// The serving class a request belongs to. Classes carry different latency
+/// budgets (see [`crate::serve::ClassSlos`]) and different admission
+/// priority: the governor can only harvest decode's frequency slack when it
+/// knows *which* requests tolerate latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TrafficClass {
+    /// Chat-style traffic: tight TTFT/e2e budgets, highest priority.
+    Interactive,
+    /// Throughput-oriented batch jobs: relaxed budgets, mid priority.
+    Batch,
+    /// Best-effort offline work: loose budgets, lowest priority (protected
+    /// from starvation only by admission aging).
+    Background,
+}
+
+impl TrafficClass {
+    pub const ALL: [TrafficClass; 3] =
+        [TrafficClass::Interactive, TrafficClass::Batch, TrafficClass::Background];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            TrafficClass::Interactive => "interactive",
+            TrafficClass::Batch => "batch",
+            TrafficClass::Background => "background",
+        }
+    }
+
+    /// Strict admission priority: higher wins the queue head.
+    pub fn priority(self) -> usize {
+        match self {
+            TrafficClass::Interactive => 2,
+            TrafficClass::Batch => 1,
+            TrafficClass::Background => 0,
+        }
+    }
+
+    /// Dense array index, in `ALL` order.
+    pub fn slot(self) -> usize {
+        self as usize
+    }
+}
 
 /// One timestamped request: when it arrives and which corpus query it is.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -19,6 +61,16 @@ pub struct Arrival {
     pub t_s: f64,
     /// Index into the suite's query/feature arrays.
     pub query_idx: usize,
+    /// Serving class; single-class generators tag everything Interactive,
+    /// which reproduces the pre-class behavior exactly.
+    pub class: TrafficClass,
+}
+
+impl Arrival {
+    /// An Interactive-class arrival — the single-class default.
+    pub fn at(t_s: f64, query_idx: usize) -> Arrival {
+        Arrival { t_s, query_idx, class: TrafficClass::Interactive }
+    }
 }
 
 /// Exponential inter-arrival draw at `rate` events/second.
@@ -42,6 +94,11 @@ pub enum TrafficPattern {
     /// Replay a recorded, non-decreasing timestamp trace; cycled with the
     /// trace's span if more arrivals are requested than it holds.
     Replay { timestamps: Vec<f64> },
+    /// Superposition of per-class streams (see [`ClassMix`]): each class is
+    /// a Poisson process modulated by one *shared* burst envelope —
+    /// real bursts are correlated across classes — with heavy-tailed
+    /// log-normal output-length targets mapped onto its corpus pool.
+    MixedClasses { mix: ClassMix },
 }
 
 impl TrafficPattern {
@@ -55,27 +112,47 @@ impl TrafficPattern {
                 format!("diurnal[{min_rps}-{max_rps}rps]")
             }
             TrafficPattern::Replay { timestamps } => {
-                format!("replay[{} events]", timestamps.len())
+                let span = match (timestamps.first(), timestamps.last()) {
+                    (Some(a), Some(b)) => b - a,
+                    _ => 0.0,
+                };
+                format!("replay[{} events/{span:.1}s]", timestamps.len())
             }
+            TrafficPattern::MixedClasses { mix } => format!(
+                "mixed[i{}/b{}/g{}rps]",
+                mix.interactive.rps, mix.batch.rps, mix.background.rps
+            ),
         }
     }
 
     /// Generate `n` arrivals drawing query indices uniformly from the whole
-    /// suite.
+    /// suite (mixed-class traffic instead draws per-class corpus pools).
     pub fn generate(&self, suite: &ReplaySuite, n: usize, seed: u64) -> Vec<Arrival> {
+        if let TrafficPattern::MixedClasses { mix } = self {
+            return mix.generate(suite, n, seed);
+        }
         let pool: Vec<usize> = (0..suite.len()).collect();
         self.generate_from(&pool, n, seed)
     }
 
     /// Generate `n` arrivals drawing query indices uniformly from `pool`
     /// (e.g. only the generation datasets for a decode-heavy scenario).
+    /// Single-class generators tag everything [`TrafficClass::Interactive`].
     pub fn generate_from(&self, pool: &[usize], n: usize, seed: u64) -> Vec<Arrival> {
+        assert!(
+            !matches!(self, TrafficPattern::MixedClasses { .. }),
+            "mixed-class traffic draws per-class corpus pools; use generate(suite, ..)"
+        );
         assert!(!pool.is_empty(), "traffic needs a non-empty query pool");
         let mut rng = crate::rng(seed);
         let times = self.timestamps(n, &mut rng);
         times
             .into_iter()
-            .map(|t_s| Arrival { t_s, query_idx: pool[rng.gen_range(0, pool.len())] })
+            .map(|t_s| Arrival {
+                t_s,
+                query_idx: pool[rng.gen_range(0, pool.len())],
+                class: TrafficClass::Interactive,
+            })
             .collect()
     }
 
@@ -129,6 +206,10 @@ impl TrafficPattern {
             TrafficPattern::Replay { ref timestamps } => {
                 assert!(!timestamps.is_empty(), "replay trace is empty");
                 assert!(
+                    timestamps.iter().all(|t| t.is_finite()),
+                    "replay trace timestamps must be finite"
+                );
+                assert!(
                     timestamps.windows(2).all(|w| w[0] <= w[1]),
                     "replay trace must be non-decreasing"
                 );
@@ -144,8 +225,180 @@ impl TrafficPattern {
                     out.push(timestamps[i % timestamps.len()] - t0 + cycle * span);
                 }
             }
+            // generate_from rejects MixedClasses before reaching here.
+            TrafficPattern::MixedClasses { .. } => unreachable!(),
         }
         out
+    }
+}
+
+/// One class's load knobs in a [`ClassMix`]: its mean request rate and the
+/// log-normal parameters of its output-length target. A heavy-tailed
+/// `exp(mu + sigma·N(0,1))` token target is drawn per request and mapped to
+/// the nearest-output-length query in the class's corpus pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassLoad {
+    /// Mean arrival rate, requests/second (0 disables the class).
+    pub rps: f64,
+    /// Mean of ln(output tokens).
+    pub ln_out_mu: f64,
+    /// Std-dev of ln(output tokens); larger = heavier tail.
+    pub ln_out_sigma: f64,
+}
+
+/// The mixed-class synthetic trace generator: three per-class Poisson
+/// streams modulated by a *shared* two-state burst envelope (bursts in real
+/// traffic are correlated across classes — a product launch lifts chat and
+/// batch pipelines together), merged into one time-sorted stream.
+///
+/// Corpus mix per class: Interactive draws BoolQ + TruthfulQA (short
+/// prompts, quick answers), Batch draws HellaSwag + NarrativeQA, and
+/// Background draws NarrativeQA only (long-form generation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassMix {
+    pub interactive: ClassLoad,
+    pub batch: ClassLoad,
+    pub background: ClassLoad,
+    /// Rate multiplier all classes share while the envelope is bursting.
+    pub burst_mult: f64,
+    /// Mean dwell time in each envelope state, seconds.
+    pub mean_dwell_s: f64,
+}
+
+impl Default for ClassMix {
+    /// An interactive-minority mix: most of the token volume is
+    /// latency-tolerant, which is exactly the regime where class-aware
+    /// governance pays (the paper's decode slack is harvestable).
+    fn default() -> ClassMix {
+        ClassMix {
+            interactive: ClassLoad { rps: 2.0, ln_out_mu: 3.2, ln_out_sigma: 0.7 },
+            batch: ClassLoad { rps: 1.5, ln_out_mu: 4.4, ln_out_sigma: 0.5 },
+            background: ClassLoad { rps: 1.0, ln_out_mu: 4.6, ln_out_sigma: 0.4 },
+            burst_mult: 4.0,
+            mean_dwell_s: 15.0,
+        }
+    }
+}
+
+impl ClassMix {
+    pub fn load(&self, c: TrafficClass) -> ClassLoad {
+        match c {
+            TrafficClass::Interactive => self.interactive,
+            TrafficClass::Batch => self.batch,
+            TrafficClass::Background => self.background,
+        }
+    }
+
+    /// A class's corpus pool over `suite`; falls back to the whole suite if
+    /// the preferred datasets are absent (degenerate test suites).
+    pub fn class_pool(suite: &ReplaySuite, c: TrafficClass) -> Vec<usize> {
+        let datasets: &[Dataset] = match c {
+            TrafficClass::Interactive => &[Dataset::BoolQ, Dataset::TruthfulQa],
+            TrafficClass::Batch => &[Dataset::HellaSwag, Dataset::NarrativeQa],
+            TrafficClass::Background => &[Dataset::NarrativeQa],
+        };
+        let pool: Vec<usize> = (0..suite.len())
+            .filter(|&i| datasets.contains(&suite.queries[i].dataset))
+            .collect();
+        if pool.is_empty() {
+            (0..suite.len()).collect()
+        } else {
+            pool
+        }
+    }
+
+    /// Generate `n` arrivals: per-class counts proportional to rate shares,
+    /// each class thinned against the shared burst envelope, merged sorted
+    /// by arrival time. Fully deterministic in `seed`.
+    pub fn generate(&self, suite: &ReplaySuite, n: usize, seed: u64) -> Vec<Arrival> {
+        assert!(!suite.is_empty(), "traffic needs a non-empty suite");
+        assert!(self.burst_mult >= 1.0, "burst_mult must be >= 1");
+        assert!(self.mean_dwell_s > 0.0, "mean_dwell_s must be > 0");
+        let total_rps: f64 = TrafficClass::ALL.iter().map(|&c| self.load(c).rps).sum();
+        assert!(total_rps > 0.0, "mixed-class traffic needs a positive total rate");
+
+        // Per-class request counts: floors of the rate shares, remainder
+        // dealt in class order so the counts always sum to n.
+        let mut counts = [0usize; 3];
+        for (i, &c) in TrafficClass::ALL.iter().enumerate() {
+            counts[i] = (n as f64 * self.load(c).rps / total_rps) as usize;
+        }
+        let mut short = n - counts.iter().sum::<usize>();
+        for slot in counts.iter_mut() {
+            if short == 0 {
+                break;
+            }
+            *slot += 1;
+            short -= 1;
+        }
+
+        // The shared envelope draws from its own stream so every class sees
+        // the same burst boundaries regardless of per-class counts.
+        let mut envelope = BurstEnvelope::new(seed ^ 0xB157_ECE1, self.mean_dwell_s);
+        let mut merged: Vec<Arrival> = Vec::with_capacity(n);
+        for (i, &class) in TrafficClass::ALL.iter().enumerate() {
+            let load = self.load(class);
+            if counts[i] == 0 || load.rps <= 0.0 {
+                continue;
+            }
+            assert!(load.ln_out_sigma >= 0.0, "ln_out_sigma must be >= 0");
+            let pool = Self::class_pool(suite, class);
+            // Independent per-class stream: one class's count never
+            // perturbs another class's draws.
+            let mut rng = crate::rng(seed.wrapping_add((i as u64 + 1) * 0x9E37_79B9));
+            let lam_max = load.rps * self.burst_mult;
+            let mut t = 0.0;
+            for _ in 0..counts[i] {
+                // Lewis–Shedler thinning against the shared envelope.
+                loop {
+                    t += exp_gap(&mut rng, lam_max);
+                    let mult = if envelope.is_burst(t) { self.burst_mult } else { 1.0 };
+                    if rng.gen_f64() < mult / self.burst_mult {
+                        break;
+                    }
+                }
+                let target = (load.ln_out_mu + load.ln_out_sigma * rng.normal()).exp();
+                let query_idx = pool
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        let da = (suite.queries[a].output_tokens as f64 - target).abs();
+                        let db = (suite.queries[b].output_tokens as f64 - target).abs();
+                        da.total_cmp(&db).then(a.cmp(&b))
+                    })
+                    .unwrap();
+                merged.push(Arrival { t_s: t, query_idx, class });
+            }
+        }
+        // Stable sort on time alone: per-class streams are already sorted
+        // and deterministic, so ties (if any) resolve in class order.
+        merged.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+        merged
+    }
+}
+
+/// The two-state burst envelope shared by every class in a [`ClassMix`]:
+/// calm/burst segments with exponential dwell, extended lazily from a
+/// dedicated RNG stream so segment boundaries depend only on the seed.
+struct BurstEnvelope {
+    rng: Rng,
+    mean_dwell_s: f64,
+    /// End time of each segment; segment `i` bursts iff `i` is odd.
+    ends: Vec<f64>,
+}
+
+impl BurstEnvelope {
+    fn new(seed: u64, mean_dwell_s: f64) -> BurstEnvelope {
+        BurstEnvelope { rng: crate::rng(seed), mean_dwell_s, ends: Vec::new() }
+    }
+
+    fn is_burst(&mut self, t: f64) -> bool {
+        while self.ends.last().copied().unwrap_or(0.0) <= t {
+            let start = self.ends.last().copied().unwrap_or(0.0);
+            self.ends.push(start + exp_gap(&mut self.rng, 1.0 / self.mean_dwell_s));
+        }
+        let seg = self.ends.partition_point(|&end| end <= t);
+        seg % 2 == 1
     }
 }
 
@@ -273,6 +526,150 @@ mod tests {
     fn replay_rejects_unsorted_traces() {
         let s = suite();
         TrafficPattern::Replay { timestamps: vec![0.0, 2.0, 1.0] }.generate(&s, 3, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "timestamps must be finite")]
+    fn replay_rejects_non_finite_timestamps() {
+        let s = suite();
+        TrafficPattern::Replay { timestamps: vec![0.0, f64::NAN, 2.0] }.generate(&s, 3, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "timestamps must be finite")]
+    fn replay_rejects_infinite_timestamps() {
+        let s = suite();
+        TrafficPattern::Replay { timestamps: vec![0.0, 1.0, f64::INFINITY] }.generate(&s, 3, 0);
+    }
+
+    #[test]
+    fn replay_label_carries_the_trace_span() {
+        let tr = TrafficPattern::Replay { timestamps: vec![10.0, 11.0, 12.5] };
+        assert_eq!(tr.label(), "replay[3 events/2.5s]");
+    }
+
+    #[test]
+    fn single_class_generators_tag_interactive() {
+        let s = suite();
+        let a = TrafficPattern::Poisson { rps: 5.0 }.generate(&s, 50, 7);
+        assert!(a.iter().all(|x| x.class == TrafficClass::Interactive));
+        assert_eq!(Arrival::at(1.5, 3), Arrival {
+            t_s: 1.5,
+            query_idx: 3,
+            class: TrafficClass::Interactive
+        });
+    }
+
+    #[test]
+    fn class_priorities_are_strict() {
+        assert!(TrafficClass::Interactive.priority() > TrafficClass::Batch.priority());
+        assert!(TrafficClass::Batch.priority() > TrafficClass::Background.priority());
+        assert_eq!(TrafficClass::ALL.len(), 3);
+        assert_eq!(TrafficClass::Background.label(), "background");
+    }
+
+    #[test]
+    fn mixed_classes_merge_sorted_and_deterministic() {
+        let s = suite();
+        let tr = TrafficPattern::MixedClasses { mix: ClassMix::default() };
+        let a = tr.generate(&s, 120, 13);
+        let b = tr.generate(&s, 120, 13);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 120);
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s), "not sorted");
+        assert!(a.iter().all(|x| x.t_s.is_finite() && x.t_s >= 0.0));
+        for c in TrafficClass::ALL {
+            assert!(a.iter().any(|x| x.class == c), "no {} arrivals", c.label());
+        }
+    }
+
+    #[test]
+    fn mixed_classes_respect_corpus_pools_and_rate_shares() {
+        let s = suite();
+        let mix = ClassMix::default();
+        let a = mix.generate(&s, 200, 21);
+        for x in &a {
+            let pool = ClassMix::class_pool(&s, x.class);
+            assert!(pool.contains(&x.query_idx), "{} outside pool", x.class.label());
+        }
+        // Rate shares 2.0/1.5/1.0 over n=200: floors 88/66/44 sum to 198,
+        // the 2-request remainder is dealt in class order.
+        let count = |c| a.iter().filter(|x| x.class == c).count();
+        assert_eq!(count(TrafficClass::Interactive), 89);
+        assert_eq!(count(TrafficClass::Batch), 67);
+        assert_eq!(count(TrafficClass::Background), 44);
+        // Background never draws classification queries.
+        assert!(a
+            .iter()
+            .filter(|x| x.class == TrafficClass::Background)
+            .all(|x| s.queries[x.query_idx].output_tokens > 0));
+    }
+
+    #[test]
+    fn mixed_classes_output_lengths_track_the_lognormal_knobs() {
+        let s = ReplaySuite::quick(5, 40);
+        // Interactive aims short, background aims long: the realized mean
+        // output budgets must be ordered accordingly.
+        let a = ClassMix::default().generate(&s, 300, 3);
+        let mean_out = |c: TrafficClass| {
+            let xs: Vec<f64> = a
+                .iter()
+                .filter(|x| x.class == c)
+                .map(|x| s.queries[x.query_idx].output_tokens as f64)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            mean_out(TrafficClass::Interactive) < mean_out(TrafficClass::Background),
+            "interactive {} vs background {}",
+            mean_out(TrafficClass::Interactive),
+            mean_out(TrafficClass::Background)
+        );
+    }
+
+    #[test]
+    fn mixed_classes_bursts_are_correlated_across_classes() {
+        // The envelope is shared, so when one class bursts they all do:
+        // per-window arrival counts of any two classes must be positively
+        // correlated (independent streams would sit near zero).
+        let s = suite();
+        let mix = ClassMix { burst_mult: 10.0, mean_dwell_s: 5.0, ..ClassMix::default() };
+        let a = mix.generate(&s, 2000, 17);
+        let horizon = a.last().unwrap().t_s;
+        let window = 2.0;
+        let bins = (horizon / window) as usize + 1;
+        let counts = |c: TrafficClass| {
+            let mut v = vec![0.0f64; bins];
+            for x in a.iter().filter(|x| x.class == c) {
+                v[(x.t_s / window) as usize] += 1.0;
+            }
+            v
+        };
+        let pearson = |xs: &[f64], ys: &[f64]| {
+            let n = xs.len() as f64;
+            let (mx, my) =
+                (xs.iter().sum::<f64>() / n, ys.iter().sum::<f64>() / n);
+            let cov: f64 =
+                xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / n;
+            let (vx, vy) = (
+                xs.iter().map(|x| (x - mx).powi(2)).sum::<f64>() / n,
+                ys.iter().map(|y| (y - my).powi(2)).sum::<f64>() / n,
+            );
+            cov / (vx.sqrt() * vy.sqrt())
+        };
+        let (i, b, g) = (
+            counts(TrafficClass::Interactive),
+            counts(TrafficClass::Batch),
+            counts(TrafficClass::Background),
+        );
+        assert!(pearson(&i, &b) > 0.2, "interactive/batch corr {}", pearson(&i, &b));
+        assert!(pearson(&i, &g) > 0.2, "interactive/background corr {}", pearson(&i, &g));
+    }
+
+    #[test]
+    #[should_panic(expected = "per-class corpus pools")]
+    fn mixed_classes_reject_generate_from() {
+        TrafficPattern::MixedClasses { mix: ClassMix::default() }.generate_from(&[0, 1], 5, 0);
     }
 
     #[test]

@@ -508,8 +508,8 @@ fn prop_serve_outcome_attribution_conserves() {
 #[test]
 fn prop_router_invariants() {
     use ewatt::fleet::{
-        DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaState, ReplicaStatus,
-        RoundRobin,
+        ClassAware, DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaState,
+        ReplicaStatus, RoundRobin,
     };
     use ewatt::serve::Arrival;
     let fx = FeatureExtractor::new();
@@ -540,13 +540,14 @@ fn prop_router_invariants() {
         let d = *rng.choose(&Dataset::ALL);
         let q = gen::generate(d, 1, case * 37, &mut rng).remove(0);
         let f = fx.extract(&q.text);
-        let a = Arrival { t_s: rng.gen_f64(), query_idx: 0 };
+        let a = Arrival::at(rng.gen_f64(), 0);
 
         let mut routers: Vec<Box<dyn FleetRouter>> = vec![
             Box::new(RoundRobin::default()),
             Box::new(LeastLoaded),
             Box::new(DifficultyTiered::default()),
             Box::new(EnergyAware::default()),
+            Box::new(ClassAware::default()),
         ];
         for router in routers.iter_mut() {
             for features in [Some(&f), None] {
@@ -914,5 +915,179 @@ fn prop_streaming_quantiles_bounded() {
             );
         }
         assert_eq!(sq.count(), n);
+    }
+}
+
+/// Mixed-class traffic: across random per-class rates, burst multipliers,
+/// and dwell times, the merged stream has exactly `n` arrivals, is
+/// non-decreasing in `t_s`, draws every query from its class's corpus
+/// pool, and replays bit-for-bit from the seed.
+#[test]
+fn prop_mixed_class_stream_sorted_pooled_deterministic() {
+    use ewatt::serve::traffic::{ClassLoad, ClassMix};
+    use ewatt::serve::{TrafficClass, TrafficPattern};
+
+    for case in 0..CASES {
+        let mut rng = ewatt::rng(0xC1A5_5 ^ case);
+        let d = ClassMix::default();
+        let mix = ClassMix {
+            interactive: ClassLoad { rps: 0.2 + rng.gen_f64() * 4.0, ..d.interactive },
+            batch: ClassLoad { rps: 0.2 + rng.gen_f64() * 4.0, ..d.batch },
+            background: ClassLoad { rps: 0.2 + rng.gen_f64() * 4.0, ..d.background },
+            burst_mult: 1.0 + rng.gen_f64() * 6.0,
+            mean_dwell_s: 2.0 + rng.gen_f64() * 20.0,
+        };
+        let suite = ReplaySuite::quick(case, 4 + rng.gen_range(0, 8));
+        let n = 1 + rng.gen_range(0, 120);
+        let pattern = TrafficPattern::MixedClasses { mix };
+        let a = pattern.generate(&suite, n, case ^ 0x31);
+
+        assert_eq!(a.len(), n, "case {case}: wrong stream length");
+        assert!(
+            a.windows(2).all(|w| w[0].t_s <= w[1].t_s),
+            "case {case}: merged stream is not time-sorted"
+        );
+        let pools: Vec<Vec<usize>> =
+            TrafficClass::ALL.iter().map(|&c| ClassMix::class_pool(&suite, c)).collect();
+        for x in &a {
+            assert!(x.t_s.is_finite() && x.t_s >= 0.0, "case {case}: bad timestamp {}", x.t_s);
+            assert!(
+                pools[x.class.slot()].contains(&x.query_idx),
+                "case {case}: {} request drew query {} outside its corpus pool",
+                x.class.label(),
+                x.query_idx
+            );
+        }
+
+        let b = pattern.generate(&suite, n, case ^ 0x31);
+        assert_eq!(a, b, "case {case}: mixed-class stream is nondeterministic");
+    }
+}
+
+/// Class-aware churn: strict-priority admission (with background aging and
+/// class KV caps) must preserve the FIFO path's exactly-once and
+/// conservation guarantees under the same elastic chaos — autoscaling,
+/// seeded crashes with requeues, cold starts — on mixed-class traffic, and
+/// the whole run must replay bit-for-bit.
+#[test]
+fn prop_class_churn_serves_exactly_once_and_conserves() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::fleet::{
+        ClassAware, ClassPolicy, ColdStart, FailureConfig, FleetConfig, FleetSim, ReactiveConfig,
+        ReplicaSpec, ReplicaState,
+    };
+    use ewatt::serve::traffic::ClassMix;
+    use ewatt::serve::TrafficPattern;
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..10u64 {
+        let mut rng = ewatt::rng(0xC1A5_C ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let n = 2 + rng.gen_range(0, 3);
+        let tier = *rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8]);
+        let live = ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu));
+        let cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+            .classes(ClassPolicy::default())
+            .reactive(ReactiveConfig {
+                max_live: n,
+                cooldown_s: 1.0 + rng.gen_f64() * 10.0,
+                ..ReactiveConfig::default()
+            })
+            .failures(FailureConfig {
+                mtbf_s: 8.0 + rng.gen_f64() * 30.0,
+                mttr_s: 2.0 + rng.gen_f64() * 10.0,
+                seed: case.wrapping_mul(1201),
+            })
+            .cold_start(ColdStart {
+                energy_j: 500.0 + rng.gen_f64() * 4000.0,
+                warmup_s: 1.0 + rng.gen_f64() * 8.0,
+            })
+            .build()
+            .unwrap();
+        let pattern = TrafficPattern::MixedClasses { mix: ClassMix::default() };
+        let arrivals = pattern.generate(&suite, 20 + rng.gen_range(0, 40), case ^ 0x9C);
+        let sim = FleetSim::new(gpu.clone(), cfg);
+        let mut router = ClassAware::default();
+        let o = sim.run(&suite, &arrivals, &mut router).unwrap();
+
+        // Exactly once across crash requeues, under priority admission.
+        assert_eq!(o.served, arrivals.len(), "case {case}: lost requests");
+        let per_replica: usize = o.replicas.iter().map(|r| r.served).sum();
+        assert_eq!(per_replica, arrivals.len(), "case {case}: double-serve");
+        assert!(
+            o.served_by.iter().all(|&r| r < n),
+            "case {case}: a request has no serving replica"
+        );
+
+        // Conservation with cold starts in the bill.
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel < 1e-6, "case {case}: conservation off by {rel:e}");
+
+        // The priority path replays bit-for-bit.
+        let mut router2 = ClassAware::default();
+        let o2 = sim.run(&suite, &arrivals, &mut router2).unwrap();
+        assert_eq!(o.joules, o2.joules, "case {case}: nondeterministic energy");
+        assert_eq!(o.lifecycle, o2.lifecycle, "case {case}: nondeterministic lifecycle");
+        assert_eq!(o.served_by, o2.served_by, "case {case}");
+    }
+}
+
+/// Per-class energy attribution: grouping the fleet's exact per-request
+/// bills by arrival class partitions the ledger — every subtotal of a
+/// served class is positive and the three subtotals sum to the fleet
+/// total within 1e-6 — whether or not the run was class-aware.
+#[test]
+fn prop_per_class_attribution_partitions_the_ledger() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::fleet::{
+        ClassAware, ClassPolicy, FleetConfig, FleetRouter, FleetSim, LeastLoaded, ReplicaSpec,
+    };
+    use ewatt::serve::traffic::ClassMix;
+    use ewatt::serve::{TrafficClass, TrafficPattern};
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..8u64 {
+        let mut rng = ewatt::rng(0xC1A5_A ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let tier = *rng.choose(&[ModelTier::B3, ModelTier::B8]);
+        let aware = case % 2 == 0;
+        let mut b = FleetConfig::builder()
+            .replicas(2, ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu)));
+        if aware {
+            b = b.classes(ClassPolicy::default());
+        }
+        let cfg = b.build().unwrap();
+        let pattern = TrafficPattern::MixedClasses { mix: ClassMix::default() };
+        let arrivals = pattern.generate(&suite, 24 + rng.gen_range(0, 24), case ^ 0x4A);
+        let mut router: Box<dyn FleetRouter> = if aware {
+            Box::new(ClassAware::default())
+        } else {
+            Box::new(LeastLoaded)
+        };
+        let o = FleetSim::new(gpu.clone(), cfg).run(&suite, &arrivals, router.as_mut()).unwrap();
+
+        let mut per_class = [0.0f64; 3];
+        let mut counts = [0usize; 3];
+        for (i, a) in arrivals.iter().enumerate() {
+            per_class[a.class.slot()] += o.joules[i];
+            counts[a.class.slot()] += 1;
+        }
+        for c in TrafficClass::ALL {
+            if counts[c.slot()] > 0 {
+                assert!(
+                    per_class[c.slot()] > 0.0,
+                    "case {case}: served {} requests billed nothing",
+                    c.label()
+                );
+            } else {
+                assert_eq!(per_class[c.slot()], 0.0, "case {case}: {} ghost bill", c.label());
+            }
+        }
+        let summed: f64 = per_class.iter().sum();
+        let rel = (summed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel < 1e-6, "case {case}: per-class partition off by {rel:e}");
     }
 }

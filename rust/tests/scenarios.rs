@@ -1,8 +1,9 @@
 //! Golden-trace scenario regression suite.
 //!
-//! Six seeded serving scenarios spanning the stack — traffic shapes
-//! (Poisson / bursty / diurnal) × fleets (one-replica, mixed-tier,
-//! elastic, failing) × policies (static / governed) — each pinned on
+//! Seven seeded serving scenarios spanning the stack — traffic shapes
+//! (Poisson / bursty / diurnal / mixed-class) × fleets (one-replica,
+//! mixed-tier, elastic, failing) × policies (static / governed /
+//! class-aware) — each pinned on
 //! total joules, active energy, makespan, served count, e2e p99, and the
 //! lifecycle counters. The goal is the regression that bit PR 4: a
 //! refactor of the serving loop silently shifting energy numbers. Any
@@ -183,4 +184,16 @@ fn scenario_relationships_hold() {
         fail.lifecycle.failures > 0,
         "failure scenario injected no failures — MTBF too long for the horizon?"
     );
+
+    // The mixed-class scenario's trace must actually exercise all three
+    // classes, or the class-aware snapshot pins nothing interesting.
+    let mixed = by_name("mixed-class-aware");
+    let arrivals = mixed.arrivals(&suite);
+    for c in ewatt::serve::TrafficClass::ALL {
+        assert!(
+            arrivals.iter().any(|a| a.class == c),
+            "mixed-class trace carries no {} requests",
+            c.label()
+        );
+    }
 }

@@ -101,7 +101,7 @@ fn classification_flows_through_serve_without_decode() {
         assert!(!idx.is_empty(), "{ds:?} slice empty");
         let q = &suite.queries[idx[0]];
         assert_eq!(q.output_tokens, 0, "{ds:?} is not zero-output");
-        let arrivals = vec![Arrival { t_s: 0.5, query_idx: idx[0] }];
+        let arrivals = vec![Arrival::at(0.5, idx[0])];
         let o = sim.run(&suite, &arrivals, &DvfsPolicy::Static(2842)).unwrap();
         assert_eq!(o.served, 1, "{ds:?}");
         assert_eq!(o.slo.completed(), 1);
