@@ -10,6 +10,7 @@ pub mod dvfs_tables;
 pub mod engine_bench;
 pub mod figures;
 pub mod fleet_tables;
+pub mod forecast_tables;
 pub mod quality_tables;
 pub mod report;
 pub mod runner;

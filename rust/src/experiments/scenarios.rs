@@ -1,9 +1,9 @@
 //! The named scenario registry.
 //!
-//! Seven seeded serving scenarios spanning the stack — traffic shapes
+//! Eight seeded serving scenarios spanning the stack — traffic shapes
 //! (Poisson / bursty / diurnal / mixed-class) × fleets (one-replica,
-//! mixed-tier, elastic, failing) × policies (static / governed /
-//! class-aware). They were born as
+//! mixed-tier, elastic, failing, migrating) × policies (static /
+//! governed / class-aware). They were born as
 //! fixtures of the golden-trace regression suite
 //! (`rust/tests/scenarios.rs`, which still pins them against
 //! `scenarios.snap`); they live in the library so `ewatt trace` can
@@ -17,8 +17,8 @@ use crate::config::{GpuSpec, ModelTier};
 use crate::coordinator::DvfsPolicy;
 use crate::fleet::{
     ClassAware, ClassPolicy, DifficultyTiered, EnergyAware, FailureConfig, FleetConfig,
-    FleetOutcome, FleetRouter, FleetSim, LeastLoaded, ReactiveConfig, ReplicaSpec, ReplicaState,
-    RoundRobin,
+    FleetOutcome, FleetRouter, FleetSim, LeastLoaded, MigrationPolicy, ReactiveConfig, ReplicaSpec,
+    ReplicaState, RoundRobin,
 };
 use crate::obs::{TimelineSampler, TraceSink};
 use crate::serve::traffic::{Arrival, ClassMix};
@@ -193,6 +193,29 @@ pub fn all(gpu: &GpuSpec) -> Vec<Scenario> {
             requests: 48,
             seed: 0x5CE4,
         },
+        Scenario {
+            name: "diurnal-elastic-migration",
+            cfg: {
+                let live = ReplicaSpec::tiered(ModelTier::B8, gov);
+                let cold = ReplicaSpec { state: ReplicaState::Cold, ..live.clone() };
+                FleetConfig::builder()
+                    .replica(live)
+                    .replicas(2, cold)
+                    .reactive(ReactiveConfig {
+                        min_live: 1,
+                        max_live: 3,
+                        ..ReactiveConfig::default()
+                    })
+                    .failures(FailureConfig { mtbf_s: 60.0, mttr_s: 15.0, seed: 0xFA11 })
+                    .migration(MigrationPolicy::default())
+                    .build()
+                    .unwrap()
+            },
+            router: || Box::new(LeastLoaded),
+            pattern: TrafficPattern::Diurnal { min_rps: 0.3, max_rps: 4.0, period_s: 90.0 },
+            requests: 160,
+            seed: 0x5CE3,
+        },
     ]
 }
 
@@ -213,7 +236,7 @@ mod tests {
     fn registry_names_are_unique_and_resolvable() {
         let gpu = GpuSpec::rtx_pro_6000();
         let scenarios = all(&gpu);
-        assert_eq!(scenarios.len(), 7);
+        assert_eq!(scenarios.len(), 8);
         for (i, a) in scenarios.iter().enumerate() {
             for b in &scenarios[i + 1..] {
                 assert_ne!(a.name, b.name);

@@ -12,6 +12,10 @@
 //!   step's energy splits equally across the batch ("by tokens generated");
 //! - **switch**: a DVFS transition benefits the phase step that follows it
 //!   and is split across that step's requests;
+//! - **migration**: the prefill replay that resumes a checkpointed
+//!   sequence on a new replica runs for exactly one sequence, so its
+//!   energy is charged wholly to that request — kept as its own phase so
+//!   the cost of moving KV state stays visible as a line item;
 //! - **idle**: draw while a replica waits for arrivals is amortized equally
 //!   across the requests that replica ultimately served;
 //! - **cold start**: boot/weight-load energy paid when the autoscaler (or
@@ -38,6 +42,10 @@ pub struct PhaseEnergy {
     pub decode_j: f64,
     /// This request's share of DVFS switch transitions, joules.
     pub switch_j: f64,
+    /// Energy of this request's migration prefill replay (resuming a
+    /// checkpointed sequence on a new replica), joules. Zero unless the
+    /// fleet migrated KV state.
+    pub migration_j: f64,
     /// This request's amortized share of replica idle draw, joules.
     pub idle_j: f64,
     /// This request's amortized share of cold-start (boot + weight-load)
@@ -48,7 +56,12 @@ pub struct PhaseEnergy {
 impl PhaseEnergy {
     /// Total attributed energy, joules.
     pub fn total_j(&self) -> f64 {
-        self.prefill_j + self.decode_j + self.switch_j + self.idle_j + self.coldstart_j
+        self.prefill_j
+            + self.decode_j
+            + self.switch_j
+            + self.migration_j
+            + self.idle_j
+            + self.coldstart_j
     }
 
     /// Accumulate another breakdown into this one.
@@ -56,13 +69,14 @@ impl PhaseEnergy {
         self.prefill_j += other.prefill_j;
         self.decode_j += other.decode_j;
         self.switch_j += other.switch_j;
+        self.migration_j += other.migration_j;
         self.idle_j += other.idle_j;
         self.coldstart_j += other.coldstart_j;
     }
 
     /// Active (policy-controlled) energy: everything but idle.
     pub fn active_j(&self) -> f64 {
-        self.prefill_j + self.decode_j + self.switch_j
+        self.prefill_j + self.decode_j + self.switch_j + self.migration_j
     }
 }
 
@@ -83,6 +97,8 @@ pub trait EnergySink {
     fn charge_decode(&mut self, reqs: &[usize], energy_j: f64);
     /// Split one DVFS switch across the requests of the following step.
     fn charge_switch(&mut self, reqs: &[usize], energy_j: f64);
+    /// Charge one migration prefill replay (resume) to `req`.
+    fn charge_migration(&mut self, req: usize, energy_j: f64);
 }
 
 /// The attribution ledger: one [`PhaseEnergy`] account per request,
@@ -92,6 +108,7 @@ pub struct EnergyLedger {
     prefill_j: Vec<f64>,
     decode_j: Vec<f64>,
     switch_j: Vec<f64>,
+    migration_j: Vec<f64>,
     idle_j: Vec<f64>,
     coldstart_j: Vec<f64>,
 }
@@ -103,6 +120,7 @@ impl EnergyLedger {
             prefill_j: vec![0.0; n_requests],
             decode_j: vec![0.0; n_requests],
             switch_j: vec![0.0; n_requests],
+            migration_j: vec![0.0; n_requests],
             idle_j: vec![0.0; n_requests],
             coldstart_j: vec![0.0; n_requests],
         }
@@ -140,6 +158,12 @@ impl EnergyLedger {
         }
     }
 
+    /// Charge one migration prefill replay (resume) to `req`. Like a
+    /// prefill, the replay processes exactly one sequence's tokens.
+    pub fn charge_migration(&mut self, req: usize, energy_j: f64) {
+        self.migration_j[req] += energy_j;
+    }
+
     /// Amortize a replica's idle draw equally across the requests it served.
     pub fn charge_idle(&mut self, reqs: &[usize], energy_j: f64) {
         if energy_j == 0.0 {
@@ -170,6 +194,7 @@ impl EnergyLedger {
             prefill_j: self.prefill_j[req],
             decode_j: self.decode_j[req],
             switch_j: self.switch_j[req],
+            migration_j: self.migration_j[req],
             idle_j: self.idle_j[req],
             coldstart_j: self.coldstart_j[req],
         }
@@ -207,6 +232,10 @@ impl EnergySink for EnergyLedger {
     fn charge_switch(&mut self, reqs: &[usize], energy_j: f64) {
         EnergyLedger::charge_switch(self, reqs, energy_j);
     }
+
+    fn charge_migration(&mut self, req: usize, energy_j: f64) {
+        EnergyLedger::charge_migration(self, req, energy_j);
+    }
 }
 
 /// One recorded serving-path charge. Multi-request charges index into the
@@ -218,6 +247,7 @@ enum ChargeOp {
     Decode { lo: usize, hi: usize, energy_j: f64 },
     /// Switch charge over `reqs[lo..hi]` of the arena.
     Switch { lo: usize, hi: usize, energy_j: f64 },
+    Migration { req: usize, energy_j: f64 },
 }
 
 /// A deferred charge buffer: records the exact sequence of serving-path
@@ -260,6 +290,7 @@ impl ChargeLog {
                 ChargeOp::Switch { lo, hi, energy_j } => {
                     ledger.charge_switch(&self.reqs[lo..hi], energy_j)
                 }
+                ChargeOp::Migration { req, energy_j } => ledger.charge_migration(req, energy_j),
             }
         }
     }
@@ -280,6 +311,10 @@ impl EnergySink for ChargeLog {
         assert!(!reqs.is_empty(), "switch energy with no requests to charge");
         let (lo, hi) = self.push_span(reqs);
         self.ops.push(ChargeOp::Switch { lo, hi, energy_j });
+    }
+
+    fn charge_migration(&mut self, req: usize, energy_j: f64) {
+        self.ops.push(ChargeOp::Migration { req, energy_j });
     }
 }
 
@@ -355,6 +390,20 @@ mod tests {
     }
 
     #[test]
+    fn migration_is_its_own_phase_and_counts_as_active() {
+        let mut led = EnergyLedger::new(2);
+        led.charge_prefill(0, 3.0);
+        led.charge_migration(0, 1.5);
+        let p = led.request(0);
+        assert!((p.migration_j - 1.5).abs() < 1e-12);
+        assert!((p.active_j() - 4.5).abs() < 1e-12);
+        assert!((p.total_j() - 4.5).abs() < 1e-12);
+        // Phase separation: the replay is not booked as ordinary prefill.
+        assert!((p.prefill_j - 3.0).abs() < 1e-12);
+        assert_eq!(led.request(1), PhaseEnergy::default());
+    }
+
+    #[test]
     fn total_for_subset() {
         let mut led = EnergyLedger::new(3);
         led.charge_prefill(0, 1.0);
@@ -371,13 +420,14 @@ mod tests {
             sink.charge_decode(&[0, 1, 2], 10.0); // 10/3 is not exact in binary
             sink.charge_decode(&[1, 2], 0.3);
             sink.charge_prefill(2, 1.0 / 3.0);
+            sink.charge_migration(1, 2.0 / 7.0);
         };
         let mut direct = EnergyLedger::new(3);
         charge(&mut direct);
 
         let mut log = ChargeLog::default();
         charge(&mut log);
-        assert_eq!(log.len(), 5);
+        assert_eq!(log.len(), 6);
         let mut replayed = EnergyLedger::new(3);
         log.replay(&mut replayed);
 

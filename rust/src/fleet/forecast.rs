@@ -1,0 +1,452 @@
+//! Predictive autoscaling: scale *ahead* of load instead of chasing it.
+//!
+//! The reactive scaler reacts to backlog that has already formed, so
+//! every diurnal ramp pays queueing (and a cold start at the worst
+//! moment) before capacity arrives, and every trough keeps replicas
+//! idling until the slack watermarks finally clear. The forecasting
+//! scaler inverts both:
+//!
+//! - a **windowed arrival-rate estimator** (EWMA over a short trailing
+//!   window) tracks where demand is *now*;
+//! - a **coarse periodogram** — normalized autocorrelation of the binned
+//!   arrival history over a small grid of candidate periods — detects
+//!   seasonality (the diurnal cycle) once two full periods of history
+//!   exist;
+//! - with a confident period, demand `warmup_s` ahead is read off the
+//!   previous cycle, so warm-ups are scheduled *before* a ramp (the
+//!   replica finishes warming as the wave lands) and drains *before* a
+//!   trough (idle joules are never burned waiting for slack watermarks).
+//!
+//! Everything is pure arithmetic over observed arrival timestamps — no
+//! clocks, no randomness — so a forecast-scaled run replays bit-for-bit
+//! under a fixed seed exactly like a reactive one (pinned by the
+//! forecast-determinism proptest). A small reactive backstop (backlog /
+//! SLO-pressure trip) guards the tail where the forecast is wrong.
+
+use std::collections::VecDeque;
+
+use super::lifecycle::{Autoscaler, ScaleAction};
+use super::router::ReplicaStatus;
+
+/// Tuning of the forecasting autoscaler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastConfig {
+    /// Never drain below this many live replicas.
+    pub min_live: usize,
+    /// Never warm beyond this many live-or-warming replicas.
+    pub max_live: usize,
+    /// Lead time, seconds: demand is predicted this far ahead. Set it to
+    /// at least the cold-start warm-up so a scheduled replica is Live by
+    /// the time the predicted ramp arrives.
+    pub warmup_s: f64,
+    /// Trailing window over which the current arrival rate is estimated.
+    pub window_s: f64,
+    /// Bin width of the arrival-history series the periodogram scans.
+    pub bin_s: f64,
+    /// How much arrival history is retained, seconds (bounds memory; must
+    /// cover at least two candidate periods for detection to engage).
+    pub history_s: f64,
+    /// Candidate seasonal periods, seconds, scored by normalized
+    /// autocorrelation. Empty disables seasonality (pure EWMA tracking).
+    pub periods_s: Vec<f64>,
+    /// Minimum normalized autocorrelation for a period to be trusted.
+    pub min_autocorr: f64,
+    /// EWMA smoothing factor for the windowed rate estimate.
+    pub alpha: f64,
+    /// Sustainable arrival rate one live replica absorbs at target
+    /// utilization, req/s — the capacity model dividing predicted demand
+    /// into a target replica count.
+    pub rate_per_replica: f64,
+    /// Minimum seconds between scale actions.
+    pub cooldown_s: f64,
+    /// Reactive backstop: scale up (cooldown permitting) when mean
+    /// backlog per live replica reaches this, forecast notwithstanding.
+    pub backstop_backlog: f64,
+    /// Reactive backstop on the SLO pressure signal.
+    pub backstop_pressure: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> ForecastConfig {
+        ForecastConfig {
+            min_live: 1,
+            max_live: usize::MAX,
+            warmup_s: 12.0,
+            window_s: 15.0,
+            bin_s: 5.0,
+            history_s: 400.0,
+            periods_s: vec![30.0, 45.0, 60.0, 90.0, 120.0, 180.0],
+            min_autocorr: 0.25,
+            alpha: 0.35,
+            rate_per_replica: 1.25,
+            cooldown_s: 6.0,
+            backstop_backlog: 4.0,
+            backstop_pressure: 1.2,
+        }
+    }
+}
+
+/// The forecasting autoscaler. Feed it every arrival through
+/// [`Autoscaler::observe_arrival`]; [`Autoscaler::decide`] then compares
+/// predicted demand `warmup_s` ahead against live-or-warming capacity.
+#[derive(Debug, Clone)]
+pub struct ForecastAutoscaler {
+    pub cfg: ForecastConfig,
+    /// Arrival counts per `bin_s`-wide bin; front is bin `first_bin`.
+    bins: VecDeque<u32>,
+    /// Absolute index of the oldest retained bin.
+    first_bin: usize,
+    /// EWMA of the windowed arrival rate, req/s.
+    ewma_rate: f64,
+    observed: u64,
+    last_action_s: f64,
+    last_rescue_s: f64,
+}
+
+impl ForecastAutoscaler {
+    pub fn new(cfg: ForecastConfig) -> ForecastAutoscaler {
+        assert!(cfg.min_live >= 1, "forecast autoscaler needs min_live >= 1");
+        assert!(cfg.max_live >= cfg.min_live, "max_live below min_live");
+        assert!(cfg.warmup_s >= 0.0 && cfg.window_s > 0.0 && cfg.bin_s > 0.0);
+        assert!(cfg.history_s >= cfg.window_s, "history shorter than the rate window");
+        assert!(cfg.rate_per_replica > 0.0, "replica capacity must be positive");
+        assert!((0.0..=1.0).contains(&cfg.alpha), "alpha outside [0, 1]");
+        assert!(cfg.cooldown_s >= 0.0);
+        ForecastAutoscaler {
+            cfg,
+            bins: VecDeque::new(),
+            first_bin: 0,
+            ewma_rate: 0.0,
+            observed: 0,
+            last_action_s: f64::NEG_INFINITY,
+            last_rescue_s: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Count of one retained bin by absolute index (0 outside history).
+    fn bin(&self, idx: usize) -> f64 {
+        if idx < self.first_bin {
+            return 0.0;
+        }
+        self.bins.get(idx - self.first_bin).copied().unwrap_or(0) as f64
+    }
+
+    /// Arrival rate over the trailing `window_s` ending at `now_s`, req/s.
+    fn window_rate(&self, now_s: f64) -> f64 {
+        let lo = ((now_s - self.cfg.window_s) / self.cfg.bin_s).max(0.0) as usize;
+        let hi = (now_s / self.cfg.bin_s) as usize;
+        let count: f64 = (lo..=hi).map(|i| self.bin(i)).sum();
+        count / self.cfg.window_s
+    }
+
+    /// Coarse periodogram: the best candidate period by normalized
+    /// autocorrelation of the binned series, if any clears the
+    /// confidence floor with at least two full periods of history.
+    fn detect_period(&self) -> Option<f64> {
+        let n = self.bins.len();
+        if n < 4 {
+            return None;
+        }
+        let xs: Vec<f64> = self.bins.iter().map(|&c| c as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+        if var <= 0.0 {
+            return None; // flat history has no seasonality
+        }
+        let mut best: Option<(f64, f64)> = None; // (score, period)
+        for &period_s in &self.cfg.periods_s {
+            let lag = (period_s / self.cfg.bin_s).round() as usize;
+            // Two full cycles of evidence before a period is trusted.
+            if lag == 0 || n < 2 * lag {
+                continue;
+            }
+            let num: f64 =
+                (lag..n).map(|i| (xs[i] - mean) * (xs[i - lag] - mean)).sum();
+            let score = num / var;
+            let better = match best {
+                // Strictly-better keeps the tie deterministic: the first
+                // (shortest) candidate period wins an exact tie.
+                Some((s, _)) => score > s,
+                None => score >= self.cfg.min_autocorr,
+            };
+            if better {
+                best = Some((score, period_s));
+            }
+        }
+        best.map(|(_, p)| p)
+    }
+
+    /// Arrival rate around absolute time `t_s`, read off the binned
+    /// history (mean of the covering bin and its neighbors), req/s.
+    fn rate_at(&self, t_s: f64) -> f64 {
+        let center = (t_s.max(0.0) / self.cfg.bin_s) as usize;
+        let lo = center.saturating_sub(1);
+        let count: f64 = (lo..=center + 1).map(|i| self.bin(i)).sum();
+        count / (((center + 1 - lo) + 1) as f64 * self.cfg.bin_s)
+    }
+
+    /// Predicted arrival rate `warmup_s` ahead of `now_s`, req/s.
+    fn predicted_rate(&self, now_s: f64) -> f64 {
+        match self.detect_period() {
+            // Seasonal: demand one cycle before the target instant. The
+            // forecast is trusted both ways — lower than now means a
+            // trough is coming and capacity can pre-drain.
+            Some(period_s) => self.rate_at(now_s + self.cfg.warmup_s - period_s),
+            // No confident season: track the present (EWMA ⊔ window, so a
+            // fresh burst is never averaged away).
+            None => self.ewma_rate.max(self.window_rate(now_s)),
+        }
+    }
+}
+
+impl Autoscaler for ForecastAutoscaler {
+    fn observe_arrival(&mut self, t_s: f64) {
+        let idx = (t_s.max(0.0) / self.cfg.bin_s) as usize;
+        while self.first_bin + self.bins.len() <= idx {
+            self.bins.push_back(0);
+        }
+        self.bins[idx - self.first_bin] += 1;
+        let keep = (self.cfg.history_s / self.cfg.bin_s).ceil() as usize;
+        while self.bins.len() > keep {
+            self.bins.pop_front();
+            self.first_bin += 1;
+        }
+        self.ewma_rate = if self.observed == 0 {
+            self.window_rate(t_s)
+        } else {
+            (1.0 - self.cfg.alpha) * self.ewma_rate + self.cfg.alpha * self.window_rate(t_s)
+        };
+        self.observed += 1;
+    }
+
+    fn decide(
+        &mut self,
+        now_s: f64,
+        replicas: &[ReplicaStatus],
+        slo_pressure: f64,
+    ) -> ScaleAction {
+        let live = replicas.iter().filter(|r| r.live()).count();
+        let warming = replicas
+            .iter()
+            .filter(|r| matches!(r.state, super::lifecycle::ReplicaState::Warming { .. }))
+            .count();
+        let coming = live + warming;
+        // Floor restore: immediate for a dead fleet, debounced by the
+        // cooldown otherwise (same anti-flap rule as the reactive scaler).
+        if coming < self.cfg.min_live {
+            if live == 0 || now_s - self.last_rescue_s >= self.cfg.cooldown_s {
+                self.last_rescue_s = now_s;
+                self.last_action_s = now_s;
+                return ScaleAction::Up(self.cfg.min_live - coming);
+            }
+            return ScaleAction::Hold;
+        }
+        if now_s - self.last_action_s < self.cfg.cooldown_s {
+            return ScaleAction::Hold;
+        }
+        let backlog: usize = replicas.iter().filter(|r| r.live()).map(|r| r.backlog()).sum();
+        let per_live = if live > 0 { backlog as f64 / live as f64 } else { f64::INFINITY };
+        // Reactive backstop: the forecast was wrong and load is piling up.
+        if (per_live >= self.cfg.backstop_backlog || slo_pressure >= self.cfg.backstop_pressure)
+            && coming < self.cfg.max_live
+        {
+            self.last_action_s = now_s;
+            return ScaleAction::Up(1);
+        }
+        let target = (self.predicted_rate(now_s) / self.cfg.rate_per_replica).ceil() as usize;
+        let target = target.clamp(self.cfg.min_live, self.cfg.max_live);
+        if target > coming {
+            self.last_action_s = now_s;
+            return ScaleAction::Up(target - coming);
+        }
+        // Pre-drain toward the predicted trough, one replica at a time,
+        // never while capacity is still in flight and never into work.
+        if target < live && warming == 0 && live > self.cfg.min_live && per_live < 1.0 {
+            self.last_action_s = now_s;
+            return ScaleAction::Down(1);
+        }
+        ScaleAction::Hold
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "forecast[{}-{};lead {}s]",
+            self.cfg.min_live,
+            if self.cfg.max_live == usize::MAX {
+                "fleet".to_string()
+            } else {
+                self.cfg.max_live.to_string()
+            },
+            self.cfg.warmup_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelTier;
+    use crate::fleet::lifecycle::ReplicaState;
+
+    fn status(idx: usize, state: ReplicaState, backlog: usize) -> ReplicaStatus {
+        ReplicaStatus {
+            idx,
+            state,
+            tier: ModelTier::B8,
+            queue_depth: backlog,
+            active_seqs: 0,
+            now_s: 0.0,
+            window_power_w: 0.0,
+            busy_fraction: 0.0,
+            j_per_token: 1.0,
+        }
+    }
+
+    /// A square-wave seasonal load: `burst` arrivals per second for the
+    /// first half of each `period_s` cycle, silence for the second half.
+    fn feed_square_wave(a: &mut ForecastAutoscaler, period_s: f64, cycles: usize, burst: usize) {
+        let mut t = 0.0;
+        for _ in 0..cycles {
+            let start = t;
+            while t < start + period_s / 2.0 {
+                for k in 0..burst {
+                    a.observe_arrival(t + k as f64 / burst as f64);
+                }
+                t += 1.0;
+            }
+            t = start + period_s;
+        }
+    }
+
+    #[test]
+    fn periodogram_finds_the_square_wave_period() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig::default());
+        feed_square_wave(&mut a, 60.0, 4, 3);
+        assert_eq!(a.detect_period(), Some(60.0));
+    }
+
+    #[test]
+    fn flat_history_has_no_season() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig::default());
+        for i in 0..200 {
+            a.observe_arrival(i as f64);
+        }
+        assert_eq!(a.detect_period(), None);
+    }
+
+    #[test]
+    fn warms_ahead_of_a_predicted_ramp() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig {
+            max_live: 4,
+            warmup_s: 12.0,
+            rate_per_replica: 1.0,
+            ..ForecastConfig::default()
+        });
+        // 3 req/s on-peak with a 60 s cycle; history ends mid-trough.
+        feed_square_wave(&mut a, 60.0, 4, 3);
+        // t = 230: trough (cycle position 50), next burst starts at 240.
+        // The lead window (t+12 = 242) lands in the predicted burst, so
+        // the scaler warms NOW even though the current rate is zero and
+        // there is no backlog at all.
+        let reps = vec![
+            status(0, ReplicaState::Live, 0),
+            status(1, ReplicaState::Cold, 0),
+            status(2, ReplicaState::Cold, 0),
+            status(3, ReplicaState::Cold, 0),
+        ];
+        match a.decide(230.0, &reps, 0.0) {
+            ScaleAction::Up(n) => assert!(n >= 1, "expected a pre-ramp warm-up"),
+            other => panic!("expected Up ahead of the ramp, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pre_drains_ahead_of_a_predicted_trough() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig {
+            max_live: 4,
+            warmup_s: 12.0,
+            rate_per_replica: 1.0,
+            ..ForecastConfig::default()
+        });
+        feed_square_wave(&mut a, 60.0, 4, 3);
+        // t = 205 is still on-peak (cycle position 25), but the lead
+        // window (t+12 = 217 → previous cycle 157, position 37) lands in
+        // the trough, so capacity drains while load is still up — the
+        // move a reactive scaler can only make after the trough arrives.
+        let reps = vec![
+            status(0, ReplicaState::Live, 0),
+            status(1, ReplicaState::Live, 0),
+            status(2, ReplicaState::Live, 0),
+            status(3, ReplicaState::Cold, 0),
+        ];
+        assert_eq!(a.decide(205.0, &reps, 0.0), ScaleAction::Down(1));
+    }
+
+    #[test]
+    fn backstop_trips_on_backlog_when_the_forecast_is_wrong() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig {
+            max_live: 4,
+            ..ForecastConfig::default()
+        });
+        feed_square_wave(&mut a, 60.0, 4, 3);
+        // Predicted trough, but the queues say otherwise.
+        let reps = vec![
+            status(0, ReplicaState::Live, 9),
+            status(1, ReplicaState::Live, 9),
+            status(2, ReplicaState::Cold, 0),
+        ];
+        assert_eq!(a.decide(205.0, &reps, 0.0), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn cooldown_and_floor_are_respected() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig {
+            min_live: 1,
+            max_live: 3,
+            cooldown_s: 10.0,
+            ..ForecastConfig::default()
+        });
+        // Dead fleet: immediate rescue regardless of any cooldown.
+        let dead = vec![status(0, ReplicaState::Cold, 0)];
+        assert_eq!(a.decide(0.0, &dead, 0.0), ScaleAction::Up(1));
+        // One live at zero load: hold at the floor, and the cooldown
+        // blocks any further action regardless.
+        let one = vec![status(0, ReplicaState::Live, 0)];
+        assert_eq!(a.decide(1.0, &one, 0.0), ScaleAction::Hold);
+        assert_eq!(a.decide(100.0, &one, 0.0), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn without_history_it_tracks_the_present() {
+        let mut a = ForecastAutoscaler::new(ForecastConfig {
+            max_live: 4,
+            rate_per_replica: 1.0,
+            cooldown_s: 0.0,
+            ..ForecastConfig::default()
+        });
+        // A sudden 3 req/s burst with no seasonal history: the windowed
+        // estimator drives an ordinary (reactive-like) scale-up.
+        for i in 0..45 {
+            a.observe_arrival(i as f64 / 3.0);
+        }
+        let reps = vec![status(0, ReplicaState::Live, 2), status(1, ReplicaState::Cold, 0)];
+        match a.decide(15.0, &reps, 0.0) {
+            ScaleAction::Up(n) => assert!(n >= 1),
+            other => panic!("expected Up under a live burst, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forecaster_is_deterministic() {
+        let run = || {
+            let mut a = ForecastAutoscaler::new(ForecastConfig::default());
+            feed_square_wave(&mut a, 90.0, 3, 2);
+            let reps = vec![status(0, ReplicaState::Live, 1), status(1, ReplicaState::Cold, 0)];
+            (0..20)
+                .map(|i| a.decide(270.0 + i as f64, &reps, 0.5))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+        assert!(!ForecastAutoscaler::new(ForecastConfig::default()).is_static());
+    }
+}

@@ -115,6 +115,12 @@ pub trait Autoscaler {
     fn decide(&mut self, now_s: f64, replicas: &[ReplicaStatus], slo_pressure: f64)
         -> ScaleAction;
 
+    /// Feed one arrival timestamp into the scaler's demand model, before
+    /// the corresponding [`Autoscaler::decide`] call. Default: ignored —
+    /// reactive and static scalers look at queue state, not arrival
+    /// history; only forecasting scalers keep history.
+    fn observe_arrival(&mut self, _t_s: f64) {}
+
     fn label(&self) -> String;
 
     /// Whether this autoscaler can ever change the fleet. The engine skips
@@ -162,6 +168,12 @@ pub struct ReactiveConfig {
     /// Minimum seconds between scale actions (anti-flap; matching it to
     /// the cold-start warm-up keeps at most one replica warming per wave).
     pub cooldown_s: f64,
+    /// Minimum seconds between floor-restore rescues while at least one
+    /// replica is still live. A rescue with `live == 0` always fires
+    /// immediately (a dead fleet cannot wait), but a partially-degraded
+    /// fleet must not flap a Draining replica Live→Draining→Live on every
+    /// evaluation — the debounce the plain `cooldown_s` never covered.
+    pub rescue_debounce_s: f64,
 }
 
 impl Default for ReactiveConfig {
@@ -174,6 +186,7 @@ impl Default for ReactiveConfig {
             high_pressure: 1.0,
             low_pressure: 0.8,
             cooldown_s: 12.0,
+            rescue_debounce_s: 3.0,
         }
     }
 }
@@ -186,6 +199,10 @@ impl Default for ReactiveConfig {
 pub struct ReactiveAutoscaler {
     pub cfg: ReactiveConfig,
     last_action_s: f64,
+    /// Last time the floor-restore rescue fired (tracked separately from
+    /// `last_action_s` so an ordinary scale action can never starve a
+    /// genuinely-needed rescue past its own debounce).
+    last_rescue_s: f64,
 }
 
 impl ReactiveAutoscaler {
@@ -201,7 +218,12 @@ impl ReactiveAutoscaler {
             "inverted pressure hysteresis band"
         );
         assert!(cfg.cooldown_s >= 0.0);
-        ReactiveAutoscaler { cfg, last_action_s: f64::NEG_INFINITY }
+        assert!(cfg.rescue_debounce_s >= 0.0);
+        ReactiveAutoscaler {
+            cfg,
+            last_action_s: f64::NEG_INFINITY,
+            last_rescue_s: f64::NEG_INFINITY,
+        }
     }
 }
 
@@ -224,11 +246,19 @@ impl Autoscaler for ReactiveAutoscaler {
             .filter(|r| matches!(r.state, ReplicaState::Warming { .. }))
             .count();
         let coming = live + warming;
-        // Below the floor (initial cold fleet, or a crash took the last
-        // replica): restore capacity immediately, cooldown notwithstanding.
+        // Below the floor (initial cold fleet, or a crash took a replica).
+        // A fully dead fleet is restored immediately — nothing can serve,
+        // so waiting only grows the backlog. With capacity still live, the
+        // rescue is debounced: oscillating pressure used to flap a
+        // Draining replica Live→Draining→Live on every evaluation because
+        // this path bypassed the cooldown unconditionally.
         if coming < self.cfg.min_live {
-            self.last_action_s = now_s;
-            return ScaleAction::Up(self.cfg.min_live - coming);
+            if live == 0 || now_s - self.last_rescue_s >= self.cfg.rescue_debounce_s {
+                self.last_rescue_s = now_s;
+                self.last_action_s = now_s;
+                return ScaleAction::Up(self.cfg.min_live - coming);
+            }
+            return ScaleAction::Hold;
         }
         if now_s - self.last_action_s < self.cfg.cooldown_s {
             return ScaleAction::Hold;
@@ -276,6 +306,9 @@ impl Autoscaler for ReactiveAutoscaler {
 pub enum AutoscalePolicy {
     Static,
     Reactive(ReactiveConfig),
+    /// Predictive scaling: warm ahead of forecast ramps, pre-drain ahead
+    /// of forecast troughs ([`crate::fleet::forecast::ForecastAutoscaler`]).
+    Forecast(super::forecast::ForecastConfig),
 }
 
 impl AutoscalePolicy {
@@ -283,6 +316,9 @@ impl AutoscalePolicy {
         match self {
             AutoscalePolicy::Static => Box::new(StaticAutoscaler),
             AutoscalePolicy::Reactive(cfg) => Box::new(ReactiveAutoscaler::new(*cfg)),
+            AutoscalePolicy::Forecast(cfg) => {
+                Box::new(super::forecast::ForecastAutoscaler::new(cfg.clone()))
+            }
         }
     }
 
@@ -461,6 +497,17 @@ pub struct LifecycleStats {
     pub requeued: usize,
 }
 
+/// A checkpointed sequence waiting for a live replica to resume on (only
+/// populated while the fleet has zero live replicas at the migration
+/// instant, mirroring [`PendingRequeue`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PendingCheckpoint {
+    pub ckpt: super::migration::SeqCheckpoint,
+    /// The earliest time the destination replica may replay it (the
+    /// drain/crash instant).
+    pub not_before_s: f64,
+}
+
 /// A requeued request waiting for a live replica (only populated while the
 /// fleet has zero live replicas at a crash instant).
 #[derive(Debug, Clone, Copy)]
@@ -479,10 +526,16 @@ pub struct Lifecycle {
     pub failures: Option<FailureModel>,
     pub cold_start: ColdStart,
     pub stats: LifecycleStats,
+    /// KV-state migration policy; `None` keeps the crash/drain paths on
+    /// their original lose-and-requeue semantics (bit-identical traces).
+    pub migration: Option<super::migration::MigrationPolicy>,
+    /// Checkpoint → Handoff → Resume counters for the run outcome.
+    pub migration_stats: super::migration::MigrationStats,
     /// (time, ±1) deltas of the live-replica count, for the time-weighted
     /// mean live count reported on the outcome.
     pub(crate) live_deltas: Vec<(f64, i64)>,
     pub(crate) pending: VecDeque<PendingRequeue>,
+    pub(crate) pending_ckpts: VecDeque<PendingCheckpoint>,
     /// Fast path: a static autoscaler with no failure model makes the
     /// whole lifecycle machinery inert (the fixed-fleet loop).
     inert: bool,
@@ -500,8 +553,11 @@ impl Lifecycle {
             failures,
             cold_start,
             stats: LifecycleStats::default(),
+            migration: None,
+            migration_stats: super::migration::MigrationStats::default(),
             live_deltas: Vec::new(),
             pending: VecDeque::new(),
+            pending_ckpts: VecDeque::new(),
             inert,
         }
     }
@@ -619,6 +675,44 @@ mod tests {
         // floor immediately, ignoring the cooldown.
         let dead = vec![status(0, ReplicaState::Cold, 0), status(1, ReplicaState::Cold, 0)];
         assert_eq!(a.decide(200.1, &dead, 0.0), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn rescue_is_debounced_while_capacity_is_still_live() {
+        // Regression: the floor-restore path used to bypass the cooldown
+        // unconditionally, so a fleet sitting just under its floor could
+        // flap a Draining replica Live→Draining→Live every evaluation.
+        let cfg = ReactiveConfig {
+            min_live: 2,
+            rescue_debounce_s: 3.0,
+            ..ReactiveConfig::default()
+        };
+        let mut a = ReactiveAutoscaler::new(cfg);
+        let degraded = vec![
+            status(0, ReplicaState::Live, 0),
+            status(1, ReplicaState::Draining, 0),
+            status(2, ReplicaState::Cold, 0),
+        ];
+        // First rescue fires (restores the floor)...
+        assert_eq!(a.decide(0.0, &degraded, 0.0), ScaleAction::Up(1));
+        // ...but an immediate re-evaluation of the same degraded shape
+        // holds instead of flapping.
+        assert_eq!(a.decide(0.5, &degraded, 0.0), ScaleAction::Hold);
+        assert_eq!(a.decide(2.9, &degraded, 0.0), ScaleAction::Hold);
+        // Once the debounce elapses the rescue may fire again.
+        assert_eq!(a.decide(3.0, &degraded, 0.0), ScaleAction::Up(1));
+        // A fully dead fleet is never debounced: nothing can serve.
+        let dead = vec![status(0, ReplicaState::Cold, 0), status(1, ReplicaState::Cold, 0)];
+        assert_eq!(a.decide(3.1, &dead, 0.0), ScaleAction::Up(2));
+    }
+
+    #[test]
+    fn observe_arrival_default_is_a_no_op() {
+        let mut a = ReactiveAutoscaler::default();
+        a.observe_arrival(1.0);
+        let mut s = StaticAutoscaler;
+        s.observe_arrival(2.0);
+        assert_eq!(s.decide(3.0, &[], 0.0), ScaleAction::Hold);
     }
 
     #[test]

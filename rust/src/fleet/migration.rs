@@ -1,0 +1,126 @@
+//! KV-state migration: checkpoint → handoff → resume.
+//!
+//! Without migration, a Draining replica must finish its batch before it
+//! can power off, and a crash throws away every in-flight sequence — the
+//! request re-enters routing from scratch and re-pays its full prefill.
+//! Both are expensive exactly when the fleet is under churn. Migration
+//! replaces them with a three-step state machine per sequence:
+//!
+//! 1. **Checkpoint** — the source replica serializes the sequence's
+//!    decode progress (tokens emitted, context length, latency
+//!    timestamps) into a [`SeqCheckpoint`]. Drains checkpoint
+//!    synchronously at the drain instant (nothing is lost); crashes
+//!    recover the last *periodic* checkpoint
+//!    ([`MigrationPolicy::checkpoint_every_tokens`]), losing only the
+//!    tokens decoded since it.
+//! 2. **Handoff** — the engine routes each checkpoint through the fleet
+//!    router like any arrival; the chosen Live replica accepts it into a
+//!    dedicated resume queue ([`crate::fleet::Replica::enqueue_resumed`]).
+//! 3. **Resume** — at admission the target replica *replays* the
+//!    checkpointed context (one prefill pass over `ctx` tokens — KV
+//!    state is device- and model-local, so it must be recomputed), then
+//!    the sequence rejoins the continuous batch and decodes its
+//!    remaining tokens. The replay energy is charged to the dedicated
+//!    `migration_j` ledger phase, so the conservation invariant
+//!    (attributed == measured, ≤ 1e-6) still holds with the migration
+//!    bill visible as its own line item.
+//!
+//! Latency accounting is exactly-once end to end: a resumed request
+//! keeps its **original** arrival and first-token timestamps, completes
+//! on exactly one replica, and its TTFT/e2e include the full migration
+//! delay. Requests still queued (no decode progress) hand off as plain
+//! requeues — there is no state worth replaying.
+
+use crate::serve::traffic::TrafficClass;
+
+/// Opt-in migration policy. Attach one to a fleet config
+/// ([`crate::fleet::FleetConfigBuilder::migration`]) to switch
+/// drain/crash handling from requeue-from-arrival to checkpoint/resume.
+/// `None` on the config preserves the pre-migration engine bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationPolicy {
+    /// Periodic checkpoint cadence, decoded tokens between checkpoints.
+    /// A crash rolls each in-flight sequence back to its latest
+    /// checkpoint; the tokens decoded since are lost (their energy stays
+    /// charged, exactly as a real meter would have recorded it). Drains
+    /// always checkpoint synchronously and lose nothing.
+    pub checkpoint_every_tokens: usize,
+}
+
+impl Default for MigrationPolicy {
+    fn default() -> MigrationPolicy {
+        MigrationPolicy { checkpoint_every_tokens: 8 }
+    }
+}
+
+/// One checkpointed in-flight sequence — everything the target replica
+/// needs to resume it with exactly-once latency accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeqCheckpoint {
+    /// Fleet-wide request index.
+    pub req: usize,
+    /// Corpus query the request serves.
+    pub query_idx: usize,
+    /// Traffic class (admission priority survives the migration).
+    pub class: TrafficClass,
+    /// Original arrival timestamp, seconds — preserved so TTFT/e2e
+    /// include the migration delay.
+    pub arrival_s: f64,
+    /// Original first-token timestamp, seconds (set at prefill end on
+    /// the source; a resume never re-emits the first token).
+    pub first_token_s: f64,
+    /// Tokens decoded as of this checkpoint.
+    pub tokens: usize,
+    /// Tokens still to decode as of this checkpoint.
+    pub remaining: usize,
+    /// Context length at this checkpoint (prompt + decoded tokens) —
+    /// the length of the prefill replay the target must run.
+    pub ctx: usize,
+}
+
+/// Fleet-level migration counters, reported on
+/// [`crate::fleet::FleetOutcome`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MigrationStats {
+    /// Sequences checkpointed off a draining replica.
+    pub drained: usize,
+    /// Sequences recovered from a periodic checkpoint after a crash.
+    pub crash_recovered: usize,
+    /// Checkpoint handoffs accepted by a live target replica (each is
+    /// replayed and resumed there; a re-crash before replay re-enters
+    /// the handoff count).
+    pub resumed: usize,
+    /// Total decoded tokens the resumed sequences carried across.
+    pub tokens_carried: usize,
+    /// Decoded tokens lost to crash rollback (decoded after the last
+    /// periodic checkpoint).
+    pub tokens_lost: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_has_a_sane_cadence() {
+        let p = MigrationPolicy::default();
+        assert!(p.checkpoint_every_tokens >= 1);
+    }
+
+    #[test]
+    fn checkpoint_is_plain_copyable_data() {
+        let c = SeqCheckpoint {
+            req: 3,
+            query_idx: 7,
+            class: TrafficClass::Batch,
+            arrival_s: 1.5,
+            first_token_s: 2.0,
+            tokens: 12,
+            remaining: 20,
+            ctx: 40,
+        };
+        let d = c;
+        assert_eq!(c, d);
+        assert_eq!(d.tokens + d.remaining, 32);
+    }
+}

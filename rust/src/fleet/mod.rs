@@ -23,7 +23,15 @@
 //!   (reactive queue-pressure/SLO-headroom hysteresis vs the static
 //!   baseline), cold-start energy charging, and a seeded MTBF/MTTR
 //!   failure/recovery process that requeues in-flight work through the
-//!   router with original arrival timestamps.
+//!   router with original arrival timestamps;
+//! - [`forecast`]: the predictive autoscaler — windowed arrival-rate
+//!   estimation plus a coarse periodogram over binned arrival history —
+//!   scheduling warm-ups ahead of predicted ramps and drains ahead of
+//!   predicted troughs;
+//! - [`migration`]: KV-state migration (Checkpoint → Handoff → Resume) —
+//!   in-flight sequences checkpoint off Draining or crashed replicas and
+//!   resume on Live ones via the router, with the prefill-replay bill on
+//!   its own `migration_j` ledger phase.
 //!
 //! `ewatt fleet` and `examples/fleet_serve.rs` reproduce the Section VII
 //! comparison (monolithic-large vs routed fleet × static vs governed DVFS)
@@ -38,7 +46,9 @@
 
 pub mod attribution;
 pub mod engine;
+pub mod forecast;
 pub mod lifecycle;
+pub mod migration;
 pub mod queue;
 pub mod replica;
 pub mod router;
@@ -48,13 +58,16 @@ pub use engine::{
     drive, drive_with, EngineCtx, FleetConfig, FleetConfigBuilder, FleetOutcome, FleetSim,
     ReplicaOutcome, StepSelector,
 };
+pub use forecast::{ForecastAutoscaler, ForecastConfig};
 pub use lifecycle::{
     AutoscalePolicy, Autoscaler, ColdStart, FailureConfig, FailureModel, Lifecycle,
     LifecycleStats, ReactiveAutoscaler, ReactiveConfig, ReplicaState, ScaleAction,
     StaticAutoscaler,
 };
+pub use migration::{MigrationPolicy, MigrationStats, SeqCheckpoint};
 pub use queue::EventQueue;
 pub use replica::{ClassPolicy, Replica, ReplicaSpec};
 pub use router::{
     ClassAware, DifficultyTiered, EnergyAware, FleetRouter, LeastLoaded, ReplicaStatus, RoundRobin,
+    NO_LIVE_REPLICA,
 };

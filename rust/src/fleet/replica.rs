@@ -35,6 +35,7 @@ use crate::workload::ReplaySuite;
 
 use super::attribution::{EnergyLedger, EnergySink, PhaseEnergy};
 use super::lifecycle::{ColdStart, ReplicaState};
+use super::migration::SeqCheckpoint;
 use super::router::ReplicaStatus;
 
 /// Static description of one fleet member.
@@ -118,6 +119,11 @@ struct ActiveSeq {
     tokens: usize,
     remaining: usize,
     ctx: usize,
+    /// Tokens committed at the latest periodic checkpoint (0 until the
+    /// first checkpoint; only advanced when migration is enabled). A
+    /// crash rolls the sequence back to this point instead of dropping
+    /// it entirely.
+    ckpt_tokens: usize,
 }
 
 /// EWMA weight for the live joules/token estimate (per decode step).
@@ -173,6 +179,15 @@ pub struct Replica {
     class_policy: Option<ClassPolicy>,
     /// Per-class SLO trackers, present iff a class policy is attached.
     class_trackers: Option<ClassSloTracker>,
+    /// Prefill-replay energy spent resuming migrated sequences here
+    /// (the `migration_j` ledger phase; separate from `energy_j`).
+    pub migration_j: f64,
+    /// Checkpointed sequences handed off to this replica, awaiting their
+    /// resume replay (admitted ahead of the fresh-arrival queue).
+    resume_queue: VecDeque<SeqCheckpoint>,
+    /// Periodic checkpoint cadence, decoded tokens; `None` disables
+    /// migration bookkeeping entirely (the pre-migration hot path).
+    ckpt_every: Option<usize>,
 }
 
 impl Replica {
@@ -228,8 +243,22 @@ impl Replica {
             finish_scratch: Vec::new(),
             class_policy: None,
             class_trackers: None,
+            migration_j: 0.0,
+            resume_queue: VecDeque::new(),
+            ckpt_every: None,
             spec,
         }
+    }
+
+    /// Enable (or disable) periodic checkpointing for KV-state migration.
+    /// `None` keeps the replica bit-identical to the pre-migration engine.
+    pub fn set_checkpoint_every(&mut self, every: Option<usize>) {
+        self.ckpt_every = every;
+    }
+
+    /// Checkpointed sequences waiting for their resume replay here.
+    pub fn resume_depth(&self) -> usize {
+        self.resume_queue.len()
     }
 
     /// Attach (or detach) the class-aware admission policy. Resets the
@@ -255,7 +284,7 @@ impl Replica {
 
     /// Whether this replica has work to execute.
     pub fn runnable(&self) -> bool {
-        !self.queue.is_empty() || !self.active.is_empty()
+        !self.queue.is_empty() || !self.active.is_empty() || !self.resume_queue.is_empty()
     }
 
     /// Whether the engine may step this replica now: it holds work and its
@@ -264,8 +293,11 @@ impl Replica {
         self.state.can_work() && self.runnable()
     }
 
+    /// Requests waiting for admission: fresh arrivals plus checkpointed
+    /// sequences awaiting their resume replay (both are backlog to the
+    /// router and the autoscaler).
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.resume_queue.len()
     }
 
     pub fn active_seqs(&self) -> usize {
@@ -321,7 +353,7 @@ impl Replica {
             idx,
             state: self.state,
             tier: self.spec.model.tier,
-            queue_depth: self.queue.len(),
+            queue_depth: self.queue_depth(),
             active_seqs: self.active.len(),
             now_s: self.now_s,
             window_power_w: self.window.mean_power_w(),
@@ -350,6 +382,19 @@ impl Replica {
         }
         self.queue.push_back(Queued { req, arrival });
         self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
+    }
+
+    /// Accept a checkpointed sequence handed off from another replica.
+    /// `not_before_s` is the migration instant (the drain/crash time) —
+    /// the causality floor for the resume replay; the checkpoint keeps
+    /// its original arrival/first-token timestamps for SLO accounting.
+    pub fn enqueue_resumed(&mut self, ckpt: SeqCheckpoint, not_before_s: f64) {
+        assert!(self.state.routable(), "migrated to a non-live replica ({})", self.state.label());
+        if !self.runnable() && self.now_s < not_before_s {
+            self.idle_j += (not_before_s - self.now_s) * self.gpu.spec.p_idle_w;
+            self.now_s = not_before_s;
+        }
+        self.resume_queue.push_back(ckpt);
     }
 
     /// Begin a cold start at `t_s`: charge the boot energy and schedule
@@ -410,13 +455,12 @@ impl Replica {
     /// step granularity); its partial energy stays charged to the lost
     /// requests, exactly as a real meter would have recorded it.
     pub fn crash(&mut self, t_s: f64) -> Vec<(usize, Arrival)> {
-        if !self.runnable() && self.now_s < t_s {
-            // It idled powered-on until the moment it died.
-            self.idle_j += (t_s - self.now_s) * self.gpu.spec.p_idle_w;
-            self.now_s = t_s;
-        }
-        let mut lost: Vec<(usize, Arrival)> =
-            self.queue.drain(..).map(|q| (q.req, q.arrival)).collect();
+        let (ckpts, mut lost) = self.evacuate_queues(t_s);
+        // Without migration the checkpoints pending resume here fall back
+        // to plain requeues from their original arrivals.
+        lost.extend(ckpts.into_iter().map(|c| {
+            (c.req, Arrival { t_s: c.arrival_s, query_idx: c.query_idx, class: c.class })
+        }));
         lost.extend(self.active.drain(..).map(|s| {
             (s.req, Arrival { t_s: s.arrival_s, query_idx: s.query_idx, class: s.class })
         }));
@@ -426,6 +470,105 @@ impl Replica {
         lost.sort_unstable_by_key(|&(req, _)| req);
         self.state = ReplicaState::Cold;
         lost
+    }
+
+    /// Shared evacuation prologue for crash/migrate paths: charge the
+    /// idle wait up to `t_s`, then drain the admission queue (plain
+    /// requeues) and the resume queue (pass-through checkpoints).
+    fn evacuate_queues(&mut self, t_s: f64) -> (Vec<SeqCheckpoint>, Vec<(usize, Arrival)>) {
+        if !self.runnable() && self.now_s < t_s {
+            // It idled powered-on until the moment it died.
+            self.idle_j += (t_s - self.now_s) * self.gpu.spec.p_idle_w;
+            self.now_s = t_s;
+        }
+        let requeued: Vec<(usize, Arrival)> =
+            self.queue.drain(..).map(|q| (q.req, q.arrival)).collect();
+        let ckpts: Vec<SeqCheckpoint> = self.resume_queue.drain(..).collect();
+        (ckpts, requeued)
+    }
+
+    /// Drain-with-migration at `t_s`: checkpoint every in-flight
+    /// sequence synchronously (nothing is lost), hand still-queued
+    /// arrivals back as plain requeues, release the KV reservations, and
+    /// power off immediately. This is the migration win over
+    /// [`Self::begin_drain`]: the replica does not finish its batch
+    /// before going `Cold`. Both lists come back sorted by request index
+    /// for deterministic handoff. Clock semantics match [`Self::crash`].
+    pub fn migrate_out(&mut self, t_s: f64) -> (Vec<SeqCheckpoint>, Vec<(usize, Arrival)>) {
+        debug_assert_eq!(self.state, ReplicaState::Live, "migrating off a non-live replica");
+        let (mut ckpts, mut lost) = self.evacuate_queues(t_s);
+        for s in self.active.drain(..).collect::<Vec<_>>() {
+            self.kv.release(s.req as u64);
+            if s.tokens > 0 {
+                ckpts.push(SeqCheckpoint {
+                    req: s.req,
+                    query_idx: s.query_idx,
+                    class: s.class,
+                    arrival_s: s.arrival_s,
+                    first_token_s: s.first_token_s,
+                    tokens: s.tokens,
+                    remaining: s.remaining,
+                    ctx: s.ctx,
+                });
+            } else {
+                // No decode progress yet: nothing worth replaying beyond
+                // the prefill a plain requeue re-pays anyway.
+                lost.push((
+                    s.req,
+                    Arrival { t_s: s.arrival_s, query_idx: s.query_idx, class: s.class },
+                ));
+            }
+        }
+        for &(req, _) in &lost {
+            self.kv.release(req as u64);
+        }
+        ckpts.sort_unstable_by_key(|c| c.req);
+        lost.sort_unstable_by_key(|&(req, _)| req);
+        self.state = ReplicaState::Cold;
+        (ckpts, lost)
+    }
+
+    /// Crash with migration enabled: recover each in-flight sequence
+    /// from its latest periodic checkpoint — the tokens decoded since
+    /// are lost (their energy stays charged, as a real meter would have
+    /// recorded it) — and requeue sequences that never reached one.
+    /// Returns `(checkpoints, plain requeues, tokens lost to rollback)`,
+    /// both lists sorted by request index.
+    pub fn crash_with_checkpoints(
+        &mut self,
+        t_s: f64,
+    ) -> (Vec<SeqCheckpoint>, Vec<(usize, Arrival)>, usize) {
+        let (mut ckpts, mut lost) = self.evacuate_queues(t_s);
+        let mut tokens_lost = 0usize;
+        for s in self.active.drain(..).collect::<Vec<_>>() {
+            self.kv.release(s.req as u64);
+            if s.ckpt_tokens > 0 {
+                let rollback = s.tokens - s.ckpt_tokens;
+                tokens_lost += rollback;
+                ckpts.push(SeqCheckpoint {
+                    req: s.req,
+                    query_idx: s.query_idx,
+                    class: s.class,
+                    arrival_s: s.arrival_s,
+                    first_token_s: s.first_token_s,
+                    tokens: s.ckpt_tokens,
+                    remaining: s.remaining + rollback,
+                    ctx: s.ctx - rollback,
+                });
+            } else {
+                lost.push((
+                    s.req,
+                    Arrival { t_s: s.arrival_s, query_idx: s.query_idx, class: s.class },
+                ));
+            }
+        }
+        for &(req, _) in &lost {
+            self.kv.release(req as u64);
+        }
+        ckpts.sort_unstable_by_key(|c| c.req);
+        lost.sort_unstable_by_key(|&(req, _)| req);
+        self.state = ReplicaState::Cold;
+        (ckpts, lost, tokens_lost)
     }
 
     fn signal(&self) -> GovernorSignal {
@@ -523,6 +666,29 @@ impl Replica {
         trace: &mut Trace<'_>,
     ) -> Result<()> {
         debug_assert!(self.runnable(), "step() on an idle replica");
+        // Checkpointed sequences admit ahead of fresh arrivals: they
+        // already hold decode progress, and every simulated second they
+        // wait stretches a latency clock that started at their original
+        // arrival.
+        if !self.resume_queue.is_empty() && self.active.len() < max_batch {
+            let ckpt = self.resume_queue[0];
+            if self.kv.admit(ckpt.req as u64, ckpt.ctx + ckpt.remaining).is_ok() {
+                self.resume_queue.pop_front();
+                return self.admit_resumed(ckpt, ledger, trace);
+            }
+            if self.active.is_empty() && self.queue.is_empty() {
+                bail!(
+                    "checkpointed request {} ({} ctx + {} remaining tokens) cannot fit \
+                     the empty KV cache of a {} replica",
+                    ckpt.req,
+                    ckpt.ctx,
+                    ckpt.remaining,
+                    self.spec.model.name
+                );
+            }
+            // KV full: fall through (decode until sequences release it,
+            // or admit a smaller fresh request).
+        }
         if !self.queue.is_empty() && self.active.len() < max_batch {
             // Class-blind replicas admit strictly FIFO; class-aware ones
             // pick the best queued candidate by class priority.
@@ -576,7 +742,10 @@ impl Replica {
                 continue;
             }
             let waited = self.now_s - queued.arrival.t_s;
-            let eff = if class != TrafficClass::Interactive && waited > pol.aging_s {
+            // `>=` so `aging_s = 0.0` means "promote immediately": a
+            // zero-wait request at a zero threshold has aged (strict `>`
+            // silently made a zero threshold mean "never promote").
+            let eff = if class != TrafficClass::Interactive && waited >= pol.aging_s {
                 aged
             } else {
                 class.priority()
@@ -649,8 +818,50 @@ impl Replica {
                 tokens: 0,
                 remaining: q.output_tokens,
                 ctx: input,
+                ckpt_tokens: 0,
             });
         }
+        Ok(())
+    }
+
+    /// Resume one checkpointed sequence: replay its context in a single
+    /// prefill pass (KV state is device- and model-local, so the target
+    /// must recompute it), charge the replay to the `migration_j` phase,
+    /// and push the sequence into the continuous batch with its original
+    /// latency clocks intact.
+    fn admit_resumed(
+        &mut self,
+        ckpt: SeqCheckpoint,
+        ledger: &mut dyn EnergySink,
+        trace: &mut Trace<'_>,
+    ) -> Result<()> {
+        let rep = trace.replica;
+        let sig = self.signal();
+        let f = self.gov.decide(self.now_s, Phase::Prefill, &sig, &self.gpu.spec);
+        self.switch_to(f, &[ckpt.req], ledger, trace);
+        let r = self.gpu.execute(&prefill_cost(&self.spec.model, 1, ckpt.ctx.max(1)));
+        self.now_s += r.latency_s;
+        self.busy_s += r.latency_s;
+        self.migration_j += r.energy_j;
+        self.window.record(self.now_s, r.latency_s, r.energy_j);
+        ledger.charge_migration(ckpt.req, r.energy_j);
+        trace.emit(self.now_s, || SpanEvent::Resumed {
+            req: ckpt.req,
+            replica: rep,
+            replay_tokens: ckpt.ctx,
+            joules: r.energy_j,
+        });
+        self.active.push(ActiveSeq {
+            req: ckpt.req,
+            query_idx: ckpt.query_idx,
+            class: ckpt.class,
+            arrival_s: ckpt.arrival_s,
+            first_token_s: ckpt.first_token_s,
+            tokens: ckpt.tokens,
+            remaining: ckpt.remaining,
+            ctx: ckpt.ctx,
+            ckpt_tokens: ckpt.tokens,
+        });
         Ok(())
     }
 
@@ -698,6 +909,7 @@ impl Replica {
 
         let mut finished = std::mem::take(&mut self.finish_scratch);
         finished.clear();
+        let ckpt_every = self.ckpt_every;
         self.active.retain_mut(|s| {
             s.remaining -= 1;
             s.tokens += 1;
@@ -706,6 +918,15 @@ impl Replica {
                 finished.push((s.req, s.arrival_s, s.first_token_s, s.tokens, s.class));
                 false
             } else {
+                // Periodic checkpoint: commit the crash-recovery point
+                // once the sequence has decoded a full cadence since the
+                // last one (free on the source; the migration bill is
+                // the prefill replay on the target).
+                if let Some(every) = ckpt_every {
+                    if s.tokens - s.ckpt_tokens >= every {
+                        s.ckpt_tokens = s.tokens;
+                    }
+                }
                 true
             }
         });
@@ -1013,6 +1234,137 @@ mod tests {
         assert_eq!(lost.len(), 1);
         assert_eq!(lost[0].1.class, TrafficClass::Batch);
         assert_eq!(lost[0].1.t_s, 1.0);
+    }
+
+    #[test]
+    fn zero_aging_threshold_promotes_a_zero_wait_request() {
+        // aging_s = 0.0 must mean "promote immediately": a background
+        // request that has waited exactly 0 s outranks Interactive. The
+        // strict `>` comparison this pins against silently turned a zero
+        // threshold into "never promote".
+        let (suite, mut rep) = setup();
+        rep.set_class_policy(Some(&ClassPolicy { aging_s: 0.0, ..ClassPolicy::default() }));
+        let cls = suite.dataset_indices(Dataset::BoolQ);
+        let mut ledger = EnergyLedger::new(2);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, classed(0.0, cls[0], TrafficClass::Background));
+        rep.enqueue(1, classed(0.0, cls[1], TrafficClass::Interactive));
+        // Clock still at 0.0: both requests have waited exactly zero
+        // seconds, yet the background one must already count as aged.
+        assert_eq!(rep.now_s, 0.0);
+        while rep.runnable() {
+            rep.step(&suite, 8, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        assert_eq!(rep.served_reqs(), &[0, 1]);
+    }
+
+    #[test]
+    fn migrate_out_checkpoints_in_flight_and_powers_off_immediately() {
+        let (suite, mut rep) = setup();
+        rep.set_checkpoint_every(Some(4));
+        let gen_idx = suite.dataset_indices(Dataset::NarrativeQa);
+        let mut ledger = EnergyLedger::new(3);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival::at(0.25, gen_idx[0]));
+        rep.enqueue(1, Arrival::at(0.50, gen_idx[1]));
+        rep.enqueue(2, Arrival::at(0.75, gen_idx[2]));
+        // Admit two into the batch (max_batch 2), decode a few steps.
+        for _ in 0..6 {
+            rep.step(&suite, 2, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        assert!(rep.active_seqs() > 0 && rep.queue_depth() > 0);
+        let (ckpts, requeued) = rep.migrate_out(rep.now_s + 0.1);
+        assert_eq!(rep.state, ReplicaState::Cold, "migration powers off without draining");
+        assert!(!rep.runnable());
+        // In-flight sequences with decode progress checkpoint at their
+        // *current* tokens; the still-queued request requeues plainly.
+        assert_eq!(ckpts.iter().map(|c| c.req).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(requeued.iter().map(|&(r, _)| r).collect::<Vec<_>>(), vec![2]);
+        for c in &ckpts {
+            assert!(c.tokens > 0);
+            assert!(c.remaining > 0);
+            let q = &suite.queries[c.query_idx];
+            assert_eq!(c.tokens + c.remaining, q.output_tokens, "token conservation");
+        }
+        assert_eq!(ckpts[0].arrival_s, 0.25, "original arrival survives the checkpoint");
+    }
+
+    #[test]
+    fn crash_with_checkpoints_rolls_back_to_the_periodic_checkpoint() {
+        let (suite, mut rep) = setup();
+        rep.set_checkpoint_every(Some(2));
+        let gen_idx = suite.dataset_indices(Dataset::NarrativeQa);
+        let mut ledger = EnergyLedger::new(1);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        rep.enqueue(0, Arrival::at(0.0, gen_idx[0]));
+        // Admit, then decode 5 tokens: checkpoints land at 2 and 4.
+        for _ in 0..6 {
+            rep.step(&suite, 2, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        let (ckpts, lost, tokens_lost) = rep.crash_with_checkpoints(rep.now_s + 0.1);
+        assert_eq!(rep.state, ReplicaState::Cold);
+        assert!(lost.is_empty());
+        assert_eq!(ckpts.len(), 1);
+        assert_eq!(ckpts[0].tokens, 4, "rolled back to the latest periodic checkpoint");
+        assert_eq!(tokens_lost, 1, "one token decoded past the checkpoint is lost");
+        let q = &suite.queries[ckpts[0].query_idx];
+        assert_eq!(ckpts[0].tokens + ckpts[0].remaining, q.output_tokens);
+    }
+
+    #[test]
+    fn resumed_sequence_replays_context_and_completes_with_original_clocks() {
+        let gpu = GpuSpec::rtx_pro_6000();
+        let suite = ReplaySuite::quick(71, 8);
+        let mk = || {
+            let mut r = Replica::new(
+                &gpu,
+                ReplicaSpec::tiered(ModelTier::B3, DvfsPolicy::Static(2842)),
+                Slo::interactive(),
+                2.0,
+            );
+            r.set_checkpoint_every(Some(4));
+            r
+        };
+        let (mut src, mut dst) = (mk(), mk());
+        let idx = suite.dataset_indices(Dataset::NarrativeQa)[0];
+        let mut ledger = EnergyLedger::new(1);
+        let mut fleet = SloTracker::new(Slo::interactive());
+        src.enqueue(0, Arrival::at(0.0, idx));
+        for _ in 0..4 {
+            src.step(&suite, 2, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        let (ckpts, _) = src.migrate_out(src.now_s);
+        let ckpt = ckpts[0];
+        let t_mig = src.now_s;
+        dst.enqueue_resumed(ckpt, t_mig);
+        assert_eq!(dst.resume_depth(), 1);
+        assert!(dst.runnable());
+        while dst.runnable() {
+            dst.step(&suite, 2, &mut ledger, &mut fleet, &mut Trace::off()).unwrap();
+        }
+        assert_eq!(dst.served, 1, "migrated request completes on the target");
+        assert_eq!(src.served, 0, "exactly-once: the source never completed it");
+        assert_eq!(dst.served_reqs(), &[0]);
+        assert_eq!(dst.tokens_out as usize + ckpt.tokens, suite.queries[idx].output_tokens);
+        // The replay bill landed on the migration phase, and conservation
+        // holds across both replicas' meters.
+        assert!(dst.migration_j > 0.0);
+        assert!((ledger.request(0).migration_j - dst.migration_j).abs() < 1e-9);
+        let measured =
+            src.energy_j + src.idle_j + dst.energy_j + dst.idle_j + dst.migration_j;
+        // finalize: dst served the request, so its idle lands on the
+        // ledger; src served nothing, so its idle comes back as the
+        // leftover the engine would spread run-wide.
+        let src_leftover = src.finalize(&mut ledger);
+        let dst_leftover = dst.finalize(&mut ledger);
+        assert_eq!(dst_leftover.total(), 0.0);
+        let attributed = ledger.total_for(&[0]) + src_leftover.total();
+        assert!(
+            (attributed - measured).abs() / measured.max(1e-300) < 1e-9,
+            "attributed {attributed} vs measured {measured}"
+        );
+        // Latency clocks: e2e measured from the original arrival.
+        assert!(dst.tracker.e2e_p99() >= t_mig, "e2e must include the pre-migration span");
     }
 
     #[test]

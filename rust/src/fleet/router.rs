@@ -24,6 +24,8 @@
 //! request routes to exactly one live replica, and the difficulty router
 //! without features reproduces round-robin's choices exactly.
 
+use anyhow::{ensure, Result};
+
 use crate::config::ModelTier;
 use crate::coordinator::router::ENTITY_THRESHOLD;
 use crate::features::FeatureVector;
@@ -31,6 +33,13 @@ use crate::quality::QualityModel;
 use crate::serve::traffic::{Arrival, TrafficClass};
 
 use super::lifecycle::ReplicaState;
+
+/// The message every router returns when asked to place work on a fleet
+/// with no routable replica. The engine's arrival loop normally
+/// fast-forwards lifecycle events before routing, so surfacing this error
+/// (instead of the panic it replaced) means routing raced an all-dead
+/// fleet — the run aborts with a typed error rather than a crash.
+pub const NO_LIVE_REPLICA: &str = "fleet router called with no live replicas";
 
 /// Live, router-visible snapshot of one replica.
 #[derive(Debug, Clone)]
@@ -74,7 +83,9 @@ impl ReplicaStatus {
 /// A routing discipline: pick the replica index for one arrival.
 ///
 /// Implementations must return the index of a **live** replica; the fleet
-/// engine panics otherwise. `features` is `None` when the serving stack has
+/// engine asserts this. Routing an all-dead fleet returns the typed
+/// [`NO_LIVE_REPLICA`] error (never panics — the engine propagates it as
+/// its no-capacity error). `features` is `None` when the serving stack has
 /// no feature extractor on the request path (difficulty-aware disciplines
 /// must still route — see [`DifficultyTiered`]).
 pub trait FleetRouter {
@@ -83,16 +94,14 @@ pub trait FleetRouter {
         arrival: &Arrival,
         features: Option<&FeatureVector>,
         replicas: &[ReplicaStatus],
-    ) -> usize;
+    ) -> Result<usize>;
 
     fn label(&self) -> String;
 }
 
-fn assert_some_live(replicas: &[ReplicaStatus]) {
-    assert!(
-        replicas.iter().any(|r| r.live()),
-        "fleet router called with no live replicas"
-    );
+fn ensure_some_live(replicas: &[ReplicaStatus]) -> Result<()> {
+    ensure!(replicas.iter().any(|r| r.live()), NO_LIVE_REPLICA);
+    Ok(())
 }
 
 /// Cycle over live replicas in index order.
@@ -107,13 +116,13 @@ impl FleetRouter for RoundRobin {
         _arrival: &Arrival,
         _features: Option<&FeatureVector>,
         replicas: &[ReplicaStatus],
-    ) -> usize {
-        assert_some_live(replicas);
+    ) -> Result<usize> {
+        ensure_some_live(replicas)?;
         loop {
             let i = self.cursor % replicas.len();
             self.cursor = self.cursor.wrapping_add(1);
             if replicas[i].live() {
-                return i;
+                return Ok(i);
             }
         }
     }
@@ -153,9 +162,9 @@ impl FleetRouter for LeastLoaded {
         _arrival: &Arrival,
         _features: Option<&FeatureVector>,
         replicas: &[ReplicaStatus],
-    ) -> usize {
-        assert_some_live(replicas);
-        least_loaded_where(replicas, |_| true).expect("a live replica exists")
+    ) -> Result<usize> {
+        ensure_some_live(replicas)?;
+        least_loaded_where(replicas, |_| true).ok_or_else(|| anyhow::anyhow!(NO_LIVE_REPLICA))
     }
 
     fn label(&self) -> String {
@@ -212,8 +221,8 @@ impl FleetRouter for DifficultyTiered {
         arrival: &Arrival,
         features: Option<&FeatureVector>,
         replicas: &[ReplicaStatus],
-    ) -> usize {
-        assert_some_live(replicas);
+    ) -> Result<usize> {
+        ensure_some_live(replicas)?;
         let f = match features {
             // No features on the request path: no difficulty signal, so the
             // only safe behaviour is the uniform baseline.
@@ -222,11 +231,12 @@ impl FleetRouter for DifficultyTiered {
         };
         let live_tiers = replicas.iter().filter(|r| r.live()).map(|r| r.tier);
         let target = if self.is_hard(f) {
-            live_tiers.max().expect("a live replica exists")
+            live_tiers.max().ok_or_else(|| anyhow::anyhow!(NO_LIVE_REPLICA))?
         } else {
-            live_tiers.min().expect("a live replica exists")
+            live_tiers.min().ok_or_else(|| anyhow::anyhow!(NO_LIVE_REPLICA))?
         };
-        least_loaded_where(replicas, |r| r.tier == target).expect("target tier is live")
+        least_loaded_where(replicas, |r| r.tier == target)
+            .ok_or_else(|| anyhow::anyhow!(NO_LIVE_REPLICA))
     }
 
     fn label(&self) -> String {
@@ -253,7 +263,7 @@ impl Default for EnergyAware {
 /// The [`EnergyAware`] score minimized over live replicas: joules/token
 /// scaled by backlog and window saturation (a saturated telemetry window
 /// means no headroom — marginal work there queues behind a full pipeline).
-fn cheapest_scored(replicas: &[ReplicaStatus], load_penalty: f64) -> usize {
+fn cheapest_scored(replicas: &[ReplicaStatus], load_penalty: f64) -> Result<usize> {
     let mut best: Option<(usize, f64)> = None;
     for r in replicas.iter().filter(|r| r.live()) {
         let score =
@@ -266,7 +276,7 @@ fn cheapest_scored(replicas: &[ReplicaStatus], load_penalty: f64) -> usize {
             best = Some((r.idx, score));
         }
     }
-    best.expect("a live replica exists").0
+    best.map(|(idx, _)| idx).ok_or_else(|| anyhow::anyhow!(NO_LIVE_REPLICA))
 }
 
 impl FleetRouter for EnergyAware {
@@ -275,8 +285,8 @@ impl FleetRouter for EnergyAware {
         _arrival: &Arrival,
         _features: Option<&FeatureVector>,
         replicas: &[ReplicaStatus],
-    ) -> usize {
-        assert_some_live(replicas);
+    ) -> Result<usize> {
+        ensure_some_live(replicas)?;
         cheapest_scored(replicas, self.load_penalty)
     }
 
@@ -309,10 +319,10 @@ impl FleetRouter for ClassAware {
         arrival: &Arrival,
         _features: Option<&FeatureVector>,
         replicas: &[ReplicaStatus],
-    ) -> usize {
-        assert_some_live(replicas);
+    ) -> Result<usize> {
+        ensure_some_live(replicas)?;
         if arrival.class == TrafficClass::Interactive {
-            least_loaded_where(replicas, |_| true).expect("a live replica exists")
+            least_loaded_where(replicas, |_| true).ok_or_else(|| anyhow::anyhow!(NO_LIVE_REPLICA))
         } else {
             cheapest_scored(replicas, self.load_penalty)
         }
@@ -373,7 +383,7 @@ mod tests {
             status(2, ModelTier::B3, 0, 1.0),
         ];
         reps[1].state = ReplicaState::Cold;
-        let picks: Vec<usize> = (0..4).map(|_| rr.route(&arr(), None, &reps)).collect();
+        let picks: Vec<usize> = (0..4).map(|_| rr.route(&arr(), None, &reps).unwrap()).collect();
         assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 
@@ -385,7 +395,7 @@ mod tests {
             status(1, ModelTier::B3, 1, 1.0),
             status(2, ModelTier::B3, 1, 1.0),
         ];
-        assert_eq!(ll.route(&arr(), None, &reps), 1);
+        assert_eq!(ll.route(&arr(), None, &reps).unwrap(), 1);
     }
 
     #[test]
@@ -397,9 +407,9 @@ mod tests {
             status(2, ModelTier::B14, 1, 4.0),
         ];
         // Easy → the (only) B3 replica even though it is busier.
-        assert_eq!(dr.route(&arr(), Some(&easy_features()), &reps), 1);
+        assert_eq!(dr.route(&arr(), Some(&easy_features()), &reps).unwrap(), 1);
         // Hard → least-loaded among the B14 replicas.
-        assert_eq!(dr.route(&arr(), Some(&hard_features()), &reps), 2);
+        assert_eq!(dr.route(&arr(), Some(&hard_features()), &reps).unwrap(), 2);
     }
 
     #[test]
@@ -411,7 +421,8 @@ mod tests {
             status(1, ModelTier::B14, 0, 4.0),
         ];
         for _ in 0..6 {
-            assert_eq!(dr.route(&arr(), None, &reps), rr.route(&arr(), None, &reps));
+            let (a, b) = (dr.route(&arr(), None, &reps), rr.route(&arr(), None, &reps));
+            assert_eq!(a.unwrap(), b.unwrap());
         }
     }
 
@@ -455,10 +466,10 @@ mod tests {
         let mut ea = EnergyAware::default();
         // Cheap replica, empty: wins outright.
         let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 0, 1.0)];
-        assert_eq!(ea.route(&arr(), None, &reps), 1);
+        assert_eq!(ea.route(&arr(), None, &reps).unwrap(), 1);
         // Cheap replica deeply backlogged: 1.0·(1+0.5·12) = 7 > 4 → B14.
         let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 12, 1.0)];
-        assert_eq!(ea.route(&arr(), None, &reps), 0);
+        assert_eq!(ea.route(&arr(), None, &reps).unwrap(), 0);
     }
 
     #[test]
@@ -467,21 +478,34 @@ mod tests {
         // Replica 0: expensive but empty; replica 1: cheap but backlogged.
         let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 3, 1.0)];
         // Interactive minimizes queueing delay → the empty replica.
-        assert_eq!(ca.route(&classed(TrafficClass::Interactive), None, &reps), 0);
+        assert_eq!(ca.route(&classed(TrafficClass::Interactive), None, &reps).unwrap(), 0);
         // Batch/Background minimize the energy score:
         // 1.0·(1+0.5·3)·1.5 = 3.75 < 4.0·1.0·1.5 = 6 → the cheap replica.
-        assert_eq!(ca.route(&classed(TrafficClass::Batch), None, &reps), 1);
-        assert_eq!(ca.route(&classed(TrafficClass::Background), None, &reps), 1);
+        assert_eq!(ca.route(&classed(TrafficClass::Batch), None, &reps).unwrap(), 1);
+        assert_eq!(ca.route(&classed(TrafficClass::Background), None, &reps).unwrap(), 1);
         // Deep backlog flips the energy path too: 1.0·(1+0.5·12)·1.5 > 6.
         let reps = vec![status(0, ModelTier::B14, 0, 4.0), status(1, ModelTier::B3, 12, 1.0)];
-        assert_eq!(ca.route(&classed(TrafficClass::Batch), None, &reps), 0);
+        assert_eq!(ca.route(&classed(TrafficClass::Batch), None, &reps).unwrap(), 0);
     }
 
     #[test]
-    #[should_panic(expected = "no live replicas")]
-    fn all_dead_panics() {
+    fn all_dead_is_a_typed_error_not_a_panic() {
+        // Every discipline must surface the typed all-dead error instead of
+        // panicking when routing races a fleet with no routable replica.
         let mut reps = vec![status(0, ModelTier::B3, 0, 1.0)];
         reps[0].state = ReplicaState::Cold;
-        LeastLoaded.route(&arr(), None, &reps);
+        let routers: Vec<Box<dyn FleetRouter>> = vec![
+            Box::new(RoundRobin::default()),
+            Box::new(LeastLoaded),
+            Box::new(DifficultyTiered::default()),
+            Box::new(EnergyAware::default()),
+            Box::new(ClassAware::default()),
+        ];
+        for mut r in routers {
+            let err = r.route(&arr(), None, &reps).unwrap_err().to_string();
+            assert!(err.contains(NO_LIVE_REPLICA), "{}: {err}", r.label());
+            let err = r.route(&arr(), Some(&hard_features()), &reps).unwrap_err().to_string();
+            assert!(err.contains(NO_LIVE_REPLICA), "{} (with features): {err}", r.label());
+        }
     }
 }

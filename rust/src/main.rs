@@ -8,6 +8,7 @@
 //! ewatt slo            [...]             # SLO-aware serving comparison
 //! ewatt fleet          [...]             # heterogeneous governed fleet comparison
 //! ewatt autoscale      [...]             # elastic fleet: static-N vs autoscaled (+failures)
+//! ewatt forecast       [...]             # predictive vs reactive scaling (+migration churn)
 //! ewatt lab [--requests N] [--seed S] [--out DIR]
 //!                                          # mixed-class lab: class-aware vs class-blind
 //!                                          # governance (writes prompts.jsonl under --out)
@@ -54,6 +55,11 @@ const COMMANDS: &[CommandSpec] = &[
         name: "autoscale",
         args: "",
         help: "elastic fleet: static-N vs autoscaled (+failures)",
+    },
+    CommandSpec {
+        name: "forecast",
+        args: "",
+        help: "predictive vs reactive autoscaling (+ migration under failures), hard-gated",
     },
     CommandSpec { name: "ablation", args: "[name]", help: "component ablations (default: all)" },
     CommandSpec {
@@ -179,6 +185,13 @@ fn run() -> Result<()> {
             let ctx = build_context(&args);
             emit(
                 &[ewatt::experiments::autoscale_tables::autoscale_table(&ctx)?],
+                &args,
+            )
+        }
+        Some("forecast") => {
+            let ctx = build_context(&args);
+            emit(
+                &[ewatt::experiments::forecast_tables::forecast_table(&ctx)?],
                 &args,
             )
         }

@@ -488,6 +488,7 @@ mod tests {
             prefill_j: 1.0,
             decode_j: 2.0,
             switch_j: 0.0,
+            migration_j: 0.0,
             idle_j: 0.5,
             coldstart_j: 0.0,
         };

@@ -40,21 +40,28 @@ pub struct PhaseTotals {
     pub prefill_j: f64,
     pub decode_j: f64,
     pub switch_j: f64,
+    pub migration_j: f64,
     pub idle_j: f64,
     pub coldstart_j: f64,
 }
 
 impl PhaseTotals {
     pub fn total_j(&self) -> f64 {
-        self.prefill_j + self.decode_j + self.switch_j + self.idle_j + self.coldstart_j
+        self.prefill_j
+            + self.decode_j
+            + self.switch_j
+            + self.migration_j
+            + self.idle_j
+            + self.coldstart_j
     }
 
     /// `(label, value)` in the fixed phase order every table uses.
-    fn named(&self) -> [(&'static str, f64); 5] {
+    fn named(&self) -> [(&'static str, f64); 6] {
         [
             ("prefill", self.prefill_j),
             ("decode", self.decode_j),
             ("switch", self.switch_j),
+            ("migration", self.migration_j),
             ("idle", self.idle_j),
             ("coldstart", self.coldstart_j),
         ]
@@ -183,6 +190,8 @@ pub fn load_run(dir: &Path) -> Result<RunSummary> {
                 out.phase.prefill_j += f(e, "prefill_j");
                 out.phase.decode_j += f(e, "decode_j");
                 out.phase.switch_j += f(e, "switch_j");
+                // Absent on pre-migration traces: `f` defaults to 0.0.
+                out.phase.migration_j += f(e, "migration_j");
                 out.phase.idle_j += f(e, "idle_j");
                 out.phase.coldstart_j += f(e, "coldstart_j");
                 let rep = f(&v, "replica") as usize;
@@ -570,6 +579,7 @@ mod tests {
                 prefill_j: 5.0,
                 decode_j,
                 switch_j: 0.5,
+                migration_j: 0.0,
                 idle_j,
                 coldstart_j: 0.0,
             },

@@ -72,6 +72,7 @@ pub(crate) fn phase_energy_json(e: &PhaseEnergy) -> JsonValue {
         ("prefill_j", num(e.prefill_j)),
         ("decode_j", num(e.decode_j)),
         ("switch_j", num(e.switch_j)),
+        ("migration_j", num(e.migration_j)),
         ("idle_j", num(e.idle_j)),
         ("coldstart_j", num(e.coldstart_j)),
         ("total_j", num(e.total_j())),
@@ -92,6 +93,17 @@ pub fn span_to_json(span: &Span) -> JsonValue {
         | SpanEvent::Admitted { req, replica } => {
             pairs.push(("req", uint(*req)));
             pairs.push(("replica", uint(*replica)));
+        }
+        SpanEvent::Migrated { req, from, tokens } => {
+            pairs.push(("req", uint(*req)));
+            pairs.push(("from", uint(*from)));
+            pairs.push(("tokens", uint(*tokens)));
+        }
+        SpanEvent::Resumed { req, replica, replay_tokens, joules } => {
+            pairs.push(("req", uint(*req)));
+            pairs.push(("replica", uint(*replica)));
+            pairs.push(("replay_tokens", uint(*replay_tokens)));
+            pairs.push(("joules", num(*joules)));
         }
         SpanEvent::PrefillStart { req, replica, freq_mhz } => {
             pairs.push(("req", uint(*req)));
@@ -355,6 +367,7 @@ impl RunManifest {
             (per_phase.prefill_j, outcome.breakdown.prefill_j),
             (per_phase.decode_j, outcome.breakdown.decode_j),
             (per_phase.switch_j, outcome.breakdown.switch_j),
+            (per_phase.migration_j, outcome.breakdown.migration_j),
             (per_phase.idle_j, outcome.breakdown.idle_j),
             (per_phase.coldstart_j, outcome.breakdown.coldstart_j),
             (per_phase.total_j(), outcome.total_j()),
@@ -421,6 +434,7 @@ impl RunManifest {
                 ("energy_j", num(outcome.energy_j)),
                 ("idle_j", num(outcome.idle_j)),
                 ("coldstart_j", num(outcome.coldstart_j)),
+                ("migration_j", num(outcome.migration_j)),
                 ("total_j", num(outcome.total_j())),
                 ("freq_switches", uint(outcome.freq_switches)),
                 ("mean_live_replicas", num(outcome.mean_live_replicas)),

@@ -20,6 +20,10 @@ pub enum Counter {
     Queued,
     Routed,
     Requeued,
+    /// Sequences checkpointed off a draining or crashed replica.
+    Migrations,
+    /// Checkpointed sequences replayed and resumed on a target replica.
+    Resumes,
     Admissions,
     PrefillPasses,
     DecodeSteps,
@@ -35,10 +39,12 @@ pub enum Counter {
 }
 
 impl Counter {
-    pub const ALL: [Counter; 15] = [
+    pub const ALL: [Counter; 17] = [
         Counter::Queued,
         Counter::Routed,
         Counter::Requeued,
+        Counter::Migrations,
+        Counter::Resumes,
         Counter::Admissions,
         Counter::PrefillPasses,
         Counter::DecodeSteps,
@@ -58,6 +64,8 @@ impl Counter {
             Counter::Queued => "queued",
             Counter::Routed => "routed",
             Counter::Requeued => "requeued",
+            Counter::Migrations => "migrations",
+            Counter::Resumes => "resumes",
             Counter::Admissions => "admissions",
             Counter::PrefillPasses => "prefill_passes",
             Counter::DecodeSteps => "decode_steps",
@@ -102,12 +110,21 @@ pub enum Hist {
     E2eS,
     PrefillJ,
     DecodeStepJ,
+    /// Prefill-replay energy per resumed sequence.
+    MigrationJ,
     ReqTotalJ,
 }
 
 impl Hist {
-    pub const ALL: [Hist; 6] =
-        [Hist::TtftS, Hist::TbtS, Hist::E2eS, Hist::PrefillJ, Hist::DecodeStepJ, Hist::ReqTotalJ];
+    pub const ALL: [Hist; 7] = [
+        Hist::TtftS,
+        Hist::TbtS,
+        Hist::E2eS,
+        Hist::PrefillJ,
+        Hist::DecodeStepJ,
+        Hist::MigrationJ,
+        Hist::ReqTotalJ,
+    ];
 
     pub fn label(self) -> &'static str {
         match self {
@@ -116,6 +133,7 @@ impl Hist {
             Hist::E2eS => "e2e_s",
             Hist::PrefillJ => "prefill_j",
             Hist::DecodeStepJ => "decode_step_j",
+            Hist::MigrationJ => "migration_j",
             Hist::ReqTotalJ => "req_total_j",
         }
     }
@@ -266,6 +284,11 @@ impl MetricsRegistry {
             SpanEvent::Queued { .. } => self.inc(Counter::Queued),
             SpanEvent::Routed { .. } => self.inc(Counter::Routed),
             SpanEvent::Requeued { .. } => self.inc(Counter::Requeued),
+            SpanEvent::Migrated { .. } => self.inc(Counter::Migrations),
+            SpanEvent::Resumed { joules, .. } => {
+                self.inc(Counter::Resumes);
+                self.record(Hist::MigrationJ, *joules);
+            }
             SpanEvent::Admitted { .. } => self.inc(Counter::Admissions),
             SpanEvent::PrefillStart { .. } => {}
             SpanEvent::PrefillEnd { passes, joules, .. } => {

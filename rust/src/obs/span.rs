@@ -36,6 +36,14 @@ pub enum SpanEvent {
     /// A crash dropped an in-flight request; it re-enters routing with its
     /// original arrival timestamp (`replica` is the replica that died).
     Requeued { req: usize, replica: usize },
+    /// An in-flight sequence was checkpointed off `from` (a drain or a
+    /// crash rollback) and handed to the router; `tokens` is its decoded
+    /// progress carried in the checkpoint.
+    Migrated { req: usize, from: usize, tokens: usize },
+    /// A checkpointed sequence finished its prefill replay on `replica`
+    /// and rejoined the batch; `replay_tokens` is the replayed context
+    /// length, `joules` the replay energy (the `migration_j` phase).
+    Resumed { req: usize, replica: usize, replay_tokens: usize, joules: f64 },
     /// A replica popped the request off its admission queue.
     Admitted { req: usize, replica: usize },
     /// Prefill began at the governor's chosen set point.
@@ -82,6 +90,8 @@ impl SpanEvent {
             SpanEvent::Queued { .. } => "queued",
             SpanEvent::Routed { .. } => "routed",
             SpanEvent::Requeued { .. } => "requeued",
+            SpanEvent::Migrated { .. } => "migrated",
+            SpanEvent::Resumed { .. } => "resumed",
             SpanEvent::Admitted { .. } => "admitted",
             SpanEvent::PrefillStart { .. } => "prefill_start",
             SpanEvent::PrefillEnd { .. } => "prefill_end",
@@ -105,6 +115,8 @@ impl SpanEvent {
             SpanEvent::Queued { req, .. }
             | SpanEvent::Routed { req, .. }
             | SpanEvent::Requeued { req, .. }
+            | SpanEvent::Migrated { req, .. }
+            | SpanEvent::Resumed { req, .. }
             | SpanEvent::Admitted { req, .. }
             | SpanEvent::PrefillStart { req, .. }
             | SpanEvent::PrefillEnd { req, .. }
@@ -258,6 +270,18 @@ mod tests {
         assert_eq!(step.req(), None);
         assert_eq!(step.batch(), &[1, 2]);
         assert_eq!(step.kind(), "decode_step");
+    }
+
+    #[test]
+    fn migration_spans_are_request_scoped() {
+        let mig = SpanEvent::Migrated { req: 3, from: 0, tokens: 5 };
+        assert_eq!(mig.kind(), "migrated");
+        assert_eq!(mig.req(), Some(3));
+        let res = SpanEvent::Resumed { req: 3, replica: 1, replay_tokens: 12, joules: 0.5 };
+        assert_eq!(res.kind(), "resumed");
+        assert_eq!(res.req(), Some(3));
+        assert_eq!(res.class(), None);
+        assert!(res.batch().is_empty());
     }
 
     #[test]

@@ -551,7 +551,7 @@ fn prop_router_invariants() {
         ];
         for router in routers.iter_mut() {
             for features in [Some(&f), None] {
-                let pick = router.route(&a, features, &reps);
+                let pick = router.route(&a, features, &reps).unwrap();
                 assert!(pick < reps.len(), "case {case} [{}]: out of range", router.label());
                 assert!(
                     reps[pick].live(),
@@ -567,8 +567,8 @@ fn prop_router_invariants() {
         let mut rr = RoundRobin::default();
         for _ in 0..12 {
             assert_eq!(
-                dr.route(&a, None, &reps),
-                rr.route(&a, None, &reps),
+                dr.route(&a, None, &reps).unwrap(),
+                rr.route(&a, None, &reps).unwrap(),
                 "case {case}: difficulty-without-features diverged from round-robin"
             );
         }
@@ -605,7 +605,7 @@ fn prop_lifecycle_churn_conserves_and_loses_nothing() {
             arrival: &Arrival,
             features: Option<&FeatureVector>,
             replicas: &[ReplicaStatus],
-        ) -> usize {
+        ) -> anyhow::Result<usize> {
             self.log.push((arrival.t_s.to_bits(), arrival.query_idx));
             self.inner.route(arrival, features, replicas)
         }
@@ -1089,5 +1089,213 @@ fn prop_per_class_attribution_partitions_the_ledger() {
         let summed: f64 = per_class.iter().sum();
         let rel = (summed - o.total_j()).abs() / o.total_j().max(1e-12);
         assert!(rel < 1e-6, "case {case}: per-class partition off by {rel:e}");
+    }
+}
+
+/// Migration churn: with checkpoint/handoff/resume enabled under elastic
+/// chaos (reactive drains + seeded crashes + random checkpoint cadences),
+/// (a) every request is still served exactly once and every evacuated
+/// checkpoint is resumed exactly once — `resumed == drained +
+/// crash_recovered`, nothing left parked at exit; (b) energy conservation
+/// holds to 1e-6 with the prefill-replay bill in its own `migration_j`
+/// phase, ledger and meter agreeing; (c) every router pass — fresh
+/// arrivals, crash requeues, AND resumed checkpoints — carries the
+/// request's original arrival timestamp (a rewritten one would mint a new
+/// (timestamp, query) pair); and (d) the whole churn replays bit-for-bit.
+#[test]
+fn prop_migration_exactly_once_conserves_and_keeps_arrivals() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::features::FeatureVector;
+    use ewatt::fleet::{
+        ColdStart, FailureConfig, FleetConfig, FleetRouter, FleetSim, LeastLoaded,
+        MigrationPolicy, ReactiveConfig, ReplicaSpec, ReplicaState, ReplicaStatus,
+    };
+    use ewatt::serve::{Arrival, TrafficPattern};
+
+    struct Recording {
+        inner: LeastLoaded,
+        log: Vec<(u64, usize)>,
+    }
+    impl FleetRouter for Recording {
+        fn route(
+            &mut self,
+            arrival: &Arrival,
+            features: Option<&FeatureVector>,
+            replicas: &[ReplicaStatus],
+        ) -> anyhow::Result<usize> {
+            self.log.push((arrival.t_s.to_bits(), arrival.query_idx));
+            self.inner.route(arrival, features, replicas)
+        }
+        fn label(&self) -> String {
+            "recording[least-loaded]".into()
+        }
+    }
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    let mut carried_anywhere = 0usize;
+    for case in 0..10u64 {
+        let mut rng = ewatt::rng(0x316_A7E ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let n = 2 + rng.gen_range(0, 3);
+        let tier = *rng.choose(&[ModelTier::B1, ModelTier::B3, ModelTier::B8]);
+        let live = ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu));
+        let cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+            .reactive(ReactiveConfig {
+                max_live: n,
+                cooldown_s: 1.0 + rng.gen_f64() * 6.0,
+                ..ReactiveConfig::default()
+            })
+            .failures(FailureConfig {
+                mtbf_s: 8.0 + rng.gen_f64() * 30.0,
+                mttr_s: 2.0 + rng.gen_f64() * 10.0,
+                seed: case.wrapping_mul(4099),
+            })
+            .cold_start(ColdStart {
+                energy_j: 500.0 + rng.gen_f64() * 4000.0,
+                warmup_s: 1.0 + rng.gen_f64() * 8.0,
+            })
+            .migration(MigrationPolicy { checkpoint_every_tokens: 1 + rng.gen_range(0, 4) })
+            .build()
+            .unwrap();
+        let pattern = match rng.gen_range(0, 3) {
+            0 => TrafficPattern::Poisson { rps: 1.0 + rng.gen_f64() * 3.0 },
+            1 => TrafficPattern::Bursty { base_rps: 1.0, burst_rps: 6.0, mean_dwell_s: 2.0 },
+            _ => TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 20.0 },
+        };
+        let arrivals = pattern.generate(&suite, 20 + rng.gen_range(0, 40), case ^ 0x316);
+        let sim = FleetSim::new(gpu.clone(), cfg);
+        let mut router = Recording { inner: LeastLoaded, log: Vec::new() };
+        let o = sim.run(&suite, &arrivals, &mut router).unwrap();
+
+        // (a) exactly once, for requests and for checkpoints.
+        assert_eq!(o.served, arrivals.len(), "case {case}: lost requests");
+        let per_replica: usize = o.replicas.iter().map(|r| r.served).sum();
+        assert_eq!(per_replica, arrivals.len(), "case {case}: double-serve");
+        let carried = o.migration.drained + o.migration.crash_recovered;
+        assert_eq!(
+            o.migration.resumed, carried,
+            "case {case}: every evacuated checkpoint must resume exactly once"
+        );
+        carried_anywhere += carried;
+
+        // (b) conservation with the migration-replay bill included.
+        let attributed: f64 = o.joules.iter().sum();
+        let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+        assert!(rel < 1e-6, "case {case}: conservation off by {rel:e}");
+        assert!(
+            (o.breakdown.migration_j - o.migration_j).abs() <= 1e-9 * o.migration_j.max(1.0),
+            "case {case}: ledger migration_j diverges from metered"
+        );
+        if carried == 0 {
+            assert_eq!(o.migration_j, 0.0, "case {case}: replay billed without a resume");
+        }
+
+        // (c) original arrival timestamps on every router pass: the log is
+        // exactly `arrivals + requeued + resumed` long, and its distinct
+        // (timestamp, query) pairs are precisely the arrival stream's.
+        assert_eq!(
+            router.log.len(),
+            arrivals.len() + o.lifecycle.requeued + o.migration.resumed,
+            "case {case}: route count vs requeues + resumes"
+        );
+        let mut seen = router.log.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        let mut want: Vec<(u64, usize)> =
+            arrivals.iter().map(|a| (a.t_s.to_bits(), a.query_idx)).collect();
+        want.sort_unstable();
+        want.dedup();
+        assert_eq!(seen, want, "case {case}: router saw a non-original arrival");
+
+        // (d) the whole churn replays bit-for-bit.
+        let mut router2 = Recording { inner: LeastLoaded, log: Vec::new() };
+        let o2 = sim.run(&suite, &arrivals, &mut router2).unwrap();
+        assert_eq!(o.joules, o2.joules, "case {case}: nondeterministic energy");
+        assert_eq!(router.log, router2.log, "case {case}: nondeterministic routing");
+        assert_eq!(o.migration, o2.migration, "case {case}: nondeterministic migration");
+        assert_eq!(o.lifecycle, o2.lifecycle, "case {case}: nondeterministic lifecycle");
+    }
+    assert!(carried_anywhere > 0, "no case ever migrated — the property is vacuous");
+}
+
+/// Autoscaler determinism: on the same arrival stream under migration +
+/// failure churn, the reactive path and the predictive (forecast) path
+/// each replay bit-for-bit, and both preserve exactly-once serving,
+/// exactly-once checkpoint resume, and 1e-6 conservation — swapping the
+/// autoscaler changes scheduling, never accounting.
+#[test]
+fn prop_forecast_and_reactive_paths_replay_bit_for_bit() {
+    use ewatt::coordinator::DvfsPolicy;
+    use ewatt::fleet::{
+        ColdStart, FailureConfig, FleetConfig, FleetSim, ForecastConfig, LeastLoaded,
+        MigrationPolicy, ReactiveConfig, ReplicaSpec, ReplicaState,
+    };
+    use ewatt::serve::TrafficPattern;
+
+    let gpu = GpuSpec::rtx_pro_6000();
+    for case in 0..6u64 {
+        let mut rng = ewatt::rng(0xF0CA_57 ^ case);
+        let suite = ReplaySuite::quick(case, 8);
+        let n = 2 + rng.gen_range(0, 3);
+        let tier = *rng.choose(&[ModelTier::B3, ModelTier::B8]);
+        let live = ReplicaSpec::tiered(tier, DvfsPolicy::governed(&gpu));
+        let warm = ColdStart {
+            energy_j: 500.0 + rng.gen_f64() * 4000.0,
+            warmup_s: 1.0 + rng.gen_f64() * 8.0,
+        };
+        let fail = FailureConfig {
+            mtbf_s: 10.0 + rng.gen_f64() * 30.0,
+            mttr_s: 2.0 + rng.gen_f64() * 10.0,
+            seed: case.wrapping_mul(7333),
+        };
+        let reactive_cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live.clone() })
+            .reactive(ReactiveConfig { max_live: n, ..ReactiveConfig::default() })
+            .failures(fail)
+            .cold_start(warm)
+            .migration(MigrationPolicy::default())
+            .build()
+            .unwrap();
+        let forecast_cfg = FleetConfig::builder()
+            .replica(live.clone())
+            .replicas(n - 1, ReplicaSpec { state: ReplicaState::Cold, ..live })
+            .forecast(ForecastConfig {
+                min_live: 1,
+                max_live: n,
+                warmup_s: warm.warmup_s + 2.0,
+                periods_s: vec![20.0],
+                rate_per_replica: 1.5,
+                ..ForecastConfig::default()
+            })
+            .failures(fail)
+            .cold_start(warm)
+            .migration(MigrationPolicy::default())
+            .build()
+            .unwrap();
+        let pattern = TrafficPattern::Diurnal { min_rps: 0.5, max_rps: 4.0, period_s: 20.0 };
+        let arrivals = pattern.generate(&suite, 30 + rng.gen_range(0, 30), case ^ 0x5C);
+
+        for (label, cfg) in [("reactive", reactive_cfg), ("forecast", forecast_cfg)] {
+            let sim = FleetSim::new(gpu.clone(), cfg);
+            let o = sim.run(&suite, &arrivals, &mut LeastLoaded).unwrap();
+            assert_eq!(o.served, arrivals.len(), "case {case} [{label}]: lost requests");
+            let carried = o.migration.drained + o.migration.crash_recovered;
+            assert_eq!(
+                o.migration.resumed, carried,
+                "case {case} [{label}]: checkpoint not resumed exactly once"
+            );
+            let attributed: f64 = o.joules.iter().sum();
+            let rel = (attributed - o.total_j()).abs() / o.total_j().max(1e-12);
+            assert!(rel < 1e-6, "case {case} [{label}]: conservation off by {rel:e}");
+
+            let o2 = sim.run(&suite, &arrivals, &mut LeastLoaded).unwrap();
+            assert_eq!(o.joules, o2.joules, "case {case} [{label}]: nondeterministic energy");
+            assert_eq!(o.served_by, o2.served_by, "case {case} [{label}]: serving diverged");
+            assert_eq!(o.migration, o2.migration, "case {case} [{label}]: migration diverged");
+            assert_eq!(o.lifecycle, o2.lifecycle, "case {case} [{label}]: lifecycle diverged");
+        }
     }
 }

@@ -1,11 +1,11 @@
 //! Golden-trace scenario regression suite.
 //!
-//! Seven seeded serving scenarios spanning the stack — traffic shapes
+//! Eight seeded serving scenarios spanning the stack — traffic shapes
 //! (Poisson / bursty / diurnal / mixed-class) × fleets (one-replica,
-//! mixed-tier, elastic, failing) × policies (static / governed /
-//! class-aware) — each pinned on
+//! mixed-tier, elastic, failing, migrating) × policies (static /
+//! governed / class-aware) — each pinned on
 //! total joules, active energy, makespan, served count, e2e p99, and the
-//! lifecycle counters. The goal is the regression that bit PR 4: a
+//! lifecycle + migration counters. The goal is the regression that bit PR 4: a
 //! refactor of the serving loop silently shifting energy numbers. Any
 //! intentional change to the dynamics now has to re-bless the snapshot.
 //!
@@ -43,12 +43,13 @@ fn snapshot_line(name: &str, o: &FleetOutcome) -> String {
     write!(
         s,
         "{name} served={} total_j={:.17e} energy_j={:.17e} coldstart_j={:.17e} \
-         makespan_s={:.17e} e2e_p99_s={:.17e} switches={} ups={} downs={} \
-         failures={} requeued={}",
+         migration_j={:.17e} makespan_s={:.17e} e2e_p99_s={:.17e} switches={} ups={} downs={} \
+         failures={} requeued={} migrated={} resumed={}",
         o.served,
         o.total_j(),
         o.energy_j,
         o.coldstart_j,
+        o.migration_j,
         o.makespan_s,
         o.slo.e2e_p99(),
         o.freq_switches,
@@ -56,6 +57,8 @@ fn snapshot_line(name: &str, o: &FleetOutcome) -> String {
         o.lifecycle.scale_downs,
         o.lifecycle.failures,
         o.lifecycle.requeued,
+        o.migration.drained + o.migration.crash_recovered,
+        o.migration.resumed,
     )
     .unwrap();
     s
@@ -184,6 +187,23 @@ fn scenario_relationships_hold() {
         fail.lifecycle.failures > 0,
         "failure scenario injected no failures — MTBF too long for the horizon?"
     );
+
+    // The migrating sibling of the failure scenario must also lose no
+    // requests, and must actually exercise the checkpoint/handoff path —
+    // otherwise the migration fields in the snapshot pin zeros.
+    let mig = run_scenario(&gpu, &suite, by_name("diurnal-elastic-migration"));
+    assert_eq!(mig.served, fail.served, "migration must not lose requests");
+    assert!(
+        mig.lifecycle.failures > 0,
+        "migration scenario injected no failures — MTBF too long for the horizon?"
+    );
+    let carried = mig.migration.drained + mig.migration.crash_recovered;
+    assert!(carried > 0, "migration scenario never checkpointed in-flight work");
+    assert_eq!(
+        mig.migration.resumed, carried,
+        "every evacuated checkpoint must be resumed exactly once"
+    );
+    assert!(mig.migration_j > 0.0, "replayed prefill must be charged to migration_j");
 
     // The mixed-class scenario's trace must actually exercise all three
     // classes, or the class-aware snapshot pins nothing interesting.
